@@ -1,0 +1,110 @@
+//! Quickstart: the end-to-end driver (DESIGN.md §End-to-end validation).
+//!
+//! Trains pQuant from scratch on the synthetic corpus via the AOT train
+//! step, logging the loss curve; evaluates held-out perplexity and the
+//! 7-task zero-shot suite; then converts the checkpoint into packed 1-bit
+//! inference weights and generates text with the pure-rust engine.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Environment knobs: QUICKSTART_CONFIG (default micro-pquant),
+//! QUICKSTART_STEPS (default 250).
+
+use anyhow::Result;
+
+use pquant::coordinator::{TrainOptions, Trainer};
+use pquant::data::cached_dataset;
+use pquant::infer::PackedModel;
+use pquant::runtime::{load_artifact, Runtime};
+
+fn main() -> Result<()> {
+    let config =
+        std::env::var("QUICKSTART_CONFIG").unwrap_or_else(|_| "micro-pquant".to_string());
+    let steps: u64 = std::env::var("QUICKSTART_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250);
+
+    println!("== pQuant quickstart: {config}, {steps} steps ==\n");
+    let art = load_artifact(&config)?;
+    let m = &art.manifest;
+    println!(
+        "model: {} params ({:.2}M), {:.2} avg bits/weight, d_model {}, {} layers, r {}, N {}",
+        m.param_count,
+        m.param_count as f64 / 1e6,
+        m.avg_bits_per_weight,
+        m.config.d_model,
+        m.config.n_layers,
+        m.config.r,
+        m.config.n_experts
+    );
+
+    // 1. data: synthetic grammar corpus + BPE (cached across runs)
+    let (dataset, bpe) =
+        cached_dataset("results/cache/data", 0xC0FFEE, 4 * 1024 * 1024, m.config.vocab)?;
+    println!(
+        "data: {} train tokens, {} valid tokens, vocab {}\n",
+        dataset.train.len(),
+        dataset.valid.len(),
+        dataset.vocab
+    );
+
+    // 2. QAT-from-scratch with the two-phase schedule
+    let runtime = Runtime::cpu()?;
+    let mut trainer = Trainer::new(&runtime, &art, &dataset)?;
+    let ckpt = format!("results/quickstart-{config}.ckpt");
+    let report = trainer.run(&TrainOptions {
+        steps,
+        log_every: (steps / 10).max(1),
+        eval_every: (steps / 2).max(1),
+        final_checkpoint: Some(ckpt.clone()),
+        ..Default::default()
+    })?;
+    println!(
+        "\ntraining done: loss {:.3} → {:.3}, {:.0} tokens/s, wall {:.1}s",
+        report.losses.first().unwrap(),
+        report.tail_loss,
+        report.tokens_per_second,
+        report.wall_seconds
+    );
+    println!("\nloss curve:");
+    println!("{}", pquant::report::ascii_chart(&[("loss", &report.losses)], 64, 12));
+
+    // 3. evaluation
+    if let Some(ppl) = trainer.eval_perplexity(2048)? {
+        println!("held-out perplexity: {ppl:.2}");
+    }
+    let fwd1 = runtime.compile(&art, "fwd")?;
+    println!("\nzero-shot suite (chance-normalized):");
+    for task in pquant::eval::task_suite(0x7A5C, 24) {
+        let acc = pquant::eval::task_accuracy(
+            &trainer.state,
+            &fwd1,
+            &bpe,
+            &task,
+            m.seq_len,
+            m.config.vocab,
+        )?;
+        println!(
+            "  {:6} {:5.1}%  (chance {:.0}%)",
+            task.paper_name,
+            acc * 100.0,
+            task.chance * 100.0
+        );
+    }
+
+    // 4. deploy: pack to 1-bit + INT8 and generate with the rust engine
+    let mut packed = PackedModel::from_state(&art, &trainer.state)?;
+    println!(
+        "\npacked model: {:.2} MiB resident ({:.1}x smaller than fp16)",
+        packed.storage_bytes() as f64 / (1024.0 * 1024.0),
+        (m.param_count * 2) as f64 / packed.storage_bytes() as f64
+    );
+    for prompt in ["the fox is a", "the opposite of hot is", "you cut the bread with a"] {
+        let ids = bpe.encode(prompt);
+        let out = packed.generate(&ids, 6);
+        println!("  {prompt:32} → {}", bpe.decode(&out).trim());
+    }
+    println!("\nquickstart complete; checkpoint at {ckpt}");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Expert-scaling sweep (paper §4.3 / Fig 7 left): train pQuant with
+//! N ∈ {1, 2, 4, 8} expert branches at micro scale and report the
+//! perplexity trend against the 2-bit BitNet1.58 reference.
+//!
+//!     cargo run --release --example scaling_sweep
+//!
+//! Uses the shared experiment cache, so a prior `repro experiment all`
+//! makes this instant.
+
+use anyhow::Result;
+
+use pquant::experiments::Lab;
+use pquant::report::Table;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::var("SWEEP_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250);
+    let mut lab = Lab::new()?;
+    let mut t = Table::new(
+        "Expert scaling sweep (micro, matched data budget)",
+        &["config", "N", "total params", "activated", "PPL", "avg acc %"],
+    );
+    for (n, config) in [
+        (1, "micro-pquant"),
+        (2, "micro-pquant-n2"),
+        (4, "micro-pquant-n4"),
+        (8, "micro-pquant-n8"),
+    ] {
+        let r = lab.run(config, steps, "", |_| {})?;
+        let art = lab.artifact(config)?;
+        t.row(vec![
+            config.into(),
+            n.to_string(),
+            format!("{:.2}M", art.manifest.param_count as f64 / 1e6),
+            format!("{:.2}M", art.manifest.activated_param_count as f64 / 1e6),
+            format!("{:.2}", r.ppl),
+            format!("{:.1}", r.avg_acc()),
+        ]);
+    }
+    let b = lab.run("micro-bitnet158", steps, "", |_| {})?;
+    t.row(vec![
+        "micro-bitnet158 (2-bit ref)".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.2}", b.ppl),
+        format!("{:.1}", b.avg_acc()),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Parameter-democratization demo (paper §2.3 / Fig 2): compute OBS
+//! sensitivity maps for a synthetic outlier-bearing weight matrix in
+//! full precision vs 1-bit quantized form, and render the heatmaps.
+//!
+//!     cargo run --release --example sensitivity_map
+//!
+//! (For trained-model maps, run `repro experiment fig2` after training.)
+
+use anyhow::Result;
+
+use pquant::config::Variant;
+use pquant::sensitivity::{ascii_heatmap, dequantized_weights, sensitivity_map};
+use pquant::tensor::Matrix;
+use pquant::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let (k, n) = (96, 48);
+    let mut rng = Rng::new(7);
+    // bulk of weights small, a few outliers — the fp16 LLM regime
+    let mut w = Matrix::from_fn(k, n, |_, _| rng.normal() * 0.05);
+    for i in 0..12 {
+        *w.at_mut((i * 17) % k, (i * 11) % n) = 2.5 + rng.f64() as f32;
+    }
+    let x = Matrix::from_fn(512, k, |_, _| rng.normal());
+
+    println!("== full-precision weights ==");
+    let fp = sensitivity_map(&w, &x, 1e-2)?;
+    println!(
+        "gini {:.3} | log-kurtosis {:.2} | top-1% mass {:.3}",
+        fp.gini, fp.log_kurtosis, fp.top1pct_mass
+    );
+    println!("{}", ascii_heatmap(&fp.map, 16, 48));
+
+    println!("== same weights after 1-bit sign/absmean quantization ==");
+    let wq = dequantized_weights(&w, Variant::BitNet);
+    let bq = sensitivity_map(&wq, &x, 1e-2)?;
+    println!(
+        "gini {:.3} | log-kurtosis {:.2} | top-1% mass {:.3}",
+        bq.gini, bq.log_kurtosis, bq.top1pct_mass
+    );
+    println!("{}", ascii_heatmap(&bq.map, 16, 48));
+
+    println!(
+        "democratization: gini {:.3} → {:.3}, top-1% mass {:.3} → {:.3}",
+        fp.gini, bq.gini, fp.top1pct_mass, bq.top1pct_mass
+    );
+    println!("(the paper's Fig 2 observation: quantization flattens the landscape)");
+    Ok(())
+}

@@ -1,0 +1,223 @@
+"""AOT compile path: lower L2 functions to HLO *text* + manifest sidecars.
+
+For every requested config this emits, under artifacts/<config>/:
+
+  train_step.hlo.txt      (params, m, v, sched[3], tokens[B,T+1]) ->
+                          (loss, params', m', v')     [flat operand order]
+  fwd.hlo.txt             (params, tokens[1,T]) -> (logits, ffn_input)
+  manifest.json           operand/result layout: names, shapes, dtypes,
+                          flatten order, config echo, batch sizes
+  init.npz                seeded initial parameters (numpy .npz, read by
+                          the rust runtime via xla::Literal::read_npz)
+  golden.json             (nano configs) loss trajectory for a fixed batch,
+                          the rust integration tests' ground truth
+
+HLO text - NOT ``.serialize()`` - is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time.  `make artifacts` is incremental: a config
+is skipped when its manifest is newer than the compile/ sources.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, DEFAULT_ARTIFACTS, get_config
+from . import model
+from . import train
+
+SEED = 20260710  # fixed: reproducible init across builds
+
+# Per-size training batch (paper: 1M tokens "for the other models"; scaled).
+TRAIN_BATCH = {"nano": 8, "micro": 8, "tiny": 8, "small": 4}
+# Extra batch sizes for the batch-size ablation (Appendix E), micro only.
+ABLATION_BATCHES = {"micro": [2, 32]}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def path_name(path) -> str:
+    """KeyPath -> dotted name, e.g. layers.0.ffn_up_8bit."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def flat_entries(tree, prefix):
+    """Flatten a pytree into manifest entries, in tree_flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append({
+            "name": f"{prefix}{path_name(path)}",
+            "shape": list(leaf.shape),
+            "dtype": {"float32": "f32", "int32": "s32"}[str(leaf.dtype)],
+        })
+    return out
+
+
+def array_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_config(name: str, out_dir: str, golden: bool, force: bool):
+    cfg = get_config(name)
+    cdir = os.path.join(out_dir, name)
+    manifest_path = os.path.join(cdir, "manifest.json")
+    srcs = [os.path.join(os.path.dirname(__file__), f)
+            for f in ("aot.py", "model.py", "train.py", "configs.py")]
+    src_mtime = max(os.path.getmtime(s) for s in srcs)
+    kdir = os.path.join(os.path.dirname(__file__), "kernels")
+    src_mtime = max(src_mtime, max(
+        os.path.getmtime(os.path.join(kdir, f))
+        for f in os.listdir(kdir) if f.endswith(".py")))
+    if (not force and os.path.exists(manifest_path)
+            and os.path.getmtime(manifest_path) > src_mtime):
+        print(f"[aot] {name}: up to date")
+        return
+
+    os.makedirs(cdir, exist_ok=True)
+    size = name.split("-")[0]
+    batch = TRAIN_BATCH[size]
+    seq = cfg.seq_len
+
+    key = jax.random.PRNGKey(SEED)
+    params = model.init_params(cfg, key)
+    m0, v0 = train.init_opt_state(params)
+
+    param_entries = flat_entries(params, "")
+    m_entries = flat_entries(m0, "m.")
+    v_entries = flat_entries(v0, "v.")
+
+    # ---- train step -------------------------------------------------------
+    step_fn = train.make_train_step(cfg)
+    sched_spec = jax.ShapeDtypeStruct((3,), jnp.float32)
+    entries = {}
+    batches = [batch] + ABLATION_BATCHES.get(size, [])
+    for b in batches:
+        tok_spec = jax.ShapeDtypeStruct((b, seq + 1), jnp.int32)
+        lowered = jax.jit(step_fn, keep_unused=True).lower(params, m0, v0, sched_spec, tok_spec)
+        suffix = "" if b == batch else f"_b{b}"
+        fname = f"train_step{suffix}.hlo.txt"
+        with open(os.path.join(cdir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries[f"train_step{suffix}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": (param_entries + m_entries + v_entries
+                       + [array_entry("sched", (3,), "f32"),
+                          array_entry("tokens", (b, seq + 1), "s32")]),
+            "outputs": ([array_entry("loss", (), "f32")]
+                        + param_entries + m_entries + v_entries),
+        }
+        print(f"[aot] {name}: lowered train_step b={b}")
+
+    # ---- forward (eval/calibration) ---------------------------------------
+    def fwd(params, tokens):
+        return model.forward(cfg, params, tokens, return_ffn_input=True)
+
+    for fb, fkey in ((1, "fwd"), (8, "fwd_b8")):
+        tok_spec = jax.ShapeDtypeStruct((fb, seq), jnp.int32)
+        lowered = jax.jit(fwd, keep_unused=True).lower(params, tok_spec)
+        fname = f"{fkey}.hlo.txt"
+        with open(os.path.join(cdir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries[fkey] = {
+            "file": fname,
+            "batch": fb,
+            "inputs": param_entries + [array_entry("tokens", (fb, seq), "s32")],
+            "outputs": [
+                array_entry("logits", (fb, seq, cfg.vocab), "f32"),
+                array_entry("ffn_input", (fb * seq, cfg.d_model), "f32"),
+            ],
+        }
+        print(f"[aot] {name}: lowered {fkey}")
+
+    # ---- init params (.npz, uncompressed for the rust zip reader) ---------
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    np.savez(os.path.join(cdir, "init.npz"),
+             **{path_name(p): np.asarray(l) for p, l in leaves})
+
+    # ---- golden trajectory (nano only: cheap, exact) -----------------------
+    if golden:
+        rng = np.random.default_rng(SEED)
+        tokens = rng.integers(0, cfg.vocab, (batch, seq + 1), dtype=np.int32)
+        jit_step = jax.jit(step_fn)
+        p, m, v = params, m0, v0
+        losses = []
+        for i in range(3):
+            sched = jnp.asarray([i + 1, 1e-3, 0.1], jnp.float32)
+            loss, p, m, v = jit_step(p, m, v, sched, jnp.asarray(tokens))
+            losses.append(float(loss))
+        with open(os.path.join(cdir, "golden.json"), "w") as f:
+            json.dump({"tokens": tokens.tolist(), "sched_lr": 1e-3,
+                       "sched_wd": 0.1, "losses": losses}, f)
+        print(f"[aot] {name}: golden losses {losses}")
+
+    # ---- manifest ----------------------------------------------------------
+    import dataclasses
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "derived": {
+            "param_count": cfg.param_count(),
+            "activated_param_count": cfg.activated_param_count(),
+            "avg_bits_per_weight": cfg.avg_bits_per_weight(),
+            "d_ff_1bit": cfg.d_ff_1bit,
+            "head_dim": cfg.head_dim,
+        },
+        "seed": SEED,
+        "train_batch": batch,
+        "seq_len": seq,
+        "param_layout": param_entries,
+        "entries": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {name}: manifest written")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", default=[],
+                    help="config name (repeatable); default: DEFAULT_ARTIFACTS")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for n in sorted(CONFIGS):
+            c = CONFIGS[n]
+            print(f"{n:24s} params={c.param_count()/1e6:7.2f}M "
+                  f"bits={c.avg_bits_per_weight():5.2f}")
+        return
+
+    names = args.config or DEFAULT_ARTIFACTS
+    for n in names:
+        build_config(n, args.out_dir, golden=n.startswith("nano"),
+                     force=args.force)
+
+
+if __name__ == "__main__":
+    main()

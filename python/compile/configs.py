@@ -1,0 +1,146 @@
+"""Model/variant configurations shared by model.py, aot.py and the tests.
+
+Paper Table 1 defines 300M–2.6B configs with D_ff ≈ (8/3)·D_model, an 8-bit
+branch width r ≈ 4-5% of parameters (r a multiple of 128), and N ∈ {1..8}
+experts.  We preserve every *ratio* but scale the absolute sizes to the
+CPU-only testbed (DESIGN.md §3): r is a multiple of 16 (= 128/8, the same
+/8 factor applied to D_model) and the r/D_ff fraction matches the paper.
+
+``CONFIGS`` maps "<size>-<variant>[-nN]" → ModelConfig, e.g.
+"tiny-pquant-n4", "micro-bitnet", "small-fp16".
+"""
+
+import dataclasses
+from dataclasses import dataclass
+
+VARIANTS = ("fp16", "bitnet", "bitnet158", "pquant")
+
+# 8-bit branch width granularity: the paper uses multiples of 128 for
+# "hardware efficiency"; our sizes are /8 of the paper's so the block is 16.
+R_BLOCK = 16
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single (size, variant) training/inference configuration."""
+    name: str
+    variant: str          # one of VARIANTS
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int             # total FFN hidden width (1-bit part + r)
+    r: int = 0            # 8-bit branch width (pquant only)
+    n_experts: int = 1    # number of 8-bit branches N (pquant only)
+    seq_len: int = 128
+    alpha_init: float = 2.0   # feature scaling init for the 8-bit branch
+    beta_init: float = 0.2    # feature scaling init for the 1-bit branch
+
+    def __post_init__(self):
+        assert self.variant in VARIANTS, self.variant
+        assert self.d_model % self.n_heads == 0
+        if self.variant == "pquant":
+            assert 0 < self.r < self.d_ff
+            assert self.r % R_BLOCK == 0, f"r must be a multiple of {R_BLOCK}"
+        else:
+            assert self.r == 0 and self.n_experts == 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff_1bit(self) -> int:
+        """Width of the 1-bit FFN branch (paper: D_ff − r)."""
+        return self.d_ff - self.r
+
+    def param_count(self) -> int:
+        """Total parameter count (embeddings + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        n = 2 * v * d                      # tok embedding + untied lm head
+        per_layer = 4 * d * d              # q, k, v, o
+        per_layer += 2 * d                 # two RMSNorm gains
+        if self.variant == "pquant":
+            per_layer += 2 * d * self.d_ff_1bit          # 1-bit up+down
+            per_layer += self.n_experts * 2 * d * self.r  # 8-bit experts
+            per_layer += d * self.n_experts               # router
+            per_layer += 2                                # alpha, beta
+        else:
+            per_layer += 2 * d * self.d_ff
+        n += self.n_layers * per_layer
+        n += d                             # final norm
+        return n
+
+    def activated_param_count(self) -> int:
+        """Parameters touched per forward pass (top-1: one expert active)."""
+        if self.variant != "pquant":
+            return self.param_count()
+        full = self.param_count()
+        inactive = (self.n_experts - 1) * 2 * self.d_model * self.r * self.n_layers
+        return full - inactive
+
+    def avg_bits_per_weight(self) -> float:
+        """Average storage bits per *block* weight (paper's 1.28–1.35 bit).
+
+        Embeddings/norms are excluded, matching the paper's convention of
+        quoting the quantized-linear-layer bit width.
+        """
+        d = self.d_model
+        if self.variant == "fp16":
+            return 16.0
+        if self.variant == "bitnet":
+            return 1.0
+        if self.variant == "bitnet158":
+            return 1.58
+        one_bit = 4 * d * d + 2 * d * self.d_ff_1bit
+        eight_bit = self.n_experts * 2 * d * self.r
+        return (one_bit * 1.0 + eight_bit * 8.0) / (one_bit + eight_bit)
+
+
+def _mk(size_name, vocab, d_model, n_layers, n_heads, d_ff_total, r, seq_len):
+    """Build the four variants (+ expert sweeps for pquant) of one size."""
+    out = {}
+    for variant in ("fp16", "bitnet", "bitnet158"):
+        out[f"{size_name}-{variant}"] = ModelConfig(
+            name=f"{size_name}-{variant}", variant=variant, vocab=vocab,
+            d_model=d_model, n_layers=n_layers, n_heads=n_heads,
+            d_ff=d_ff_total, seq_len=seq_len)
+    for n in (1, 2, 4, 8):
+        suffix = "" if n == 1 else f"-n{n}"
+        out[f"{size_name}-pquant{suffix}"] = ModelConfig(
+            name=f"{size_name}-pquant{suffix}", variant="pquant", vocab=vocab,
+            d_model=d_model, n_layers=n_layers, n_heads=n_heads,
+            d_ff=d_ff_total, r=r, n_experts=n, seq_len=seq_len)
+    return out
+
+
+CONFIGS = {}
+# name           vocab  d    L  H  d_ff   r   seq
+CONFIGS.update(_mk("nano",  512,  64,  2, 2, 176,  16, 64))
+CONFIGS.update(_mk("micro", 512,  128, 4, 4, 352,  16, 128))
+CONFIGS.update(_mk("tiny",  1024, 256, 4, 8, 704,  32, 128))
+CONFIGS.update(_mk("small", 1024, 384, 6, 8, 1056, 48, 128))
+
+# The default artifact set built by `make artifacts` (DESIGN.md §5); other
+# configs can be built on demand with `python -m compile.aot --config X`.
+DEFAULT_ARTIFACTS = [
+    "nano-fp16", "nano-bitnet", "nano-bitnet158", "nano-pquant",
+    "nano-pquant-n4",
+    "micro-fp16", "micro-bitnet", "micro-bitnet158",
+    "micro-pquant", "micro-pquant-n2", "micro-pquant-n4", "micro-pquant-n8",
+    "tiny-fp16", "tiny-bitnet", "tiny-bitnet158", "tiny-pquant",
+    "tiny-pquant-n8",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config {name!r}; known: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def scaled_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Derive a modified config (used by ablation harnesses, e.g. r-sweep)."""
+    d = dataclasses.asdict(cfg)
+    d.update(overrides)
+    return ModelConfig(**d)

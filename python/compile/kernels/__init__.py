@@ -1,0 +1,21 @@
+"""L1: Pallas kernels for pQuant (interpret=True; see DESIGN.md).
+
+Public surface:
+  quantized_matmul / w1a8_matmul / w8a8_matmul   — tiled scaled matmuls
+  decoupled_matmul                               — fused dual-branch matmul
+  rmsnorm                                        — row-tiled RMSNorm
+  router_top1 / router_probs                     — top-1 expert gate
+  quantize.*                                     — quantizers + STE
+"""
+
+from .bitlinear import quantized_matmul, w1a8_matmul, w8a8_matmul
+from .decoupled import decoupled_matmul
+from .rmsnorm import rmsnorm, RMS_EPS
+from .router import router_top1, router_probs
+from . import quantize
+from . import ref
+
+__all__ = [
+    "quantized_matmul", "w1a8_matmul", "w8a8_matmul", "decoupled_matmul",
+    "rmsnorm", "RMS_EPS", "router_top1", "router_probs", "quantize", "ref",
+]

@@ -1,0 +1,97 @@
+"""W1A8 / W8A8 tiled matmul Pallas kernels (paper §3.1, eq. 10).
+
+The hot spot of every pQuant linear layer is
+
+    Y = (λ / γ) · W_q X_q
+
+where ``W_q`` is the quantized weight (±1 for the 1-bit branch, INT8 for
+the high-precision branch), ``X_q`` the per-token INT8 activations and the
+scalar scales are fused into a single rescale applied to the f32
+accumulator.  On a real TPU the quantized operands would live in VMEM as
+(u)int8 tiles feeding the MXU via bf16 upcast; under interpret=True we keep
+the integers in f32 carriers, which preserves exact integer arithmetic for
+|values| < 2^24.
+
+The kernel is a classic 3-level tiled matmul: grid (M/bm, N/bn, K/bk) with
+the K dimension innermost so each (i, j) output tile is accumulated across
+sequential k steps (TPU grids execute sequentially, matching interpret
+mode).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, matmul_grid
+
+
+def _matmul_kernel(x_ref, w_ref, scale_ref, o_ref, *, nk: int):
+    """One (bm × bn) output tile, accumulated over the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+    # Apply the fused dequantization scale exactly once, on the last k step.
+    @pl.when(k == nk - 1)
+    def _rescale():
+        o_ref[...] *= scale_ref[0, 0]
+
+
+def quantized_matmul(x_q: jax.Array, w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    """``scale · (x_q @ w_q)`` with f32 accumulation.
+
+    Args:
+      x_q:   [M, K] quantized activations (integer values in an f32 carrier).
+      w_q:   [K, N] quantized weights (±1 or INT8 values, f32 carrier).
+      scale: scalar fused dequantization factor (λ/γ or 1/(γ_w·γ_x)).
+
+    Returns:
+      [M, N] f32.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    grid, (bm, bk, bn) = matmul_grid(m, k, n)
+    nk = grid[2]
+
+    scale2d = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x_q.astype(jnp.float32), w_q.astype(jnp.float32), scale2d)
+
+
+def w1a8_matmul(x_q: jax.Array, w_q: jax.Array, lam: jax.Array, gamma_inv: jax.Array) -> jax.Array:
+    """1-bit branch matmul: ``(λ · γ⁻¹) · (x_q @ sign_weights)`` (eq. 10).
+
+    ``gamma_inv`` is the mean reciprocal activation scale when a single
+    fused scalar is used; per-token γ is applied by the caller when
+    row-exact dequantization is needed (the L2 model applies per-token γ
+    outside and passes ``gamma_inv = 1``).
+    """
+    return quantized_matmul(x_q, w_q, lam * gamma_inv)
+
+
+def w8a8_matmul(x_q: jax.Array, w_q: jax.Array, gamma_w_inv: jax.Array,
+                gamma_x_inv: jax.Array) -> jax.Array:
+    """8-bit branch matmul: ``(x_q @ w_q) / (γ_w γ_x)`` per-tensor scales."""
+    return quantized_matmul(x_q, w_q, gamma_w_inv * gamma_x_inv)

@@ -1,0 +1,58 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls), but the tiling is written as it would be for a real TPU:
+blocks sized against the ~16 MiB VMEM budget, last dim a multiple of the
+128-lane register width when shapes allow, f32 accumulation (the MXU's
+bf16×bf16→f32 contract shape).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Structural targets used when shapes are large enough to tile; tiny test
+# shapes fall back to whole-array blocks via ``choose_block``.
+TARGET_BM = 128   # rows of the activation tile
+TARGET_BN = 128   # output-feature tile (lane dim)
+TARGET_BK = 512   # contraction tile
+
+INTERPRET = True  # CPU PJRT: interpret-mode only (see DESIGN.md)
+
+
+def choose_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``target``.
+
+    Pallas pads ragged edges, but exact-divisor blocks keep the interpret
+    path allocation-free and make the VMEM accounting exact.
+    """
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def vmem_bytes(*block_shapes_dtypes) -> int:
+    """Estimate the VMEM working set of a kernel invocation.
+
+    Takes ``(shape, dtype)`` pairs for every Ref live in the kernel and sums
+    their byte sizes — recorded per kernel in EXPERIMENTS.md §Perf.
+    """
+    total = 0
+    for shape, dtype in block_shapes_dtypes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * jnp.dtype(dtype).itemsize
+    return total
+
+
+def matmul_grid(m: int, k: int, n: int):
+    """Common (grid, block) decomposition for the tiled matmul kernels."""
+    bm = choose_block(m, TARGET_BM)
+    bn = choose_block(n, TARGET_BN)
+    bk = choose_block(k, TARGET_BK)
+    grid = (m // bm, n // bn, k // bk)
+    return grid, (bm, bk, bn)

@@ -1,0 +1,109 @@
+"""Fused decoupled-linear Pallas kernel (paper §3.2 + Appendix A).
+
+The decoupled FFN up-projection multiplies the *same* INT8 activations with
+two weight matrices — the wide 1-bit branch W1 [K, N1] and the narrow INT8
+branch W8 [K, r].  Appendix A notes the efficient implementation shares the
+activation read across both products ("distributed across multiple thread
+groups, enabling parallel execution without redundant data reads"); here
+the two products are fused into a single kernel so every X tile is loaded
+into VMEM once per (i, k) step and feeds both accumulators.
+
+Feature scaling (eq. 11) is applied inside the kernel on the final k step:
+the α/λ/γ scalars for each branch are pre-fused by the caller into one
+scale per branch.
+
+Grid layout: ``(M/bm, N1/bn1, K/bk)`` with k innermost.  The narrow 8-bit
+branch output is only accumulated on the ``j == 0`` slice of the grid so it
+is computed exactly once per (i, k).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, choose_block, TARGET_BM, TARGET_BK, TARGET_BN
+
+
+def _decoupled_kernel(x_ref, w1_ref, w8_ref, s_ref, o1_ref, o8_ref, *, nk: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    x = x_ref[...].astype(jnp.float32)
+
+    @pl.when(k == 0)
+    def _init1():
+        o1_ref[...] = jnp.zeros_like(o1_ref)
+
+    # One activation load feeds both MXU contractions.
+    o1_ref[...] += jnp.dot(x, w1_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _rescale1():
+        o1_ref[...] *= s_ref[0, 0]   # β · λ / γ
+
+    # The narrow branch is shared across all j tiles: compute it on j == 0.
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init8():
+        o8_ref[...] = jnp.zeros_like(o8_ref)
+
+    @pl.when(j == 0)
+    def _acc8():
+        o8_ref[...] += jnp.dot(x, w8_ref[...].astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(j == 0, k == nk - 1))
+    def _rescale8():
+        o8_ref[...] *= s_ref[0, 1]   # α / (γ_w γ_x)
+
+
+def decoupled_matmul(x_q: jax.Array, w1_q: jax.Array, w8_q: jax.Array,
+                     scale1: jax.Array, scale8: jax.Array):
+    """Fused dual-branch matmul.
+
+    Args:
+      x_q:    [M, K] INT8 activations (f32 carrier).
+      w1_q:   [K, N1] ±1 weights of the 1-bit branch.
+      w8_q:   [K, N8] INT8 weights of the high-precision branch, N8 = r.
+      scale1: fused scalar for the 1-bit branch output (β·λ/γ).
+      scale8: fused scalar for the 8-bit branch output (α/(γ_w·γ_x)).
+
+    Returns:
+      (y1 [M, N1], y8 [M, N8]) f32 — the caller concatenates or sums the
+      branch outputs per eq. 11.
+    """
+    m, k = x_q.shape
+    k1, n1 = w1_q.shape
+    k8, n8 = w8_q.shape
+    assert k == k1 == k8, f"contraction mismatch {k}/{k1}/{k8}"
+    bm = choose_block(m, TARGET_BM)
+    bk = choose_block(k, TARGET_BK)
+    bn1 = choose_block(n1, TARGET_BN)
+    grid = (m // bm, n1 // bn1, k // bk)   # k innermost
+    nk = k // bk
+
+    scales = jnp.stack([jnp.asarray(scale1, jnp.float32).reshape(()),
+                        jnp.asarray(scale8, jnp.float32).reshape(())]).reshape(1, 2)
+
+    return pl.pallas_call(
+        functools.partial(_decoupled_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn1), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, n8), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn1), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, n8), lambda i, j, kk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n1), jnp.float32),
+            jax.ShapeDtypeStruct((m, n8), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x_q.astype(jnp.float32), w1_q.astype(jnp.float32),
+      w8_q.astype(jnp.float32), scales)

@@ -1,0 +1,164 @@
+"""Quantization primitives shared by the L1 kernels and the L2 model.
+
+These implement the paper's equations:
+
+  eq. (3)-(6): 1-bit sign/absmean weight quantization with mean-centering
+  eq. (7)-(9): INT8 absmax activation quantization along the token dim
+  BitNet1.58 : ternary absmean weight quantization (baseline)
+
+Each ``*_ste`` variant wraps the non-differentiable rounding in a
+Straight-Through Estimator (Appendix B.1): the forward pass sees the
+quantized value, the backward pass sees identity.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Quantization epsilon guarding against division by zero on all-zero
+# tensors (paper's eps in eq. 7).
+EPS = 1e-6
+
+# Symmetric INT8 clip bound.  The paper writes [-2^7, 2^7]; we use the
+# symmetric [-127, 127] so the rust LUT engine can negate activations
+# without overflow and the two implementations match bit-exactly.
+Q8_BOUND = 127.0
+
+
+def ste(quantized: jax.Array, full_precision: jax.Array) -> jax.Array:
+    """Straight-Through Estimator: forward = quantized, backward = identity.
+
+    Implemented as ``x + stop_grad(q - x)``, the standard trick — gradients
+    of non-differentiable ``q`` are approximated as 1 (Bengio et al., 2013).
+    """
+    return full_precision + jax.lax.stop_gradient(quantized - full_precision)
+
+
+def round_clip(x: jax.Array, lo: float, hi: float) -> jax.Array:
+    """``RoundClip`` of eq. (8): round-to-nearest then clamp to [lo, hi]."""
+    return jnp.clip(jnp.round(x), lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# 1-bit weights (eq. 3-6)
+# ---------------------------------------------------------------------------
+
+def binarize_weight(w: jax.Array):
+    """Sign/absmean 1-bit quantization with mean-centering.
+
+    Returns ``(w_q, lam)`` where ``w_q ∈ {-1, +1}`` (f32) and ``lam`` is the
+    per-tensor dequantization scale λ = mean|W - μ| of the centered weights.
+    ``sign(0)`` maps to +1 so exactly one bit encodes each weight.
+    """
+    mu = jnp.mean(w)
+    centered = w - mu
+    lam = jnp.mean(jnp.abs(centered)) + EPS
+    w_q = jnp.where(centered >= 0, 1.0, -1.0).astype(w.dtype)
+    return w_q, lam
+
+
+def binarize_weight_ste(w: jax.Array):
+    """STE variant: forward sees λ·sign(W−μ), backward is identity on W."""
+    w_q, lam = binarize_weight(w)
+    return ste(w_q * lam, w), lam
+
+
+# ---------------------------------------------------------------------------
+# Ternary weights (BitNet1.58 baseline)
+# ---------------------------------------------------------------------------
+
+def ternarize_weight(w: jax.Array):
+    """AbsMean ternary quantization: W_q ∈ {-1, 0, +1} with scale mean|W|."""
+    scale = jnp.mean(jnp.abs(w)) + EPS
+    w_q = round_clip(w / scale, -1.0, 1.0)
+    return w_q, scale
+
+
+def ternarize_weight_ste(w: jax.Array):
+    w_q, scale = ternarize_weight(w)
+    return ste(w_q * scale, w), scale
+
+
+# ---------------------------------------------------------------------------
+# INT8 (eq. 7-9) — activations and the high-precision branch weights
+# ---------------------------------------------------------------------------
+
+def absmax_quantize(x: jax.Array, axis=-1):
+    """Per-token AbsMax INT8 quantization (eq. 7-9).
+
+    Returns ``(x_q, gamma)``: ``x_q`` holds integers in [-127, 127] (kept in
+    the input dtype so it can flow through a matmul), ``gamma`` is the
+    per-token scale 127 / max|x| with shape broadcastable against ``x``.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    gamma = Q8_BOUND / (absmax + EPS)
+    x_q = round_clip(x * gamma, -Q8_BOUND, Q8_BOUND)
+    return x_q, gamma
+
+
+def absmax_quantize_ste(x: jax.Array, axis=-1):
+    """STE variant used on activations: forward quantize, backward identity.
+
+    Returns the *dequantized* simulated value ``x̂ = x_q / γ`` with STE, plus
+    ``(x_q, gamma)`` for callers that need the raw integers.
+    """
+    x_q, gamma = absmax_quantize(x, axis=axis)
+    return ste(x_q / gamma, x), x_q, gamma
+
+
+def absmax_quantize_per_tensor(w: jax.Array):
+    """Per-tensor AbsMax INT8 — used for the 8-bit branch weights."""
+    absmax = jnp.max(jnp.abs(w))
+    gamma = Q8_BOUND / (absmax + EPS)
+    w_q = round_clip(w * gamma, -Q8_BOUND, Q8_BOUND)
+    return w_q, gamma
+
+
+def int8_weight_ste(w: jax.Array):
+    """STE per-tensor INT8 weight quantization for the 8-bit branch."""
+    w_q, gamma = absmax_quantize_per_tensor(w)
+    return ste(w_q / gamma, w), w_q, gamma
+
+
+# ---------------------------------------------------------------------------
+# Ablation quantizers (paper §4.6: channel-wise / group-wise 1-bit)
+# ---------------------------------------------------------------------------
+
+def binarize_weight_channelwise(w: jax.Array):
+    """Per-output-channel sign/absmean (ablation, Fig 7 right).
+
+    ``w`` is [in, out]; scales are per column.
+    """
+    mu = jnp.mean(w, axis=0, keepdims=True)
+    centered = w - mu
+    lam = jnp.mean(jnp.abs(centered), axis=0, keepdims=True) + EPS
+    w_q = jnp.where(centered >= 0, 1.0, -1.0).astype(w.dtype)
+    return w_q, lam
+
+
+def binarize_weight_groupwise(w: jax.Array, group: int = 64):
+    """Group-of-``group`` sign/absmean along the input dim (ablation).
+
+    Requires ``in % group == 0``. Returns w_q and a [in/group, out] scale.
+    """
+    k, n = w.shape
+    assert k % group == 0, f"group {group} must divide in-dim {k}"
+    wg = w.reshape(k // group, group, n)
+    mu = jnp.mean(wg, axis=1, keepdims=True)
+    centered = wg - mu
+    lam = jnp.mean(jnp.abs(centered), axis=1, keepdims=True) + EPS
+    w_q = jnp.where(centered >= 0, 1.0, -1.0).astype(w.dtype)
+    return w_q.reshape(k, n), lam[:, 0, :]
+
+
+def dequant_groupwise(w_q: jax.Array, lam: jax.Array, group: int = 64):
+    """Inverse of :func:`binarize_weight_groupwise` (to a dense f32 matrix)."""
+    k, n = w_q.shape
+    wq = w_q.reshape(k // group, group, n)
+    return (wq * lam[:, None, :]).reshape(k, n)
+
+
+def binarize_weight_groupwise_ste(w: jax.Array, group: int = 64):
+    w_q, lam = binarize_weight_groupwise(w, group)
+    return ste(dequant_groupwise(w_q, lam, group), w), lam

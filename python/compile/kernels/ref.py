@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/) asserts allclose between each kernel under
+interpret=True and its oracle here, sweeping shapes and value ranges with
+hypothesis.  These are deliberately the most naive possible expressions of
+the math; no tiling, no fusion.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .rmsnorm import RMS_EPS
+
+
+def quantized_matmul_ref(x_q, w_q, scale):
+    """Oracle for bitlinear.quantized_matmul."""
+    return (x_q.astype(jnp.float32) @ w_q.astype(jnp.float32)) * scale
+
+
+def decoupled_matmul_ref(x_q, w1_q, w8_q, scale1, scale8):
+    """Oracle for decoupled.decoupled_matmul."""
+    x = x_q.astype(jnp.float32)
+    y1 = (x @ w1_q.astype(jnp.float32)) * scale1
+    y8 = (x @ w8_q.astype(jnp.float32)) * scale8
+    return y1, y8
+
+
+def rmsnorm_ref(x, gain):
+    """Oracle for rmsnorm.rmsnorm."""
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + RMS_EPS) * gain
+
+
+def router_top1_ref(x, w_router):
+    """Oracle for router.router_top1."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    gate = jnp.max(probs, axis=-1)
+    return idx, gate
+
+
+# ---------------------------------------------------------------------------
+# Quantizer oracles (manual re-derivations, kept independent of quantize.py)
+# ---------------------------------------------------------------------------
+
+def binarize_ref(w):
+    mu = w.mean()
+    c = w - mu
+    lam = jnp.abs(c).mean() + 1e-6
+    return jnp.where(c >= 0, 1.0, -1.0), lam
+
+
+def ternarize_ref(w):
+    s = jnp.abs(w).mean() + 1e-6
+    return jnp.clip(jnp.round(w / s), -1, 1), s
+
+
+def absmax_ref(x, axis=-1):
+    g = 127.0 / (jnp.max(jnp.abs(x), axis=axis, keepdims=True) + 1e-6)
+    return jnp.clip(jnp.round(x * g), -127, 127), g

@@ -1,0 +1,64 @@
+"""Top-1 expert router Pallas kernel (paper §3.3).
+
+The router is "a simple linear layer" with softmax gating and top-1
+selection (Shazeer et al., 2017).  The kernel computes, per token:
+
+    logits = x @ W_r          [M, N_experts]
+    probs  = softmax(logits)
+    idx    = argmax(probs)    (int32)
+    gate   = probs[idx]       (the top-1 softmax weight)
+
+N_experts ≤ 8 in every paper config, so the expert dim is always whole per
+block; tiling is over tokens.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, choose_block, TARGET_BM
+
+
+def _router_kernel(x_ref, w_ref, idx_ref, gate_ref):
+    x = x_ref[...].astype(jnp.float32)
+    logits = jnp.dot(x, w_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    # Numerically stable softmax.
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    idx_ref[...] = idx
+    gate_ref[...] = jnp.max(probs, axis=-1)
+
+
+def router_top1(x: jax.Array, w_router: jax.Array):
+    """Top-1 gate. x: [M, D], w_router: [D, N]. Returns (idx i32[M], gate f32[M])."""
+    m, d = x.shape
+    d2, n = w_router.shape
+    assert d == d2
+    bm = choose_block(m, TARGET_BM)
+    return pl.pallas_call(
+        _router_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), w_router.astype(jnp.float32))
+
+
+def router_probs(x: jax.Array, w_router: jax.Array) -> jax.Array:
+    """Dense softmax router probabilities (used by the differentiable
+    training path, where the one-hot top-1 mask is applied with STE)."""
+    logits = x @ w_router
+    return jax.nn.softmax(logits, axis=-1)

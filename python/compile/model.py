@@ -1,0 +1,313 @@
+"""L2: the pQuant transformer family in JAX, calling the L1 Pallas kernels.
+
+Four variants share one code path (configs.VARIANTS):
+
+  fp16      - full-precision LLaMA-style baseline (f32 on this testbed)
+  bitnet    - every linear 1-bit sign/absmean, W1A8 (Wang et al., 2023)
+  bitnet158 - every linear ternary absmean, W1.58A8 (Ma et al., 2024b)
+  pquant    - MHA pure 1-bit (sec 3.1); FFN decoupled: wide 1-bit branch +
+              N sparsely-activated INT8 expert branches with feature
+              scaling alpha/beta and a top-1 softmax router (sec 3.2-3.3)
+
+Quantized linears execute the L1 Pallas kernels on *integer carriers* in
+the forward pass (the exact arithmetic the rust inference engine performs)
+and use the standard simulated-QAT straight-through gradient in the
+backward pass, wired up with ``jax.custom_vjp`` (Appendix B.1).
+
+Architecture: decoder-only, pre-RMSNorm, RoPE attention, SiLU FFN,
+untied full-precision embedding + head (the paper keeps embeddings and
+norms high-precision - Table 3 counts them in the memory footprint).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import kernels
+from .kernels import quantize as qz
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear primitives (custom_vjp around the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def binary_linear(x, w):
+    """1-bit W1A8 linear (sec 3.1, eq. 10): y = (lambda/gamma) W_q Q(x).
+
+    x: [M, K] f32 (already normalized), w: [K, N] latent f32 weights.
+    Forward runs the Pallas integer matmul; backward is the simulated-QAT
+    STE gradient using the dequantized operands.
+    """
+    y, _ = _binary_linear_fwd(x, w)
+    return y
+
+
+def _binary_linear_fwd(x, w):
+    x_q, gamma = qz.absmax_quantize(x)            # per-token INT8
+    w_q, lam = qz.binarize_weight(w)              # +-1 + per-tensor lambda
+    y = kernels.quantized_matmul(x_q, w_q, 1.0) * (lam / gamma)
+    # residuals: dequantized operands for the STE backward
+    return y, (x_q / gamma, w_q * lam)
+
+
+def _binary_linear_bwd(res, g):
+    x_hat, w_hat = res
+    return g @ w_hat.T, x_hat.T @ g
+
+
+binary_linear.defvjp(_binary_linear_fwd, _binary_linear_bwd)
+
+
+@jax.custom_vjp
+def ternary_linear(x, w):
+    """W1.58A8 linear (BitNet1.58 baseline): y = (s/gamma) W_t Q(x)."""
+    y, _ = _ternary_linear_fwd(x, w)
+    return y
+
+
+def _ternary_linear_fwd(x, w):
+    x_q, gamma = qz.absmax_quantize(x)
+    w_q, scale = qz.ternarize_weight(w)
+    y = kernels.quantized_matmul(x_q, w_q, 1.0) * (scale / gamma)
+    return y, (x_q / gamma, w_q * scale)
+
+
+def _ternary_linear_bwd(res, g):
+    x_hat, w_hat = res
+    return g @ w_hat.T, x_hat.T @ g
+
+
+ternary_linear.defvjp(_ternary_linear_fwd, _ternary_linear_bwd)
+
+
+@jax.custom_vjp
+def int8_linear(x, w):
+    """W8A8 linear for the high-precision branch (sec 3.2): per-tensor INT8
+    weights, per-token INT8 activations, exact integer matmul."""
+    y, _ = _int8_linear_fwd(x, w)
+    return y
+
+
+def _int8_linear_fwd(x, w):
+    x_q, gamma_x = qz.absmax_quantize(x)
+    w_q, gamma_w = qz.absmax_quantize_per_tensor(w)
+    y = kernels.quantized_matmul(x_q, w_q, 1.0 / gamma_w) / gamma_x
+    return y, (x_q / gamma_x, w_q / gamma_w)
+
+
+def _int8_linear_bwd(res, g):
+    x_hat, w_hat = res
+    return g @ w_hat.T, x_hat.T @ g
+
+
+int8_linear.defvjp(_int8_linear_fwd, _int8_linear_bwd)
+
+
+def fp_linear(x, w):
+    """Full-precision linear (fp16 baseline)."""
+    return x @ w
+
+
+LINEAR_FOR_VARIANT = {
+    "fp16": fp_linear,
+    "bitnet": binary_linear,
+    "bitnet158": ternary_linear,
+    # pquant MHA is pure 1-bit (sec 3.1); its FFN is handled separately
+    "pquant": binary_linear,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    """Random initialization (QAT-from-scratch: no pre-trained weights).
+
+    Returns a nested dict pytree.  Layout must stay in sync with
+    ``aot.py``'s manifest emission (it flattens with tree_flatten_with_path,
+    which sorts dict keys - names are chosen so that order is stable).
+    """
+    d, v = cfg.d_model, cfg.vocab
+
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+
+    n_keys = 4 + cfg.n_layers * 16
+    keys = iter(jax.random.split(key, n_keys))
+
+    params = {
+        "tok_embed": jax.random.normal(next(keys), (v, d), jnp.float32) * 0.02,
+        "lm_head": dense(next(keys), d, (d, v)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(keys), d, (d, d)),
+            "wk": dense(next(keys), d, (d, d)),
+            "wv": dense(next(keys), d, (d, d)),
+            "wo": dense(next(keys), d, (d, d)),
+        }
+        if cfg.variant == "pquant":
+            n1 = cfg.d_ff_1bit
+            layer.update({
+                "ffn_up_1bit": dense(next(keys), d, (d, n1)),
+                "ffn_down_1bit": dense(next(keys), n1, (n1, d)),
+                # N expert branches, stacked on a leading axis
+                "ffn_up_8bit": dense(next(keys), d, (cfg.n_experts, d, cfg.r)),
+                "ffn_down_8bit": dense(next(keys), cfg.r, (cfg.n_experts, cfg.r, d)),
+                "router": dense(next(keys), d, (d, cfg.n_experts)),
+                # feature scaling (sec 3.2): alpha >> beta at init steers
+                # sensitive parameters into the high-precision pathway
+                "alpha": jnp.asarray(cfg.alpha_init, jnp.float32),
+                "beta": jnp.asarray(cfg.beta_init, jnp.float32),
+            })
+        else:
+            layer.update({
+                "ffn_up": dense(next(keys), d, (d, cfg.d_ff)),
+                "ffn_down": dense(next(keys), cfg.d_ff, (cfg.d_ff, d)),
+            })
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RoPE + attention
+# ---------------------------------------------------------------------------
+
+def rope_tables(seq_len: int, head_dim: int):
+    """Rotary position-embedding cos/sin tables [T, head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, T, H, Dh] -> rotated. Tables broadcast over batch and heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def attention(cfg: ModelConfig, layer, x, linear):
+    """Pre-norm multi-head attention; all four projections quantized per
+    variant (pQuant MHA: pure 1-bit, sec 3.1)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xn = kernels.rmsnorm(x.reshape(b * t, d), layer["attn_norm"]).reshape(b, t, d)
+
+    flat = xn.reshape(b * t, d)
+    q = linear(flat, layer["wq"]).reshape(b, t, h, hd)
+    k = linear(flat, layer["wk"]).reshape(b, t, h, hd)
+    v = linear(flat, layer["wv"]).reshape(b, t, h, hd)
+
+    cos, sin = rope_tables(t, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / (hd ** 0.5)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b * t, d)
+    return x + linear(ctx, layer["wo"]).reshape(b, t, d)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_dense(cfg: ModelConfig, layer, x, linear):
+    """Standard 2-matrix FFN for the fp16/bitnet/bitnet158 variants."""
+    b, t, d = x.shape
+    xn = kernels.rmsnorm(x.reshape(b * t, d), layer["ffn_norm"])
+    h = jax.nn.silu(linear(xn, layer["ffn_up"]))
+    return x + linear(h, layer["ffn_down"]).reshape(b, t, d)
+
+
+def ffn_decoupled(cfg: ModelConfig, layer, x):
+    """pQuant decoupled FFN (sec 3.2-3.3, eq. 11).
+
+    y = beta*FFN_1bit(xn) + alpha*gate*FFN_8bit[e*](xn), e* = top-1 choice.
+
+    During training all N experts are computed densely and combined with a
+    one-hot top-1 mask (gradients reach the router through the gate
+    probability, Switch-transformer style); the rust inference engine
+    activates only the selected expert.
+    """
+    b, t, d = x.shape
+    xn = kernels.rmsnorm(x.reshape(b * t, d), layer["ffn_norm"])
+
+    # 1-bit branch
+    h1 = jax.nn.silu(binary_linear(xn, layer["ffn_up_1bit"]))
+    y1 = binary_linear(h1, layer["ffn_down_1bit"])
+
+    # 8-bit expert branches with top-1 gating
+    n_exp = cfg.n_experts
+    if n_exp == 1:
+        h8 = jax.nn.silu(int8_linear(xn, layer["ffn_up_8bit"][0]))
+        y8 = int8_linear(h8, layer["ffn_down_8bit"][0])
+    else:
+        probs = kernels.router_probs(xn, layer["router"])        # [M, N]
+        top = jnp.argmax(probs, axis=-1)                         # [M]
+        mask = jax.nn.one_hot(top, n_exp, dtype=xn.dtype)        # [M, N]
+        gate = jnp.sum(probs * mask, axis=-1, keepdims=True)     # [M, 1]
+        expert_outs = []
+        for e in range(n_exp):
+            h8 = jax.nn.silu(int8_linear(xn, layer["ffn_up_8bit"][e]))
+            expert_outs.append(int8_linear(h8, layer["ffn_down_8bit"][e]))
+        stacked = jnp.stack(expert_outs, axis=1)                 # [M, N, D]
+        y8 = jnp.sum(stacked * mask[..., None], axis=1) * gate   # [M, D]
+
+    y = layer["beta"] * y1 + layer["alpha"] * y8
+    return x + y.reshape(b, t, d)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, return_ffn_input: bool = False):
+    """Logits for next-token prediction.
+
+    tokens: i32 [B, T].  Returns logits f32 [B, T, V]; with
+    ``return_ffn_input`` also the final block's normalized FFN input
+    [B*T, D] (the calibration activations for the sensitivity analysis,
+    Fig 2 / Fig 5a).
+    """
+    linear = LINEAR_FOR_VARIANT[cfg.variant]
+    x = params["tok_embed"][tokens]          # [B, T, D] full precision
+    last_ffn_input = None
+    for li, layer in enumerate(params["layers"]):
+        x = attention(cfg, layer, x, linear)
+        if li == cfg.n_layers - 1 and return_ffn_input:
+            b, t, d = x.shape
+            last_ffn_input = kernels.rmsnorm(
+                x.reshape(b * t, d), layer["ffn_norm"])
+        if cfg.variant == "pquant":
+            x = ffn_decoupled(cfg, layer, x)
+        else:
+            x = ffn_dense(cfg, layer, x, linear)
+    b, t, d = x.shape
+    x = kernels.rmsnorm(x.reshape(b * t, d), params["final_norm"])
+    logits = (x @ params["lm_head"]).reshape(b, t, cfg.vocab)
+    if return_ffn_input:
+        return logits, last_ffn_input
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Mean next-token cross-entropy.  tokens: i32 [B, T+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

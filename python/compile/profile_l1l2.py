@@ -1,0 +1,102 @@
+"""L1/L2 performance profile (EXPERIMENTS.md §Perf).
+
+L1: structural VMEM/MXU analysis of each Pallas kernel's BlockSpec at the
+paper's 7B shapes and at our testbed shapes. interpret=True gives no
+meaningful wallclock, so the optimization target is structural: block
+working set within the ~16 MiB/core VMEM budget, last dim a multiple of
+the 128-lane width, K-innermost accumulation feeding the MXU.
+
+L2: op-census of the lowered HLO text per artifact — fusion counts,
+convert/quantize chains, dot counts — to verify no redundant
+quantize-dequantize pairs survive lowering.
+
+Usage: cd python && python -m compile.profile_l1l2
+"""
+
+import json
+import os
+import re
+import sys
+
+from .kernels.common import matmul_grid, vmem_bytes, choose_block, TARGET_BM
+
+MXU = (128, 128)  # systolic array tile
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def l1_profile():
+    rows = []
+    # (name, m, k, n) — decode GEMV and train-matmul shapes
+    shapes = [
+        ("7B attn proj (decode)", 1, 4096, 4096),
+        ("7B ffn up (decode)", 1, 4096, 11008),
+        ("7B ffn up (train b8xs2048)", 8 * 2048, 4096, 11008),
+        ("micro attn (train b8xs128)", 8 * 129, 128, 128),
+        ("micro ffn up (train)", 8 * 129, 128, 336),
+        ("tiny ffn up (train)", 8 * 129, 256, 672),
+    ]
+    for name, m, k, n in shapes:
+        grid, (bm, bk, bn) = matmul_grid(m, k, n)
+        vmem = vmem_bytes(((bm, bk), "float32"), ((bk, bn), "float32"),
+                          ((bm, bn), "float32"), ((1, 1), "float32"))
+        # MXU utilization estimate: fraction of the 128x128 tile the block
+        # shapes fill (bm and bn lanes; bk streams through).
+        mxu_util = min(bm, MXU[0]) * min(bn, MXU[1]) / (MXU[0] * MXU[1])
+        rows.append({
+            "kernel": "quantized_matmul",
+            "shape": name,
+            "grid": list(grid),
+            "block": [bm, bk, bn],
+            "vmem_bytes": vmem,
+            "vmem_frac": vmem / VMEM_BUDGET,
+            "mxu_tile_util": mxu_util,
+        })
+    return rows
+
+
+def l2_profile(artifacts_dir):
+    rows = []
+    if not os.path.isdir(artifacts_dir):
+        return rows
+    for cfg in sorted(os.listdir(artifacts_dir)):
+        hlo_path = os.path.join(artifacts_dir, cfg, "train_step.hlo.txt")
+        if not os.path.exists(hlo_path):
+            continue
+        text = open(hlo_path).read()
+        ops = re.findall(r"= \w+\[[^\]]*\][^ ]* (\w+)\(", text)
+        from collections import Counter
+        census = Counter(ops)
+        rows.append({
+            "config": cfg,
+            "hlo_bytes": len(text),
+            "dot": census.get("dot", 0),
+            "while": census.get("while", 0),
+            "fusion": census.get("fusion", 0),
+            "convert": census.get("convert", 0),
+            "round": census.get("round-nearest-afz", 0) + census.get("round-nearest-even", 0),
+            "total_ops": sum(census.values()),
+        })
+    return rows
+
+
+def main():
+    out = {"l1": l1_profile(), "l2": l2_profile("../artifacts")}
+    os.makedirs("../results", exist_ok=True)
+    path = "../results/l1l2_profile.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    print("\nL1 kernel structural profile:")
+    print(f"{'shape':36} {'grid':>14} {'block (m,k,n)':>16} {'VMEM':>10} {'MXU':>6}")
+    for r in out["l1"]:
+        print(f"{r['shape']:36} {str(r['grid']):>14} {str(r['block']):>16} "
+              f"{r['vmem_bytes']/1024:>8.0f}Ki {r['mxu_tile_util']:>6.2f}")
+    print("\nL2 HLO census (train_step):")
+    print(f"{'config':24} {'bytes':>10} {'dots':>6} {'while':>6} {'convert':>8} {'ops':>7}")
+    for r in out["l2"]:
+        print(f"{r['config']:24} {r['hlo_bytes']:>10} {r['dot']:>6} "
+              f"{r['while']:>6} {r['convert']:>8} {r['total_ops']:>7}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L2: AdamW train step for QAT-from-scratch (paper sec 4 + Appendix B).
+
+The step is a pure function
+
+    (params, m, v, sched, tokens) -> (loss, params', m', v')
+
+lowered once per config by aot.py.  ``sched = [step, lr, wd]`` is a plain
+f32[3] operand so the *rust coordinator* owns the two-phase learning-rate /
+weight-decay schedule (Appendix B.2) and simply feeds different scalars as
+training progresses - no re-lowering, no python at runtime.
+
+Optimizer: AdamW with beta1=0.9, beta2=0.95 (paper Appendix C), decoupled
+weight decay applied only to >=2-D latent weight matrices (Appendix B.2
+discusses decay acting on latent weights).  Gradients and optimizer state
+are f32 throughout (sec 3.1: "gradients and optimizer states are maintained
+in FP32").
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import model
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+
+def decay_mask(params):
+    """1.0 for weight matrices (ndim >= 2), 0.0 for norms/scalars/embeddings.
+
+    Embeddings and the LM head stay full precision and are excluded from
+    decay, matching common LLM practice for the high-precision tensors the
+    paper leaves untouched.
+    """
+    def mask_leaf(path, leaf):
+        name = "/".join(str(p) for p in path)
+        if leaf.ndim < 2:
+            return 0.0
+        if "tok_embed" in name or "lm_head" in name:
+            return 0.0
+        return 1.0
+    return jax.tree_util.tree_map_with_path(mask_leaf, params)
+
+
+def adamw_step(params, grads, m, v, step, lr, wd, mask):
+    """One decoupled-weight-decay Adam update (all pytrees)."""
+    m = jax.tree_util.tree_map(
+        lambda mi, g: ADAM_B1 * mi + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree_util.tree_map(
+        lambda vi, g: ADAM_B2 * vi + (1 - ADAM_B2) * g * g, v, grads)
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+
+    def upd(p, mi, vi, mk):
+        mhat = mi / bc1
+        vhat = vi / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * mk * p)
+
+    params = jax.tree_util.tree_map(upd, params, m, v, mask)
+    return params, m, v
+
+
+def make_train_step(cfg: ModelConfig):
+    """Builds the jittable train step for one config."""
+    def train_step(params, m, v, sched, tokens):
+        step, lr, wd = sched[0], sched[1], sched[2]
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, tokens))(params)
+        mask = decay_mask(params)
+        params, m, v = adamw_step(params, grads, m, v, step, lr, wd, mask)
+        return loss, params, m, v
+    return train_step
+
+
+def init_opt_state(params):
+    """Zero-initialized Adam moments, matching the params pytree."""
+    zeros = lambda p: jnp.zeros_like(p)
+    return (jax.tree_util.tree_map(zeros, params),
+            jax.tree_util.tree_map(zeros, params))
+
+
+def make_grad_fn(cfg: ModelConfig):
+    """(params, tokens) -> (loss, grads); used by tests and the L2 profile."""
+    def grad_fn(params, tokens):
+        return jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, tokens))(params)
+    return grad_fn

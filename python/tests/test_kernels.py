@@ -1,0 +1,313 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value regimes; every kernel must match its
+oracle to float32 tolerance (the integer-carrier matmuls must match to
+rtol 1e-6 — they are exact integer sums below 2^24).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    quantized_matmul, decoupled_matmul, rmsnorm, router_top1, ref, quantize,
+)
+from compile.kernels.common import choose_block, matmul_grid, vmem_bytes
+
+DIMS = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 24, 48, 96, 128, 160])
+SMALL_DIMS = st.sampled_from([1, 2, 4, 8, 16, 32])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+HSET = settings(max_examples=8, deadline=None)
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128).astype(jnp.float32)
+
+
+def _rand_sign(key, shape):
+    return jnp.where(jax.random.normal(key, shape) >= 0, 1.0, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# quantized_matmul
+# ---------------------------------------------------------------------------
+
+@HSET
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       scale=st.floats(min_value=1e-4, max_value=10.0))
+def test_quantized_matmul_matches_ref(m, k, n, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = _rand_int8(k1, (m, k))
+    w = _rand_sign(k2, (k, n))
+    got = quantized_matmul(x, w, scale)
+    want = ref.quantized_matmul_ref(x, w, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_quantized_matmul_int8_weights_exact():
+    key = jax.random.PRNGKey(7)
+    x = _rand_int8(key, (33, 65))
+    w = _rand_int8(jax.random.PRNGKey(8), (65, 17))
+    got = quantized_matmul(x, w, 1.0)
+    want = ref.quantized_matmul_ref(x, w, 1.0)
+    # pure integer arithmetic: exact
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantized_matmul_zero_scale():
+    x = jnp.ones((4, 4))
+    w = jnp.ones((4, 4))
+    assert float(jnp.abs(quantized_matmul(x, w, 0.0)).max()) == 0.0
+
+
+def test_quantized_matmul_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        quantized_matmul(jnp.ones((4, 5)), jnp.ones((6, 4)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decoupled_matmul (the fused dual-branch kernel)
+# ---------------------------------------------------------------------------
+
+@HSET
+@given(m=DIMS, k=DIMS, n1=DIMS, r=SMALL_DIMS, seed=SEEDS)
+def test_decoupled_matmul_matches_ref(m, k, n1, r, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand_int8(keys[0], (m, k))
+    w1 = _rand_sign(keys[1], (k, n1))
+    w8 = _rand_int8(keys[2], (k, r))
+    got1, got8 = decoupled_matmul(x, w1, w8, 0.2, 2.0)
+    want1, want8 = ref.decoupled_matmul_ref(x, w1, w8, 0.2, 2.0)
+    np.testing.assert_allclose(got1, want1, rtol=1e-6)
+    np.testing.assert_allclose(got8, want8, rtol=1e-6)
+
+
+def test_decoupled_matmul_branch_independence():
+    """Zeroing one branch's weights must not change the other's output."""
+    key = jax.random.PRNGKey(3)
+    x = _rand_int8(key, (16, 32))
+    w1 = _rand_sign(jax.random.PRNGKey(4), (32, 48))
+    w8 = _rand_int8(jax.random.PRNGKey(5), (32, 8))
+    y1a, _ = decoupled_matmul(x, w1, w8, 1.0, 1.0)
+    y1b, _ = decoupled_matmul(x, w1, jnp.zeros_like(w8), 1.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(y1a), np.asarray(y1b))
+
+
+def test_decoupled_matmul_scales_apply_once():
+    """With scale=2 the output must be exactly 2× the scale=1 output —
+    catches double-rescaling across grid steps."""
+    key = jax.random.PRNGKey(11)
+    x = _rand_int8(key, (32, 128))   # forces multiple k and j tiles
+    w1 = _rand_sign(jax.random.PRNGKey(12), (128, 160))
+    w8 = _rand_int8(jax.random.PRNGKey(13), (128, 16))
+    y1a, y8a = decoupled_matmul(x, w1, w8, 1.0, 1.0)
+    y1b, y8b = decoupled_matmul(x, w1, w8, 2.0, 3.0)
+    np.testing.assert_allclose(np.asarray(y1b), 2 * np.asarray(y1a), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y8b), 3 * np.asarray(y8a), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@HSET
+@given(m=DIMS, d=DIMS, seed=SEEDS)
+def test_rmsnorm_matches_ref(m, d, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(keys[0], (m, d)) * 3.0
+    g = jax.random.normal(keys[1], (d,))
+    np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm_ref(x, g),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rmsnorm_unit_rows():
+    """Unit-gain RMSNorm output rows have RMS ≈ 1."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 10
+    y = np.asarray(rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt((y ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, np.ones(8), rtol=1e-3)
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c·x) == RMSNorm(x) for c > 0 (dynamic-range compression —
+    the property Appendix B relies on)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    g = jnp.ones(32)
+    a = np.asarray(rmsnorm(x, g))
+    b = np.asarray(rmsnorm(x * 100.0, g))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+@HSET
+@given(m=DIMS, d=DIMS, n=st.sampled_from([1, 2, 4, 8]), seed=SEEDS)
+def test_router_matches_ref(m, d, n, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(keys[0], (m, d))
+    w = jax.random.normal(keys[1], (d, n))
+    gi, gg = router_top1(x, w)
+    ri, rg = ref.router_top1_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(gg, rg, rtol=1e-5)
+
+
+def test_router_gate_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 8))
+    idx, gate = router_top1(x, w)
+    idx, gate = np.asarray(idx), np.asarray(gate)
+    assert ((idx >= 0) & (idx < 8)).all()
+    # top-1 softmax over 8 experts is at least 1/8 and at most 1
+    assert (gate >= 1.0 / 8 - 1e-6).all() and (gate <= 1.0 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+@HSET
+@given(m=DIMS, n=DIMS, seed=SEEDS, scale=st.floats(min_value=0.01, max_value=100.0))
+def test_binarize_matches_ref(m, n, seed, scale):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * scale
+    wq, lam = quantize.binarize_weight(w)
+    rq, rlam = ref.binarize_ref(w)
+    np.testing.assert_array_equal(np.asarray(wq), np.asarray(rq))
+    np.testing.assert_allclose(float(lam), float(rlam), rtol=1e-5)
+    assert set(np.unique(np.asarray(wq))) <= {-1.0, 1.0}
+
+
+@HSET
+@given(m=DIMS, n=DIMS, seed=SEEDS)
+def test_ternarize_matches_ref(m, n, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    wq, s = quantize.ternarize_weight(w)
+    rq, rs = ref.ternarize_ref(w)
+    np.testing.assert_array_equal(np.asarray(wq), np.asarray(rq))
+    assert set(np.unique(np.asarray(wq))) <= {-1.0, 0.0, 1.0}
+
+
+@HSET
+@given(m=DIMS, n=DIMS, seed=SEEDS, scale=st.floats(min_value=0.01, max_value=1000.0))
+def test_absmax_matches_ref(m, n, seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * scale
+    xq, g = quantize.absmax_quantize(x)
+    rq, rg = ref.absmax_ref(x)
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(rq))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg), rtol=1e-5)
+    assert np.abs(np.asarray(xq)).max() <= 127
+
+
+def test_absmax_integers():
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, 16)) * 5
+    xq, _ = quantize.absmax_quantize(x)
+    xq = np.asarray(xq)
+    np.testing.assert_array_equal(xq, np.round(xq))
+
+
+def test_absmax_zero_input():
+    xq, g = quantize.absmax_quantize(jnp.zeros((4, 8)))
+    assert np.abs(np.asarray(xq)).max() == 0.0
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_binarize_zero_input():
+    wq, lam = quantize.binarize_weight(jnp.zeros((4, 4)))
+    assert np.isfinite(float(lam))
+    assert set(np.unique(np.asarray(wq))) <= {-1.0, 1.0}
+
+
+# STE gradient identities ----------------------------------------------------
+
+def test_ste_gradient_is_identity():
+    def f(w):
+        wq, _ = quantize.binarize_weight_ste(w)
+        return jnp.sum(wq)
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    g = jax.grad(f)(w)
+    np.testing.assert_allclose(np.asarray(g), np.ones((8, 8)), rtol=1e-6)
+
+
+def test_ste_activation_gradient_is_identity():
+    def f(x):
+        xh, _, _ = quantize.absmax_quantize_ste(x)
+        return jnp.sum(xh * 2.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.ones((4, 16)), rtol=1e-6)
+
+
+def test_ternarize_ste_gradient_is_identity():
+    def f(w):
+        wq = quantize.ternarize_weight_ste(w)[0]
+        return jnp.sum(wq * 3.0)
+    w = jax.random.normal(jax.random.PRNGKey(2), (6, 6))
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(w)),
+                               3 * np.ones((6, 6)), rtol=1e-6)
+
+
+# groupwise / channelwise ablation quantizers --------------------------------
+
+def test_groupwise_roundtrip_shapes():
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 24))
+    wq, lam = quantize.binarize_weight_groupwise(w, group=64)
+    assert wq.shape == (128, 24) and lam.shape == (2, 24)
+    deq = quantize.dequant_groupwise(wq, lam, group=64)
+    assert deq.shape == (128, 24)
+    # every dequantized entry is ±λ of its group
+    deq_abs = np.abs(np.asarray(deq)).reshape(2, 64, 24)
+    for gi in range(2):
+        np.testing.assert_allclose(deq_abs[gi], np.broadcast_to(
+            np.asarray(lam)[gi], (64, 24)), rtol=1e-5)
+    # groupwise error ≤ per-tensor error on *centered* weights, where both
+    # quantizers share the same zero point (finer scales can only help)
+    wc = w - jnp.mean(w)
+    wq_g, lam_g = quantize.binarize_weight_groupwise(wc, group=64)
+    wq_t, lam_t = quantize.binarize_weight(wc)
+    err_g = float(jnp.mean((quantize.dequant_groupwise(wq_g, lam_g, 64) - wc) ** 2))
+    err_t = float(jnp.mean((wq_t * lam_t - wc) ** 2))
+    assert err_g <= err_t * 1.05 + 1e-6
+
+
+def test_channelwise_scales_per_column():
+    w = jnp.concatenate([jnp.ones((16, 1)) * 10.0, jnp.ones((16, 1)) * 0.1], axis=1)
+    w = w * jnp.sign(jax.random.normal(jax.random.PRNGKey(5), (16, 2)))
+    _, lam = quantize.binarize_weight_channelwise(w)
+    assert lam.shape == (1, 2)
+    assert float(lam[0, 0]) > float(lam[0, 1])
+
+
+def test_groupwise_requires_divisible():
+    with pytest.raises(AssertionError):
+        quantize.binarize_weight_groupwise(jnp.ones((100, 4)), group=64)
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(min_value=1, max_value=4096),
+       target=st.integers(min_value=1, max_value=512))
+@settings(max_examples=100, deadline=None)
+def test_choose_block_divides(dim, target):
+    b = choose_block(dim, target)
+    assert dim % b == 0
+    assert b >= 1
+    if dim <= target:
+        assert b == dim
+
+
+def test_matmul_grid_covers():
+    grid, (bm, bk, bn) = matmul_grid(96, 512, 160)
+    assert grid[0] * bm == 96 and grid[2] * bk == 512 and grid[1] * bn == 160
+
+
+def test_vmem_bytes():
+    assert vmem_bytes(((128, 512), jnp.float32)) == 128 * 512 * 4
+    assert vmem_bytes(((128, 512), jnp.int8), ((1, 1), jnp.float32)) == 128 * 512 + 4

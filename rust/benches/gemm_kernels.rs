@@ -1,0 +1,40 @@
+//! Figure 8 kernel benches: the four matmul engines at the paper's 7B
+//! linear-layer shapes (d=4096 GEMV, the edge decode regime) and at the
+//! testbed's micro shapes.  Run with `cargo bench --bench gemm_kernels`.
+
+use pquant::gemm::{build_luts, f32_gemv, i8_gemv, lut_gemv, ternary_gemv};
+use pquant::quant::{pack_signs, pack_ternary};
+use pquant::util::bench::Bencher;
+use pquant::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    for &(k, n, label) in &[
+        (4096usize, 4096usize, "7B attn proj"),
+        (4096, 11008, "7B ffn up"),
+        (256, 704, "micro ffn up"),
+    ] {
+        let x_f: Vec<f32> = rng.normal_vec(k);
+        let x_q: Vec<i8> = x_f.iter().map(|v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+        let w_f: Vec<f32> = rng.normal_vec(k * n);
+        let signs: Vec<bool> = w_f.iter().map(|&v| v >= 0.0).collect();
+        let w_packed = pack_signs(&signs, k, n);
+        let tern: Vec<i8> = w_f.iter().map(|&v| (v * 1.2).round().clamp(-1.0, 1.0) as i8).collect();
+        let w_tern = pack_ternary(&tern, k, n);
+        let w_i8: Vec<i8> = w_f.iter().map(|&v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+
+        b.bench(&format!("f32_gemv       {label} {k}x{n}"), || f32_gemv(&x_f, &w_f, k, n));
+        b.bench(&format!("i8_gemv        {label} {k}x{n}"), || i8_gemv(&x_q, &w_i8, k, n));
+        b.bench(&format!("ternary_gemv   {label} {k}x{n}"), || ternary_gemv(&x_q, &w_tern));
+        b.bench(&format!("lut_build      {label} k={k}"), || build_luts(&x_q, k));
+        let luts = build_luts(&x_q, k);
+        b.bench(&format!("lut_gemv(W1A8) {label} {k}x{n}"), || lut_gemv(&luts, &w_packed));
+        b.bench(&format!("lut_build+gemv {label} {k}x{n}"), || {
+            let l = build_luts(&x_q, k);
+            lut_gemv(&l, &w_packed)
+        });
+    }
+    b.write_json("gemm_kernels");
+}

@@ -1,0 +1,37 @@
+//! Quantizer + packing benches: the offline weight-conversion path and the
+//! per-token activation quantization that sits on the decode hot path.
+
+use pquant::quant;
+use pquant::util::bench::Bencher;
+use pquant::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(2);
+
+    let w: Vec<f32> = rng.normal_vec(4096 * 4096);
+    b.bench("binarize 4096x4096", || quant::binarize(&w));
+    b.bench("ternarize 4096x4096", || quant::ternarize(&w));
+    b.bench("quantize_i8 4096x4096", || quant::quantize_i8(&w));
+
+    let bin = quant::binarize(&w);
+    b.bench("pack_signs 4096x4096", || quant::pack_signs(&bin.signs, 4096, 4096));
+    let tern = quant::ternarize(&w);
+    b.bench("pack_ternary 4096x4096", || quant::pack_ternary(&tern.vals, 4096, 4096));
+
+    // per-token activation quantization (hot path, d=4096)
+    let x: Vec<f32> = rng.normal_vec(4096);
+    b.bench("quantize_i8_rows 1x4096 (per token)", || {
+        quant::quantize_i8_rows(&x, 1, 4096)
+    });
+
+    // group/channel-wise ablation quantizers
+    let wg: Vec<f32> = rng.normal_vec(4096 * 256);
+    b.bench("binarize_channelwise 4096x256", || {
+        quant::binarize_channelwise(&wg, 4096, 256)
+    });
+    b.bench("binarize_groupwise g=64 4096x256", || {
+        quant::binarize_groupwise(&wg, 4096, 256, 64)
+    });
+    b.write_json("quant_pack");
+}

@@ -1,0 +1,59 @@
+//! Serving throughput bench (§4.5): packed engines under the continuous
+//! batcher at matched geometry.
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::serve::{load_test, ServeOptions};
+use pquant::util::bench::Bencher;
+
+fn cfg(variant: Variant, n: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("bench-{}", variant.name()),
+        variant,
+        vocab: 512,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 704,
+        r: if variant == Variant::PQuant { 32 } else { 0 },
+        n_experts: if variant == Variant::PQuant { n } else { 1 },
+        seq_len: 64,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    for (label, variant, n) in [
+        ("fp16", Variant::Fp16, 1),
+        ("bitnet1.58", Variant::BitNet158, 1),
+        ("pquant-n1", Variant::PQuant, 1),
+        ("pquant-n8", Variant::PQuant, 8),
+    ] {
+        b.bench(&format!("serve 8req x 8tok {label}"), || {
+            let model = PackedModel::random(&cfg(variant, n), 3);
+            load_test(vec![model], 8, 4, 8, &ServeOptions { max_batch: 4, workers: 1 })
+        });
+    }
+    // decode-step microbench (single token, batch 1)
+    for (label, variant, n) in [
+        ("fp16", Variant::Fp16, 1),
+        ("bitnet1.58", Variant::BitNet158, 1),
+        ("pquant-n1", Variant::PQuant, 1),
+    ] {
+        let mut model = PackedModel::random(&cfg(variant, n), 4);
+        let mut caches = model.new_caches(64);
+        let mut pos = 0usize;
+        b.bench(&format!("decode_step {label}"), || {
+            if pos >= 63 {
+                caches = model.new_caches(64);
+                pos = 0;
+            }
+            let out = model.decode_step(1, pos, &mut caches);
+            pos += 1;
+            out
+        });
+    }
+    b.write_json("serving");
+}

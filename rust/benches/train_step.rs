@@ -1,0 +1,35 @@
+//! AOT train-step bench: PJRT execution + host state threading overhead
+//! (the L3 part of the training hot path; Table 8's per-step cost).
+//! Requires `make artifacts`.
+
+use pquant::runtime::{load_artifact, Runtime, TrainState};
+use pquant::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    for config in ["nano-pquant", "micro-pquant", "micro-pquant-n8"] {
+        let Ok(art) = load_artifact(config) else {
+            eprintln!("[skip] {config}: run `make artifacts`");
+            continue;
+        };
+        let step = runtime.compile(&art, "train_step").expect("compile");
+        let mut state = TrainState::initial(&art).expect("init");
+        let n_tok = step.spec.inputs.last().unwrap().element_count();
+        let tokens: Vec<i32> =
+            (0..n_tok).map(|i| (i % art.manifest.config.vocab) as i32).collect();
+        // warm once (first execution includes lazy init)
+        state.step(&step, &tokens, 1e-3, 0.1).unwrap();
+        b.bench(&format!("train_step {config}"), || {
+            state.step(&step, &tokens, 1e-3, 0.1).unwrap()
+        });
+        // state-threading overhead: fwd-only for comparison
+        let fwd = runtime.compile(&art, "fwd").expect("compile fwd");
+        let seq = art.manifest.seq_len;
+        let toks: Vec<i32> = (0..seq).map(|i| (i % 100) as i32).collect();
+        b.bench(&format!("fwd_b1      {config}"), || {
+            state.forward(&fwd, &toks).unwrap()
+        });
+    }
+    b.write_json("train_step");
+}

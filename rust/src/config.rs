@@ -1,0 +1,268 @@
+//! Model/variant configurations — the rust mirror of
+//! `python/compile/configs.py` (kept in sync by an integration test that
+//! cross-checks against `artifacts/*/manifest.json`).
+//!
+//! Also carries the *paper-scale* configs (Table 1 / Table 4) used by the
+//! analytic memory model and the Figure-8 workload shapes, which never run
+//! through PJRT.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Quantization variant of a model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Full-precision baseline (f32 on this testbed; "FP16" in the paper).
+    Fp16,
+    /// BitNet: every linear 1-bit sign/absmean, W1A8.
+    BitNet,
+    /// BitNet1.58: every linear ternary absmean, W1.58A8.
+    BitNet158,
+    /// pQuant: 1-bit MHA + decoupled FFN with N INT8 expert branches.
+    PQuant,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "fp16" => Variant::Fp16,
+            "bitnet" => Variant::BitNet,
+            "bitnet158" => Variant::BitNet158,
+            "pquant" => Variant::PQuant,
+            _ => bail!("unknown variant {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Fp16 => "fp16",
+            Variant::BitNet => "bitnet",
+            Variant::BitNet158 => "bitnet158",
+            Variant::PQuant => "pquant",
+        }
+    }
+
+    /// Storage bits per weight in quantized linear layers.
+    pub fn weight_bits(&self) -> f64 {
+        match self {
+            Variant::Fp16 => 16.0,
+            Variant::BitNet => 1.0,
+            Variant::BitNet158 => 1.58,
+            Variant::PQuant => 1.0, // 1-bit branch; the 8-bit branch is counted separately
+        }
+    }
+}
+
+/// One (size, variant) model configuration. Field semantics match
+/// `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub variant: Variant,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub r: usize,
+    pub n_experts: usize,
+    pub seq_len: usize,
+    pub alpha_init: f32,
+    pub beta_init: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_ff_1bit(&self) -> usize {
+        self.d_ff - self.r
+    }
+
+    /// Total parameter count (embeddings + blocks + head); mirrors the
+    /// python `param_count` exactly (cross-checked in tests).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let v = self.vocab;
+        let mut n = 2 * v * d;
+        let mut per_layer = 4 * d * d + 2 * d;
+        if self.variant == Variant::PQuant {
+            per_layer += 2 * d * self.d_ff_1bit();
+            per_layer += self.n_experts * 2 * d * self.r;
+            per_layer += d * self.n_experts;
+            per_layer += 2;
+        } else {
+            per_layer += 2 * d * self.d_ff;
+        }
+        n += self.n_layers * per_layer;
+        n + d
+    }
+
+    /// Parameters touched per forward pass (top-1 routing: one expert).
+    pub fn activated_param_count(&self) -> usize {
+        if self.variant != Variant::PQuant {
+            return self.param_count();
+        }
+        self.param_count()
+            - (self.n_experts - 1) * 2 * self.d_model * self.r * self.n_layers
+    }
+
+    /// Average storage bits per block weight (paper's 1.28-1.35 bit).
+    pub fn avg_bits_per_weight(&self) -> f64 {
+        let d = self.d_model as f64;
+        match self.variant {
+            Variant::Fp16 => 16.0,
+            Variant::BitNet => 1.0,
+            Variant::BitNet158 => 1.58,
+            Variant::PQuant => {
+                let one = 4.0 * d * d + 2.0 * d * self.d_ff_1bit() as f64;
+                let eight = self.n_experts as f64 * 2.0 * d * self.r as f64;
+                (one + eight * 8.0) / (one + eight)
+            }
+        }
+    }
+
+    /// Parse the `config` object embedded in an artifact manifest.
+    pub fn from_manifest_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            variant: Variant::parse(j.get("variant")?.as_str()?)?,
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            r: j.get("r")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            alpha_init: j.get("alpha_init")?.as_f64()? as f32,
+            beta_init: j.get("beta_init")?.as_f64()? as f32,
+        })
+    }
+}
+
+/// Paper-scale configurations (Table 1 for pQuant, Table 4 for baselines).
+/// Used by the analytic memory model (Fig 6, Tables 3/6) and the Figure-8
+/// workload shapes; these sizes never execute on this testbed.
+pub fn paper_configs() -> Vec<ModelConfig> {
+    let mk = |name: &str, variant, d_model, n_layers, n_heads, d_ff, r, n_experts| ModelConfig {
+        name: name.to_string(),
+        variant,
+        vocab: 32_000, // paper: BPE tokenizer, 32K vocab (Appendix B)
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        r,
+        n_experts,
+        seq_len: 2048,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    };
+    vec![
+        // pQuant, paper Table 1: D_FF column is "total(base - r)"
+        mk("paper-300M-pquant", Variant::PQuant, 1024, 24, 16, 2400, 128, 1),
+        mk("paper-700M-pquant", Variant::PQuant, 1536, 24, 24, 4096, 256, 1),
+        mk("paper-1.3B-pquant", Variant::PQuant, 2048, 24, 32, 5460, 384, 1),
+        mk("paper-2.6B-pquant", Variant::PQuant, 2880, 24, 32, 7680, 512, 1),
+        // Baselines, paper Table 4
+        mk("paper-300M-fp16", Variant::Fp16, 1024, 24, 16, 2400, 0, 1),
+        mk("paper-700M-fp16", Variant::Fp16, 1536, 24, 24, 4096, 0, 1),
+        mk("paper-1.3B-fp16", Variant::Fp16, 2048, 24, 32, 5460, 0, 1),
+        mk("paper-300M-bitnet", Variant::BitNet, 1024, 24, 16, 2400, 0, 1),
+        mk("paper-700M-bitnet", Variant::BitNet, 1536, 24, 24, 4096, 0, 1),
+        mk("paper-1.3B-bitnet", Variant::BitNet, 2048, 24, 32, 5460, 0, 1),
+        mk("paper-300M-bitnet158", Variant::BitNet158, 1024, 24, 16, 2400, 0, 1),
+        mk("paper-700M-bitnet158", Variant::BitNet158, 1536, 24, 24, 4096, 0, 1),
+        mk("paper-1.3B-bitnet158", Variant::BitNet158, 2048, 24, 32, 5460, 0, 1),
+        // 7B LLaMA-2 shape for the Figure-8 component-time workload
+        mk("paper-7B-fp16", Variant::Fp16, 4096, 32, 32, 11008, 0, 1),
+        mk("paper-7B-bitnet158", Variant::BitNet158, 4096, 32, 32, 11008, 0, 1),
+        mk("paper-7B-pquant", Variant::PQuant, 4096, 32, 32, 11008, 512, 1),
+    ]
+}
+
+/// Paper-scale pQuant config with N experts (for Table 6 / Fig 6 sweeps).
+pub fn paper_pquant_n(base: &ModelConfig, n_experts: usize) -> ModelConfig {
+    let mut c = base.clone();
+    c.n_experts = n_experts;
+    c.name = format!("{}-n{n_experts}", base.name);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pquant() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-pquant".into(),
+            variant: Variant::PQuant,
+            vocab: 1024,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 704,
+            r: 32,
+            n_experts: 1,
+            seq_len: 128,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        }
+    }
+
+    #[test]
+    fn param_count_breakdown() {
+        let c = tiny_pquant();
+        // manual: 2*1024*256 embed/head + 256 final norm
+        //  + 4 layers * (4*256*256 + 2*256 + 2*256*672 + 2*256*32 + 256 + 2)
+        let per_layer = 4 * 256 * 256 + 2 * 256 + 2 * 256 * 672 + 2 * 256 * 32 + 256 + 2;
+        assert_eq!(c.param_count(), 2 * 1024 * 256 + 256 + 4 * per_layer);
+    }
+
+    #[test]
+    fn activated_equals_total_when_single_expert() {
+        let c = tiny_pquant();
+        assert_eq!(c.param_count(), c.activated_param_count());
+        let mut c8 = c.clone();
+        c8.n_experts = 8;
+        assert!(c8.activated_param_count() < c8.param_count());
+        assert_eq!(
+            c8.param_count() - c8.activated_param_count(),
+            7 * 2 * 256 * 32 * 4
+        );
+    }
+
+    #[test]
+    fn avg_bits_in_paper_range() {
+        // Paper reports 1.28-1.35 bits for its configs; ours keep the ratio.
+        let c = tiny_pquant();
+        let bits = c.avg_bits_per_weight();
+        assert!(bits > 1.05 && bits < 1.6, "bits = {bits}");
+    }
+
+    #[test]
+    fn paper_configs_have_sane_sizes() {
+        for c in paper_configs() {
+            let p = c.param_count() as f64;
+            match &c.name {
+                n if n.contains("300M") => assert!((1e8..6e8).contains(&p), "{n}: {p}"),
+                n if n.contains("700M") => assert!((4e8..1.2e9).contains(&p), "{n}: {p}"),
+                n if n.contains("1.3B") => assert!((0.9e9..2.0e9).contains(&p), "{n}: {p}"),
+                n if n.contains("2.6B") => assert!((1.8e9..3.6e9).contains(&p), "{n}: {p}"),
+                n if n.contains("7B") => assert!((5e9..9e9).contains(&p), "{n}: {p}"),
+                n => panic!("unclassified config {n}"),
+            }
+        }
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant] {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+        assert!(Variant::parse("int4").is_err());
+    }
+}

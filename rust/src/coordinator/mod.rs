@@ -1,0 +1,12 @@
+//! L3 training orchestration: the coordinator owns the event loop, the
+//! two-phase schedule, data batching, checkpointing and stability recovery,
+//! and drives the AOT train-step executable through the PJRT runtime.
+//! Python never runs here — see DESIGN.md.
+
+pub mod schedule;
+pub mod stability;
+pub mod trainer;
+
+pub use schedule::TwoPhaseSchedule;
+pub use stability::{StabilityMonitor, Verdict};
+pub use trainer::{TrainOptions, Trainer, TrainingReport};

@@ -1,0 +1,151 @@
+//! Two-phase training schedule (paper Appendix B.2, Fig 9).
+//!
+//! Phase 1 (first half): LR warms up linearly for `warmup` steps, then
+//! decays linearly from `peak_lr` to `mid_lr`; weight decay is `wd1`
+//! (0.1 in the paper).
+//! Phase 2 (second half): LR restarts at `phase2_lr` (< mid-phase value)
+//! and decays linearly to `final_lr`; weight decay is disabled — in 1-bit
+//! training decay acts on latent weights and causes sign oscillation near
+//! quantization thresholds late in training.
+
+/// The paper's two-phase LR/WD schedule.
+#[derive(Debug, Clone)]
+pub struct TwoPhaseSchedule {
+    pub total_steps: u64,
+    pub warmup: u64,
+    pub peak_lr: f32,
+    /// LR at the end of phase 1, as a fraction of peak (paper fig 9 shows
+    /// roughly a 3× drop over phase 1).
+    pub mid_lr: f32,
+    /// LR at the start of phase 2 (the discontinuous drop).
+    pub phase2_lr: f32,
+    pub final_lr: f32,
+    /// Weight decay during phase 1 (0.1 in the paper), 0 in phase 2.
+    pub wd1: f32,
+}
+
+impl TwoPhaseSchedule {
+    /// Paper-shaped defaults for a given length/peak.
+    pub fn paper(total_steps: u64, peak_lr: f32) -> TwoPhaseSchedule {
+        TwoPhaseSchedule {
+            total_steps,
+            // paper: 500 warmup steps at 100B-token scale; keep the ratio
+            warmup: (total_steps / 20).max(10).min(500),
+            peak_lr,
+            mid_lr: peak_lr * 0.35,
+            phase2_lr: peak_lr * 0.25,
+            final_lr: peak_lr * 0.02,
+            wd1: 0.1,
+        }
+    }
+
+    /// Single-phase cosine-free baseline (used by the fp16 ablation —
+    /// Appendix E notes half-precision models don't benefit from the
+    /// two-phase drop).
+    pub fn single_phase(total_steps: u64, peak_lr: f32) -> TwoPhaseSchedule {
+        TwoPhaseSchedule {
+            total_steps,
+            warmup: (total_steps / 20).max(10).min(500),
+            peak_lr,
+            mid_lr: peak_lr * 0.1,
+            phase2_lr: peak_lr * 0.1, // continuous at midpoint
+            final_lr: peak_lr * 0.02,
+            wd1: 0.1,
+        }
+    }
+
+    pub fn midpoint(&self) -> u64 {
+        self.total_steps / 2
+    }
+
+    /// Learning rate at 1-based `step`.
+    pub fn lr(&self, step: u64) -> f32 {
+        let step = step.min(self.total_steps).max(1);
+        if step <= self.warmup {
+            return self.peak_lr * step as f32 / self.warmup as f32;
+        }
+        let mid = self.midpoint();
+        if step <= mid {
+            let t = (step - self.warmup) as f32 / (mid - self.warmup).max(1) as f32;
+            self.peak_lr + (self.mid_lr - self.peak_lr) * t
+        } else {
+            let t = (step - mid) as f32 / (self.total_steps - mid).max(1) as f32;
+            self.phase2_lr + (self.final_lr - self.phase2_lr) * t
+        }
+    }
+
+    /// Weight decay at `step`: wd1 in phase 1, 0 in phase 2.
+    pub fn wd(&self, step: u64) -> f32 {
+        if step <= self.midpoint() {
+            self.wd1
+        } else {
+            0.0
+        }
+    }
+
+    /// (step, lr, wd) triples for plotting (Fig 9 harness).
+    pub fn trace(&self, points: usize) -> Vec<(u64, f32, f32)> {
+        (0..points)
+            .map(|i| {
+                let step = 1 + i as u64 * self.total_steps.saturating_sub(1) / (points - 1).max(1) as u64;
+                (step, self.lr(step), self.wd(step))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let s = TwoPhaseSchedule::paper(1000, 1e-3);
+        assert!(s.lr(1) < s.lr(s.warmup));
+        assert!((s.lr(s.warmup) - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase1_monotone_decreasing_after_warmup() {
+        let s = TwoPhaseSchedule::paper(1000, 1e-3);
+        let mid = s.midpoint();
+        let mut prev = s.lr(s.warmup);
+        for step in s.warmup + 1..=mid {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-12, "lr not decreasing at {step}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn discontinuous_drop_at_midpoint() {
+        let s = TwoPhaseSchedule::paper(1000, 1e-3);
+        let mid = s.midpoint();
+        assert!(s.lr(mid + 1) < s.lr(mid), "phase 2 must start below phase 1 end");
+    }
+
+    #[test]
+    fn weight_decay_disabled_in_phase2() {
+        let s = TwoPhaseSchedule::paper(1000, 1e-3);
+        assert_eq!(s.wd(1), 0.1);
+        assert_eq!(s.wd(s.midpoint()), 0.1);
+        assert_eq!(s.wd(s.midpoint() + 1), 0.0);
+        assert_eq!(s.wd(1000), 0.0);
+    }
+
+    #[test]
+    fn single_phase_is_continuous() {
+        let s = TwoPhaseSchedule::single_phase(1000, 1e-3);
+        let mid = s.midpoint();
+        assert!((s.lr(mid) - s.lr(mid + 1)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn trace_covers_range() {
+        let s = TwoPhaseSchedule::paper(500, 1e-3);
+        let t = s.trace(50);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t.last().unwrap().0, 500);
+    }
+}

@@ -1,0 +1,115 @@
+//! Training stability monitor (paper Appendix G / Fig 10).
+//!
+//! The paper reports that 1-bit BitNet "frequently suffers from gradient
+//! explosion during training, often requiring checkpoint reloading and
+//! restarts", while pQuant stays stable.  This monitor implements that
+//! operational loop: it watches the loss stream, flags divergence
+//! (NaN/Inf or a loss spike above `spike_factor` × the recent median), and
+//! tells the trainer to roll back to the last good snapshot.
+
+use std::collections::VecDeque;
+
+/// Divergence verdict for one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Ok,
+    /// Loss is NaN/Inf or spiked: roll back and re-try from the snapshot.
+    RollBack,
+}
+
+#[derive(Debug, Clone)]
+pub struct StabilityMonitor {
+    window: VecDeque<f32>,
+    window_len: usize,
+    pub spike_factor: f32,
+    pub rollbacks: usize,
+}
+
+impl StabilityMonitor {
+    pub fn new(window_len: usize, spike_factor: f32) -> StabilityMonitor {
+        StabilityMonitor {
+            window: VecDeque::with_capacity(window_len),
+            window_len,
+            spike_factor,
+            rollbacks: 0,
+        }
+    }
+
+    /// Paper-shaped defaults.
+    pub fn default_paper() -> StabilityMonitor {
+        StabilityMonitor::new(20, 1.5)
+    }
+
+    fn median(&self) -> Option<f32> {
+        if self.window.len() < self.window_len / 2 {
+            return None; // not enough history yet
+        }
+        let mut v: Vec<f32> = self.window.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(v[v.len() / 2])
+    }
+
+    /// Observe a loss; `RollBack` means the step must be discarded.
+    pub fn observe(&mut self, loss: f32) -> Verdict {
+        if !loss.is_finite() {
+            self.rollbacks += 1;
+            return Verdict::RollBack;
+        }
+        if let Some(med) = self.median() {
+            if loss > med * self.spike_factor {
+                self.rollbacks += 1;
+                return Verdict::RollBack;
+            }
+        }
+        self.window.push_back(loss);
+        if self.window.len() > self.window_len {
+            self.window.pop_front();
+        }
+        Verdict::Ok
+    }
+
+    /// Clear history after a rollback (losses before the snapshot are stale).
+    pub fn reset_window(&mut self) {
+        self.window.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_smooth_descent() {
+        let mut m = StabilityMonitor::default_paper();
+        for i in 0..100 {
+            let loss = 6.0 - 0.01 * i as f32;
+            assert_eq!(m.observe(loss), Verdict::Ok);
+        }
+        assert_eq!(m.rollbacks, 0);
+    }
+
+    #[test]
+    fn rejects_nan_immediately() {
+        let mut m = StabilityMonitor::default_paper();
+        assert_eq!(m.observe(f32::NAN), Verdict::RollBack);
+        assert_eq!(m.observe(f32::INFINITY), Verdict::RollBack);
+        assert_eq!(m.rollbacks, 2);
+    }
+
+    #[test]
+    fn rejects_spike_after_history() {
+        let mut m = StabilityMonitor::default_paper();
+        for _ in 0..20 {
+            m.observe(2.0);
+        }
+        assert_eq!(m.observe(10.0), Verdict::RollBack);
+        assert_eq!(m.observe(2.1), Verdict::Ok);
+    }
+
+    #[test]
+    fn no_spike_detection_without_history() {
+        let mut m = StabilityMonitor::default_paper();
+        // first observation can be anything finite
+        assert_eq!(m.observe(1000.0), Verdict::Ok);
+    }
+}

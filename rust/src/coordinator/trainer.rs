@@ -1,0 +1,268 @@
+//! The training loop: batches → sched scalars → AOT train step → metrics,
+//! with periodic eval, checkpointing, and stability rollback.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::schedule::TwoPhaseSchedule;
+use super::stability::{StabilityMonitor, Verdict};
+use crate::data::Dataset;
+use crate::runtime::{Artifact, CompiledEntry, Runtime, TrainState};
+
+/// Knobs for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: u64,
+    pub peak_lr: f32,
+    /// Steps between loss log lines (0 = silent).
+    pub log_every: u64,
+    /// Steps between in-memory stability snapshots.
+    pub snapshot_every: u64,
+    /// Steps between held-out perplexity evals (0 = never).
+    pub eval_every: u64,
+    /// Use the single-phase baseline schedule instead of two-phase.
+    pub single_phase: bool,
+    /// Optional on-disk checkpoint path written at the end.
+    pub final_checkpoint: Option<String>,
+    /// Dataset shuffle seed.
+    pub data_seed: u64,
+    /// Override α/β init (feature-scaling ablation, Fig 5b). Values are
+    /// written into the initial params before training.
+    pub feature_scaling_override: Option<(f32, f32)>,
+    /// Inject a synthetic loss spike at this step (Fig 10 harness: shows
+    /// the rollback machinery; BitNet-style instability does not reliably
+    /// reproduce at nano scale).
+    pub inject_spike_at: Option<u64>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 200,
+            peak_lr: 1.5e-3,
+            log_every: 20,
+            snapshot_every: 25,
+            eval_every: 0,
+            single_phase: false,
+            final_checkpoint: None,
+            data_seed: 0xDA7A,
+            feature_scaling_override: None,
+            inject_spike_at: None,
+        }
+    }
+}
+
+/// Everything a run produces (consumed by the experiment harnesses).
+#[derive(Debug, Clone)]
+pub struct TrainingReport {
+    pub config_name: String,
+    pub losses: Vec<f32>,
+    pub eval_ppl: Vec<(u64, f64)>,
+    pub final_loss: f32,
+    /// Mean loss over the last 10% of steps (smoother than final_loss).
+    pub tail_loss: f32,
+    pub rollbacks: usize,
+    pub wall_seconds: f64,
+    pub tokens_per_second: f64,
+    pub steps: u64,
+    /// Converged feature-scaling values per layer: (alpha, beta).
+    pub feature_scaling: Vec<(f32, f32)>,
+}
+
+/// Orchestrates one QAT-from-scratch run over an artifact.
+pub struct Trainer<'a> {
+    pub runtime: &'a Runtime,
+    pub artifact: &'a Artifact,
+    pub dataset: &'a Dataset,
+    pub state: TrainState,
+    step_entry: CompiledEntry,
+    fwd_entry: Option<CompiledEntry>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        runtime: &'a Runtime,
+        artifact: &'a Artifact,
+        dataset: &'a Dataset,
+    ) -> Result<Trainer<'a>> {
+        let step_entry = runtime
+            .compile(artifact, "train_step")
+            .context("compiling train_step")?;
+        let state = TrainState::initial(artifact)?;
+        Ok(Trainer { runtime, artifact, dataset, state, step_entry, fwd_entry: None })
+    }
+
+    /// Train with a specific batch-size entry (batch ablation, Appendix E).
+    pub fn with_entry(
+        runtime: &'a Runtime,
+        artifact: &'a Artifact,
+        dataset: &'a Dataset,
+        entry: &str,
+    ) -> Result<Trainer<'a>> {
+        let step_entry = runtime.compile(artifact, entry)?;
+        let state = TrainState::initial(artifact)?;
+        Ok(Trainer { runtime, artifact, dataset, state, step_entry, fwd_entry: None })
+    }
+
+    fn override_feature_scaling(&mut self, alpha: f32, beta: f32) -> Result<()> {
+        use crate::runtime::literal_f32;
+        for (i, spec) in self.artifact.manifest.param_layout.iter().enumerate() {
+            if spec.name.ends_with(".alpha") {
+                self.state.params[i] = literal_f32(&[], &[alpha])?;
+            } else if spec.name.ends_with(".beta") {
+                self.state.params[i] = literal_f32(&[], &[beta])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the full loop; returns the report.
+    pub fn run(&mut self, opts: &TrainOptions) -> Result<TrainingReport> {
+        let manifest = &self.artifact.manifest;
+        if let Some((a, b)) = opts.feature_scaling_override {
+            self.override_feature_scaling(a, b)?;
+        }
+        let schedule = if opts.single_phase {
+            TwoPhaseSchedule::single_phase(opts.steps, opts.peak_lr)
+        } else {
+            TwoPhaseSchedule::paper(opts.steps, opts.peak_lr)
+        };
+        let batch = self.step_entry.spec.batch;
+        let mut batches = self.dataset.batches(batch, manifest.seq_len, opts.data_seed);
+        let mut monitor = StabilityMonitor::default_paper();
+        let mut losses = Vec::with_capacity(opts.steps as usize);
+        let mut eval_ppl = Vec::new();
+
+        // In-memory stability snapshot: (step, serialized state on disk).
+        let snap_path = format!("/tmp/pquant_snapshot_{}.ckpt", std::process::id());
+        let mut snapshot_step: u64 = 0;
+        self.state.save_checkpoint(self.artifact, &snap_path)?;
+
+        let t0 = Instant::now();
+        let mut step: u64 = 0;
+        let mut retry_budget = 8usize;
+        while step < opts.steps {
+            let lr = schedule.lr(step + 1);
+            let wd = schedule.wd(step + 1);
+            let tokens = batches.next_batch();
+            let mut loss = self
+                .state
+                .step(&self.step_entry, &tokens, lr, wd)
+                .with_context(|| format!("train step {step}"))?;
+            if opts.inject_spike_at == Some(step) {
+                loss = loss * 20.0; // simulated divergence (Fig 10 harness)
+            }
+            match monitor.observe(loss) {
+                Verdict::Ok => {
+                    losses.push(loss);
+                    step += 1;
+                    if opts.snapshot_every > 0 && step % opts.snapshot_every == 0 {
+                        self.state.save_checkpoint(self.artifact, &snap_path)?;
+                        snapshot_step = step;
+                    }
+                    if opts.log_every > 0 && step % opts.log_every == 0 {
+                        println!(
+                            "[train {}] step {step}/{} loss {loss:.4} lr {lr:.2e} wd {wd}",
+                            manifest.config.name, opts.steps
+                        );
+                    }
+                    if opts.eval_every > 0 && step % opts.eval_every == 0 {
+                        if let Some(ppl) = self.eval_perplexity(2048)? {
+                            eval_ppl.push((step, ppl));
+                            println!(
+                                "[train {}] step {step} valid ppl {ppl:.2}",
+                                manifest.config.name
+                            );
+                        }
+                    }
+                }
+                Verdict::RollBack => {
+                    if retry_budget == 0 {
+                        anyhow::bail!("training diverged beyond the retry budget");
+                    }
+                    retry_budget -= 1;
+                    println!(
+                        "[train {}] step {step}: loss {loss:.3} diverged — rolling back to step {snapshot_step}",
+                        manifest.config.name
+                    );
+                    self.state = TrainState::load_checkpoint(self.artifact, &snap_path)?;
+                    // Re-seed the batch stream past the bad batch.
+                    batches = self.dataset.batches(
+                        batch,
+                        manifest.seq_len,
+                        opts.data_seed ^ (0x5EED + step),
+                    );
+                    losses.truncate(snapshot_step as usize);
+                    step = snapshot_step;
+                    monitor.reset_window();
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        std::fs::remove_file(&snap_path).ok();
+
+        if let Some(path) = &opts.final_checkpoint {
+            self.state.save_checkpoint(self.artifact, path)?;
+        }
+
+        let tail_n = (losses.len() / 10).max(1);
+        let tail_loss =
+            losses[losses.len() - tail_n..].iter().sum::<f32>() / tail_n as f32;
+        let tokens_per_step = (batch * (manifest.seq_len + 1)) as f64;
+        Ok(TrainingReport {
+            config_name: manifest.config.name.clone(),
+            final_loss: *losses.last().unwrap_or(&f32::NAN),
+            tail_loss,
+            losses,
+            eval_ppl,
+            rollbacks: monitor.rollbacks,
+            wall_seconds: wall,
+            tokens_per_second: tokens_per_step * opts.steps as f64 / wall,
+            steps: opts.steps,
+            feature_scaling: self.feature_scaling()?,
+        })
+    }
+
+    /// Current per-layer (α, β) values (Table 7 harness).
+    pub fn feature_scaling(&self) -> Result<Vec<(f32, f32)>> {
+        let mut alphas = Vec::new();
+        let mut betas = Vec::new();
+        for (spec, lit) in self
+            .artifact
+            .manifest
+            .param_layout
+            .iter()
+            .zip(&self.state.params)
+        {
+            if spec.name.ends_with(".alpha") {
+                alphas.push(crate::runtime::literal_to_f32(lit)?[0]);
+            } else if spec.name.ends_with(".beta") {
+                betas.push(crate::runtime::literal_to_f32(lit)?[0]);
+            }
+        }
+        Ok(alphas.into_iter().zip(betas).collect())
+    }
+
+    /// Held-out perplexity via the fwd_b8 entry (or fwd as fallback).
+    pub fn eval_perplexity(&mut self, max_tokens: usize) -> Result<Option<f64>> {
+        if self.fwd_entry.is_none() {
+            let key = if self.artifact.manifest.entries.contains_key("fwd_b8") {
+                "fwd_b8"
+            } else {
+                "fwd"
+            };
+            self.fwd_entry = Some(self.runtime.compile(self.artifact, key)?);
+        }
+        let entry = self.fwd_entry.as_ref().unwrap();
+        crate::eval::perplexity(
+            &self.state,
+            entry,
+            &self.dataset.valid,
+            self.artifact.manifest.seq_len,
+            self.artifact.manifest.config.vocab,
+            max_tokens,
+        )
+        .map(Some)
+    }
+}

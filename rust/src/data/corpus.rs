@@ -1,0 +1,241 @@
+//! Synthetic grammar corpus — the C4/Wikipedia/ArXiv substitute
+//! (DESIGN.md §Substitutions).
+//!
+//! A seeded PCFG produces English-like paragraphs with both local n-gram
+//! structure and the specific regularities the zero-shot task suite
+//! (eval::tasks) probes:
+//!
+//!   * SVO sentences with topic-coherent nouns/verbs/adjectives
+//!   * category membership facts      → ARC-E / BoolQ analogs
+//!   * property (opposite) facts      → OpenbookQA analog
+//!   * tool/affordance facts          → PIQA analog
+//!   * ordered sequences              → HellaSwag analog
+//!   * subject-verb number agreement  → Winogrande analog
+//!   * two-hop category+property      → ARC-C analog
+//!
+//! Everything is deterministic in the seed, so training runs and the paper
+//! harnesses are reproducible bit-for-bit.
+
+use crate::util::rng::Rng;
+
+/// A noun with its category, typical property, and affordance tool.
+pub struct Noun {
+    pub word: &'static str,
+    pub plural: &'static str,
+    pub category: &'static str,
+    pub property: &'static str,
+}
+
+pub const CATEGORIES: [&str; 4] = ["animal", "tool", "food", "place"];
+
+pub const NOUNS: &[Noun] = &[
+    Noun { word: "fox", plural: "foxes", category: "animal", property: "fast" },
+    Noun { word: "bear", plural: "bears", category: "animal", property: "strong" },
+    Noun { word: "owl", plural: "owls", category: "animal", property: "quiet" },
+    Noun { word: "wolf", plural: "wolves", category: "animal", property: "fast" },
+    Noun { word: "horse", plural: "horses", category: "animal", property: "strong" },
+    Noun { word: "mouse", plural: "mice", category: "animal", property: "small" },
+    Noun { word: "hammer", plural: "hammers", category: "tool", property: "heavy" },
+    Noun { word: "knife", plural: "knives", category: "tool", property: "sharp" },
+    Noun { word: "saw", plural: "saws", category: "tool", property: "sharp" },
+    Noun { word: "drill", plural: "drills", category: "tool", property: "loud" },
+    Noun { word: "wrench", plural: "wrenches", category: "tool", property: "heavy" },
+    Noun { word: "bread", plural: "breads", category: "food", property: "soft" },
+    Noun { word: "apple", plural: "apples", category: "food", property: "sweet" },
+    Noun { word: "cheese", plural: "cheeses", category: "food", property: "soft" },
+    Noun { word: "soup", plural: "soups", category: "food", property: "warm" },
+    Noun { word: "rice", plural: "rices", category: "food", property: "plain" },
+    Noun { word: "river", plural: "rivers", category: "place", property: "wide" },
+    Noun { word: "forest", plural: "forests", category: "place", property: "dark" },
+    Noun { word: "market", plural: "markets", category: "place", property: "busy" },
+    Noun { word: "harbor", plural: "harbors", category: "place", property: "calm" },
+];
+
+/// Antonym pairs — the "opposite of" facts (OpenbookQA analog).
+pub const OPPOSITES: &[(&str, &str)] = &[
+    ("hot", "cold"),
+    ("big", "small"),
+    ("fast", "slow"),
+    ("light", "dark"),
+    ("wet", "dry"),
+    ("hard", "soft"),
+    ("loud", "quiet"),
+    ("full", "empty"),
+];
+
+/// Affordances: action → tool (PIQA analog).
+pub const AFFORDANCES: &[(&str, &str)] = &[
+    ("cut", "knife"),
+    ("pound", "hammer"),
+    ("bore", "drill"),
+    ("turn", "wrench"),
+    ("split", "saw"),
+];
+
+/// Ordered sequences (HellaSwag analog: continuation).
+pub const SEQUENCES: &[&[&str]] = &[
+    &["one", "two", "three", "four", "five", "six", "seven", "eight"],
+    &["monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday"],
+    &["spring", "summer", "autumn", "winter"],
+    &["dawn", "morning", "noon", "evening", "night"],
+    &["first", "second", "third", "fourth", "fifth"],
+];
+
+pub const VERBS_S: &[&str] = &["sees", "follows", "finds", "likes", "fears", "meets"];
+pub const VERBS_P: &[&str] = &["see", "follow", "find", "like", "fear", "meet"];
+pub const ADJECTIVES: &[&str] = &[
+    "red", "old", "young", "tall", "small", "big", "gray", "wild", "calm", "bright",
+];
+
+/// Corpus generator over the fixed grammar.
+pub struct Corpus {
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Corpus {
+        Corpus { rng: Rng::new(seed) }
+    }
+
+    fn noun(&mut self) -> &'static Noun {
+        &NOUNS[self.rng.below(NOUNS.len())]
+    }
+
+    /// One sentence; the mix of patterns is weighted so facts appear often
+    /// enough to be learned by a few-million-parameter model.
+    pub fn sentence(&mut self) -> String {
+        match self.rng.weighted(&[3.0, 2.0, 1.5, 1.5, 1.5, 1.5, 1.0]) {
+            // SVO with optional adjectives
+            0 => {
+                let a = self.noun();
+                let b = self.noun();
+                let adj = ADJECTIVES[self.rng.below(ADJECTIVES.len())];
+                let v = VERBS_S[self.rng.below(VERBS_S.len())];
+                format!("the {adj} {} {v} the {} .", a.word, b.word)
+            }
+            // category membership fact
+            1 => {
+                let n = self.noun();
+                let art = article(n.category);
+                format!("{} {} is {art} {} .", article_cap(n.word), n.word, n.category)
+            }
+            // property fact
+            2 => {
+                let n = self.noun();
+                format!("the {} is {} .", n.word, n.property)
+            }
+            // opposites fact
+            3 => {
+                let (a, b) = OPPOSITES[self.rng.below(OPPOSITES.len())];
+                if self.rng.below(2) == 0 {
+                    format!("the opposite of {a} is {b} .")
+                } else {
+                    format!("the opposite of {b} is {a} .")
+                }
+            }
+            // affordance fact
+            4 => {
+                let (action, tool) = AFFORDANCES[self.rng.below(AFFORDANCES.len())];
+                let food = loop {
+                    let n = self.noun();
+                    if n.category == "food" {
+                        break n;
+                    }
+                };
+                format!("you {action} the {} with a {tool} .", food.word)
+            }
+            // ordered sequence fragment
+            5 => {
+                let seq = SEQUENCES[self.rng.below(SEQUENCES.len())];
+                let start = self.rng.below(seq.len().saturating_sub(2).max(1));
+                let len = (2 + self.rng.below(3)).min(seq.len() - start);
+                let mut s = seq[start..start + len].join(" ");
+                s.push_str(" .");
+                s
+            }
+            // number agreement (plural vs singular + are/is)
+            _ => {
+                let n = self.noun();
+                let adj = ADJECTIVES[self.rng.below(ADJECTIVES.len())];
+                if self.rng.below(2) == 0 {
+                    format!("the {} are {adj} .", n.plural)
+                } else {
+                    format!("the {} is {adj} .", n.word)
+                }
+            }
+        }
+    }
+
+    /// A paragraph of `n` sentences separated by spaces.
+    pub fn paragraph(&mut self, n: usize) -> String {
+        (0..n).map(|_| self.sentence()).collect::<Vec<_>>().join(" ")
+    }
+
+    /// Generate ~`target_bytes` of corpus text.
+    pub fn generate(&mut self, target_bytes: usize) -> String {
+        let mut out = String::with_capacity(target_bytes + 128);
+        while out.len() < target_bytes {
+            let n = 6 + self.rng.below(6);
+            out.push_str(&self.paragraph(n));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn article(word: &str) -> &'static str {
+    match word.as_bytes().first() {
+        Some(b'a') | Some(b'e') | Some(b'i') | Some(b'o') | Some(b'u') => "an",
+        _ => "a",
+    }
+}
+
+fn article_cap(word: &str) -> &'static str {
+    article(word)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::new(7).generate(10_000);
+        let b = Corpus::new(7).generate(10_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Corpus::new(1).generate(1000), Corpus::new(2).generate(1000));
+    }
+
+    #[test]
+    fn contains_all_fact_patterns() {
+        let text = Corpus::new(3).generate(200_000);
+        assert!(text.contains(" is a "), "category facts missing");
+        assert!(text.contains("the opposite of "), "opposite facts missing");
+        assert!(text.contains(" with a "), "affordance facts missing");
+        assert!(text.contains("monday tuesday") || text.contains("one two"),
+            "sequences missing");
+        assert!(text.contains(" are "), "plural agreement missing");
+    }
+
+    #[test]
+    fn reaches_target_size() {
+        let text = Corpus::new(5).generate(50_000);
+        assert!(text.len() >= 50_000);
+        assert!(text.len() < 60_000);
+    }
+
+    #[test]
+    fn grammar_tables_consistent() {
+        for n in NOUNS {
+            assert!(CATEGORIES.contains(&n.category), "{} has unknown category", n.word);
+        }
+        for (_, tool) in AFFORDANCES {
+            assert!(NOUNS.iter().any(|n| n.word == *tool && n.category == "tool"),
+                "affordance tool {tool} not a tool noun");
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Data pipeline: synthetic corpus generation, tokenized shard storage,
+//! shuffled batch iteration (the paper "directly mixed and shuffled the
+//! training datasets", Appendix C).
+
+pub mod corpus;
+
+pub use corpus::Corpus;
+
+use anyhow::Result;
+
+use crate::tokenizer::Bpe;
+use crate::util::rng::Rng;
+
+/// Tokenized training data with deterministic shuffled batch iteration.
+pub struct Dataset {
+    /// Flat token stream (train split).
+    pub train: Vec<u32>,
+    /// Held-out token stream for perplexity (the WikiText-2 analog).
+    pub valid: Vec<u32>,
+    pub vocab: usize,
+}
+
+impl Dataset {
+    /// Build a dataset: generate corpus text, train a BPE on a prefix,
+    /// tokenize, split 98/2 train/valid.
+    pub fn synthetic(seed: u64, target_bytes: usize, vocab_size: usize) -> (Dataset, Bpe) {
+        let text = Corpus::new(seed).generate(target_bytes);
+        let bpe_sample_len = text.len().min(256 * 1024);
+        let bpe = Bpe::train(&text[..bpe_sample_len], vocab_size);
+        let ids = bpe.encode(&text);
+        let split = ids.len() * 98 / 100;
+        let ds = Dataset {
+            train: ids[..split].to_vec(),
+            valid: ids[split..].to_vec(),
+            vocab: bpe.vocab_size(),
+        };
+        (ds, bpe)
+    }
+
+    /// Number of distinct (batch, seq+1) windows available per epoch.
+    pub fn windows_per_epoch(&self, seq_len: usize) -> usize {
+        self.train.len() / (seq_len + 1)
+    }
+
+    /// Deterministic shuffled batch iterator over (seq_len+1)-token windows.
+    pub fn batches(&self, batch: usize, seq_len: usize, seed: u64) -> BatchIter<'_> {
+        let window = seq_len + 1;
+        let n_windows = self.train.len() / window;
+        assert!(n_windows >= batch, "dataset too small for batch size");
+        let mut order: Vec<usize> = (0..n_windows).collect();
+        Rng::new(seed).shuffle(&mut order);
+        BatchIter { data: &self.train, order, window, batch, cursor: 0 }
+    }
+}
+
+/// Infinite batch iterator: reshuffles (deterministically) on epoch wrap.
+pub struct BatchIter<'a> {
+    data: &'a [u32],
+    order: Vec<usize>,
+    window: usize,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Next [batch, seq_len+1] token block as i32 (the PJRT operand dtype).
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.window);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                // epoch boundary: reshuffle deterministically from position
+                let mut rng = Rng::new(self.order[0] as u64 ^ 0xD1CE);
+                rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            let w = self.order[self.cursor];
+            self.cursor += 1;
+            let start = w * self.window;
+            out.extend(self.data[start..start + self.window].iter().map(|&t| t as i32));
+        }
+        out
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.batch, self.window)
+    }
+}
+
+/// Load or build a cached dataset + tokenizer under `dir`.
+pub fn cached_dataset(
+    dir: &str,
+    seed: u64,
+    target_bytes: usize,
+    vocab_size: usize,
+) -> Result<(Dataset, Bpe)> {
+    std::fs::create_dir_all(dir)?;
+    let bpe_path = format!("{dir}/bpe_{seed}_{vocab_size}.json");
+    let toks_path = format!("{dir}/tokens_{seed}_{target_bytes}_{vocab_size}.bin");
+    if std::path::Path::new(&bpe_path).exists() && std::path::Path::new(&toks_path).exists() {
+        let bpe = Bpe::load(&bpe_path)?;
+        let bytes = std::fs::read(&toks_path)?;
+        let ids: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let split = ids.len() * 98 / 100;
+        return Ok((
+            Dataset {
+                train: ids[..split].to_vec(),
+                valid: ids[split..].to_vec(),
+                vocab: bpe.vocab_size(),
+            },
+            bpe,
+        ));
+    }
+    let (ds, bpe) = Dataset::synthetic(seed, target_bytes, vocab_size);
+    bpe.save(&bpe_path)?;
+    let mut bytes = Vec::with_capacity((ds.train.len() + ds.valid.len()) * 4);
+    for &t in ds.train.iter().chain(&ds.valid) {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    std::fs::write(&toks_path, bytes)?;
+    Ok((ds, bpe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_dataset_shapes() {
+        let (ds, bpe) = Dataset::synthetic(1, 60_000, 512);
+        assert_eq!(ds.vocab, 512);
+        assert!(ds.train.len() > 10_000);
+        assert!(ds.valid.len() > 100);
+        assert!(ds.train.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let (ds, _) = Dataset::synthetic(2, 60_000, 512);
+        let mut it = ds.batches(4, 32, 9);
+        for _ in 0..5 {
+            let b = it.next_batch();
+            assert_eq!(b.len(), 4 * 33);
+            assert!(b.iter().all(|&t| t >= 0 && (t as usize) < ds.vocab));
+        }
+    }
+
+    #[test]
+    fn batches_deterministic() {
+        let (ds, _) = Dataset::synthetic(3, 60_000, 512);
+        let a: Vec<i32> = ds.batches(2, 16, 7).next_batch();
+        let b: Vec<i32> = ds.batches(2, 16, 7).next_batch();
+        assert_eq!(a, b);
+        let c: Vec<i32> = ds.batches(2, 16, 8).next_batch();
+        assert_ne!(a, c, "different seeds should shuffle differently");
+    }
+
+    #[test]
+    fn epoch_wrap_reshuffles() {
+        let (ds, _) = Dataset::synthetic(4, 30_000, 512);
+        let n = ds.windows_per_epoch(32);
+        let mut it = ds.batches(1, 32, 5);
+        for _ in 0..n * 2 + 3 {
+            let b = it.next_batch();
+            assert_eq!(b.len(), 33);
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = format!("/tmp/pquant_test_cache_{}", std::process::id());
+        let (a, _) = cached_dataset(&dir, 11, 30_000, 512).unwrap();
+        let (b, _) = cached_dataset(&dir, 11, 30_000, 512).unwrap();
+        assert_eq!(a.train, b.train);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,154 @@
+//! Evaluation: held-out perplexity (the WikiText-2 analog) and the seven
+//! synthetic zero-shot tasks (ARC-E/ARC-C/HS/BQ/OQ/PQ/WGe analogs).
+//!
+//! Scoring follows lm-evaluation-harness: each option continuation is
+//! scored by mean token log-likelihood under the model; the argmax option
+//! is the prediction.
+
+pub mod tasks;
+
+pub use tasks::{task_suite, Task, TaskItem};
+
+use anyhow::Result;
+
+use crate::runtime::{CompiledEntry, TrainState};
+
+/// log-softmax over one logit row.
+fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    row.iter().map(|&x| x - lse).collect()
+}
+
+/// Perplexity of a token stream under the AOT fwd entry.
+///
+/// The stream is cut into non-overlapping (seq_len+1) windows; each window
+/// contributes seq_len next-token NLL terms.  `max_tokens` bounds the work.
+pub fn perplexity(
+    state: &TrainState,
+    fwd: &CompiledEntry,
+    stream: &[u32],
+    seq_len: usize,
+    vocab: usize,
+    max_tokens: usize,
+) -> Result<f64> {
+    let batch = fwd.spec.batch;
+    let window = seq_len + 1;
+    let n_windows = (stream.len() / window).min(max_tokens.div_ceil(seq_len)).max(1);
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+
+    let mut w = 0usize;
+    while w < n_windows {
+        let this_batch = batch.min(n_windows - w).max(1);
+        // Build a [batch, seq_len] token block; short tail reuses window 0.
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        let mut targets: Vec<Vec<u32>> = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let src = if b < this_batch { w + b } else { 0 };
+            let start = src * window;
+            tokens.extend(stream[start..start + seq_len].iter().map(|&t| t as i32));
+            targets.push(stream[start + 1..start + window].to_vec());
+        }
+        let (logits, _) = state.forward(fwd, &tokens)?;
+        for b in 0..this_batch {
+            for t in 0..seq_len {
+                let row = &logits[(b * seq_len + t) * vocab..(b * seq_len + t + 1) * vocab];
+                let lp = log_softmax(row);
+                total_nll -= lp[targets[b][t] as usize] as f64;
+                total_tokens += 1;
+            }
+        }
+        w += this_batch;
+    }
+    Ok((total_nll / total_tokens.max(1) as f64).exp())
+}
+
+/// Mean log-likelihood of `cont` tokens following `prompt` tokens.
+///
+/// The fwd entry has a fixed [batch, seq_len] signature; sequences are
+/// right-padded with token 0 and only real positions are scored.
+pub fn continuation_logprob(
+    state: &TrainState,
+    fwd: &CompiledEntry,
+    prompt: &[u32],
+    cont: &[u32],
+    seq_len: usize,
+    vocab: usize,
+) -> Result<f64> {
+    assert!(!cont.is_empty());
+    let batch = fwd.spec.batch;
+    let mut seq: Vec<u32> = prompt.iter().chain(cont.iter()).copied().collect();
+    if seq.len() > seq_len {
+        // keep the tail (the continuation must stay)
+        seq = seq[seq.len() - seq_len..].to_vec();
+    }
+    let real = seq.len();
+    let mut tokens = vec![0i32; batch * seq_len];
+    for (i, &t) in seq.iter().enumerate() {
+        tokens[i] = t as i32;
+    }
+    let (logits, _) = state.forward(fwd, &tokens)?;
+    // positions predicting the continuation: the token at index i is
+    // predicted by logits at index i-1
+    let cont_start = real - cont.len();
+    let mut total = 0.0f64;
+    for (k, &target) in seq[cont_start..].iter().enumerate() {
+        let pos = cont_start + k - 1; // logits row predicting this token
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let lp = log_softmax(row);
+        total += lp[target as usize] as f64;
+    }
+    Ok(total / cont.len() as f64)
+}
+
+/// Accuracy of the model on one task (fraction of items answered right).
+pub fn task_accuracy(
+    state: &TrainState,
+    fwd: &CompiledEntry,
+    bpe: &crate::tokenizer::Bpe,
+    task: &Task,
+    seq_len: usize,
+    vocab: usize,
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in &task.items {
+        let prompt = bpe.encode(&item.prompt);
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (oi, option) in item.options.iter().enumerate() {
+            let cont = bpe.encode(option);
+            if cont.is_empty() {
+                continue;
+            }
+            let lp = continuation_logprob(state, fwd, &prompt, &cont, seq_len, vocab)?;
+            if lp > best.0 {
+                best = (lp, oi);
+            }
+        }
+        if best.1 == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / task.items.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp[2] > lp[1] && lp[1] > lp[0]);
+    }
+
+    #[test]
+    fn log_softmax_handles_large_logits() {
+        let lp = log_softmax(&[1000.0, 999.0]);
+        assert!(lp.iter().all(|x| x.is_finite()));
+        // f32 spacing at |1000| is ~6e-5; allow the rounding it induces
+        assert!((lp[0].exp() + lp[1].exp() - 1.0).abs() < 1e-3);
+    }
+}

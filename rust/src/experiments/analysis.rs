@@ -1,0 +1,385 @@
+//! Sensitivity/analysis experiments: Fig 2 (democratization), Fig 5a
+//! (branch sensitivity), Fig 7 (expert scaling + alternative quantizers).
+
+use anyhow::Result;
+
+use crate::config::Variant;
+use crate::report::{save, Table};
+use crate::sensitivity::{ascii_heatmap, dequantized_weights, sensitivity_map};
+use crate::tensor::Matrix;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{default_steps, Lab};
+
+fn steps_for(config: &str, over: Option<u64>) -> u64 {
+    over.unwrap_or_else(|| default_steps(config.split('-').next().unwrap()))
+}
+
+/// Calibration activations: run the AOT fwd over a few valid windows and
+/// collect the last block's normalized FFN inputs.
+fn calibration_acts(
+    lab: &mut Lab,
+    config: &str,
+    run: &super::RunResult,
+    n_windows: usize,
+) -> Result<Matrix> {
+    let (art, state) = lab.load_run_state(run)?;
+    let fwd = lab.runtime.compile(&art, "fwd")?;
+    let seq = art.manifest.seq_len;
+    let d = art.manifest.config.d_model;
+    let vocab = art.manifest.config.vocab;
+    let (dataset, _) = lab.dataset(vocab)?;
+    let mut rows: Vec<f32> = Vec::new();
+    for w in 0..n_windows {
+        let start = w * seq;
+        if start + seq > dataset.valid.len() {
+            break;
+        }
+        let tokens: Vec<i32> = dataset.valid[start..start + seq].iter().map(|&t| t as i32).collect();
+        let (_, ffn_in) = state.forward(&fwd, &tokens)?;
+        rows.extend(ffn_in);
+    }
+    let n_rows = rows.len() / d;
+    Ok(Matrix::from_vec(n_rows, d, rows))
+}
+
+/// Last layer's FFN down-projection weights (the matrix Fig 2 visualizes)
+/// — for pquant this returns the 1-bit branch; use `expert_weights` for
+/// the 8-bit branch.
+fn last_ffn_weights(lab: &Lab, run: &super::RunResult) -> Result<(Matrix, Variant, usize)> {
+    let (art, state) = lab.load_run_state(run)?;
+    let cfg = &art.manifest.config;
+    let l = cfg.n_layers - 1;
+    let (name, rows) = match cfg.variant {
+        Variant::PQuant => (format!("layers.{l}.ffn_up_1bit"), cfg.d_model),
+        _ => (format!("layers.{l}.ffn_up"), cfg.d_model),
+    };
+    let (shape, data) = state.param_by_name(&art, &name)?;
+    assert_eq!(shape[0], rows);
+    Ok((Matrix::from_vec(shape[0], shape[1], data), cfg.variant, l))
+}
+
+/// Fig 2: sensitivity heatmaps — fp16 vs 1-bit (parameter democratization).
+pub fn fig2(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 2 — weight sensitivity concentration (last FFN up-proj)",
+        &["model", "gini", "log-kurtosis", "top1% mass", "top10% mass"],
+    );
+    let mut payload = Vec::new();
+    let mut maps = Vec::new();
+    for config in ["micro-fp16", "micro-bitnet"] {
+        let run = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        let acts = calibration_acts(lab, config, &run, 8)?;
+        let (w, variant, _) = last_ffn_weights(lab, &run)?;
+        // Analyze the weights the deployed model multiplies by.
+        let w_eff = dequantized_weights(&w, variant);
+        let rep = sensitivity_map(&w_eff, &acts, 1e-2)?;
+        t.row(vec![
+            config.to_string(),
+            format!("{:.3}", rep.gini),
+            format!("{:.2}", rep.log_kurtosis),
+            format!("{:.3}", rep.top1pct_mass),
+            format!("{:.3}", rep.top10pct_mass),
+        ]);
+        payload.push(obj(vec![
+            ("config", s(config)),
+            ("gini", num(rep.gini)),
+            ("log_kurtosis", num(rep.log_kurtosis)),
+            ("top1pct_mass", num(rep.top1pct_mass)),
+            ("top10pct_mass", num(rep.top10pct_mass)),
+        ]));
+        maps.push((config, rep.map));
+    }
+    t.print();
+    for (config, map) in &maps {
+        println!("\n{config} log-sensitivity heatmap (max-pooled):");
+        println!("{}", ascii_heatmap(map, 16, 48));
+    }
+    println!("paper shape: fp16 shows concentrated high-sensitivity regions; the 1-bit");
+    println!("model's map is near-uniform — parameter democratization.");
+    save("fig2", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 5a: sensitivity of the 1-bit vs 8-bit branch in trained pQuant.
+pub fn fig5a(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let config = "micro-pquant";
+    let run = lab.run(config, steps_for(config, steps), "", |_| {})?;
+    let acts = calibration_acts(lab, config, &run, 8)?;
+    let (art, state) = lab.load_run_state(&run)?;
+    let cfg = &art.manifest.config;
+    let l = cfg.n_layers - 1;
+
+    // 1-bit branch up-projection (dequantized ±λ).
+    let (s1, d1) = state.param_by_name(&art, &format!("layers.{l}.ffn_up_1bit"))?;
+    let w1 = dequantized_weights(&Matrix::from_vec(s1[0], s1[1], d1), Variant::BitNet);
+    // 8-bit branch up-projection (expert 0, dequantized int8).
+    let (s8, d8) = state.param_by_name(&art, &format!("layers.{l}.ffn_up_8bit"))?;
+    let (d, r) = (s8[1], s8[2]);
+    let q = crate::quant::quantize_i8(&d8[..d * r]);
+    let w8 = Matrix::from_vec(
+        d,
+        r,
+        q.vals.iter().map(|&v| v as f32 / q.gamma).collect(),
+    );
+
+    let rep1 = sensitivity_map(&w1, &acts, 1e-2)?;
+    let rep8 = sensitivity_map(&w8, &acts, 1e-2)?;
+
+    // Mean per-weight sensitivity: the 8-bit branch should concentrate
+    // disproportionately high sensitivity despite holding ~5% of weights.
+    let mean = |m: &Matrix| m.data.iter().map(|&v| v as f64).sum::<f64>() / m.data.len() as f64;
+    let m1 = mean(&rep1.map);
+    let m8 = mean(&rep8.map);
+
+    let mut t = Table::new(
+        "Figure 5a — branch sensitivity in trained pQuant (last FFN up-proj)",
+        &["branch", "weights", "mean s_ij", "gini", "top10% mass"],
+    );
+    t.row(vec![
+        "1-bit (wide)".into(),
+        w1.data.len().to_string(),
+        format!("{m1:.3e}"),
+        format!("{:.3}", rep1.gini),
+        format!("{:.3}", rep1.top10pct_mass),
+    ]);
+    t.row(vec![
+        "8-bit (r)".into(),
+        w8.data.len().to_string(),
+        format!("{m8:.3e}"),
+        format!("{:.3}", rep8.gini),
+        format!("{:.3}", rep8.top10pct_mass),
+    ]);
+    t.print();
+    println!("8-bit/1-bit mean sensitivity ratio: {:.2}x", m8 / m1.max(1e-30));
+    println!("\n1-bit branch heatmap:\n{}", ascii_heatmap(&rep1.map, 12, 44));
+    println!("8-bit branch heatmap:\n{}", ascii_heatmap(&rep8.map, 12, 16));
+    println!("paper shape: the compact 8-bit branch carries markedly higher per-weight");
+    println!("sensitivity — the decoupling + feature scaling worked.");
+    save(
+        "fig5a",
+        &obj(vec![
+            ("mean_s_1bit", num(m1)),
+            ("mean_s_8bit", num(m8)),
+            ("ratio", num(m8 / m1.max(1e-30))),
+            ("gini_1bit", num(rep1.gini)),
+            ("gini_8bit", num(rep8.gini)),
+        ]),
+        &[&t],
+    );
+    Ok(())
+}
+
+/// Fig 7 left: PPL vs N. Fig 7 right: alternative quantization schemes as
+/// post-hoc weight transforms of the trained bitnet model, evaluated by
+/// the rust inference engine (DESIGN.md §3 substitution).
+pub fn fig7(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    // ---- left: expert scaling ----
+    let mut t1 = Table::new("Figure 7 (left) — perplexity vs N (micro)", &["N", "PPL"]);
+    let mut left = Vec::new();
+    for (n, config) in [
+        (1, "micro-pquant"),
+        (2, "micro-pquant-n2"),
+        (4, "micro-pquant-n4"),
+        (8, "micro-pquant-n8"),
+    ] {
+        let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        t1.row(vec![n.to_string(), format!("{:.2}", r.ppl)]);
+        left.push(obj(vec![("n", num(n as f64)), ("ppl", num(r.ppl))]));
+    }
+    // 2-bit reference line
+    let b158 = lab.run("micro-bitnet158", steps_for("micro-bitnet158", steps), "", |_| {})?;
+    t1.row(vec!["(BitNet1.58)".into(), format!("{:.2}", b158.ppl)]);
+    t1.print();
+    println!("paper shape: PPL decreases monotonically in N; crosses the 2-bit line near N=4.");
+
+    // ---- right: alternative quantizers on the trained bitnet ----
+    let run = lab.run("micro-bitnet", steps_for("micro-bitnet", steps), "", |_| {})?;
+    let (art, state) = lab.load_run_state(&run)?;
+    let (dataset, _) = lab.dataset(art.manifest.config.vocab)?;
+    let valid: Vec<u32> = dataset.valid.clone();
+    let seq = art.manifest.config.seq_len;
+
+    let schemes: [(&str, Scheme); 4] = [
+        ("per-tensor 1-bit (BitNet)", Scheme::PerTensor),
+        ("channel-wise 1-bit", Scheme::ChannelWise),
+        ("group-wise 1-bit (g=64)", Scheme::GroupWise(64)),
+        ("native mix (8% fp16)", Scheme::NativeMix(0.08)),
+    ];
+    let mut t2 = Table::new(
+        "Figure 7 (right) — alternative quantizers (post-hoc on trained bitnet, engine PPL)",
+        &["scheme", "PPL", "scale metadata bytes/matrix"],
+    );
+    let mut right = Vec::new();
+    for (label, scheme) in schemes {
+        let mut model = rebuild_with_scheme(&art, &state, scheme)?;
+        let ppl = engine_perplexity(&mut model, &valid, seq, 1536);
+        let meta = scheme_metadata_bytes(&art.manifest.config, scheme);
+        t2.row(vec![label.to_string(), format!("{ppl:.2}"), meta.to_string()]);
+        right.push(obj(vec![
+            ("scheme", s(label)),
+            ("ppl", num(ppl)),
+            ("metadata_bytes", num(meta as f64)),
+        ]));
+    }
+    // pQuant trained end-to-end for reference
+    let pq = lab.run("micro-pquant", steps_for("micro-pquant", steps), "", |_| {})?;
+    t2.row(vec!["pQuant (trained decoupled)".into(), format!("{:.2}", pq.ppl), "n/a".into()]);
+    t2.print();
+    println!("paper shape: channel-wise ≈ per-tensor; group-wise better but needs one");
+    println!("scale per 64 weights; native mix worse than pQuant despite more hp params.");
+    save(
+        "fig7",
+        &obj(vec![("left", Json::Arr(left)), ("right", Json::Arr(right))]),
+        &[&t1, &t2],
+    );
+    Ok(())
+}
+
+#[derive(Clone, Copy)]
+enum Scheme {
+    PerTensor,
+    ChannelWise,
+    GroupWise(usize),
+    NativeMix(f32),
+}
+
+/// Re-quantize every block linear of a trained model under `scheme` and
+/// build an f32-engine model from the dequantized weights (accuracy study;
+/// the speed study is Fig 8).
+fn rebuild_with_scheme(
+    art: &crate::runtime::Artifact,
+    state: &crate::runtime::TrainState,
+    scheme: Scheme,
+) -> Result<crate::infer::PackedModel> {
+    use crate::infer::{block::Ffn, PackedBlock, PackedModel, QLinear};
+    let cfg = art.manifest.config.clone();
+    let d = cfg.d_model;
+    let requant = |wf: &[f32], k: usize, n: usize| -> Vec<f32> {
+        match scheme {
+            Scheme::PerTensor => {
+                let b = crate::quant::binarize(wf);
+                crate::quant::dequant_binary(&b)
+            }
+            Scheme::ChannelWise => {
+                let (signs, lambdas, _) = crate::quant::binarize_channelwise(wf, k, n);
+                (0..k * n)
+                    .map(|idx| {
+                        let j = idx % n;
+                        if signs[idx] { lambdas[j] } else { -lambdas[j] }
+                    })
+                    .collect()
+            }
+            Scheme::GroupWise(g) => {
+                if k % g != 0 {
+                    // ragged: fall back to channel-wise for this matrix
+                    let (signs, lambdas, _) = crate::quant::binarize_channelwise(wf, k, n);
+                    return (0..k * n)
+                        .map(|idx| {
+                            let j = idx % n;
+                            if signs[idx] { lambdas[j] } else { -lambdas[j] }
+                        })
+                        .collect();
+                }
+                let (signs, lambdas) = crate::quant::binarize_groupwise(wf, k, n, g);
+                (0..k * n)
+                    .map(|idx| {
+                        let (i, j) = (idx / n, idx % n);
+                        let lam = lambdas[(i / g) * n + j];
+                        if signs[idx] { lam } else { -lam }
+                    })
+                    .collect()
+            }
+            Scheme::NativeMix(frac) => {
+                // keep the top `frac` |w| in fp, binarize the rest
+                let mut mags: Vec<(f32, usize)> =
+                    wf.iter().enumerate().map(|(i, &w)| (w.abs(), i)).collect();
+                mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                let keep = (wf.len() as f32 * frac) as usize;
+                let mut kept = vec![false; wf.len()];
+                for &(_, i) in mags.iter().take(keep) {
+                    kept[i] = true;
+                }
+                let rest: Vec<f32> = wf
+                    .iter()
+                    .zip(&kept)
+                    .map(|(&w, &k)| if k { 0.0 } else { w })
+                    .collect();
+                let b = crate::quant::binarize(&rest);
+                let deq = crate::quant::dequant_binary(&b);
+                wf.iter()
+                    .zip(kept)
+                    .zip(deq)
+                    .map(|((&w, k), dq)| if k { w } else { dq })
+                    .collect()
+            }
+        }
+    };
+
+    let get = |name: &str| state.param_by_name(art, name);
+    let (_, embed) = get("tok_embed")?;
+    let (_, lm_head) = get("lm_head")?;
+    let (_, final_norm) = get("final_norm")?;
+    let mut blocks = Vec::new();
+    for l in 0..cfg.n_layers {
+        let p = |f: &str| get(&format!("layers.{l}.{f}"));
+        let (_, attn_norm) = p("attn_norm")?;
+        let (_, ffn_norm) = p("ffn_norm")?;
+        let lin = |name: &str, k: usize, n: usize| -> Result<QLinear> {
+            let (_, wf) = p(name)?;
+            Ok(QLinear::f32(&requant(&wf, k, n), k, n))
+        };
+        blocks.push(PackedBlock {
+            attn_norm,
+            ffn_norm,
+            wq: lin("wq", d, d)?,
+            wk: lin("wk", d, d)?,
+            wv: lin("wv", d, d)?,
+            wo: lin("wo", d, d)?,
+            ffn: Ffn::Dense {
+                up: lin("ffn_up", d, cfg.d_ff)?,
+                down: lin("ffn_down", cfg.d_ff, d)?,
+            },
+            n_heads: cfg.n_heads,
+            timing: Default::default(),
+        });
+    }
+    Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks })
+}
+
+/// Teacher-forced perplexity under the rust engine.
+fn engine_perplexity(
+    model: &mut crate::infer::PackedModel,
+    stream: &[u32],
+    seq: usize,
+    max_tokens: usize,
+) -> f64 {
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let n_windows = (stream.len() / (seq + 1)).min(max_tokens / seq).max(1);
+    for w in 0..n_windows {
+        let toks = &stream[w * (seq + 1)..(w + 1) * (seq + 1)];
+        let mut caches = model.new_caches(seq + 1);
+        for t in 0..seq {
+            let logits = model.decode_step(toks[t], t, &mut caches);
+            // log softmax target
+            let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let lse = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+            nll -= (logits[toks[t + 1] as usize] - lse) as f64;
+            count += 1;
+        }
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+/// Scale metadata bytes per FFN-up matrix under each scheme (the Fig 7
+/// hardware-friendliness argument).
+fn scheme_metadata_bytes(cfg: &crate::config::ModelConfig, scheme: Scheme) -> usize {
+    let (k, n) = (cfg.d_model, cfg.d_ff);
+    match scheme {
+        Scheme::PerTensor => 2,
+        Scheme::ChannelWise => 2 * n,
+        Scheme::GroupWise(g) => 2 * (k / g.max(1)) * n,
+        Scheme::NativeMix(frac) => ((k * n) as f32 * frac) as usize * (2 + 4), // fp16 + index
+    }
+}

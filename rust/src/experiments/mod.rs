@@ -1,0 +1,301 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//!
+//! All harnesses share a [`Lab`]: one PJRT runtime, cached datasets per
+//! vocab size, and a disk cache of training runs (loss curves, eval
+//! metrics, final checkpoints) under `results/cache/` so experiments
+//! compose without retraining (fig1 reuses tab2's runs, fig5a reuses the
+//! pquant checkpoint, ...).
+
+pub mod analysis;
+pub mod perf;
+pub mod training;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::data::{cached_dataset, Dataset};
+use crate::runtime::{load_artifact, Artifact, Runtime, TrainState};
+use crate::tokenizer::Bpe;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Corpus size per vocab (bytes of generated text).
+const CORPUS_BYTES: usize = 4 * 1024 * 1024;
+const CORPUS_SEED: u64 = 0xC0FFEE;
+
+/// Default step counts per model size (tuned to the CPU budget; the
+/// experiment CLI exposes `--steps` to override).
+pub fn default_steps(size: &str) -> u64 {
+    match size {
+        "nano" => 300,
+        "micro" => 250,
+        "tiny" => 150,
+        _ => 200,
+    }
+}
+
+/// One cached training run's summary.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub config: String,
+    pub steps: u64,
+    pub losses: Vec<f32>,
+    pub final_loss: f32,
+    pub tail_loss: f32,
+    pub ppl: f64,
+    /// (task paper-name, accuracy) in suite order.
+    pub task_acc: Vec<(String, f64)>,
+    pub rollbacks: usize,
+    pub wall_seconds: f64,
+    pub tokens_per_second: f64,
+    pub feature_scaling: Vec<(f32, f32)>,
+    pub checkpoint: String,
+}
+
+impl RunResult {
+    pub fn avg_acc(&self) -> f64 {
+        if self.task_acc.is_empty() {
+            return f64::NAN;
+        }
+        100.0 * self.task_acc.iter().map(|(_, a)| a).sum::<f64>() / self.task_acc.len() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", s(&self.config)),
+            ("steps", num(self.steps as f64)),
+            ("losses", arr(self.losses.iter().map(|&l| num(l as f64)))),
+            ("final_loss", num(self.final_loss as f64)),
+            ("tail_loss", num(self.tail_loss as f64)),
+            ("ppl", num(self.ppl)),
+            (
+                "task_acc",
+                arr(self
+                    .task_acc
+                    .iter()
+                    .map(|(n, a)| arr([s(n), num(*a)]))),
+            ),
+            ("rollbacks", num(self.rollbacks as f64)),
+            ("wall_seconds", num(self.wall_seconds)),
+            ("tokens_per_second", num(self.tokens_per_second)),
+            (
+                "feature_scaling",
+                arr(self
+                    .feature_scaling
+                    .iter()
+                    .map(|(a, b)| arr([num(*a as f64), num(*b as f64)]))),
+            ),
+            ("checkpoint", s(&self.checkpoint)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<RunResult> {
+        let pair_list = |key: &str| -> Result<Vec<(String, f64)>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    Ok((p[0].as_str()?.to_string(), p[1].as_f64()?))
+                })
+                .collect()
+        };
+        Ok(RunResult {
+            config: j.get("config")?.as_str()?.to_string(),
+            steps: j.get("steps")?.as_f64()? as u64,
+            losses: j
+                .get("losses")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as f32))
+                .collect::<Result<_>>()?,
+            final_loss: j.get("final_loss")?.as_f64()? as f32,
+            tail_loss: j.get("tail_loss")?.as_f64()? as f32,
+            ppl: j.get("ppl")?.as_f64()?,
+            task_acc: pair_list("task_acc")?,
+            rollbacks: j.get("rollbacks")?.as_f64()? as usize,
+            wall_seconds: j.get("wall_seconds")?.as_f64()?,
+            tokens_per_second: j.get("tokens_per_second")?.as_f64()?,
+            feature_scaling: j
+                .get("feature_scaling")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    Ok((p[0].as_f64()? as f32, p[1].as_f64()? as f32))
+                })
+                .collect::<Result<_>>()?,
+            checkpoint: j.get("checkpoint")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Shared experiment infrastructure.
+pub struct Lab {
+    pub runtime: Runtime,
+    datasets: HashMap<usize, (Dataset, Bpe)>,
+    pub items_per_task: usize,
+    pub eval_tokens: usize,
+}
+
+impl Lab {
+    pub fn new() -> Result<Lab> {
+        Ok(Lab {
+            runtime: Runtime::cpu()?,
+            datasets: HashMap::new(),
+            items_per_task: 24,
+            eval_tokens: 2048,
+        })
+    }
+
+    /// Dataset + tokenizer for a vocab size (built once, cached on disk).
+    pub fn dataset(&mut self, vocab: usize) -> Result<&(Dataset, Bpe)> {
+        if !self.datasets.contains_key(&vocab) {
+            let pair = cached_dataset("results/cache/data", CORPUS_SEED, CORPUS_BYTES, vocab)?;
+            self.datasets.insert(vocab, pair);
+        }
+        Ok(&self.datasets[&vocab])
+    }
+
+    /// Immutable access to an already-built dataset (call [`Lab::dataset`]
+    /// first to populate the cache).
+    pub fn dataset_ref(&self, vocab: usize) -> &(Dataset, Bpe) {
+        &self.datasets[&vocab]
+    }
+
+    pub fn artifact(&self, config: &str) -> Result<Artifact> {
+        load_artifact(config)
+    }
+
+    /// Train (or fetch from cache) one run. `tag` distinguishes option
+    /// variants of the same config (e.g. feature-scaling ablations).
+    pub fn run(
+        &mut self,
+        config: &str,
+        steps: u64,
+        tag: &str,
+        mutate: impl FnOnce(&mut TrainOptions),
+    ) -> Result<RunResult> {
+        std::fs::create_dir_all("results/cache").ok();
+        let cache_key = if tag.is_empty() {
+            format!("{config}-s{steps}")
+        } else {
+            format!("{config}-s{steps}-{tag}")
+        };
+        let cache_path = format!("results/cache/{cache_key}.json");
+        if let Ok(text) = std::fs::read_to_string(&cache_path) {
+            if let Ok(r) = RunResult::from_json(&Json::parse(&text)?) {
+                println!("[lab] cache hit: {cache_key}");
+                return Ok(r);
+            }
+        }
+        println!("[lab] training {cache_key} ...");
+        let art = self.artifact(config)?;
+        let vocab = art.manifest.config.vocab;
+        self.dataset(vocab)?; // ensure cached
+        let ckpt_path = format!("results/cache/{cache_key}.ckpt");
+
+        let mut opts = TrainOptions {
+            steps,
+            final_checkpoint: Some(ckpt_path.clone()),
+            log_every: (steps / 8).max(1),
+            ..Default::default()
+        };
+        mutate(&mut opts);
+
+        let (dataset, bpe) = &self.datasets[&vocab];
+        let mut trainer = Trainer::new(&self.runtime, &art, dataset)?;
+        let report = trainer.run(&opts)?;
+
+        // Evaluate: held-out perplexity + the 7-task suite.
+        let fwd_key = if art.manifest.entries.contains_key("fwd_b8") { "fwd_b8" } else { "fwd" };
+        let fwd = self.runtime.compile(&art, fwd_key)?;
+        let ppl = crate::eval::perplexity(
+            &trainer.state,
+            &fwd,
+            &dataset.valid,
+            art.manifest.seq_len,
+            vocab,
+            self.eval_tokens,
+        )?;
+        let fwd1 = self.runtime.compile(&art, "fwd")?;
+        let suite = crate::eval::task_suite(0x7A5C, self.items_per_task);
+        let mut task_acc = Vec::new();
+        for task in &suite {
+            let acc = crate::eval::task_accuracy(
+                &trainer.state,
+                &fwd1,
+                bpe,
+                task,
+                art.manifest.seq_len,
+                vocab,
+            )?;
+            task_acc.push((task.paper_name.to_string(), acc));
+        }
+
+        let result = RunResult {
+            config: config.to_string(),
+            steps,
+            losses: report.losses,
+            final_loss: report.final_loss,
+            tail_loss: report.tail_loss,
+            ppl,
+            task_acc,
+            rollbacks: report.rollbacks,
+            wall_seconds: report.wall_seconds,
+            tokens_per_second: report.tokens_per_second,
+            feature_scaling: report.feature_scaling,
+            checkpoint: ckpt_path,
+        };
+        std::fs::write(&cache_path, result.to_json().to_string_pretty())?;
+        Ok(result)
+    }
+
+    /// Load the TrainState recorded by a cached run.
+    pub fn load_run_state(&self, run: &RunResult) -> Result<(Artifact, TrainState)> {
+        let art = self.artifact(&run.config)?;
+        let state = TrainState::load_checkpoint(&art, &run.checkpoint)?;
+        Ok((art, state))
+    }
+}
+
+/// All experiment ids in run order for `experiment all`.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "tab1", "fig9", "tab6", "fig6", "fig8", "serving", "tab2", "fig1", "fig2",
+    "fig4", "fig5a", "fig5b", "fig7", "tab3", "tab5", "tab7", "tab8", "fig10",
+    "ablate-batch",
+];
+
+/// Dispatch one experiment by id.
+pub fn run_experiment(lab: &mut Lab, id: &str, steps_override: Option<u64>) -> Result<()> {
+    match id {
+        "tab1" => perf::tab1(),
+        "tab6" => perf::tab6(),
+        "fig6" => perf::fig6(),
+        "fig9" => perf::fig9(),
+        "fig8" => perf::fig8(),
+        "serving" => perf::serving(),
+        "tab2" => training::tab2(lab, steps_override),
+        "fig1" => training::fig1(lab, steps_override),
+        "fig4" => training::fig4(lab, steps_override),
+        "fig5b" => training::fig5b(lab, steps_override),
+        "fig10" => training::fig10(lab, steps_override),
+        "tab3" => training::tab3(lab, steps_override),
+        "tab5" => training::tab5(lab, steps_override),
+        "tab7" => training::tab7(lab, steps_override),
+        "tab8" => training::tab8(lab, steps_override),
+        "ablate-batch" => training::ablate_batch(lab, steps_override),
+        "fig2" => analysis::fig2(lab, steps_override),
+        "fig5a" => analysis::fig5a(lab, steps_override),
+        "fig7" => analysis::fig7(lab, steps_override),
+        "all" => {
+            for id in ALL_EXPERIMENTS {
+                println!("\n================ experiment {id} ================");
+                run_experiment(lab, id, steps_override)?;
+            }
+            Ok(())
+        }
+        _ => Err(anyhow!("unknown experiment {id:?}; known: {ALL_EXPERIMENTS:?} or 'all'")),
+    }
+}

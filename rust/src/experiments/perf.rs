@@ -1,0 +1,283 @@
+//! Analytic + engine-level experiments: Table 1, Table 6, Fig 6, Fig 8,
+//! Fig 9, and the serving throughput study (§4.5 / Appendix A).
+
+use anyhow::Result;
+
+use crate::config::{paper_configs, paper_pquant_n, Variant};
+use crate::coordinator::TwoPhaseSchedule;
+use crate::infer::{KvCache, PackedBlock, PackedModel};
+use crate::memory::{footprint, gib};
+use crate::report::{save, Table};
+use crate::serve::{load_test, ServeOptions};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Table 1: pQuant configurations (paper scale + our scaled mirror).
+pub fn tab1() -> Result<()> {
+    let mut t = Table::new(
+        "Table 1 — pQuant configurations (paper scale)",
+        &["Parameters", "D_Model", "D_FF", "r", "1-bit %", "8-bit %", "avg bits"],
+    );
+    for c in paper_configs().into_iter().filter(|c| c.variant == Variant::PQuant && !c.name.contains("7B")) {
+        let d = c.d_model as f64;
+        let one = 4.0 * d * d + 2.0 * d * c.d_ff_1bit() as f64;
+        let eight = c.n_experts as f64 * 2.0 * d * c.r as f64;
+        let total = one + eight;
+        t.row(vec![
+            c.name.replace("paper-", "").replace("-pquant", ""),
+            c.d_model.to_string(),
+            format!("{}({}-{})", c.d_ff - c.r, c.d_ff, c.r),
+            c.r.to_string(),
+            format!("{:.0}%", 100.0 * one / total),
+            format!("{:.0}%", 100.0 * eight / total),
+            format!("{:.2}", c.avg_bits_per_weight()),
+        ]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Table 1b — scaled testbed mirror (ratios preserved)",
+        &["config", "D_Model", "D_FF", "r", "params", "avg bits"],
+    );
+    for name in ["nano-pquant", "micro-pquant", "tiny-pquant", "small-pquant"] {
+        if let Ok(art) = crate::runtime::load_artifact(name) {
+            let c = &art.manifest.config;
+            t2.row(vec![
+                c.name.clone(),
+                c.d_model.to_string(),
+                c.d_ff.to_string(),
+                c.r.to_string(),
+                format!("{:.2}M", c.param_count() as f64 / 1e6),
+                format!("{:.2}", c.avg_bits_per_weight()),
+            ]);
+        }
+    }
+    t2.print();
+    save("tab1", &obj(vec![("note", s("see tab1.md"))]), &[&t, &t2]);
+    Ok(())
+}
+
+/// Table 6: total parameters of pQuant vs N (paper scale, analytic).
+pub fn tab6() -> Result<()> {
+    let mut t = Table::new(
+        "Table 6 — total parameters vs number of 8-bit branches N",
+        &["Base", "N=1", "N=2", "N=4", "N=8"],
+    );
+    let mut payload = Vec::new();
+    for base_name in ["paper-300M-pquant", "paper-700M-pquant", "paper-1.3B-pquant"] {
+        let base = paper_configs().into_iter().find(|c| c.name == base_name).unwrap();
+        let counts: Vec<f64> = [1, 2, 4, 8]
+            .iter()
+            .map(|&n| paper_pquant_n(&base, n).param_count() as f64 / 1e9)
+            .collect();
+        t.row(vec![
+            base_name.replace("paper-", "").replace("-pquant", ""),
+            format!("{:.2}B", counts[0]),
+            format!("{:.2}B", counts[1]),
+            format!("{:.2}B", counts[2]),
+            format!("{:.2}B", counts[3]),
+        ]);
+        payload.push(obj(vec![
+            ("base", s(base_name)),
+            ("params_b", arr(counts.into_iter().map(num))),
+        ]));
+    }
+    t.print();
+    save("tab6", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 6: weight bytes transferred per forward pass vs model size.
+pub fn fig6() -> Result<()> {
+    let mut t = Table::new(
+        "Figure 6 — weight traffic per forward pass (GiB, paper scale)",
+        &["Size", "LLaMA-2 fp16", "BitNet1.58", "pQuant", "pQuant vs fp16", "pQuant vs 1.58"],
+    );
+    let mut payload = Vec::new();
+    for size in ["300M", "700M", "1.3B"] {
+        let by = |v: &str| {
+            let name = format!("paper-{size}-{v}");
+            footprint(&paper_configs().into_iter().find(|c| c.name == name).unwrap())
+        };
+        let fp = by("fp16").traffic();
+        let b158 = by("bitnet158").traffic();
+        let pq = by("pquant").traffic();
+        t.row(vec![
+            size.to_string(),
+            format!("{:.3}", gib(fp)),
+            format!("{:.3}", gib(b158)),
+            format!("{:.3}", gib(pq)),
+            format!("-{:.0}%", 100.0 * (1.0 - pq as f64 / fp as f64)),
+            format!("-{:.0}%", 100.0 * (1.0 - pq as f64 / b158 as f64)),
+        ]);
+        payload.push(obj(vec![
+            ("size", s(size)),
+            ("fp16_bytes", num(fp as f64)),
+            ("bitnet158_bytes", num(b158 as f64)),
+            ("pquant_bytes", num(pq as f64)),
+        ]));
+    }
+    t.print();
+    println!("paper: pQuant −92% vs LLaMA-2, −31% vs BitNet1.58 (block weights only;");
+    println!("our model includes fp16 embeddings, which dilute the small sizes)");
+    save("fig6", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 9: the two-phase LR/WD schedule trace.
+pub fn fig9() -> Result<()> {
+    let sched = TwoPhaseSchedule::paper(1000, 1.5e-3);
+    let trace = sched.trace(40);
+    let mut t = Table::new(
+        "Figure 9 — two-phase schedule (1000 steps, peak 1.5e-3)",
+        &["step", "lr", "wd"],
+    );
+    for (step, lr, wd) in &trace {
+        t.row(vec![step.to_string(), format!("{lr:.2e}"), format!("{wd}")]);
+    }
+    t.print();
+    let lrs: Vec<f32> = trace.iter().map(|&(_, lr, _)| lr).collect();
+    println!("{}", crate::report::ascii_chart(&[("lr", &lrs)], 60, 12));
+    save(
+        "fig9",
+        &arr(trace.iter().map(|&(st, lr, wd)| {
+            obj(vec![("step", num(st as f64)), ("lr", num(lr as f64)), ("wd", num(wd as f64))])
+        })),
+        &[&t],
+    );
+    Ok(())
+}
+
+/// Fig 8: per-component decode time in one transformer block at the
+/// paper's 7B geometry, for FP16 / BitNet1.58 / pQuant engines.
+pub fn fig8() -> Result<()> {
+    // 7B block geometry (Table 4 / LLaMA-2-7B): d=4096, ff=11008, r=512.
+    let (d, heads, ff, r) = (4096usize, 32usize, 11008usize, 512usize);
+    let seq = 256usize; // paper: "input sequence length of 256"
+    let decode_tokens = 8usize;
+
+    let mut t = Table::new(
+        "Figure 8 — per-component time in one 7B block (decode, ms/token)",
+        &["engine", "attn proj", "attn core", "ffn 1-bit/dense", "ffn 8-bit", "router", "norm+quant", "total"],
+    );
+    let mut payload = Vec::new();
+    let mut totals = std::collections::HashMap::new();
+    for (label, variant) in [
+        ("LLaMA-2 fp16", Variant::Fp16),
+        ("BitNet1.58", Variant::BitNet158),
+        ("pQuant", Variant::PQuant),
+    ] {
+        let mut block = PackedBlock::random(variant, d, heads, ff, r, 1, 99);
+        let mut cache = KvCache::new(seq + decode_tokens + 1, d);
+        let x = crate::util::rng::Rng::new(1).normal_vec(d);
+        // fill the cache to seq entries (prefill context)
+        for pos in 0..seq {
+            block.forward(&x, pos, &mut cache);
+        }
+        block.timing.reset();
+        for pos in seq..seq + decode_tokens {
+            block.forward(&x, pos, &mut cache);
+        }
+        let tm = block.timing.clone();
+        let per = |dur: std::time::Duration| dur.as_secs_f64() * 1e3 / decode_tokens as f64;
+        let total = per(tm.total());
+        totals.insert(label, total);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", per(tm.attn_proj)),
+            format!("{:.2}", per(tm.attn_core)),
+            format!("{:.2}", per(tm.ffn_1bit)),
+            format!("{:.2}", per(tm.ffn_8bit)),
+            format!("{:.3}", per(tm.router)),
+            format!("{:.2}", per(tm.norm_quant)),
+            format!("{:.2}", total),
+        ]);
+        payload.push(obj(vec![
+            ("engine", s(label)),
+            ("attn_proj_ms", num(per(tm.attn_proj))),
+            ("attn_core_ms", num(per(tm.attn_core))),
+            ("ffn_1bit_ms", num(per(tm.ffn_1bit))),
+            ("ffn_8bit_ms", num(per(tm.ffn_8bit))),
+            ("router_ms", num(per(tm.router))),
+            ("norm_quant_ms", num(per(tm.norm_quant))),
+            ("total_ms", num(total)),
+        ]));
+    }
+    t.print();
+    let vs_fp = 100.0 * (1.0 - totals["pQuant"] / totals["LLaMA-2 fp16"]);
+    let vs_158 = 100.0 * (1.0 - totals["pQuant"] / totals["BitNet1.58"]);
+    println!("pQuant vs fp16: -{vs_fp:.0}% (paper: -82%) | vs BitNet1.58: -{vs_158:.0}% (paper: -38%)");
+    save("fig8", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// §4.5 / Table 3 speedup: serving throughput of the packed engines.
+pub fn serving() -> Result<()> {
+    // Memory-bound geometry (the edge regime the paper targets): weight
+    // working set ≫ L2, so packed traffic — not FLOPs — sets throughput.
+    // (Perf pass note: the first version used d=256 where fp16 weights fit
+    // in cache and the LUT engine lost; see EXPERIMENTS.md §Perf.)
+    let mk = |variant: Variant, n_experts: usize| {
+        PackedModel::random(
+            &crate::config::ModelConfig {
+                name: format!("serve-{}", variant.name()),
+                variant,
+                vocab: 512,
+                d_model: 768,
+                n_layers: 4,
+                n_heads: 12,
+                d_ff: 2048,
+                r: if variant == Variant::PQuant { 96 } else { 0 },
+                n_experts: if variant == Variant::PQuant { n_experts } else { 1 },
+                seq_len: 128,
+                alpha_init: 2.0,
+                beta_init: 0.2,
+            },
+            7,
+        )
+    };
+    let n_req = 8;
+    let (prompt, gen) = (8, 16);
+    let opts = ServeOptions { max_batch: 4, workers: 1 };
+
+    let mut t = Table::new(
+        "Serving throughput (memory-bound geometry d=768, 8 reqs × 16 new tokens)",
+        &["engine", "tokens/s", "mean latency ms", "p95 ms", "speedup vs fp16"],
+    );
+    let mut payload = Vec::new();
+    let mut fp16_tps = 0.0;
+    for (label, variant, n_exp) in [
+        ("LLaMA-2 fp16", Variant::Fp16, 1),
+        ("BitNet1.58", Variant::BitNet158, 1),
+        ("pQuant N=1", Variant::PQuant, 1),
+        ("pQuant N=8", Variant::PQuant, 8),
+    ] {
+        let (responses, _, tps) = load_test(vec![mk(variant, n_exp)], n_req, prompt, gen, &opts);
+        let mut lats: Vec<f64> = responses
+            .iter()
+            .map(|r| (r.queue_wait + r.service_time).as_secs_f64() * 1e3)
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = lats.iter().sum::<f64>() / lats.len() as f64;
+        let p95 = lats[(lats.len() * 95 / 100).min(lats.len() - 1)];
+        if variant == Variant::Fp16 {
+            fp16_tps = tps;
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{tps:.1}"),
+            format!("{mean:.1}"),
+            format!("{p95:.1}"),
+            format!("{:.2}x", tps / fp16_tps),
+        ]);
+        payload.push(obj(vec![
+            ("engine", s(label)),
+            ("tokens_per_s", num(tps)),
+            ("mean_latency_ms", num(mean)),
+            ("p95_latency_ms", num(p95)),
+        ]));
+    }
+    t.print();
+    println!("paper claims: >2x tokens/s vs FP16; +18.2% throughput vs 2-bit when scaled");
+    save("serving", &Json::Arr(payload), &[&t]);
+    Ok(())
+}

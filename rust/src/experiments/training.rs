@@ -1,0 +1,439 @@
+//! Training-based experiments: the main results table and its derivatives.
+
+use anyhow::Result;
+
+use crate::report::{ascii_chart, save, Table};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{default_steps, Lab, RunResult};
+
+fn size_of(config: &str) -> &str {
+    config.split('-').next().unwrap()
+}
+
+fn steps_for(config: &str, over: Option<u64>) -> u64 {
+    over.unwrap_or_else(|| default_steps(size_of(config)))
+}
+
+fn result_row(t: &mut Table, label: &str, bits: f64, r: &RunResult) {
+    let mut cells = vec![label.to_string(), format!("{bits:.2}")];
+    for (_, acc) in &r.task_acc {
+        cells.push(format!("{:.1}", acc * 100.0));
+    }
+    cells.push(format!("{:.1}", r.avg_acc()));
+    cells.push(format!("{:.2}", r.ppl));
+    cells.push(format!("{:.3}", r.tail_loss));
+    t.row(cells);
+}
+
+fn results_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &["model", "bits", "ARC-E", "ARC-C", "HS", "BQ", "OQ", "PQ", "WGe", "Avg", "PPL", "loss"],
+    )
+}
+
+fn run_json(r: &RunResult) -> Json {
+    obj(vec![
+        ("config", s(&r.config)),
+        ("ppl", num(r.ppl)),
+        ("avg_acc", num(r.avg_acc())),
+        ("tail_loss", num(r.tail_loss as f64)),
+        (
+            "task_acc",
+            arr(r.task_acc.iter().map(|(n, a)| arr([s(n), num(*a)]))),
+        ),
+    ])
+}
+
+/// Table 2: main results at matched size and data budget.
+pub fn tab2(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let mut t = results_table(
+        "Table 2 — main results (micro scale, matched data budget; + tiny pQuant)",
+    );
+    let mut payload = Vec::new();
+    for config in [
+        "micro-fp16",
+        "micro-bitnet",
+        "micro-bitnet158",
+        "micro-pquant",
+        "tiny-pquant",
+    ] {
+        let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        let bits = lab.artifact(config)?.manifest.avg_bits_per_weight;
+        result_row(&mut t, config, bits, &r);
+        payload.push(run_json(&r));
+    }
+    t.print();
+    println!("paper shape: pQuant > BitNet at matched size; pQuant(1.3x bits) ~ BitNet1.58(2 bits);");
+    println!("larger pQuant beats smaller FP16 baselines on Avg.");
+    save("tab2", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 1: perplexity vs bit-width overview (derived from tab2 runs).
+pub fn fig1(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 1 — perplexity vs bits per weight (micro scale)",
+        &["model", "bits", "PPL"],
+    );
+    let mut payload = Vec::new();
+    for config in ["micro-fp16", "micro-bitnet", "micro-bitnet158", "micro-pquant", "micro-pquant-n8"] {
+        let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        let bits = lab.artifact(config)?.manifest.avg_bits_per_weight;
+        t.row(vec![config.to_string(), format!("{bits:.2}"), format!("{:.2}", r.ppl)]);
+        payload.push(obj(vec![
+            ("config", s(config)),
+            ("bits", num(bits)),
+            ("ppl", num(r.ppl)),
+        ]));
+    }
+    t.print();
+    println!("paper shape: pQuant sits on the Pareto frontier — below BitNet at ~1.3 bits,");
+    println!("approaching the 2-bit and fp16 points.");
+    save("fig1", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 4: final training loss vs parameter count per variant.
+pub fn fig4(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let sizes = ["nano", "micro", "tiny"];
+    let variants: [(&str, fn(&str) -> String); 4] = [
+        ("fp16", |s| format!("{s}-fp16")),
+        ("bitnet", |s| format!("{s}-bitnet")),
+        ("bitnet158", |s| format!("{s}-bitnet158")),
+        // paper plots pQuant N=8; nano only has N∈{1,4} artifacts → N=4
+        ("pquant-nmax", |s| {
+            if s == "nano" { format!("{s}-pquant-n4") } else { format!("{s}-pquant-n8") }
+        }),
+    ];
+    let mut t = Table::new(
+        "Figure 4 — final training loss vs parameters",
+        &["size", "params(M)", "fp16", "bitnet", "bitnet158", "pquant(N)"],
+    );
+    let mut payload = Vec::new();
+    for size in sizes {
+        let mut cells = vec![size.to_string(), String::new()];
+        let mut entry = vec![("size", s(size))];
+        let mut jvals = Vec::new();
+        for (vname, f) in &variants {
+            let config = f(size);
+            // nano-pquant-n8/micro... may be missing; skip gracefully
+            let r = match lab.artifact(&config) {
+                Ok(art) => {
+                    if cells[1].is_empty() {
+                        cells[1] = format!("{:.1}", art.manifest.param_count as f64 / 1e6);
+                    }
+                    lab.run(&config, steps_for(&config, steps), "", |_| {})?
+                }
+                Err(_) => {
+                    cells.push("-".into());
+                    continue;
+                }
+            };
+            cells.push(format!("{:.3}", r.tail_loss));
+            jvals.push(obj(vec![("variant", s(vname)), ("loss", num(r.tail_loss as f64))]));
+        }
+        entry.push(("losses", Json::Arr(jvals)));
+        payload.push(obj(entry));
+        t.row(cells);
+    }
+    t.print();
+    println!("paper shape: the pquant(N) column tracks fp16 losses much closer than");
+    println!("bitnet/bitnet158 as size grows.");
+    save("fig4", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 5b: feature-scaling ablation — different (α, β) inits.
+pub fn fig5b(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let config = "micro-pquant";
+    let n = steps_for(config, steps);
+    let settings: [(&str, Option<(f32, f32)>); 4] = [
+        ("alpha2.0-beta0.2 (converged init)", Some((2.0, 0.2))),
+        ("alpha1.0-beta0.5 (paper init)", Some((1.0, 0.5))),
+        ("alpha1.0-beta1.0 (no prioritization)", Some((1.0, 1.0))),
+        ("alpha0.2-beta2.0 (inverted)", Some((0.2, 2.0))),
+    ];
+    let mut t = Table::new(
+        "Figure 5b — feature scaling ablation (micro-pquant)",
+        &["init", "final loss", "tail loss", "PPL"],
+    );
+    let mut series: Vec<(String, Vec<f32>)> = Vec::new();
+    let mut payload = Vec::new();
+    for (label, fs) in settings {
+        let tag = match fs {
+            Some((a, b)) => format!("fs{a}-{b}"),
+            None => "fsdefault".into(),
+        };
+        let r = lab.run(config, n, &tag, |o| {
+            o.feature_scaling_override = fs;
+        })?;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", r.final_loss),
+            format!("{:.3}", r.tail_loss),
+            format!("{:.2}", r.ppl),
+        ]);
+        payload.push(obj(vec![
+            ("init", s(label)),
+            ("tail_loss", num(r.tail_loss as f64)),
+            ("ppl", num(r.ppl)),
+            ("losses", arr(r.losses.iter().map(|&l| num(l as f64)))),
+        ]));
+        series.push((label.to_string(), r.losses));
+    }
+    t.print();
+    let refs: Vec<(&str, &[f32])> =
+        series.iter().map(|(n, l)| (n.as_str(), l.as_slice())).collect();
+    println!("{}", ascii_chart(&refs, 64, 14));
+    println!("paper shape: α≫β init reaches lower loss; configurations do NOT converge");
+    println!("to the same final loss (persistent structural effect).");
+    save("fig5b", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Fig 10: training stability — spike injection + rollback vs clean run.
+pub fn fig10(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let n = steps.unwrap_or(160);
+    // BitNet at an aggressive LR with an injected divergence (the nano
+    // scale is too small to reproduce organic 1-bit blowups reliably —
+    // documented substitution, DESIGN.md §3).
+    let unstable = lab.run("micro-bitnet", n, "unstable", |o| {
+        o.peak_lr = 8e-3;
+        o.inject_spike_at = Some(n / 2);
+        o.snapshot_every = 10;
+    })?;
+    let stable = lab.run("micro-pquant", n, "stable-hi-lr", |o| {
+        o.peak_lr = 8e-3;
+        o.snapshot_every = 10;
+    })?;
+    let mut t = Table::new(
+        "Figure 10 — training stability at aggressive LR (8e-3)",
+        &["run", "rollbacks", "final loss", "finished"],
+    );
+    t.row(vec![
+        "bitnet + injected spike".into(),
+        unstable.rollbacks.to_string(),
+        format!("{:.3}", unstable.final_loss),
+        "yes (recovered via checkpoint reload)".into(),
+    ]);
+    t.row(vec![
+        "pquant (same LR)".into(),
+        stable.rollbacks.to_string(),
+        format!("{:.3}", stable.final_loss),
+        "yes".into(),
+    ]);
+    t.print();
+    println!(
+        "{}",
+        ascii_chart(
+            &[("bitnet-unstable", &unstable.losses), ("pquant", &stable.losses)],
+            64,
+            14
+        )
+    );
+    save(
+        "fig10",
+        &obj(vec![
+            ("bitnet_rollbacks", num(unstable.rollbacks as f64)),
+            ("pquant_rollbacks", num(stable.rollbacks as f64)),
+            ("bitnet_losses", arr(unstable.losses.iter().map(|&l| num(l as f64)))),
+            ("pquant_losses", arr(stable.losses.iter().map(|&l| num(l as f64)))),
+        ]),
+        &[&t],
+    );
+    Ok(())
+}
+
+/// Table 3: matched-parameter comparison (total vs activated).
+pub fn tab3(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let mut t = Table::new(
+        "Table 3 — matched-parameter comparison (micro scale)",
+        &["model", "total", "activated", "PPL", "storage MiB (packed)"],
+    );
+    let mut payload = Vec::new();
+    for config in ["micro-pquant-n4", "micro-bitnet158", "micro-pquant-n8", "micro-fp16"] {
+        let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        let art = lab.artifact(config)?;
+        let (art2, state) = lab.load_run_state(&r)?;
+        let model = crate::infer::PackedModel::from_state(&art2, &state)?;
+        let mib = model.storage_bytes() as f64 / (1024.0 * 1024.0);
+        t.row(vec![
+            config.to_string(),
+            format!("{:.2}M", art.manifest.param_count as f64 / 1e6),
+            format!("{:.2}M", art.manifest.activated_param_count as f64 / 1e6),
+            format!("{:.2}", r.ppl),
+            format!("{mib:.2}"),
+        ]);
+        payload.push(obj(vec![
+            ("config", s(config)),
+            ("total", num(art.manifest.param_count as f64)),
+            ("activated", num(art.manifest.activated_param_count as f64)),
+            ("ppl", num(r.ppl)),
+            ("storage_bytes", num(model.storage_bytes() as f64)),
+        ]));
+    }
+    t.print();
+    println!("paper shape: pQuant(N=4, more total) beats BitNet1.58 PPL; pQuant(N=8,");
+    println!("fewer activated) matches it; fp16 costs ~3-4x the storage.");
+    save("tab3", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Table 5: scaled pQuant (N=8) vs baselines across sizes.
+pub fn tab5(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let mut t = results_table("Table 5 — pQuant N=8 vs baselines across sizes");
+    let mut payload = Vec::new();
+    for config in [
+        "micro-fp16",
+        "micro-bitnet158",
+        "micro-pquant-n8",
+        "tiny-fp16",
+        "tiny-bitnet158",
+        "tiny-pquant-n8",
+    ] {
+        let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+        let bits = lab.artifact(config)?.manifest.avg_bits_per_weight;
+        result_row(&mut t, config, bits, &r);
+        payload.push(run_json(&r));
+    }
+    t.print();
+    println!("paper shape: with N=8 pQuant surpasses the 2-bit baseline and approaches fp16.");
+    save("tab5", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Table 7: converged feature-scaling values per layer.
+pub fn tab7(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let config = "tiny-pquant";
+    let r = lab.run(config, steps_for(config, steps), "", |_| {})?;
+    let mut t = Table::new(
+        "Table 7 — feature scaling after training (tiny-pquant)",
+        &["layer", "alpha (8-bit)", "beta (1-bit)", "alpha/beta"],
+    );
+    let mut payload = Vec::new();
+    for (l, (a, b)) in r.feature_scaling.iter().enumerate() {
+        t.row(vec![
+            (l + 1).to_string(),
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            format!("{:.1}", a / b.max(1e-6)),
+        ]);
+        payload.push(obj(vec![
+            ("layer", num((l + 1) as f64)),
+            ("alpha", num(*a as f64)),
+            ("beta", num(*b as f64)),
+        ]));
+    }
+    t.print();
+    println!("paper shape: α (8-bit) ≫ β (1-bit) at every layer — the model preserves");
+    println!("the high-precision pathway's signal.");
+    save("tab7", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Table 8: training-time overhead vs N (measured steps/s, extrapolated).
+pub fn tab8(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    let n = steps.unwrap_or(60); // timing only — short runs, separate tag
+    let mut t = Table::new(
+        "Table 8 — training wall time vs number of experts N (micro)",
+        &["config", "steps/s", "tokens/s", "relative cost"],
+    );
+    let mut payload = Vec::new();
+    let mut base_tps = 0.0;
+    for config in ["micro-pquant", "micro-pquant-n2", "micro-pquant-n4", "micro-pquant-n8"] {
+        let r = lab.run(config, n, "timing", |o| {
+            o.eval_every = 0;
+            o.log_every = 0;
+        })?;
+        if base_tps == 0.0 {
+            base_tps = r.tokens_per_second;
+        }
+        t.row(vec![
+            config.to_string(),
+            format!("{:.2}", r.steps as f64 / r.wall_seconds),
+            format!("{:.0}", r.tokens_per_second),
+            format!("{:.2}x", base_tps / r.tokens_per_second),
+        ]);
+        payload.push(obj(vec![
+            ("config", s(config)),
+            ("tokens_per_second", num(r.tokens_per_second)),
+            ("wall_seconds", num(r.wall_seconds)),
+        ]));
+    }
+    t.print();
+    println!("paper shape: N=8 costs ~1.2-1.3x the N=1 training time (Table 8: 8.5→11.1 days).");
+    save("tab8", &Json::Arr(payload), &[&t]);
+    Ok(())
+}
+
+/// Appendix E: batch-size ablation (1M vs 4M tokens → scaled analog).
+pub fn ablate_batch(lab: &mut Lab, steps: Option<u64>) -> Result<()> {
+    // Matched token budget: batch 2/8/32 × steps so tokens are constant.
+    let base_steps = steps.unwrap_or(320);
+    let entries = [("train_step_b2", 2usize, base_steps * 4), ("train_step", 8, base_steps), ("train_step_b32", 32, base_steps / 4)];
+    let art = lab.artifact("micro-pquant")?;
+    let vocab = art.manifest.config.vocab;
+    lab.dataset(vocab)?;
+    let mut t = Table::new(
+        "Appendix E — batch-size ablation at matched token budget (micro-pquant)",
+        &["batch", "steps", "final loss", "PPL"],
+    );
+    let mut payload = Vec::new();
+    for (entry, batch, n_steps) in entries {
+        if !art.manifest.entries.contains_key(entry) {
+            println!("[ablate-batch] entry {entry} missing (rebuild artifacts)");
+            continue;
+        }
+        // distinct cache tag per batch size
+        let cache_path = format!("results/cache/micro-pquant-ablate-{batch}-s{n_steps}.json");
+        let r: RunResult = if let Ok(text) = std::fs::read_to_string(&cache_path) {
+            RunResult::from_json(&Json::parse(&text)?)?
+        } else {
+            println!("[lab] training micro-pquant batch={batch} ...");
+            let eval_tokens = lab.eval_tokens;
+            let (dataset, _) = lab.dataset_ref(vocab);
+            let mut trainer =
+                crate::coordinator::Trainer::with_entry(&lab.runtime, &art, dataset, entry)?;
+            let opts = crate::coordinator::TrainOptions {
+                steps: n_steps,
+                log_every: (n_steps / 4).max(1),
+                ..Default::default()
+            };
+            let rep = trainer.run(&opts)?;
+            let ppl = trainer.eval_perplexity(eval_tokens)?.unwrap_or(f64::NAN);
+            let r = RunResult {
+                config: "micro-pquant".into(),
+                steps: n_steps,
+                losses: rep.losses,
+                final_loss: rep.final_loss,
+                tail_loss: rep.tail_loss,
+                ppl,
+                task_acc: vec![],
+                rollbacks: rep.rollbacks,
+                wall_seconds: rep.wall_seconds,
+                tokens_per_second: rep.tokens_per_second,
+                feature_scaling: rep.feature_scaling,
+                checkpoint: String::new(),
+            };
+            std::fs::write(&cache_path, r.to_json().to_string_pretty())?;
+            r
+        };
+        t.row(vec![
+            batch.to_string(),
+            n_steps.to_string(),
+            format!("{:.3}", r.tail_loss),
+            format!("{:.2}", r.ppl),
+        ]);
+        payload.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("tail_loss", num(r.tail_loss as f64)),
+            ("ppl", num(r.ppl)),
+        ]));
+    }
+    t.print();
+    println!("paper shape: smaller batches (more updates) win at matched token budget.");
+    save("ablate-batch", &Json::Arr(payload), &[&t]);
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! T-MAC-style LUT W1A8 GEMV (paper Appendix A).
+//!
+//! "If a 1-bit matrix is partitioned into groups of four elements, there
+//!  are only 2⁴ possible combinations per group … the results of its
+//!  multiplication with all possible bit patterns can be precomputed and
+//!  stored in a lookup table."
+//!
+//! Given the INT8 activation vector x[k] (zero-padded to the packed byte
+//! boundary), we build one 16-entry table per group of 4 rows:
+//!
+//! ```text
+//! table[g][p] = Σ_{i<4} (p_i ? +x[4g+i] : −x[4g+i])    (i16 fits: 4·127 = 508)
+//! ```
+//!
+//! built incrementally in 16 adds per group via the subset trick
+//! (flip one bit = add 2·x_i).  The GEMV then walks each packed weight
+//! column nibble-by-nibble accumulating table hits in i32 — no multiplies
+//! anywhere in the inner loop.
+//!
+//! Table-build cost is O(4·k) per *token* and is amortized over all n
+//! output columns, exactly the T-MAC trade.
+
+use crate::quant::PackedBits;
+use crate::util::threads::{num_threads, par_chunks_mut};
+
+/// Per-group lookup tables for one activation vector.
+#[derive(Debug, Clone)]
+pub struct Luts {
+    /// n_groups × 16, flattened. i16: |4·127| = 508 < i16::MAX.
+    pub tables: Vec<i16>,
+    pub n_groups: usize,
+}
+
+/// Build the group-of-4 tables for activations `x` (length ≥ k; entries
+/// past k must be zero — `lut_gemv` pads internally).
+pub fn build_luts(x: &[i8], k: usize) -> Luts {
+    let n_groups = k.div_ceil(8) * 2; // nibbles per packed byte column
+    let mut tables = vec![0i16; n_groups * 16];
+    for g in 0..n_groups {
+        let base = g * 4;
+        let mut xs = [0i16; 4];
+        for i in 0..4 {
+            if base + i < k {
+                xs[i] = x[base + i] as i16;
+            }
+        }
+        let t = &mut tables[g * 16..(g + 1) * 16];
+        // p = 0: all bits clear = all −x
+        t[0] = -(xs[0] + xs[1] + xs[2] + xs[3]);
+        for p in 1usize..16 {
+            let low = p.trailing_zeros() as usize;
+            t[p] = t[p & (p - 1)] + 2 * xs[low];
+        }
+    }
+    Luts { tables, n_groups }
+}
+
+/// LUT GEMV: y[n] = Σ_groups table[g][nibble(g, col)], i32 accumulation.
+/// `w` is the packed ±1 weight matrix; `luts` from [`build_luts`] over the
+/// same k.
+pub fn lut_gemv(luts: &Luts, w: &PackedBits) -> Vec<i32> {
+    let mut y = vec![0i32; w.n];
+    lut_gemv_into(luts, w, &mut y);
+    y
+}
+
+/// Allocation-free variant for the serving hot loop.
+pub fn lut_gemv_into(luts: &Luts, w: &PackedBits, y: &mut [i32]) {
+    assert_eq!(y.len(), w.n);
+    assert!(luts.n_groups * 4 >= w.k, "LUTs built for smaller k");
+    let threads = num_threads().min(w.n.max(1));
+    par_chunks_mut(y, threads, |_, start, chunk| {
+        for (jj, acc) in chunk.iter_mut().enumerate() {
+            let j = start + jj;
+            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+            let mut sum = 0i32;
+            for (byte_idx, &byte) in col.iter().enumerate() {
+                let g = byte_idx * 2;
+                let lo = (byte & 0x0F) as usize;
+                let hi = (byte >> 4) as usize;
+                sum += unsafe {
+                    // In-bounds by construction: g+1 < n_groups because
+                    // bytes_per_col*2 == n_groups (assert above), and
+                    // lo/hi < 16.
+                    *luts.tables.get_unchecked(g * 16 + lo) as i32
+                        + *luts.tables.get_unchecked((g + 1) * 16 + hi) as i32
+                };
+            }
+            *acc = sum;
+        }
+    });
+}
+
+/// End-to-end W1A8 linear on the LUT path: quantize x per-token, build
+/// tables, GEMV, dequantize with λ/γ. Returns f32 outputs.
+pub fn w1a8_linear(x: &[f32], w: &PackedBits, lambda: f32) -> Vec<f32> {
+    let (x_q, gammas) = crate::quant::quantize_i8_rows(x, 1, x.len());
+    let luts = build_luts(&x_q, w.k);
+    let y = lut_gemv(&luts, w);
+    let scale = lambda / gammas[0];
+    y.into_iter().map(|v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack_signs;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Naive ±1 GEMV ground truth.
+    fn naive(x: &[i8], signs: &[bool], k: usize, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|j| {
+                (0..k)
+                    .map(|i| {
+                        let s = if signs[i * n + j] { 1 } else { -1 };
+                        s * x[i] as i32
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lut_gemv_exactly_matches_naive() {
+        prop::check(31, 60, |r: &mut Rng| {
+            let k = 1 + r.below(200);
+            let n = 1 + r.below(24);
+            let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+            let x: Vec<i8> = (0..k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            (k, n, signs, x)
+        }, |(k, n, signs, x)| {
+            let w = pack_signs(signs, *k, *n);
+            let luts = build_luts(x, *k);
+            let got = lut_gemv(&luts, &w);
+            let want = naive(x, signs, *k, *n);
+            if got == want { Ok(()) } else { Err(format!("{got:?} vs {want:?}")) }
+        });
+    }
+
+    #[test]
+    fn table_subset_trick_correct() {
+        let x: Vec<i8> = vec![3, -5, 7, 11];
+        let luts = build_luts(&x, 4);
+        for p in 0..16usize {
+            let want: i16 = (0..4)
+                .map(|i| if p >> i & 1 == 1 { x[i] as i16 } else { -(x[i] as i16) })
+                .sum();
+            assert_eq!(luts.tables[p], want, "pattern {p:#06b}");
+        }
+    }
+
+    #[test]
+    fn padding_rows_contribute_zero() {
+        // k = 5 (3 pad bits in the first byte's high nibble + more)
+        let k = 5;
+        let n = 2;
+        let signs = vec![true; k * n];
+        let x: Vec<i8> = vec![1, 2, 3, 4, 5];
+        let w = pack_signs(&signs, k, n);
+        let luts = build_luts(&x, k);
+        let y = lut_gemv(&luts, &w);
+        assert_eq!(y, vec![15, 15]);
+    }
+
+    #[test]
+    fn w1a8_linear_close_to_float() {
+        let mut r = Rng::new(9);
+        let k = 256;
+        let n = 16;
+        let wf = r.normal_vec(k * n);
+        let b = crate::quant::binarize(&wf);
+        let packed = pack_signs(&b.signs, k, n);
+        let x = r.normal_vec(k);
+        let got = w1a8_linear(&x, &packed, b.lambda);
+        // ground truth: x · dequant(w)
+        let deq = crate::quant::dequant_binary(&b);
+        let want = crate::gemm::f32_gemv(&x, &deq, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            // INT8 activation quantization error only
+            assert!((g - w).abs() < 0.05 * (want.iter().map(|v| v.abs()).fold(0.0f32, f32::max) + 1.0),
+                "{g} vs {w}");
+        }
+    }
+}

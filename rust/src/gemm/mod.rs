@@ -1,0 +1,289 @@
+//! Quantized + baseline matmul engines — the compute substrate of the
+//! inference path and the workloads behind the paper's Figure 8
+//! ("computation time across components").
+//!
+//! * [`lut`] — T-MAC-style table-lookup W1A8 GEMV (Appendix A): groups of
+//!   4 packed sign bits index a 16-entry table of precomputed partial sums;
+//!   the matmul becomes lookups + adds, no multiplies.
+//! * [`f32_gemm`]/[`f32_gemv`] — the FP16-baseline engine.
+//! * [`i8_gemm`]/[`i8_gemv`] — INT8 engine for the high-precision branch.
+//! * [`ternary_gemv`] — packed 2-bit BitNet1.58 engine.
+
+pub mod lut;
+
+pub use lut::{build_luts, lut_gemv, lut_gemv_into};
+
+use crate::quant::PackedTernary;
+use crate::util::threads::par_chunks_mut;
+
+/// Row-major f32 GEMM: c[m,n] = a[m,k] · b[k,n], blocked over k and
+/// threaded over rows of the output.
+pub fn f32_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    let threads = crate::util::threads::num_threads().min(m.max(1));
+    par_chunks_mut(&mut c, threads, |_, start, chunk| {
+        let row0 = start / n;
+        let rows = chunk.len() / n;
+        for r in 0..rows {
+            let i = row0 + r;
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// f32 GEMV: y[n] = x[k] · b[k,n] (b row-major). The batch=1 decode path
+/// of the FP16 baseline.
+pub fn f32_gemv(x: &[f32], b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), k);
+    assert_eq!(b.len(), k * n);
+    let mut y = vec![0.0f32; n];
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (yv, &bv) in y.iter_mut().zip(brow) {
+            *yv += xv * bv;
+        }
+    }
+    y
+}
+
+/// INT8 GEMM with i32 accumulation: c[m,n] = a_q[m,k] · b_q[k,n].
+/// Exact integer arithmetic (|k|·127² < 2³¹ for every config here).
+pub fn i8_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i32; m * n];
+    let threads = crate::util::threads::num_threads().min(m.max(1));
+    par_chunks_mut(&mut c, threads, |_, start, chunk| {
+        let row0 = start / n;
+        let rows = chunk.len() / n;
+        for r in 0..rows {
+            let i = row0 + r;
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i32;
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv as i32;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// INT8 GEMV: y[n] = x_q[k] · b_q[k,n], i32 accumulation.
+pub fn i8_gemv(x: &[i8], b: &[i8], k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(x.len(), k);
+    assert_eq!(b.len(), k * n);
+    let mut y = vec![0i32; n];
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let xv = xv as i32;
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (yv, &bv) in y.iter_mut().zip(brow) {
+            *yv += xv * bv as i32;
+        }
+    }
+    y
+}
+
+/// Packed-ternary GEMV (BitNet1.58 engine): y[n] = x_q[k] · T[k,n] with
+/// T ∈ {-1,0,+1} stored 2 bits/weight column-major. i32 accumulation;
+/// multiply-free.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the first implementation decoded the
+/// 2-bit codes with a branchy inner loop and ran ~50× slower than the
+/// 1-bit LUT path (1046 ms vs 25 ms per 7B-block decode). This version
+/// applies the same T-MAC treatment as [`lut::lut_gemv`]: one 256-entry
+/// table per group of 4 rows, indexed directly by the packed byte —
+/// lookups + adds only.
+pub fn ternary_gemv(x: &[i8], w: &PackedTernary) -> Vec<i32> {
+    let luts = build_ternary_luts(x, w.k);
+    let mut y = vec![0i32; w.n];
+    ternary_gemv_into(&luts, w, &mut y);
+    y
+}
+
+/// Per-group byte-indexed tables for the ternary path. i16 is safe:
+/// |4·127| = 508.
+pub struct TernaryLuts {
+    pub tables: Vec<i16>, // n_groups × 256
+    pub n_groups: usize,
+}
+
+/// Build ternary tables: table[g][byte] = Σ_l code(byte, l)·x[4g+l],
+/// code ∈ {00→0, 01→+1, 10→−1} (11 never occurs in packed data).
+/// Built incrementally: clear the lowest set 2-bit field and add its
+/// contribution — 256 adds per group.
+pub fn build_ternary_luts(x: &[i8], k: usize) -> TernaryLuts {
+    let n_groups = k.div_ceil(4);
+    let mut tables = vec![0i16; n_groups * 256];
+    for g in 0..n_groups {
+        let base = g * 4;
+        let mut xs = [0i16; 4];
+        for l in 0..4 {
+            if base + l < k {
+                xs[l] = x[base + l] as i16;
+            }
+        }
+        let t = &mut tables[g * 256..(g + 1) * 256];
+        // t[0] = 0 already; fill the rest from the cleared-field prefix
+        for b in 1usize..256 {
+            let field = b.trailing_zeros() as usize / 2; // lowest non-zero lane
+            let code = (b >> (field * 2)) & 0b11;
+            let prev = b & !(0b11 << (field * 2));
+            let contrib = match code {
+                0b01 => xs[field],
+                0b10 => -xs[field],
+                _ => 0, // 0b11 unreachable in real data
+            };
+            t[b] = t[prev] + contrib;
+        }
+    }
+    TernaryLuts { tables, n_groups }
+}
+
+/// Allocation-free ternary GEMV over prebuilt tables.
+pub fn ternary_gemv_into(luts: &TernaryLuts, w: &PackedTernary, y: &mut [i32]) {
+    assert_eq!(y.len(), w.n);
+    assert!(luts.n_groups >= w.bytes_per_col, "LUTs built for smaller k");
+    let threads = crate::util::threads::num_threads().min(w.n.max(1));
+    par_chunks_mut(y, threads, |_, start, chunk| {
+        for (jj, acc) in chunk.iter_mut().enumerate() {
+            let j = start + jj;
+            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+            let mut sum = 0i32;
+            for (g, &byte) in col.iter().enumerate() {
+                sum += unsafe {
+                    // in bounds: g < bytes_per_col <= n_groups, byte < 256
+                    *luts.tables.get_unchecked(g * 256 + byte as usize) as i32
+                };
+            }
+            *acc = sum;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack_ternary;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn f32_gemm_matches_naive() {
+        prop::check(21, 20, |r: &mut Rng| {
+            let m = 1 + r.below(17);
+            let k = 1 + r.below(33);
+            let n = 1 + r.below(17);
+            let a = r.normal_vec(m * k);
+            let b = r.normal_vec(k * n);
+            (m, k, n, a, b)
+        }, |(m, k, n, a, b)| {
+            let got = f32_gemm(a, b, *m, *k, *n);
+            let want = naive_f32(a, b, *m, *k, *n);
+            for (g, w) in got.iter().zip(&want) {
+                if (g - w).abs() > 1e-3 {
+                    return Err(format!("{g} vs {w}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_matches_gemm_row() {
+        let mut r = Rng::new(5);
+        let (k, n) = (37, 19);
+        let x = r.normal_vec(k);
+        let b = r.normal_vec(k * n);
+        let y = f32_gemv(&x, &b, k, n);
+        let c = f32_gemm(&x, &b, 1, k, n);
+        assert_eq!(y, c);
+    }
+
+    #[test]
+    fn i8_gemm_exact() {
+        prop::check(22, 20, |r: &mut Rng| {
+            let m = 1 + r.below(9);
+            let k = 1 + r.below(65);
+            let n = 1 + r.below(17);
+            let a: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            (m, k, n, a, b)
+        }, |(m, k, n, a, b)| {
+            let got = i8_gemm(a, b, *m, *k, *n);
+            for i in 0..*m {
+                for j in 0..*n {
+                    let want: i32 = (0..*k)
+                        .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
+                        .sum();
+                    if got[i * n + j] != want {
+                        return Err(format!("({i},{j}): {} vs {want}", got[i * n + j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ternary_gemv_exact() {
+        prop::check(23, 30, |r: &mut Rng| {
+            let k = 1 + r.below(100);
+            let n = 1 + r.below(20);
+            let vals: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+            let x: Vec<i8> = (0..k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            (k, n, vals, x)
+        }, |(k, n, vals, x)| {
+            let p = pack_ternary(vals, *k, *n);
+            let got = ternary_gemv(x, &p);
+            for j in 0..*n {
+                let want: i32 = (0..*k)
+                    .map(|i| vals[i * n + j] as i32 * x[i] as i32)
+                    .sum();
+                if got[j] != want {
+                    return Err(format!("col {j}: {} vs {want}", got[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,384 @@
+//! One packed transformer block: 1-bit MHA with RoPE + KV cache, plus the
+//! variant FFN (dense quantized, or pQuant's decoupled branches with a
+//! top-1 router over the INT8 experts).
+//!
+//! The decode path is per-token GEMV — the edge regime the paper's
+//! Appendix A targets ("the batch size is typically one and the most
+//! time-consuming operation becomes GEMV").
+
+use std::time::Duration;
+
+use crate::config::Variant;
+
+use super::{rmsnorm_vec, silu, softmax, QLinear, QuantActs};
+
+/// Per-layer attention KV cache.
+pub struct KvCache {
+    pub k: Vec<f32>, // [t, d]
+    pub v: Vec<f32>,
+    pub len: usize,
+    d: usize,
+}
+
+impl KvCache {
+    pub fn new(max_seq: usize, d: usize) -> KvCache {
+        KvCache { k: vec![0.0; max_seq * d], v: vec![0.0; max_seq * d], len: 0, d }
+    }
+
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert!(self.len * self.d + self.d <= self.k.len(), "KV cache overflow");
+        self.k[self.len * self.d..(self.len + 1) * self.d].copy_from_slice(k);
+        self.v[self.len * self.d..(self.len + 1) * self.d].copy_from_slice(v);
+        self.len += 1;
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// The pQuant decoupled FFN weights (§3.2-3.3).
+pub struct DecoupledFfn {
+    pub up_1bit: QLinear,
+    pub down_1bit: QLinear,
+    /// N experts: (up [d, r], down [r, d]).
+    pub experts: Vec<(QLinear, QLinear)>,
+    /// Router [d, N] full precision (tiny).
+    pub router: Vec<f32>,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+/// FFN variants.
+pub enum Ffn {
+    Dense { up: QLinear, down: QLinear },
+    Decoupled(DecoupledFfn),
+}
+
+/// One transformer block with packed weights.
+pub struct PackedBlock {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub wq: QLinear,
+    pub wk: QLinear,
+    pub wv: QLinear,
+    pub wo: QLinear,
+    pub ffn: Ffn,
+    pub n_heads: usize,
+    /// Accumulated decode-time by component (Fig 8 instrumentation).
+    pub timing: BlockTiming,
+}
+
+/// Per-component cumulative wall time (Fig 8: "computation time across
+/// components in a Transformer block").
+#[derive(Debug, Clone, Default)]
+pub struct BlockTiming {
+    pub attn_proj: Duration,
+    pub attn_core: Duration,
+    pub ffn_1bit: Duration,
+    pub ffn_8bit: Duration,
+    pub router: Duration,
+    pub norm_quant: Duration,
+}
+
+impl BlockTiming {
+    pub fn total(&self) -> Duration {
+        self.attn_proj + self.attn_core + self.ffn_1bit + self.ffn_8bit
+            + self.router + self.norm_quant
+    }
+
+    pub fn reset(&mut self) {
+        *self = BlockTiming::default();
+    }
+}
+
+fn rope_rotate(x: &mut [f32], pos: usize, n_heads: usize) {
+    let hd = x.len() / n_heads;
+    let half = hd / 2;
+    for h in 0..n_heads {
+        let base = h * hd;
+        for i in 0..half {
+            let freq = 1.0f32 / 10000f32.powf(i as f32 / half as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let a = x[base + i];
+            let b = x[base + half + i];
+            x[base + i] = a * cos - b * sin;
+            x[base + half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+impl PackedBlock {
+    /// Decode one token: x is the residual stream vector [d]; returns the
+    /// updated residual. `pos` is the cache position of this token.
+    pub fn forward(&mut self, x: &[f32], pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        let d = x.len();
+        let hd = d / self.n_heads;
+
+        // ---- attention ----
+        let t0 = std::time::Instant::now();
+        let xn = rmsnorm_vec(x, &self.attn_norm);
+        let mut acts = QuantActs::quantize(&xn);
+        self.timing.norm_quant += t0.elapsed();
+
+        let t0 = std::time::Instant::now();
+        let mut q = self.wq.forward(&xn, &mut acts);
+        let mut k = self.wk.forward(&xn, &mut acts);
+        let v = self.wv.forward(&xn, &mut acts);
+        self.timing.attn_proj += t0.elapsed();
+
+        let t0 = std::time::Instant::now();
+        rope_rotate(&mut q, pos, self.n_heads);
+        rope_rotate(&mut k, pos, self.n_heads);
+        cache.push(&k, &v);
+        let t_len = cache.len;
+        let mut ctx = vec![0.0f32; d];
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0.0f32; t_len];
+        for h in 0..self.n_heads {
+            let qh = &q[h * hd..(h + 1) * hd];
+            for (t, s) in scores.iter_mut().enumerate() {
+                let kh = &cache.k[t * d + h * hd..t * d + (h + 1) * hd];
+                *s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax(&mut scores);
+            let ch = &mut ctx[h * hd..(h + 1) * hd];
+            for (t, &p) in scores.iter().enumerate() {
+                let vh = &cache.v[t * d + h * hd..t * d + (h + 1) * hd];
+                for (c, &vv) in ch.iter_mut().zip(vh) {
+                    *c += p * vv;
+                }
+            }
+        }
+        self.timing.attn_core += t0.elapsed();
+
+        let t0 = std::time::Instant::now();
+        let mut acts_ctx = QuantActs::quantize(&ctx);
+        let o = self.wo.forward(&ctx, &mut acts_ctx);
+        self.timing.attn_proj += t0.elapsed();
+
+        let mut x1: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
+
+        // ---- FFN ----
+        let t0 = std::time::Instant::now();
+        let xn = rmsnorm_vec(&x1, &self.ffn_norm);
+        let mut acts = QuantActs::quantize(&xn);
+        self.timing.norm_quant += t0.elapsed();
+
+        let y = match &self.ffn {
+            Ffn::Dense { up, down } => {
+                let t0 = std::time::Instant::now();
+                let mut h = up.forward(&xn, &mut acts);
+                silu(&mut h);
+                let mut acts_h = QuantActs::quantize(&h);
+                let out = down.forward(&h, &mut acts_h);
+                self.timing.ffn_1bit += t0.elapsed();
+                out
+            }
+            Ffn::Decoupled(dec) => {
+                // 1-bit branch (shares acts/LUTs with the expert up-proj —
+                // the Appendix A "no redundant data reads" point)
+                let t0 = std::time::Instant::now();
+                let mut h1 = dec.up_1bit.forward(&xn, &mut acts);
+                silu(&mut h1);
+                let mut acts_h1 = QuantActs::quantize(&h1);
+                let y1 = dec.down_1bit.forward(&h1, &mut acts_h1);
+                self.timing.ffn_1bit += t0.elapsed();
+
+                // top-1 router (full precision, tiny)
+                let t0 = std::time::Instant::now();
+                let n_exp = dec.experts.len();
+                let (expert_idx, gate) = if n_exp == 1 {
+                    (0usize, 1.0f32)
+                } else {
+                    let mut logits =
+                        crate::gemm::f32_gemv(&xn, &dec.router, xn.len(), n_exp);
+                    softmax(&mut logits);
+                    let (mut bi, mut bp) = (0usize, f32::NEG_INFINITY);
+                    for (i, &p) in logits.iter().enumerate() {
+                        if p > bp {
+                            bi = i;
+                            bp = p;
+                        }
+                    }
+                    (bi, bp)
+                };
+                self.timing.router += t0.elapsed();
+
+                // single activated INT8 expert (traffic constant in N)
+                let t0 = std::time::Instant::now();
+                let (up8, down8) = &dec.experts[expert_idx];
+                let mut h8 = up8.forward(&xn, &mut acts);
+                silu(&mut h8);
+                let mut acts_h8 = QuantActs::quantize(&h8);
+                let y8 = down8.forward(&h8, &mut acts_h8);
+                self.timing.ffn_8bit += t0.elapsed();
+
+                y1.iter()
+                    .zip(&y8)
+                    .map(|(a, b)| dec.beta * a + dec.alpha * gate * b)
+                    .collect()
+            }
+        };
+        for (xv, yv) in x1.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+        x1
+    }
+
+    /// Resident weight bytes of this block.
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = (self.attn_norm.len() + self.ffn_norm.len()) * 2;
+        total += self.wq.storage_bytes()
+            + self.wk.storage_bytes()
+            + self.wv.storage_bytes()
+            + self.wo.storage_bytes();
+        total += match &self.ffn {
+            Ffn::Dense { up, down } => up.storage_bytes() + down.storage_bytes(),
+            Ffn::Decoupled(d) => {
+                d.up_1bit.storage_bytes()
+                    + d.down_1bit.storage_bytes()
+                    + d.experts
+                        .iter()
+                        .map(|(u, dn)| u.storage_bytes() + dn.storage_bytes())
+                        .sum::<usize>()
+                    + d.router.len() * 2
+            }
+        };
+        total
+    }
+
+    /// Build a random block of the given geometry (bench workloads at
+    /// paper scale where no trained checkpoint exists).
+    pub fn random(
+        variant: Variant,
+        d: usize,
+        n_heads: usize,
+        d_ff: usize,
+        r: usize,
+        n_experts: usize,
+        seed: u64,
+    ) -> PackedBlock {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mk = |rng: &mut crate::util::rng::Rng, k: usize, n: usize, v: Variant| {
+            let wf = rng.normal_vec(k * n);
+            match v {
+                Variant::Fp16 => QLinear::f32(&wf, k, n),
+                Variant::BitNet | Variant::PQuant => QLinear::one_bit(&wf, k, n),
+                Variant::BitNet158 => QLinear::ternary(&wf, k, n),
+            }
+        };
+        let ffn = if variant == Variant::PQuant {
+            let n1 = d_ff - r;
+            Ffn::Decoupled(DecoupledFfn {
+                up_1bit: mk(&mut rng, d, n1, Variant::BitNet),
+                down_1bit: mk(&mut rng, n1, d, Variant::BitNet),
+                experts: (0..n_experts)
+                    .map(|_| {
+                        let up = rng.normal_vec(d * r);
+                        let dn = rng.normal_vec(r * d);
+                        (QLinear::int8(&up, d, r), QLinear::int8(&dn, r, d))
+                    })
+                    .collect(),
+                router: rng.normal_vec(d * n_experts),
+                alpha: 2.0,
+                beta: 0.2,
+            })
+        } else {
+            Ffn::Dense {
+                up: mk(&mut rng, d, d_ff, variant),
+                down: mk(&mut rng, d_ff, d, variant),
+            }
+        };
+        PackedBlock {
+            attn_norm: vec![1.0; d],
+            ffn_norm: vec![1.0; d],
+            wq: mk(&mut rng, d, d, variant),
+            wk: mk(&mut rng, d, d, variant),
+            wv: mk(&mut rng, d, d, variant),
+            wo: mk(&mut rng, d, d, variant),
+            ffn,
+            n_heads,
+            timing: BlockTiming::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_block(variant: Variant) -> Vec<f32> {
+        let d = 64;
+        let mut block = PackedBlock::random(variant, d, 4, 176, 16, 2, 42);
+        let mut cache = KvCache::new(8, d);
+        let x = crate::util::rng::Rng::new(1).normal_vec(d);
+        let mut out = vec![];
+        for pos in 0..4 {
+            out = block.forward(&x, pos, &mut cache);
+        }
+        out
+    }
+
+    #[test]
+    fn all_variants_produce_finite_outputs() {
+        for v in [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant] {
+            let y = run_block(v);
+            assert_eq!(y.len(), 64);
+            assert!(y.iter().all(|x| x.is_finite()), "{v:?} produced non-finite");
+        }
+    }
+
+    #[test]
+    fn kv_cache_grows_and_resets() {
+        let mut cache = KvCache::new(4, 8);
+        cache.push(&[1.0; 8], &[2.0; 8]);
+        cache.push(&[3.0; 8], &[4.0; 8]);
+        assert_eq!(cache.len, 2);
+        cache.reset();
+        assert_eq!(cache.len, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache overflow")]
+    fn kv_cache_overflow_panics() {
+        let mut cache = KvCache::new(1, 4);
+        cache.push(&[0.0; 4], &[0.0; 4]);
+        cache.push(&[0.0; 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn timing_accumulates() {
+        let d = 64;
+        let mut block = PackedBlock::random(Variant::PQuant, d, 4, 176, 16, 4, 7);
+        let mut cache = KvCache::new(8, d);
+        let x = vec![0.5; d];
+        block.forward(&x, 0, &mut cache);
+        let t = block.timing.clone();
+        assert!(t.total() > Duration::ZERO);
+        assert!(t.ffn_8bit > Duration::ZERO, "expert branch must be timed");
+        assert!(t.router > Duration::ZERO, "router must be timed");
+        block.timing.reset();
+        assert_eq!(block.timing.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn pquant_storage_below_ternary_below_fp() {
+        let mk = |v| PackedBlock::random(v, 128, 4, 352, 16, 1, 3).storage_bytes();
+        let fp = mk(Variant::Fp16);
+        let tern = mk(Variant::BitNet158);
+        let pq = mk(Variant::PQuant);
+        assert!(pq < tern, "pquant {pq} !< ternary {tern}");
+        assert!(tern < fp);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = crate::util::rng::Rng::new(3).normal_vec(32);
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        rope_rotate(&mut x, 7, 4);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() / before < 1e-5);
+    }
+}

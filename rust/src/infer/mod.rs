@@ -1,0 +1,258 @@
+//! Pure-rust packed-weight inference engine (paper Appendix A).
+//!
+//! This is the deployment path: weights converted offline from a training
+//! checkpoint into packed 1-bit / INT8 / ternary form, activations
+//! quantized per token, and every linear executed by the multiply-free
+//! engines in [`crate::gemm`].  Python and PJRT are *not* involved — this
+//! engine backs the serving benches (Fig 8, §4.5 throughput) and the
+//! edge-serving example.
+//!
+//! Numerics deliberately mirror `python/compile/model.py` (same RMSNorm,
+//! RoPE, per-token absmax activation quantization, per-tensor weight
+//! scales), so logits agree with the AOT fwd path up to activation
+//! re-quantization order.
+
+pub mod block;
+pub mod model;
+
+pub use block::{KvCache, PackedBlock};
+pub use model::PackedModel;
+
+use crate::gemm::{self, lut::Luts, TernaryLuts};
+use crate::quant::{self, PackedBits, PackedTernary};
+
+/// Per-token quantized activations, shared across every linear that reads
+/// the same input vector (Appendix A: the fused-read optimization — build
+/// the LUTs once, use them for Q/K/V and both FFN branches).
+pub struct QuantActs {
+    pub x_q: Vec<i8>,
+    pub gamma: f32,
+    luts: Option<Luts>,
+    tluts: Option<TernaryLuts>,
+}
+
+impl QuantActs {
+    pub fn quantize(x: &[f32]) -> QuantActs {
+        let (x_q, gammas) = quant::quantize_i8_rows(x, 1, x.len());
+        QuantActs { x_q, gamma: gammas[0], luts: None, tluts: None }
+    }
+
+    /// Lazily build the group-of-4 LUTs for the 1-bit path.
+    pub fn luts(&mut self, k: usize) -> &Luts {
+        if self.luts.is_none() {
+            self.luts = Some(gemm::build_luts(&self.x_q, k));
+        }
+        self.luts.as_ref().unwrap()
+    }
+
+    /// Lazily build the byte-indexed tables for the ternary path.
+    pub fn ternary_luts(&mut self, k: usize) -> &TernaryLuts {
+        if self.tluts.is_none() {
+            self.tluts = Some(gemm::build_ternary_luts(&self.x_q, k));
+        }
+        self.tluts.as_ref().unwrap()
+    }
+}
+
+/// A quantized (or full-precision) linear layer, [k, n], y = x·W.
+pub enum QLinear {
+    /// f32 row-major weights (FP16-baseline engine).
+    F32 { w: Vec<f32>, k: usize, n: usize },
+    /// Packed ±1 with per-tensor λ (sign/absmean).
+    OneBit { w: PackedBits, lambda: f32 },
+    /// Packed ternary with per-tensor scale (BitNet1.58).
+    Ternary { w: PackedTernary, scale: f32 },
+    /// INT8 row-major weights with per-tensor γ_w.
+    Int8 { w: Vec<i8>, gamma_w: f32, k: usize, n: usize },
+}
+
+impl QLinear {
+    /// Build from latent f32 weights (row-major [k, n]).
+    pub fn one_bit(wf: &[f32], k: usize, n: usize) -> QLinear {
+        let b = quant::binarize(wf);
+        QLinear::OneBit { w: quant::pack_signs(&b.signs, k, n), lambda: b.lambda }
+    }
+
+    pub fn ternary(wf: &[f32], k: usize, n: usize) -> QLinear {
+        let t = quant::ternarize(wf);
+        QLinear::Ternary { w: quant::pack_ternary(&t.vals, k, n), scale: t.scale }
+    }
+
+    pub fn int8(wf: &[f32], k: usize, n: usize) -> QLinear {
+        assert_eq!(wf.len(), k * n);
+        let q = quant::quantize_i8(wf);
+        QLinear::Int8 { w: q.vals, gamma_w: q.gamma, k, n }
+    }
+
+    pub fn f32(wf: &[f32], k: usize, n: usize) -> QLinear {
+        assert_eq!(wf.len(), k * n);
+        QLinear::F32 { w: wf.to_vec(), k, n }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            QLinear::F32 { k, n, .. } => (*k, *n),
+            QLinear::OneBit { w, .. } => (w.k, w.n),
+            QLinear::Ternary { w, .. } => (w.k, w.n),
+            QLinear::Int8 { k, n, .. } => (*k, *n),
+        }
+    }
+
+    /// Weight bytes resident for this linear (memory accounting).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QLinear::F32 { w, .. } => w.len() * 2, // counted as fp16
+            QLinear::OneBit { w, .. } => w.storage_bytes(),
+            QLinear::Ternary { w, .. } => w.storage_bytes(),
+            QLinear::Int8 { w, .. } => w.len(),
+        }
+    }
+
+    /// y = x·W for one token, reusing the shared quantized activations.
+    pub fn forward(&self, x: &[f32], acts: &mut QuantActs) -> Vec<f32> {
+        match self {
+            QLinear::F32 { w, k, n } => gemm::f32_gemv(x, w, *k, *n),
+            QLinear::OneBit { w, lambda } => {
+                let scale = lambda / acts.gamma;
+                let luts = acts.luts(w.k);
+                gemm::lut_gemv(luts, w)
+                    .into_iter()
+                    .map(|v| v as f32 * scale)
+                    .collect()
+            }
+            QLinear::Ternary { w, scale } => {
+                let s = scale / acts.gamma;
+                let luts = acts.ternary_luts(w.k);
+                let mut y = vec![0i32; w.n];
+                gemm::ternary_gemv_into(luts, w, &mut y);
+                y.into_iter().map(|v| v as f32 * s).collect()
+            }
+            QLinear::Int8 { w, gamma_w, k, n } => {
+                let s = 1.0 / (gamma_w * acts.gamma);
+                gemm::i8_gemv(&acts.x_q[..*k], w, *k, *n)
+                    .into_iter()
+                    .map(|v| v as f32 * s)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// RMSNorm over one vector (same ε as the L1 kernel).
+pub fn rmsnorm_vec(x: &[f32], gain: &[f32]) -> Vec<f32> {
+    const EPS: f32 = 1e-5;
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + EPS).sqrt();
+    x.iter().zip(gain).map(|(v, g)| v * r * g).collect()
+}
+
+/// SiLU activation.
+pub fn silu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+}
+
+/// In-place softmax.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_bit_linear_tracks_float() {
+        let mut rng = Rng::new(1);
+        let (k, n) = (128, 64);
+        let wf = rng.normal_vec(k * n);
+        let lin = QLinear::one_bit(&wf, k, n);
+        let x = rng.normal_vec(k);
+        let mut acts = QuantActs::quantize(&x);
+        let y = lin.forward(&x, &mut acts);
+        // ground truth against the dequantized weights
+        let b = quant::binarize(&wf);
+        let deq = quant::dequant_binary(&b);
+        let want = gemm::f32_gemv(&x, &deq, k, n);
+        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-6;
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() / scale < 0.03, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn int8_linear_tracks_float() {
+        let mut rng = Rng::new(2);
+        let (k, n) = (96, 32);
+        let wf = rng.normal_vec(k * n);
+        let lin = QLinear::int8(&wf, k, n);
+        let x = rng.normal_vec(k);
+        let mut acts = QuantActs::quantize(&x);
+        let y = lin.forward(&x, &mut acts);
+        let want = gemm::f32_gemv(&x, &wf, k, n);
+        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-6;
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() / scale < 0.03, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn ternary_linear_tracks_dequant() {
+        let mut rng = Rng::new(3);
+        let (k, n) = (64, 16);
+        let wf = rng.normal_vec(k * n);
+        let lin = QLinear::ternary(&wf, k, n);
+        let t = quant::ternarize(&wf);
+        let deq: Vec<f32> = t.vals.iter().map(|&v| v as f32 * t.scale).collect();
+        let x = rng.normal_vec(k);
+        let mut acts = QuantActs::quantize(&x);
+        let y = lin.forward(&x, &mut acts);
+        let want = gemm::f32_gemv(&x, &deq, k, n);
+        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())) + 1e-6;
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() / scale < 0.03, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn luts_are_shared() {
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(64);
+        let mut acts = QuantActs::quantize(&x);
+        let a = acts.luts(64) as *const _;
+        let b = acts.luts(64) as *const _;
+        assert_eq!(a, b, "LUTs must be built once");
+    }
+
+    #[test]
+    fn storage_ordering() {
+        let mut rng = Rng::new(5);
+        let wf = rng.normal_vec(256 * 256);
+        let f = QLinear::f32(&wf, 256, 256).storage_bytes();
+        let t = QLinear::ternary(&wf, 256, 256).storage_bytes();
+        let o = QLinear::one_bit(&wf, 256, 256).storage_bytes();
+        let i = QLinear::int8(&wf, 256, 256).storage_bytes();
+        assert!(o < t && t < i && i < f);
+        assert_eq!(f, o * 16);
+    }
+
+    #[test]
+    fn softmax_and_silu_sane() {
+        let mut x = vec![0.0, 1.0, 2.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        let mut y = vec![-1.0, 0.0, 1.0];
+        silu(&mut y);
+        assert!((y[1]).abs() < 1e-7 && y[2] > 0.7 && y[0] < 0.0);
+    }
+}

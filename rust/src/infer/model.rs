@@ -1,0 +1,257 @@
+//! Full packed model: embedding, N blocks, head, and the decode loop —
+//! plus conversion from a trained PJRT checkpoint (TrainState) into the
+//! packed deployment form.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::runtime::{Artifact, TrainState};
+
+use super::block::{DecoupledFfn, Ffn, KvCache, PackedBlock};
+use super::{rmsnorm_vec, QLinear, QuantActs};
+
+/// A deployable packed model.
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    /// Token embedding [vocab, d], full precision.
+    pub embed: Vec<f32>,
+    /// LM head [d, vocab], full precision.
+    pub lm_head: Vec<f32>,
+    pub final_norm: Vec<f32>,
+    pub blocks: Vec<PackedBlock>,
+}
+
+impl PackedModel {
+    /// Convert a training state into packed inference weights — the
+    /// offline quantize-and-pack step of Appendix A.
+    pub fn from_state(art: &Artifact, state: &TrainState) -> Result<PackedModel> {
+        let cfg = art.manifest.config.clone();
+        let d = cfg.d_model;
+        let get = |name: &str| state.param_by_name(art, name);
+
+        let (_, embed) = get("tok_embed")?;
+        let (_, lm_head) = get("lm_head")?;
+        let (_, final_norm) = get("final_norm")?;
+
+        let mk = |wf: &[f32], k: usize, n: usize| -> QLinear {
+            match cfg.variant {
+                Variant::Fp16 => QLinear::f32(wf, k, n),
+                Variant::BitNet | Variant::PQuant => QLinear::one_bit(wf, k, n),
+                Variant::BitNet158 => QLinear::ternary(wf, k, n),
+            }
+        };
+
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let p = |field: &str| get(&format!("layers.{l}.{field}"));
+            let (_, attn_norm) = p("attn_norm")?;
+            let (_, ffn_norm) = p("ffn_norm")?;
+            let (_, wq) = p("wq")?;
+            let (_, wk) = p("wk")?;
+            let (_, wv) = p("wv")?;
+            let (_, wo) = p("wo")?;
+
+            let ffn = if cfg.variant == Variant::PQuant {
+                let n1 = cfg.d_ff_1bit();
+                let (_, up1) = p("ffn_up_1bit")?;
+                let (_, dn1) = p("ffn_down_1bit")?;
+                let (s_up8, up8) = p("ffn_up_8bit")?;
+                let (_, dn8) = p("ffn_down_8bit")?;
+                let (_, router) = p("router")?;
+                let (_, alpha) = p("alpha")?;
+                let (_, beta) = p("beta")?;
+                if s_up8 != vec![cfg.n_experts, d, cfg.r] {
+                    bail!("unexpected expert stack shape {s_up8:?}");
+                }
+                let experts = (0..cfg.n_experts)
+                    .map(|e| {
+                        let up = &up8[e * d * cfg.r..(e + 1) * d * cfg.r];
+                        let dn = &dn8[e * cfg.r * d..(e + 1) * cfg.r * d];
+                        (QLinear::int8(up, d, cfg.r), QLinear::int8(dn, cfg.r, d))
+                    })
+                    .collect();
+                Ffn::Decoupled(DecoupledFfn {
+                    up_1bit: QLinear::one_bit(&up1, d, n1),
+                    down_1bit: QLinear::one_bit(&dn1, n1, d),
+                    experts,
+                    router,
+                    alpha: alpha[0],
+                    beta: beta[0],
+                })
+            } else {
+                let (_, up) = p("ffn_up")?;
+                let (_, dn) = p("ffn_down")?;
+                Ffn::Dense { up: mk(&up, d, cfg.d_ff), down: mk(&dn, cfg.d_ff, d) }
+            };
+
+            blocks.push(PackedBlock {
+                attn_norm,
+                ffn_norm,
+                wq: mk(&wq, d, d),
+                wk: mk(&wk, d, d),
+                wv: mk(&wv, d, d),
+                wo: mk(&wo, d, d),
+                ffn,
+                n_heads: cfg.n_heads,
+                timing: Default::default(),
+            });
+        }
+
+        Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks })
+    }
+
+    /// Random model of a given config (bench workloads).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> PackedModel {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d = cfg.d_model;
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                PackedBlock::random(
+                    cfg.variant,
+                    d,
+                    cfg.n_heads,
+                    cfg.d_ff,
+                    cfg.r,
+                    cfg.n_experts.max(1),
+                    seed ^ (l as u64 + 1),
+                )
+            })
+            .collect();
+        PackedModel {
+            cfg: cfg.clone(),
+            embed: rng.normal_vec(cfg.vocab * d),
+            lm_head: rng.normal_vec(d * cfg.vocab),
+            final_norm: vec![1.0; d],
+            blocks,
+        }
+    }
+
+    /// Fresh per-layer KV caches for a sequence budget.
+    pub fn new_caches(&self, max_seq: usize) -> Vec<KvCache> {
+        (0..self.cfg.n_layers)
+            .map(|_| KvCache::new(max_seq, self.cfg.d_model))
+            .collect()
+    }
+
+    /// Decode one token: returns the logits row [vocab].
+    pub fn decode_step(&mut self, token: u32, pos: usize, caches: &mut [KvCache]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        for (block, cache) in self.blocks.iter_mut().zip(caches.iter_mut()) {
+            x = block.forward(&x, pos, cache);
+        }
+        let xn = rmsnorm_vec(&x, &self.final_norm);
+        crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab)
+    }
+
+    /// Greedy generation: feed `prompt`, then emit `n_new` tokens.
+    pub fn generate(&mut self, prompt: &[u32], n_new: usize) -> Vec<u32> {
+        let mut caches = self.new_caches(prompt.len() + n_new);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        for (pos, &t) in prompt.iter().enumerate() {
+            logits = self.decode_step(t, pos, &mut caches);
+        }
+        let mut out = Vec::with_capacity(n_new);
+        let mut pos = prompt.len();
+        for _ in 0..n_new {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            logits = self.decode_step(next, pos, &mut caches);
+            pos += 1;
+        }
+        out
+    }
+
+    /// Total per-component decode timing across blocks (Fig 8).
+    pub fn timing_summary(&self) -> super::block::BlockTiming {
+        let mut total = super::block::BlockTiming::default();
+        for b in &self.blocks {
+            total.attn_proj += b.timing.attn_proj;
+            total.attn_core += b.timing.attn_core;
+            total.ffn_1bit += b.timing.ffn_1bit;
+            total.ffn_8bit += b.timing.ffn_8bit;
+            total.router += b.timing.router;
+            total.norm_quant += b.timing.norm_quant;
+        }
+        total
+    }
+
+    pub fn reset_timing(&mut self) {
+        for b in &mut self.blocks {
+            b.timing.reset();
+        }
+    }
+
+    /// Resident weight bytes (embeddings fp16 + packed blocks).
+    pub fn storage_bytes(&self) -> usize {
+        let embed = (self.embed.len() + self.lm_head.len() + self.final_norm.len()) * 2;
+        embed + self.blocks.iter().map(|b| b.storage_bytes()).sum::<usize>()
+    }
+}
+
+fn argmax(x: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bi = i;
+            bv = v;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano_cfg(variant: Variant) -> ModelConfig {
+        ModelConfig {
+            name: format!("test-{}", variant.name()),
+            variant,
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 96,
+            r: if variant == Variant::PQuant { 16 } else { 0 },
+            n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+            seq_len: 16,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        }
+    }
+
+    #[test]
+    fn generate_produces_tokens_in_vocab() {
+        for v in [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant] {
+            let mut m = PackedModel::random(&nano_cfg(v), 11);
+            let out = m.generate(&[1, 2, 3], 5);
+            assert_eq!(out.len(), 5, "{v:?}");
+            assert!(out.iter().all(|&t| (t as usize) < 64), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a = PackedModel::random(&nano_cfg(Variant::PQuant), 5);
+        let mut b = PackedModel::random(&nano_cfg(Variant::PQuant), 5);
+        assert_eq!(a.generate(&[1, 2], 6), b.generate(&[1, 2], 6));
+    }
+
+    #[test]
+    fn storage_ordering_across_variants() {
+        let sz = |v| PackedModel::random(&nano_cfg(v), 1).storage_bytes();
+        assert!(sz(Variant::PQuant) < sz(Variant::Fp16));
+        assert!(sz(Variant::BitNet) < sz(Variant::BitNet158));
+    }
+
+    #[test]
+    fn timing_summary_accumulates_across_blocks() {
+        let mut m = PackedModel::random(&nano_cfg(Variant::PQuant), 2);
+        m.generate(&[1], 3);
+        assert!(m.timing_summary().total().as_nanos() > 0);
+        m.reset_timing();
+        assert_eq!(m.timing_summary().total().as_nanos(), 0);
+    }
+}

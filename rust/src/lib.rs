@@ -1,0 +1,47 @@
+//! # pQuant — decoupled linear QAT-from-scratch for extremely low-bit LMs
+//!
+//! Rust L3 coordinator of the three-layer reproduction (see `DESIGN.md`):
+//! JAX/Pallas author the model at build time (`make artifacts`), this crate
+//! owns everything at runtime — training orchestration, quantized inference,
+//! serving, evaluation, and every paper experiment.
+//!
+//! Module map:
+//! * [`config`] — model/variant configurations mirroring `python/compile/configs.py`
+//! * [`tensor`] — dense matrix type + the linear algebra the sensitivity
+//!   analysis needs (Cholesky inverse)
+//! * [`quant`] — sign/absmean 1-bit, ternary, INT8 absmax, group/channel
+//!   quantizers + bit-packing (8 weights/byte)
+//! * [`gemm`] — the Figure-8 engines: f32 GEMM, INT8 GEMM, T-MAC-style LUT
+//!   W1A8 GEMV, packed ternary GEMV
+//! * [`infer`] — pure-rust packed-weight transformer inference engine
+//! * [`runtime`] — PJRT client wrapper: load HLO-text artifacts, thread
+//!   training state through the AOT train step
+//! * [`coordinator`] — two-phase schedule, training loop, checkpoints,
+//!   stability monitor
+//! * [`serve`] — threaded batching inference server
+//! * [`tokenizer`] — byte-level BPE
+//! * [`data`] — synthetic grammar corpus + batch iterator
+//! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics
+//! * [`eval`] — perplexity + synthetic zero-shot task suite
+//! * [`memory`] — analytic memory-footprint model (Fig 6 / Tables 3, 6)
+//! * [`report`] — paper-style table renderers
+//! * [`experiments`] — one harness per paper table/figure
+//! * [`util`] — offline substrates: JSON, RNG, bench + property harnesses,
+//!   scoped thread pool
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod gemm;
+pub mod infer;
+pub mod memory;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sensitivity;
+pub mod serve;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

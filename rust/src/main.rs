@@ -1,0 +1,328 @@
+//! `repro` — the pQuant coordinator CLI.
+//!
+//! Subcommands:
+//!   experiment <id|all> [--steps N]   regenerate a paper table/figure
+//!   train --config C [--steps N] [--lr F] [--checkpoint P] [--eval-every N]
+//!   eval --config C --checkpoint P    perplexity + 7-task suite
+//!   serve --config C [--requests N] [--new-tokens N] [--batch N] [--workers N]
+//!   sensitivity --config C [--checkpoint P]
+//!   list-configs                       artifacts found on disk
+//!
+//! (Arg parsing is hand-rolled: the offline crate set has no clap.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use pquant::experiments::{run_experiment, Lab};
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(raw: &[String]) -> Result<Args> {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), raw[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Args { positional, flags })
+}
+
+impl Args {
+    fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow!("bad value for --{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn opt_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("bad value for --{name}: {e}")),
+            None => Ok(None),
+        }
+    }
+
+    fn require(&self, name: &str) -> Result<&str> {
+        self.flags
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+}
+
+const USAGE: &str = "\
+repro — pQuant coordinator (see README.md)
+
+USAGE:
+  repro experiment <id|all> [--steps N]
+  repro train --config C [--steps N] [--lr F] [--checkpoint P] [--eval-every N] [--single-phase]
+  repro eval --config C --checkpoint P [--items N]
+  repro serve --config C [--requests N] [--new-tokens N] [--batch N] [--workers N]
+  repro sensitivity --config C [--checkpoint P]
+  repro list-configs
+";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = parse_args(&raw[1..])?;
+    match raw[0].as_str() {
+        "experiment" => cmd_experiment(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "sensitivity" => cmd_sensitivity(&args),
+        "list-configs" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?;
+    let steps = args.opt_flag::<u64>("steps")?;
+    let mut lab = Lab::new()?;
+    run_experiment(&mut lab, id, steps)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use pquant::coordinator::{TrainOptions, Trainer};
+    let config = args.require("config")?;
+    let steps = args.flag("steps", 200u64)?;
+    let art = pquant::runtime::load_artifact(config)
+        .with_context(|| format!("loading artifact {config}"))?;
+    let runtime = pquant::runtime::Runtime::cpu()?;
+    let (dataset, _bpe) = pquant::data::cached_dataset(
+        "results/cache/data",
+        0xC0FFEE,
+        4 * 1024 * 1024,
+        art.manifest.config.vocab,
+    )?;
+    let mut trainer = Trainer::new(&runtime, &art, &dataset)?;
+    let opts = TrainOptions {
+        steps,
+        peak_lr: args.flag("lr", 1.5e-3f32)?,
+        eval_every: args.flag("eval-every", 0u64)?,
+        single_phase: args.flags.contains_key("single-phase"),
+        final_checkpoint: args.flags.get("checkpoint").cloned(),
+        log_every: args.flag("log-every", (steps / 20).max(1))?,
+        ..Default::default()
+    };
+    let report = trainer.run(&opts)?;
+    println!(
+        "\ndone: final loss {:.4} (tail {:.4}), {:.1} tokens/s, {} rollbacks, {:.1}s wall",
+        report.final_loss,
+        report.tail_loss,
+        report.tokens_per_second,
+        report.rollbacks,
+        report.wall_seconds
+    );
+    if let Some(ppl) = trainer.eval_perplexity(4096)? {
+        println!("valid perplexity: {ppl:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.require("config")?;
+    let ckpt = args.require("checkpoint")?;
+    let items = args.flag("items", 40usize)?;
+    let art = pquant::runtime::load_artifact(config)?;
+    let runtime = pquant::runtime::Runtime::cpu()?;
+    let state = pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?;
+    let (dataset, bpe) = pquant::data::cached_dataset(
+        "results/cache/data",
+        0xC0FFEE,
+        4 * 1024 * 1024,
+        art.manifest.config.vocab,
+    )?;
+    let fwd_key = if art.manifest.entries.contains_key("fwd_b8") { "fwd_b8" } else { "fwd" };
+    let fwd = runtime.compile(&art, fwd_key)?;
+    let ppl = pquant::eval::perplexity(
+        &state,
+        &fwd,
+        &dataset.valid,
+        art.manifest.seq_len,
+        art.manifest.config.vocab,
+        4096,
+    )?;
+    println!("perplexity: {ppl:.3}");
+    let fwd1 = runtime.compile(&art, "fwd")?;
+    let mut total = 0.0;
+    for task in pquant::eval::task_suite(0x7A5C, items) {
+        let acc = pquant::eval::task_accuracy(
+            &state,
+            &fwd1,
+            &bpe,
+            &task,
+            art.manifest.seq_len,
+            art.manifest.config.vocab,
+        )?;
+        println!("{:12} {:.1}%  (chance {:.0}%)", task.paper_name, acc * 100.0, task.chance * 100.0);
+        total += acc;
+    }
+    println!("{:12} {:.1}%", "Avg", total / 7.0 * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = args.require("config")?;
+    let requests = args.flag("requests", 16usize)?;
+    let new_tokens = args.flag("new-tokens", 32usize)?;
+    let opts = pquant::serve::ServeOptions {
+        max_batch: args.flag("batch", 4usize)?,
+        workers: args.flag("workers", 1usize)?,
+    };
+    let art = pquant::runtime::load_artifact(config)?;
+    let model = match args.flags.get("checkpoint") {
+        Some(ckpt) => {
+            let state = pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?;
+            pquant::infer::PackedModel::from_state(&art, &state)?
+        }
+        None => {
+            println!("(no --checkpoint: serving randomly initialized packed weights)");
+            let state = pquant::runtime::TrainState::initial(&art)?;
+            pquant::infer::PackedModel::from_state(&art, &state)?
+        }
+    };
+    let models: Vec<_> = (0..opts.workers)
+        .map(|_| {
+            // Each worker owns a replica; rebuild from the same source.
+            pquant::infer::PackedModel::from_state(
+                &art,
+                &pquant::runtime::TrainState::initial(&art).unwrap(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let models = if opts.workers <= 1 { vec![model] } else { models };
+    let (responses, wall, tps) =
+        pquant::serve::load_test(models, requests, 8, new_tokens, &opts);
+    println!(
+        "{} requests × {} tokens in {:.2}s → {:.1} tokens/s",
+        responses.len(),
+        new_tokens,
+        wall.as_secs_f64(),
+        tps
+    );
+    let mut lats: Vec<f64> = responses
+        .iter()
+        .map(|r| (r.queue_wait + r.service_time).as_secs_f64() * 1e3)
+        .collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "latency ms: p50 {:.1}  p95 {:.1}  max {:.1}",
+        lats[lats.len() / 2],
+        lats[(lats.len() * 95 / 100).min(lats.len() - 1)],
+        lats.last().unwrap()
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    let config = args.require("config")?;
+    let art = pquant::runtime::load_artifact(config)?;
+    let runtime = pquant::runtime::Runtime::cpu()?;
+    let state = match args.flags.get("checkpoint") {
+        Some(ckpt) => pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?,
+        None => pquant::runtime::TrainState::initial(&art)?,
+    };
+    let (dataset, _) = pquant::data::cached_dataset(
+        "results/cache/data",
+        0xC0FFEE,
+        4 * 1024 * 1024,
+        art.manifest.config.vocab,
+    )?;
+    let fwd = runtime.compile(&art, "fwd")?;
+    let seq = art.manifest.seq_len;
+    let d = art.manifest.config.d_model;
+    let mut rows = Vec::new();
+    for w in 0..8 {
+        let start = w * seq;
+        if start + seq > dataset.valid.len() {
+            break;
+        }
+        let toks: Vec<i32> = dataset.valid[start..start + seq].iter().map(|&t| t as i32).collect();
+        let (_, ffn_in) = state.forward(&fwd, &toks)?;
+        rows.extend(ffn_in);
+    }
+    let n_rows = rows.len() / d;
+    let acts = pquant::tensor::Matrix::from_vec(n_rows, d, rows);
+    let l = art.manifest.config.n_layers - 1;
+    let wname = if art.manifest.config.variant == pquant::config::Variant::PQuant {
+        format!("layers.{l}.ffn_up_1bit")
+    } else {
+        format!("layers.{l}.ffn_up")
+    };
+    let (shape, data) = state.param_by_name(&art, &wname)?;
+    let w = pquant::tensor::Matrix::from_vec(shape[0], shape[1], data);
+    let w_eff = pquant::sensitivity::dequantized_weights(&w, art.manifest.config.variant);
+    let rep = pquant::sensitivity::sensitivity_map(&w_eff, &acts, 1e-2)?;
+    println!(
+        "{config} {wname}: gini {:.3}, log-kurtosis {:.2}, top1% mass {:.3}",
+        rep.gini, rep.log_kurtosis, rep.top1pct_mass
+    );
+    println!("{}", pquant::sensitivity::ascii_heatmap(&rep.map, 20, 64));
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let root = pquant::runtime::artifacts_root();
+    let mut names: Vec<String> = std::fs::read_dir(&root)
+        .with_context(|| format!("reading {root:?} (run `make artifacts`)"))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    println!("{:24} {:>10} {:>12} {:>6}", "config", "params", "activated", "bits");
+    for name in names {
+        if let Ok(art) = pquant::runtime::load_artifact(&name) {
+            let m = &art.manifest;
+            println!(
+                "{:24} {:>9.2}M {:>11.2}M {:>6.2}",
+                name,
+                m.param_count as f64 / 1e6,
+                m.activated_param_count as f64 / 1e6,
+                m.avg_bits_per_weight
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,274 @@
+//! Quantizers — the rust mirror of `python/compile/kernels/quantize.py`.
+//!
+//! The training path quantizes inside the AOT HLO; this module implements
+//! the *same math* for the offline weight-conversion step (checkpoint →
+//! packed inference weights) and for the ablation studies (channel-wise /
+//! group-wise, Fig 7 right).  Numerical agreement with the python oracles
+//! is enforced by integration tests against golden vectors.
+
+pub mod pack;
+
+pub use pack::{pack_signs, unpack_signs, pack_ternary, unpack_ternary, PackedBits, PackedTernary};
+
+/// Epsilon matching python `quantize.EPS`.
+pub const EPS: f32 = 1e-6;
+/// Symmetric INT8 bound matching python `quantize.Q8_BOUND`.
+pub const Q8_BOUND: f32 = 127.0;
+
+/// Result of 1-bit sign/absmean quantization (eq. 3-6).
+#[derive(Debug, Clone)]
+pub struct Binarized {
+    /// Sign bits; true = +1, false = -1 (sign(0) → +1, like the oracle).
+    pub signs: Vec<bool>,
+    /// Per-tensor dequantization scale λ = mean|W − μ|.
+    pub lambda: f32,
+    /// Mean μ removed before binarization.
+    pub mu: f32,
+}
+
+/// 1-bit sign/absmean with mean-centering; mirrors `binarize_weight`.
+pub fn binarize(w: &[f32]) -> Binarized {
+    let n = w.len().max(1) as f32;
+    let mu = w.iter().sum::<f32>() / n;
+    let lambda = w.iter().map(|x| (x - mu).abs()).sum::<f32>() / n + EPS;
+    let signs = w.iter().map(|x| x - mu >= 0.0).collect();
+    Binarized { signs, lambda, mu }
+}
+
+/// Dequantize 1-bit back to f32 (λ·sign; μ is *not* re-added — matches the
+/// python oracle and the paper's eq. 10).
+pub fn dequant_binary(b: &Binarized) -> Vec<f32> {
+    b.signs.iter().map(|&s| if s { b.lambda } else { -b.lambda }).collect()
+}
+
+/// Result of ternary absmean quantization (BitNet1.58).
+#[derive(Debug, Clone)]
+pub struct Ternarized {
+    /// Values in {-1, 0, +1}.
+    pub vals: Vec<i8>,
+    /// Per-tensor scale = mean|W|.
+    pub scale: f32,
+}
+
+/// Ternary absmean; mirrors `ternarize_weight`.
+pub fn ternarize(w: &[f32]) -> Ternarized {
+    let n = w.len().max(1) as f32;
+    let scale = w.iter().map(|x| x.abs()).sum::<f32>() / n + EPS;
+    let vals = w
+        .iter()
+        .map(|x| (x / scale).round().clamp(-1.0, 1.0) as i8)
+        .collect();
+    Ternarized { vals, scale }
+}
+
+/// Result of INT8 absmax quantization.
+#[derive(Debug, Clone)]
+pub struct Quantized8 {
+    pub vals: Vec<i8>,
+    /// γ = 127 / max|x|; dequantize with x = q/γ.
+    pub gamma: f32,
+}
+
+/// Per-tensor INT8 absmax; mirrors `absmax_quantize_per_tensor`.
+pub fn quantize_i8(x: &[f32]) -> Quantized8 {
+    let absmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let gamma = Q8_BOUND / (absmax + EPS);
+    let vals = x
+        .iter()
+        .map(|v| (v * gamma).round().clamp(-Q8_BOUND, Q8_BOUND) as i8)
+        .collect();
+    Quantized8 { vals, gamma }
+}
+
+/// Per-row (token) INT8 absmax over a [rows, cols] row-major buffer;
+/// mirrors `absmax_quantize(axis=-1)`. Returns per-row γ.
+pub fn quantize_i8_rows(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols);
+    let mut vals = vec![0i8; x.len()];
+    let mut gammas = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let gamma = Q8_BOUND / (absmax + EPS);
+        gammas[r] = gamma;
+        for (dst, v) in vals[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *dst = (v * gamma).round().clamp(-Q8_BOUND, Q8_BOUND) as i8;
+        }
+    }
+    (vals, gammas)
+}
+
+/// Channel-wise (per output column) 1-bit quantization of a [k, n]
+/// row-major matrix (ablation, Fig 7 right). Returns per-column (λ, μ).
+pub fn binarize_channelwise(w: &[f32], k: usize, n: usize) -> (Vec<bool>, Vec<f32>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    let mut mus = vec![0.0f32; n];
+    let mut lambdas = vec![0.0f32; n];
+    for j in 0..n {
+        let mut sum = 0.0f32;
+        for i in 0..k {
+            sum += w[i * n + j];
+        }
+        let mu = sum / k as f32;
+        let mut asum = 0.0f32;
+        for i in 0..k {
+            asum += (w[i * n + j] - mu).abs();
+        }
+        mus[j] = mu;
+        lambdas[j] = asum / k as f32 + EPS;
+    }
+    let mut signs = vec![false; k * n];
+    for i in 0..k {
+        for j in 0..n {
+            signs[i * n + j] = w[i * n + j] - mus[j] >= 0.0;
+        }
+    }
+    (signs, lambdas, mus)
+}
+
+/// Group-wise 1-bit quantization along the input dim, groups of `group`
+/// (ablation, Fig 7 right: group = 64). Returns per-(group, col) λ.
+pub fn binarize_groupwise(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+) -> (Vec<bool>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(k % group, 0, "group must divide k");
+    let n_groups = k / group;
+    let mut lambdas = vec![0.0f32; n_groups * n];
+    let mut signs = vec![false; k * n];
+    for g in 0..n_groups {
+        for j in 0..n {
+            let mut sum = 0.0f32;
+            for i in 0..group {
+                sum += w[(g * group + i) * n + j];
+            }
+            let mu = sum / group as f32;
+            let mut asum = 0.0f32;
+            for i in 0..group {
+                asum += (w[(g * group + i) * n + j] - mu).abs();
+            }
+            lambdas[g * n + j] = asum / group as f32 + EPS;
+            for i in 0..group {
+                let idx = (g * group + i) * n + j;
+                signs[idx] = w[idx] - mu >= 0.0;
+            }
+        }
+    }
+    (signs, lambdas)
+}
+
+/// Mean squared reconstruction error of a quantizer output vs the original.
+pub fn mse(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len().max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n)
+    }
+
+    #[test]
+    fn binarize_basic() {
+        let w = vec![1.0, -1.0, 2.0, -2.0];
+        let b = binarize(&w);
+        assert_eq!(b.mu, 0.0);
+        assert!((b.lambda - 1.5 - EPS).abs() < 1e-6);
+        assert_eq!(b.signs, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn binarize_centered() {
+        // All-positive weights: centering must produce both signs.
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let b = binarize(&w);
+        assert!(b.signs.iter().any(|&s| s) && b.signs.iter().any(|&s| !s));
+    }
+
+    #[test]
+    fn ternarize_zeros_small() {
+        let w = vec![0.01, -0.01, 5.0, -5.0];
+        let t = ternarize(&w);
+        assert_eq!(t.vals, vec![0, 0, 1, -1]);
+    }
+
+    #[test]
+    fn quantize_i8_bounds_and_roundtrip() {
+        let x = randn(1000, 1);
+        let q = quantize_i8(&x);
+        assert!(q.vals.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+        // max-abs element maps to ±127
+        assert_eq!(q.vals.iter().map(|v| v.abs()).max().unwrap(), 127);
+        // dequantized error bounded by half a step
+        let step = 1.0 / q.gamma;
+        for (orig, q8) in x.iter().zip(&q.vals) {
+            assert!((orig - *q8 as f32 / q.gamma).abs() <= 0.5 * step + 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_row_gamma_differs() {
+        let mut x = vec![0.0f32; 2 * 4];
+        x[..4].copy_from_slice(&[1.0, -1.0, 0.5, 0.0]);
+        x[4..].copy_from_slice(&[100.0, -50.0, 25.0, 0.0]);
+        let (_, gammas) = quantize_i8_rows(&x, 2, 4);
+        assert!(gammas[0] > gammas[1] * 50.0);
+    }
+
+    #[test]
+    fn dequant_binary_error_below_fp_range() {
+        let w = randn(4096, 2);
+        let b = binarize(&w);
+        let deq = dequant_binary(&b);
+        // 1-bit MSE for a standard normal is 1 - 2/π ≈ 0.363
+        let e = mse(&w, &deq);
+        assert!(e > 0.2 && e < 0.55, "mse = {e}");
+    }
+
+    #[test]
+    fn groupwise_beats_pertensor_on_structured() {
+        // Columns with very different magnitudes: group scales fit better.
+        let k = 128;
+        let n = 8;
+        let mut rng = Rng::new(3);
+        let mut w = vec![0.0f32; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                let scale = if i < 64 { 0.1 } else { 10.0 };
+                w[i * n + j] = rng.normal() * scale;
+            }
+        }
+        let (signs_g, lam_g) = binarize_groupwise(&w, k, n, 64);
+        let mut deq_g = vec![0.0f32; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                let lam = lam_g[(i / 64) * n + j];
+                deq_g[i * n + j] = if signs_g[i * n + j] { lam } else { -lam };
+            }
+        }
+        let b = binarize(&w);
+        let deq_t = dequant_binary(&b);
+        assert!(mse(&w, &deq_g) < mse(&w, &deq_t));
+    }
+
+    #[test]
+    fn channelwise_scales_follow_columns() {
+        let k = 64;
+        let w: Vec<f32> = (0..k * 2)
+            .map(|idx| {
+                let col = idx % 2;
+                let sign = if (idx / 2) % 2 == 0 { 1.0 } else { -1.0 };
+                sign * if col == 0 { 10.0 } else { 0.1 }
+            })
+            .collect();
+        let (_, lambdas, _) = binarize_channelwise(&w, k, 2);
+        assert!(lambdas[0] > lambdas[1] * 50.0);
+    }
+}

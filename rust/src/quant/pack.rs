@@ -1,0 +1,155 @@
+//! Offline bit-packing (paper Appendix A): 1-bit weights are packed 8 per
+//! byte ("UINT8 format with 8 parameters per byte, 1/16 the storage of
+//! FP16"); ternary weights are packed 4 per byte (2 bits each).
+//!
+//! The packed layout is *column-major by group-of-bits along the input
+//! dim*: for a [k, n] weight matrix the LUT GEMV consumes, bits of one
+//! output column are contiguous so a GEMV walks memory linearly.
+
+/// Packed ±1 weights of a [k, n] matrix, column-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedBits {
+    pub k: usize,
+    pub n: usize,
+    /// ceil(k/8) bytes per column, n columns. Bit b of byte y in column j
+    /// is row index y*8 + b; 1 = +1, 0 = -1. Rows beyond k are zero-padded
+    /// (pad bits encode -1 but are never read: the LUT path masks them).
+    pub bytes: Vec<u8>,
+    pub bytes_per_col: usize,
+}
+
+/// Pack sign bits (row-major [k, n] bools, true = +1) column-major.
+pub fn pack_signs(signs: &[bool], k: usize, n: usize) -> PackedBits {
+    assert_eq!(signs.len(), k * n);
+    let bytes_per_col = k.div_ceil(8);
+    let mut bytes = vec![0u8; bytes_per_col * n];
+    for j in 0..n {
+        let col = &mut bytes[j * bytes_per_col..(j + 1) * bytes_per_col];
+        for i in 0..k {
+            if signs[i * n + j] {
+                col[i / 8] |= 1 << (i % 8);
+            }
+        }
+    }
+    PackedBits { k, n, bytes, bytes_per_col }
+}
+
+/// Unpack back to row-major bools (test/debug path).
+pub fn unpack_signs(p: &PackedBits) -> Vec<bool> {
+    let mut signs = vec![false; p.k * p.n];
+    for j in 0..p.n {
+        let col = &p.bytes[j * p.bytes_per_col..(j + 1) * p.bytes_per_col];
+        for i in 0..p.k {
+            signs[i * p.n + j] = (col[i / 8] >> (i % 8)) & 1 == 1;
+        }
+    }
+    signs
+}
+
+/// Packed ternary {-1, 0, +1} weights, 4 per byte, column-major.
+/// Encoding per 2-bit field: 0b00 = 0, 0b01 = +1, 0b10 = -1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTernary {
+    pub k: usize,
+    pub n: usize,
+    pub bytes: Vec<u8>,
+    pub bytes_per_col: usize,
+}
+
+pub fn pack_ternary(vals: &[i8], k: usize, n: usize) -> PackedTernary {
+    assert_eq!(vals.len(), k * n);
+    let bytes_per_col = k.div_ceil(4);
+    let mut bytes = vec![0u8; bytes_per_col * n];
+    for j in 0..n {
+        let col = &mut bytes[j * bytes_per_col..(j + 1) * bytes_per_col];
+        for i in 0..k {
+            let code: u8 = match vals[i * n + j] {
+                0 => 0b00,
+                1 => 0b01,
+                -1 => 0b10,
+                v => panic!("ternary value out of range: {v}"),
+            };
+            col[i / 4] |= code << ((i % 4) * 2);
+        }
+    }
+    PackedTernary { k, n, bytes, bytes_per_col }
+}
+
+pub fn unpack_ternary(p: &PackedTernary) -> Vec<i8> {
+    let mut vals = vec![0i8; p.k * p.n];
+    for j in 0..p.n {
+        let col = &p.bytes[j * p.bytes_per_col..(j + 1) * p.bytes_per_col];
+        for i in 0..p.k {
+            let code = (col[i / 4] >> ((i % 4) * 2)) & 0b11;
+            vals[i * p.n + j] = match code {
+                0b00 => 0,
+                0b01 => 1,
+                0b10 => -1,
+                _ => unreachable!("invalid ternary code"),
+            };
+        }
+    }
+    vals
+}
+
+/// Storage bytes for the packed representation (the Fig-6 traffic model).
+impl PackedBits {
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+impl PackedTernary {
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn signs_roundtrip_exact() {
+        prop::check(11, 50, |r: &mut Rng| {
+            let k = 1 + r.below(70);
+            let n = 1 + r.below(20);
+            let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+            (k, n, signs)
+        }, |(k, n, signs)| {
+            let p = pack_signs(signs, *k, *n);
+            if unpack_signs(&p) == *signs { Ok(()) } else { Err("roundtrip mismatch".into()) }
+        });
+    }
+
+    #[test]
+    fn ternary_roundtrip_exact() {
+        prop::check(12, 50, |r: &mut Rng| {
+            let k = 1 + r.below(70);
+            let n = 1 + r.below(20);
+            let vals: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+            (k, n, vals)
+        }, |(k, n, vals)| {
+            let p = pack_ternary(vals, *k, *n);
+            if unpack_ternary(&p) == *vals { Ok(()) } else { Err("roundtrip mismatch".into()) }
+        });
+    }
+
+    #[test]
+    fn storage_is_one_sixteenth_of_fp16() {
+        // Appendix A: packed 1-bit = 1/16 the bytes of fp16 (k multiple of 8).
+        let k = 4096;
+        let n = 64;
+        let signs = vec![true; k * n];
+        let p = pack_signs(&signs, k, n);
+        assert_eq!(p.storage_bytes() * 16, k * n * 2);
+    }
+
+    #[test]
+    fn ternary_storage_is_2bits() {
+        let p = pack_ternary(&vec![1i8; 128 * 4], 128, 4);
+        assert_eq!(p.storage_bytes(), 128 / 4 * 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! Paper-style table/figure rendering: markdown tables to stdout plus JSON
+//! under `results/` for every experiment harness.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// A rendered table: header + rows of cells.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned markdown.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:w$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write an experiment's JSON payload under results/<id>.json and its
+/// rendered tables under results/<id>.md.
+pub fn save(id: &str, json: &Json, tables: &[&Table]) {
+    std::fs::create_dir_all("results").ok();
+    let jpath = format!("results/{id}.json");
+    std::fs::write(&jpath, json.to_string_pretty()).ok();
+    let md: String = tables.iter().map(|t| t.render()).collect();
+    let mpath = format!("results/{id}.md");
+    std::fs::write(&mpath, &md).ok();
+    println!("[report] wrote {jpath} and {mpath}");
+}
+
+/// Simple ASCII line chart for loss curves (Fig 4 / 5b / 10 rendering).
+pub fn ascii_chart(series: &[(&str, &[f32])], width: usize, height: usize) -> String {
+    let all: Vec<f32> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let lo = all.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = all.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    let marks = [b'*', b'+', b'o', b'x', b'#', b'@'];
+    let mut grid = vec![vec![b' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let xpix = i * (width - 1) / ys.len().max(2).saturating_sub(1).max(1);
+            let ypix = ((hi - y) / span * (height - 1) as f32).round() as usize;
+            grid[ypix.min(height - 1)][xpix.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "  {hi:.3} ┐");
+    for row in grid {
+        let _ = writeln!(out, "        │{}", String::from_utf8_lossy(&row));
+    }
+    let _ = writeln!(out, "  {lo:.3} ┘");
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "        {} = {}", marks[si % marks.len()] as char, name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| long-name | 2.5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn chart_renders_series() {
+        let ys1: Vec<f32> = (0..50).map(|i| 5.0 - i as f32 * 0.05).collect();
+        let ys2: Vec<f32> = (0..50).map(|i| 4.0 - i as f32 * 0.03).collect();
+        let s = ascii_chart(&[("a", &ys1), ("b", &ys2)], 40, 10);
+        assert!(s.contains('*') && s.contains('+'));
+    }
+}

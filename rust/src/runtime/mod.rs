@@ -1,0 +1,410 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//!   * one directory per config under `artifacts/`
+//!   * `manifest.json` describes every executable's operand/result layout
+//!     in *flat pytree order* (sorted dict keys, list index order)
+//!   * `*.hlo.txt` are HLO-text modules lowered with `return_tuple=True`,
+//!     so every execution returns a single tuple literal that is
+//!     decomposed positionally
+//!   * `init.npz` holds the seeded initial parameters by flat name
+//!
+//! Python never runs at runtime — after `make artifacts` the rust binary is
+//! self-contained.
+
+pub mod state;
+
+pub use state::TrainState;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::FromRawBytes;
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Tensor dtype in manifests (the only two the models use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s32" => Dtype::S32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+}
+
+/// Shape+dtype of one operand/result.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered function (train_step, fwd, ...) described by the manifest.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub key: String,
+    pub file: String,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest of one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub seed: u64,
+    pub train_batch: usize,
+    pub seq_len: usize,
+    pub param_layout: Vec<TensorSpec>,
+    pub entries: HashMap<String, EntrySpec>,
+    pub param_count: usize,
+    pub activated_param_count: usize,
+    pub avg_bits_per_weight: f64,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let config = ModelConfig::from_manifest_json(j.get("config")?)?;
+        let derived = j.get("derived")?;
+        let param_layout = j
+            .get("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = HashMap::new();
+        for (key, e) in j.get("entries")?.as_obj()? {
+            entries.insert(
+                key.clone(),
+                EntrySpec {
+                    key: key.clone(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    batch: e.get("batch")?.as_usize()?,
+                    inputs: e
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            config,
+            seed: j.get("seed")?.as_f64()? as u64,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            param_layout,
+            entries,
+            param_count: derived.get("param_count")?.as_usize()?,
+            activated_param_count: derived.get("activated_param_count")?.as_usize()?,
+            avg_bits_per_weight: derived.get("avg_bits_per_weight")?.as_f64()?,
+        })
+    }
+}
+
+/// An artifact directory on disk (not yet compiled).
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifact> {
+        let dir = dir.as_ref().to_path_buf();
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Ok(Artifact { dir, manifest: Manifest::parse(&mtext)? })
+    }
+
+    /// Load the seeded initial parameters from init.npz, ordered to match
+    /// `manifest.param_layout`.
+    pub fn initial_params(&self) -> Result<Vec<xla::Literal>> {
+        let named = xla::Literal::read_npz(self.dir.join("init.npz"), &())?;
+        let by_name: HashMap<String, xla::Literal> = named.into_iter().collect();
+        self.manifest
+            .param_layout
+            .iter()
+            .map(|spec| {
+                by_name
+                    .get(&spec.name)
+                    .map(clone_literal)
+                    .ok_or_else(|| anyhow!("init.npz missing {}", spec.name))?
+            })
+            .collect()
+    }
+
+    /// Parse golden.json if present (nano configs).
+    pub fn golden(&self) -> Result<Option<Golden>> {
+        let path = self.dir.join("golden.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let tokens: Vec<i32> = j
+            .get("tokens")?
+            .as_arr()?
+            .iter()
+            .flat_map(|row| row.as_arr().unwrap().iter())
+            .map(|v| v.as_f64().map(|f| f as i32))
+            .collect::<Result<_>>()?;
+        Ok(Some(Golden {
+            tokens,
+            lr: j.get("sched_lr")?.as_f64()? as f32,
+            wd: j.get("sched_wd")?.as_f64()? as f32,
+            losses: j
+                .get("losses")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as f32))
+                .collect::<Result<_>>()?,
+        }))
+    }
+}
+
+/// Recorded python-side loss trajectory (ground truth for integration tests).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub tokens: Vec<i32>,
+    pub lr: f32,
+    pub wd: f32,
+    pub losses: Vec<f32>,
+}
+
+/// Literal has no Clone in the xla crate; round-trip through raw bytes.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let mut bytes = vec![0u8; l.size_bytes()];
+    match l.ty()? {
+        xla::ElementType::F32 => {
+            let mut v = vec![0f32; l.element_count()];
+            l.copy_raw_to(&mut v)?;
+            bytes.copy_from_slice(unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            });
+        }
+        xla::ElementType::S32 => {
+            let mut v = vec![0i32; l.element_count()];
+            l.copy_raw_to(&mut v)?;
+            bytes.copy_from_slice(unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            });
+        }
+        t => bail!("unsupported literal type {t:?}"),
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        l.ty()?, &dims, &bytes,
+    )?)
+}
+
+/// Build an f32 literal with the given dims.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(n, data.len(), "literal_f32 shape/data mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(n, data.len(), "literal_i32 shape/data mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Zero-filled f32 literal.
+pub fn literal_zeros(spec: &TensorSpec) -> Result<xla::Literal> {
+    match spec.dtype {
+        Dtype::F32 => literal_f32(&spec.shape, &vec![0.0; spec.element_count()]),
+        Dtype::S32 => literal_i32(&spec.shape, &vec![0; spec.element_count()]),
+    }
+}
+
+/// f32 contents of a literal.
+pub fn literal_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// The PJRT runtime: a CPU client plus a compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) one entry of an artifact.
+    pub fn compile(&self, art: &Artifact, entry: &str) -> Result<CompiledEntry> {
+        let spec = art
+            .manifest
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("artifact {:?} has no entry {entry:?}", art.dir))?
+            .clone();
+        let key = format!("{}::{entry}", art.dir.display());
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(CompiledEntry { exe: exe.clone(), spec });
+            }
+        }
+        let path = art.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(CompiledEntry { exe, spec })
+    }
+}
+
+/// A compiled executable plus its manifest layout.
+pub struct CompiledEntry {
+    pub exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub spec: EntrySpec,
+}
+
+impl CompiledEntry {
+    /// Execute with positional literals; returns the decomposed result
+    /// tuple (aot.py lowers with return_tuple=True → single tuple output).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "entry {} expects {} operands, got {}",
+                self.spec.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "entry {} returned {} results, manifest says {}",
+                self.spec.key,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// Find the artifacts root: $PQUANT_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("PQUANT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Convenience: load an artifact by config name from the default root.
+pub fn load_artifact(name: &str) -> Result<Artifact> {
+    Artifact::load(artifacts_root().join(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "config": {"name": "nano-pquant", "variant": "pquant", "vocab": 512,
+        "d_model": 64, "n_layers": 2, "n_heads": 2, "d_ff": 176, "r": 16,
+        "n_experts": 1, "seq_len": 64, "alpha_init": 2.0, "beta_init": 0.2},
+      "derived": {"param_count": 100, "activated_param_count": 100,
+        "avg_bits_per_weight": 1.3, "d_ff_1bit": 160, "head_dim": 32},
+      "seed": 1, "train_batch": 8, "seq_len": 64,
+      "param_layout": [
+        {"name": "final_norm", "shape": [64], "dtype": "f32"},
+        {"name": "layers.0.alpha", "shape": [], "dtype": "f32"}
+      ],
+      "entries": {
+        "fwd": {"file": "fwd.hlo.txt", "batch": 1,
+          "inputs": [{"name": "tokens", "shape": [1, 64], "dtype": "s32"}],
+          "outputs": [{"name": "logits", "shape": [1, 64, 512], "dtype": "f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.param_layout.len(), 2);
+        assert_eq!(m.param_layout[1].shape, Vec::<usize>::new());
+        assert_eq!(m.entries["fwd"].outputs[0].shape, vec![1, 64, 512]);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let bad = MANIFEST.replace("\"s32\"", "\"s64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn literal_helpers() {
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let z = literal_zeros(&TensorSpec {
+            name: "z".into(),
+            shape: vec![4],
+            dtype: Dtype::F32,
+        })
+        .unwrap();
+        assert_eq!(literal_to_f32(&z).unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = literal_f32(&[], &[7.5]).unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![7.5]);
+    }
+}

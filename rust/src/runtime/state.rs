@@ -1,0 +1,240 @@
+//! Host-resident training state threaded through the AOT train step.
+//!
+//! The train step is a pure function; the coordinator owns (params, m, v)
+//! as host literals and swaps them wholesale after each execution.  The
+//! sched operand [step, lr, wd] carries the two-phase schedule values.
+
+use anyhow::{bail, Result};
+
+use super::{literal_f32, literal_i32, literal_to_f32, literal_zeros, Artifact, CompiledEntry};
+
+/// Parameters + Adam moments, positionally ordered per the manifest.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// 1-based Adam step counter (bias correction needs step ≥ 1).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Fresh state: seeded params from init.npz, zero moments.
+    pub fn initial(art: &Artifact) -> Result<TrainState> {
+        let params = art.initial_params()?;
+        let m = art
+            .manifest
+            .param_layout
+            .iter()
+            .map(literal_zeros)
+            .collect::<Result<Vec<_>>>()?;
+        let v = art
+            .manifest
+            .param_layout
+            .iter()
+            .map(literal_zeros)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    /// Run one train step; updates state in place and returns the loss.
+    pub fn step(
+        &mut self,
+        entry: &CompiledEntry,
+        tokens: &[i32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<f32> {
+        let n = self.params.len();
+        let expected = 3 * n + 2;
+        if entry.spec.inputs.len() != expected {
+            bail!(
+                "train entry {} expects {} operands but state provides {expected}",
+                entry.spec.key,
+                entry.spec.inputs.len()
+            );
+        }
+        let tok_spec = &entry.spec.inputs[expected - 1];
+        if tok_spec.element_count() != tokens.len() {
+            bail!(
+                "token batch has {} elements, entry wants {:?}",
+                tokens.len(),
+                tok_spec.shape
+            );
+        }
+        self.step += 1;
+        let sched = literal_f32(&[3], &[self.step as f32, lr, wd])?;
+        let tok = literal_i32(&tok_spec.shape, tokens)?;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(expected);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&sched);
+        inputs.push(&tok);
+
+        // CompiledEntry::run takes owned-slice positions; borrow via the
+        // Borrow<Literal> bound on execute.
+        let result = entry.exe.execute::<&xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut parts = tuple.to_tuple()?;
+        if parts.len() != 1 + 3 * n {
+            bail!("train step returned {} results, want {}", parts.len(), 1 + 3 * n);
+        }
+        let loss = literal_to_f32(&parts[0])?[0];
+        // Swap in the new state (drain preserves order).
+        let mut it = parts.drain(1..);
+        self.params = (&mut it).take(n).collect();
+        self.m = (&mut it).take(n).collect();
+        self.v = (&mut it).take(n).collect();
+        Ok(loss)
+    }
+
+    /// Run the fwd entry against current params; returns (logits, ffn_input).
+    pub fn forward(
+        &self,
+        entry: &CompiledEntry,
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.params.len();
+        if entry.spec.inputs.len() != n + 1 {
+            bail!(
+                "fwd entry {} expects {} operands, state provides {}",
+                entry.spec.key,
+                entry.spec.inputs.len(),
+                n + 1
+            );
+        }
+        let tok_spec = &entry.spec.inputs[n];
+        if tok_spec.element_count() != tokens.len() {
+            bail!("token count {} != fwd spec {:?}", tokens.len(), tok_spec.shape);
+        }
+        let tok = literal_i32(&tok_spec.shape, tokens)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tok);
+        let result = entry.exe.execute::<&xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("fwd returned {} results, want 2", parts.len());
+        }
+        Ok((literal_to_f32(&parts[0])?, literal_to_f32(&parts[1])?))
+    }
+
+    /// Fetch one parameter tensor by manifest name.
+    pub fn param_by_name(&self, art: &Artifact, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        for (spec, lit) in art.manifest.param_layout.iter().zip(&self.params) {
+            if spec.name == name {
+                return Ok((spec.shape.clone(), literal_to_f32(lit)?));
+            }
+        }
+        bail!("no parameter named {name:?}")
+    }
+
+    /// Persist (params, m, v, step) as a checkpoint.
+    ///
+    /// Format "PQCK1" (the vendored xla crate's npz *writer* mis-declares
+    /// element types, so checkpoints use a self-contained binary layout):
+    /// header magic, step u64, entry count u32, then per entry:
+    /// name_len u32 + name bytes + rank u32 + dims u64* + f32 data.
+    pub fn save_checkpoint(&self, art: &Artifact, path: &str) -> Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"PQCK1\0");
+        out.extend_from_slice(&self.step.to_le_bytes());
+        let n_entries = (self.params.len() * 3) as u32;
+        out.extend_from_slice(&n_entries.to_le_bytes());
+        let mut push = |name: String, lit: &xla::Literal| -> Result<()> {
+            let data = literal_to_f32(lit)?;
+            let spec_dims: Vec<u64> = lit
+                .array_shape()?
+                .dims()
+                .iter()
+                .map(|&d| d as u64)
+                .collect();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(spec_dims.len() as u32).to_le_bytes());
+            for d in &spec_dims {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            for x in &data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Ok(())
+        };
+        for (spec, lit) in art.manifest.param_layout.iter().zip(&self.params) {
+            push(format!("p.{}", spec.name), lit)?;
+        }
+        for (spec, lit) in art.manifest.param_layout.iter().zip(&self.m) {
+            push(format!("m.{}", spec.name), lit)?;
+        }
+        for (spec, lit) in art.manifest.param_layout.iter().zip(&self.v) {
+            push(format!("v.{}", spec.name), lit)?;
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint written by [`save_checkpoint`].
+    pub fn load_checkpoint(art: &Artifact, path: &str) -> Result<TrainState> {
+        use std::collections::HashMap;
+        let bytes = std::fs::read(path)?;
+        let mut r = Reader { b: &bytes, i: 0 };
+        if r.take(6)? != b"PQCK1\0" {
+            bail!("not a PQCK1 checkpoint: {path}");
+        }
+        let step = u64::from_le_bytes(r.take(8)?.try_into().unwrap());
+        let n_entries = u32::from_le_bytes(r.take(4)?.try_into().unwrap()) as usize;
+        let mut by_name: HashMap<String, xla::Literal> = HashMap::new();
+        for _ in 0..n_entries {
+            let name_len = u32::from_le_bytes(r.take(4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let rank = u32::from_le_bytes(r.take(4)?.try_into().unwrap()) as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(u64::from_le_bytes(r.take(8)?.try_into().unwrap()) as usize);
+            }
+            let count: usize = dims.iter().product();
+            let raw = r.take(count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            by_name.insert(name, literal_f32(&dims, &data)?);
+        }
+        let mut take_lit = |prefix: &str, name: &str| -> Result<xla::Literal> {
+            by_name
+                .remove(&format!("{prefix}.{name}"))
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing {prefix}.{name}"))
+        };
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for spec in &art.manifest.param_layout {
+            params.push(take_lit("p", &spec.name)?);
+        }
+        for spec in &art.manifest.param_layout {
+            m.push(take_lit("m", &spec.name)?);
+        }
+        for spec in &art.manifest.param_layout {
+            v.push(take_lit("v", &spec.name)?);
+        }
+        Ok(TrainState { params, m, v, step })
+    }
+}
+
+/// Bounds-checked byte cursor for the checkpoint reader.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated checkpoint (wanted {n} bytes at offset {})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+}

@@ -1,0 +1,210 @@
+//! OBS/SPQR weight-sensitivity analysis (paper §2.3, eq. 1-2) and the
+//! *parameter democratization* metrics built on it (Fig 2 / Fig 5a).
+//!
+//! For a linear layer y = x·W with calibration activations X [m, k]:
+//!
+//! ```text
+//! H    = XᵀX / m + δ·mean(diag)·I        (damped Hessian)
+//! s_ij = w_ij² / (2·[H⁻¹]_ii)            (eq. 2; i = input dim)
+//! ```
+//!
+//! Democratization is quantified by how *concentrated* the sensitivity
+//! distribution is: Gini coefficient, excess kurtosis of log-sensitivity,
+//! and the share of total sensitivity mass held by the top 1% of weights.
+//! A 16-bit model shows high concentration; a collapsed 1-bit model is
+//! near-uniform (Gini → small).
+
+use anyhow::Result;
+
+use crate::tensor::{linalg::damped, Matrix};
+
+/// Sensitivity map + summary statistics for one weight matrix.
+#[derive(Debug, Clone)]
+pub struct SensitivityReport {
+    /// s_ij per weight, same shape as W.
+    pub map: Matrix,
+    pub gini: f64,
+    pub log_kurtosis: f64,
+    /// Fraction of total sensitivity mass in the top 1% of weights.
+    pub top1pct_mass: f64,
+    /// Fraction in the top 10%.
+    pub top10pct_mass: f64,
+}
+
+/// Compute eq. 2 for W [k, n] given calibration activations X [m, k]
+/// (rows = tokens). `rel_damp` is the GPTQ-style relative ridge (1e-2).
+pub fn sensitivity_map(w: &Matrix, x: &Matrix, rel_damp: f32) -> Result<SensitivityReport> {
+    assert_eq!(w.rows, x.cols, "W rows must match activation feature dim");
+    let h = damped(&x.gram(), rel_damp);
+    let h_inv = crate::tensor::cholesky_inverse(&h)?;
+    let mut map = Matrix::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let denom = (2.0 * h_inv.at(i, i)).max(1e-12);
+        for j in 0..w.cols {
+            let wij = w.at(i, j);
+            *map.at_mut(i, j) = wij * wij / denom;
+        }
+    }
+    Ok(summarize(map))
+}
+
+/// Summary statistics from a raw sensitivity map.
+pub fn summarize(map: Matrix) -> SensitivityReport {
+    let mut vals: Vec<f64> = map.data.iter().map(|&v| v as f64).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = vals.len();
+    let total: f64 = vals.iter().sum::<f64>().max(1e-30);
+
+    // Gini over the sorted values.
+    let mut cum = 0.0f64;
+    let mut gini_sum = 0.0f64;
+    for (i, v) in vals.iter().enumerate() {
+        cum += v;
+        gini_sum += cum;
+        let _ = i;
+    }
+    let gini = 1.0 - 2.0 * (gini_sum / (n as f64 * total)) + 1.0 / n as f64;
+
+    // Excess kurtosis of log-sensitivity (log spreads the dynamic range,
+    // matching the paper's log-sensitivity heatmaps).
+    let logs: Vec<f64> = vals.iter().map(|v| (v + 1e-30).ln()).collect();
+    let mean = logs.iter().sum::<f64>() / n as f64;
+    let var = logs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let m4 = logs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n as f64;
+    let log_kurtosis = if var > 1e-18 { m4 / (var * var) - 3.0 } else { 0.0 };
+
+    let top = |frac: f64| -> f64 {
+        let k = ((n as f64 * frac).ceil() as usize).max(1);
+        vals[n - k..].iter().sum::<f64>() / total
+    };
+
+    SensitivityReport {
+        gini,
+        log_kurtosis,
+        top1pct_mass: top(0.01),
+        top10pct_mass: top(0.10),
+        map,
+    }
+}
+
+/// Simulated-quantization sensitivity for a whole matrix family: quantize
+/// W per `variant`, compute the *dequantized* weights' map (what the
+/// deployed model actually multiplies by).
+pub fn dequantized_weights(w: &Matrix, variant: crate::config::Variant) -> Matrix {
+    use crate::config::Variant;
+    match variant {
+        Variant::Fp16 => w.clone(),
+        Variant::BitNet | Variant::PQuant => {
+            let b = crate::quant::binarize(&w.data);
+            Matrix::from_vec(w.rows, w.cols, crate::quant::dequant_binary(&b))
+        }
+        Variant::BitNet158 => {
+            let t = crate::quant::ternarize(&w.data);
+            Matrix::from_vec(
+                w.rows,
+                w.cols,
+                t.vals.iter().map(|&v| v as f32 * t.scale).collect(),
+            )
+        }
+    }
+}
+
+/// ASCII heatmap of a (downsampled) sensitivity map — the Fig 2 / Fig 5a
+/// rendering for a terminal. Darker glyph = higher log-sensitivity.
+pub fn ascii_heatmap(map: &Matrix, max_rows: usize, max_cols: usize) -> String {
+    const SHADES: &[u8] = b" .:-=+*#%@";
+    let pooled = map.max_pool_to(max_rows, max_cols);
+    let logs: Vec<f32> = pooled.data.iter().map(|&v| (v + 1e-30).ln()).collect();
+    let lo = logs.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = logs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-6);
+    let mut out = String::new();
+    for i in 0..pooled.rows {
+        for j in 0..pooled.cols {
+            let t = (logs[i * pooled.cols + j] - lo) / span;
+            let idx = ((t * (SHADES.len() - 1) as f32).round() as usize).min(SHADES.len() - 1);
+            out.push(SHADES[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_acts(m: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(m, k, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn uniform_weights_are_democratized() {
+        // all-equal |w| → low concentration
+        let w = Matrix::from_fn(32, 16, |i, j| if (i + j) % 2 == 0 { 0.5 } else { -0.5 });
+        let x = random_acts(128, 32, 1);
+        let rep = sensitivity_map(&w, &x, 1e-2).unwrap();
+        assert!(rep.gini < 0.45, "gini {} should be small", rep.gini);
+    }
+
+    #[test]
+    fn outlier_weights_concentrate_sensitivity() {
+        let mut rng = Rng::new(2);
+        let mut w = Matrix::from_fn(32, 16, |_, _| rng.normal() * 0.02);
+        // a few huge weights
+        for k in 0..5 {
+            *w.at_mut(k * 5 % 32, k * 3 % 16) = 4.0;
+        }
+        let x = random_acts(128, 32, 3);
+        let rep = sensitivity_map(&w, &x, 1e-2).unwrap();
+        assert!(rep.gini > 0.5, "gini {} should be large", rep.gini);
+        assert!(rep.top1pct_mass > 0.3, "top1% {} should dominate", rep.top1pct_mass);
+    }
+
+    #[test]
+    fn binarized_weights_lose_concentration() {
+        // The core paper observation (Fig 2): quantizing to ±λ flattens
+        // the sensitivity landscape.
+        let mut rng = Rng::new(4);
+        let mut w = Matrix::from_fn(48, 24, |_, _| rng.normal() * 0.05);
+        for k in 0..8 {
+            *w.at_mut((k * 7) % 48, (k * 5) % 24) = 3.0;
+        }
+        let x = random_acts(256, 48, 5);
+        let fp = sensitivity_map(&w, &x, 1e-2).unwrap();
+        let bin = dequantized_weights(&w, crate::config::Variant::BitNet);
+        let b = sensitivity_map(&bin, &x, 1e-2).unwrap();
+        assert!(
+            b.gini < fp.gini * 0.8,
+            "binarization should flatten sensitivity: fp {} vs 1-bit {}",
+            fp.gini,
+            b.gini
+        );
+        assert!(b.top1pct_mass < fp.top1pct_mass);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let m = Matrix::from_fn(64, 64, |i, j| ((i * j) % 17) as f32 + 0.1);
+        let art = ascii_heatmap(&m, 8, 16);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 8);
+        assert!(lines.iter().all(|l| l.len() == 16));
+    }
+
+    #[test]
+    fn gini_bounds() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let rep = summarize(m);
+        assert!(rep.gini.abs() < 0.01, "uniform gini ≈ 0, got {}", rep.gini);
+        let m = Matrix::from_vec(1, 100, {
+            let mut v = vec![0.0; 100];
+            v[0] = 1.0;
+            v
+        });
+        let rep = summarize(m);
+        assert!(rep.gini > 0.95, "delta gini ≈ 1, got {}", rep.gini);
+    }
+}

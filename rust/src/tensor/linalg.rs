@@ -1,0 +1,153 @@
+//! Cholesky factorization + SPD inverse — the numerical core of the OBS
+//! sensitivity metric (eq. 2 needs diag((XXᵀ + δI)⁻¹)).
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Fails if A is not (numerically) positive definite — callers add a
+/// damping ridge `δI` first, as GPTQ/SPQR do.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (got {sum:.3e})");
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·y = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (back substitution).
+fn solve_upper_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solve).
+pub fn cholesky_inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for col in 0..n {
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper_t(&l, &y);
+        for row in 0..n {
+            *inv.at_mut(row, col) = x[row];
+        }
+        e[col] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// `a + δ·mean(diag)·I` — the damping ridge GPTQ applies before inverting.
+pub fn damped(a: &Matrix, rel_delta: f32) -> Matrix {
+    let n = a.rows;
+    let mean_diag = (0..n).map(|i| a.at(i, i)).sum::<f32>() / n as f32;
+    let ridge = (rel_delta * mean_diag).max(1e-8);
+    let mut out = a.clone();
+    for i in 0..n {
+        *out.at_mut(i, i) += ridge;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in a.data.iter().zip(&rec.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = random_spd(12, 2);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-3,
+                    "({i},{j}) = {}", prod.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Matrix::identity(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_lower_known() {
+        let l = Matrix::from_vec(2, 2, vec![2.0, 0.0, 1.0, 3.0]);
+        let y = solve_lower(&l, &[4.0, 8.0]);
+        assert!((y[0] - 2.0).abs() < 1e-6 && (y[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn damping_increases_diagonal() {
+        let a = random_spd(4, 3);
+        let d = damped(&a, 0.01);
+        for i in 0..4 {
+            assert!(d.at(i, i) > a.at(i, i));
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Dense f32 matrix substrate: storage, views, matmul, reductions, and the
+//! Cholesky-based inverse the OBS sensitivity analysis needs (eq. 2).
+
+pub mod linalg;
+
+pub use linalg::{cholesky, cholesky_inverse, solve_lower};
+
+/// Row-major dense f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Naive triple-loop matmul (the sensitivity path only touches
+    /// D_model-sized matrices; the serving hot path uses `gemm::*`).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// X·Xᵀ/n accumulated from calibration rows — the (scaled) Hessian of
+    /// the layer-wise reconstruction problem (sec 2.3).
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * n..(i + 1) * n];
+                for (gj, xj) in grow.iter_mut().zip(row) {
+                    *gj += xi * xj;
+                }
+            }
+        }
+        let scale = 1.0 / self.rows.max(1) as f32;
+        for v in &mut g.data {
+            *v *= scale;
+        }
+        g
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        self.data.iter().sum::<f32>() / self.data.len().max(1) as f32
+    }
+
+    pub fn abs_mean(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len().max(1) as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Max-pool downsample to at most (max_r, max_c) — the visualization
+    /// transform used for the paper's Fig 2 heatmaps.
+    pub fn max_pool_to(&self, max_r: usize, max_c: usize) -> Matrix {
+        let pr = self.rows.div_ceil(max_r).max(1);
+        let pc = self.cols.div_ceil(max_c).max(1);
+        let out_r = self.rows.div_ceil(pr);
+        let out_c = self.cols.div_ceil(pc);
+        let mut out = Matrix::zeros(out_r, out_c);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.at(i, j);
+                let o = out.at_mut(i / pr, j / pc);
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let i = Matrix::identity(3);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_fn(3, 5, |i, j| (i * 7 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let x = Matrix::from_fn(10, 4, |i, j| ((i + 1) * (j + 2)) as f32 * 0.1);
+        let g = x.gram();
+        for i in 0..4 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..4 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn max_pool_shrinks_and_keeps_max() {
+        let a = Matrix::from_fn(100, 60, |i, j| (i + j) as f32);
+        let p = a.max_pool_to(10, 6);
+        assert!(p.rows <= 10 && p.cols <= 6);
+        assert_eq!(p.at(p.rows - 1, p.cols - 1), a.at(99, 59));
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Matrix::from_vec(1, 4, vec![-2.0, 1.0, 0.0, 1.0]);
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.abs_mean(), 1.0);
+        assert_eq!(a.max_abs(), 2.0);
+        assert!((a.frobenius_norm() - (6.0f32).sqrt()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,248 @@
+//! Byte-level BPE tokenizer (paper Appendix B: "BPE tokenizer with a
+//! vocabulary size of 32K" — scaled here to the config's vocab).
+//!
+//! Training: start from the 256 byte tokens, repeatedly merge the most
+//! frequent adjacent pair until `vocab_size` tokens exist.  Encoding:
+//! greedy lowest-rank merge application (the canonical BPE inference).
+//! Vocabularies persist as JSON next to checkpoints.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// A trained BPE vocabulary: token id ↔ byte sequence, plus merge ranks.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// token id → bytes. ids 0..256 are the raw bytes.
+    pub tokens: Vec<Vec<u8>>,
+    /// (left id, right id) → merged id, insertion order = rank.
+    pub merges: Vec<(u32, u32, u32)>,
+    merge_rank: HashMap<(u32, u32), (u32, u32)>, // pair → (rank, merged id)
+}
+
+impl Bpe {
+    /// Train on `text` until the vocabulary holds `vocab_size` tokens.
+    pub fn train(text: &str, vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 256, "vocab must include the byte alphabet");
+        let mut tokens: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+
+        // Work on word chunks (split on whitespace, keep a leading space
+        // marker) so merges never cross word boundaries — the standard
+        // GPT-2-style pre-tokenization, which keeps encode() fast.
+        let mut words: HashMap<Vec<u32>, usize> = HashMap::new();
+        for word in text.split_inclusive(char::is_whitespace) {
+            let ids: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+            if !ids.is_empty() {
+                *words.entry(ids).or_insert(0) += 1;
+            }
+        }
+
+        while tokens.len() < vocab_size {
+            // Count adjacent pairs across the word multiset.
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (word, &count) in &words {
+                for w in word.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += count;
+                }
+            }
+            // Deterministic argmax: highest count, ties broken by pair id.
+            let Some((&pair, &count)) = pair_counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing left worth merging
+            }
+            let new_id = tokens.len() as u32;
+            let mut merged_bytes = tokens[pair.0 as usize].clone();
+            merged_bytes.extend_from_slice(&tokens[pair.1 as usize]);
+            tokens.push(merged_bytes);
+            merges.push((pair.0, pair.1, new_id));
+
+            // Apply the merge to every word.
+            let mut next: HashMap<Vec<u32>, usize> = HashMap::with_capacity(words.len());
+            for (word, count) in words.drain() {
+                let merged = apply_merge(&word, pair, new_id);
+                *next.entry(merged).or_insert(0) += count;
+            }
+            words = next;
+        }
+
+        let mut bpe = Bpe { tokens, merges, merge_rank: HashMap::new() };
+        bpe.rebuild_rank();
+        bpe
+    }
+
+    fn rebuild_rank(&mut self) {
+        self.merge_rank = self
+            .merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b, id))| ((a, b), (rank as u32, id)))
+            .collect();
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Encode text to token ids (greedy lowest-rank merging per word).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 1);
+        for word in text.split_inclusive(char::is_whitespace) {
+            let mut ids: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+            loop {
+                // find the lowest-rank applicable merge
+                let mut best: Option<(u32, usize, u32)> = None; // (rank, pos, id)
+                for (pos, w) in ids.windows(2).enumerate() {
+                    if let Some(&(rank, id)) = self.merge_rank.get(&(w[0], w[1])) {
+                        if best.is_none() || rank < best.unwrap().0 {
+                            best = Some((rank, pos, id));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, pos, id)) => {
+                        ids.splice(pos..pos + 2, [id]);
+                    }
+                    None => break,
+                }
+            }
+            out.extend_from_slice(&ids);
+        }
+        out
+    }
+
+    /// Decode token ids back to text (lossy only on invalid UTF-8).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            bytes.extend_from_slice(&self.tokens[id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Persist as JSON (merges only — tokens are reconstructable).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("vocab_size", num(self.tokens.len() as f64)),
+            (
+                "merges",
+                arr(self.merges.iter().map(|&(a, b, id)| {
+                    arr([num(a as f64), num(b as f64), num(id as f64)])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Bpe> {
+        let vocab_size = j.get("vocab_size")?.as_usize()?;
+        let mut tokens: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+        for m in j.get("merges")?.as_arr()? {
+            let m = m.as_arr()?;
+            if m.len() != 3 {
+                bail!("bad merge entry");
+            }
+            let (a, b, id) =
+                (m[0].as_usize()? as u32, m[1].as_usize()? as u32, m[2].as_usize()? as u32);
+            if id as usize != tokens.len() {
+                bail!("merge ids out of order");
+            }
+            let mut bytes = tokens[a as usize].clone();
+            bytes.extend_from_slice(&tokens[b as usize]);
+            tokens.push(bytes);
+            merges.push((a, b, id));
+        }
+        if tokens.len() != vocab_size {
+            bail!("vocab size mismatch: {} vs {}", tokens.len(), vocab_size);
+        }
+        let mut bpe = Bpe { tokens, merges, merge_rank: HashMap::new() };
+        bpe.rebuild_rank();
+        Ok(bpe)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Bpe> {
+        let text = std::fs::read_to_string(path)?;
+        Bpe::from_json(&Json::parse(&text)?)
+    }
+}
+
+fn apply_merge(word: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(word.len());
+    let mut i = 0;
+    while i < word.len() {
+        if i + 1 < word.len() && word[i] == pair.0 && word[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(word[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the quick brown fox jumps over the lazy dog \
+        the quick brown fox jumps again and again the fox is quick ";
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        for text in [SAMPLE, "the fox", "unseen words zxqj", "a"] {
+            assert_eq!(bpe.decode(&bpe.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn compression_happens() {
+        let bpe = Bpe::train(SAMPLE, 320);
+        let ids = bpe.encode("the quick brown fox");
+        assert!(ids.len() < "the quick brown fox".len(), "no compression: {ids:?}");
+    }
+
+    #[test]
+    fn byte_fallback_for_unseen() {
+        let bpe = Bpe::train(SAMPLE, 280);
+        let ids = bpe.encode("€"); // multi-byte, unseen
+        assert_eq!(bpe.decode(&ids), "€");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        let j = bpe.to_json();
+        let loaded = Bpe::from_json(&j).unwrap();
+        assert_eq!(loaded.tokens, bpe.tokens);
+        assert_eq!(loaded.encode(SAMPLE), bpe.encode(SAMPLE));
+    }
+
+    #[test]
+    fn ids_below_vocab() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        for &id in &bpe.encode(SAMPLE) {
+            assert!((id as usize) < bpe.vocab_size());
+        }
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Bpe::train(SAMPLE, 300);
+        let b = Bpe::train(SAMPLE, 300);
+        assert_eq!(a.merges, b.merges);
+    }
+}

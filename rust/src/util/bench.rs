@@ -1,0 +1,164 @@
+//! Tiny criterion-style bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup, multiple timed samples, median/mean/stddev reporting and
+//! JSON output under `results/bench/`.  Used by every `[[bench]]` target
+//! (`harness = false`) and by the experiment harnesses that time kernels.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:48} {:>12} median {:>12} mean ±{:>10}",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mean()),
+            fmt_duration(self.stddev()),
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Benchmark runner: calibrates iteration count to ~`target_sample` per
+/// sample, takes `n_samples` samples after one warmup sample.
+pub struct Bencher {
+    pub n_samples: usize,
+    pub target_sample: Duration,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            n_samples: 15,
+            target_sample: Duration::from_millis(120),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            n_samples: 7,
+            target_sample: Duration::from_millis(40),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one unit of work and return a value
+    /// that is black-boxed to stop the optimizer deleting the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Calibrate: how many iterations fit the target sample time?
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target_sample / 4 || iters >= 1 << 24 {
+                let scale =
+                    (self.target_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9)).max(1.0);
+                iters = ((iters as f64 * scale) as u64).max(1);
+                break;
+            }
+            iters *= 8;
+        }
+        let mut samples = Vec::with_capacity(self.n_samples);
+        for _ in 0..self.n_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let stats = Stats { name: name.to_string(), samples, iters_per_sample: iters };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write all collected stats as JSON under results/bench/<file>.json.
+    pub fn write_json(&self, file: &str) {
+        use super::json::{arr, num, obj, s, Json};
+        std::fs::create_dir_all("results/bench").ok();
+        let entries: Vec<Json> = self
+            .results
+            .iter()
+            .map(|st| {
+                obj(vec![
+                    ("name", s(&st.name)),
+                    ("median_s", num(st.median())),
+                    ("mean_s", num(st.mean())),
+                    ("stddev_s", num(st.stddev())),
+                    ("iters_per_sample", num(st.iters_per_sample as f64)),
+                ])
+            })
+            .collect();
+        let path = format!("results/bench/{file}.json");
+        std::fs::write(&path, arr(entries).to_string_pretty()).ok();
+        println!("[bench] wrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            iters_per_sample: 1,
+        };
+        assert_eq!(s.median(), 2.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_duration(1.5e-9).contains("ns"));
+        assert!(fmt_duration(1.5e-5).contains("µs"));
+        assert!(fmt_duration(1.5e-2).contains("ms"));
+        assert!(fmt_duration(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline substrates: the environment has no crates.io access beyond the
+//! `xla` closure, so the small libraries a project like this would normally
+//! pull in are implemented here (DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;

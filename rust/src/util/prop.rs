@@ -1,0 +1,47 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it reports the failing case index and seed so the
+//! exact input can be reproduced deterministically.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs. Panics with the case seed on
+/// the first failure (re-run with that seed to reproduce).
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} (case_seed={case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check(0, 50, |r| r.below(100), |&x| {
+            if x < 100 { Ok(()) } else { Err(format!("{x} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        check(0, 50, |r| r.below(100), |&x| {
+            if x < 5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

@@ -1,0 +1,76 @@
+//! Scoped data-parallel helper (rayon is unavailable offline).
+//!
+//! `par_chunks_mut` splits a mutable slice into contiguous chunks and runs a
+//! worker per chunk on std::thread::scope — the only parallel pattern the
+//! GEMM hot paths need (disjoint output rows).
+
+/// Number of worker threads to use for data-parallel loops.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Split `out` into `n_chunks` near-equal contiguous chunks and call
+/// `f(chunk_index, start_offset, chunk)` for each in parallel.
+pub fn par_chunks_mut<T: Send, F>(out: &mut [T], n_chunks: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let n_chunks = n_chunks.clamp(1, n);
+    let chunk = n.div_ceil(n_chunks);
+    if n_chunks == 1 {
+        f(0, 0, out);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut start = 0usize;
+        let mut idx = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            scope.spawn(move || fref(idx, start, head));
+            start += take;
+            idx += 1;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_elements() {
+        let mut v = vec![0usize; 103];
+        par_chunks_mut(&mut v, 7, |_, start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn single_chunk() {
+        let mut v = vec![0u8; 5];
+        par_chunks_mut(&mut v, 1, |idx, start, chunk| {
+            assert_eq!((idx, start, chunk.len()), (0, 0, 5));
+            chunk.fill(1);
+        });
+        assert_eq!(v, vec![1; 5]);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let mut v: Vec<u32> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _, _| panic!("should not run"));
+    }
+}

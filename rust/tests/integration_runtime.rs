@@ -1,0 +1,88 @@
+//! Integration: load real artifacts, execute train/fwd through PJRT, and
+//! verify numerics against the python-recorded golden trajectory.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) when the
+//! artifacts directory is missing so `cargo test` still passes pre-build.
+
+use pquant::runtime::{load_artifact, Runtime, TrainState};
+
+fn have_artifacts(name: &str) -> bool {
+    let ok = pquant::runtime::artifacts_root().join(name).join("manifest.json").exists();
+    if !ok {
+        eprintln!("[skip] artifacts/{name} missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn golden_loss_trajectory_matches_python() {
+    if !have_artifacts("nano-pquant") {
+        return;
+    }
+    let art = load_artifact("nano-pquant").unwrap();
+    let golden = art.golden().unwrap().expect("nano configs record golden.json");
+    let rt = Runtime::cpu().unwrap();
+    let step = rt.compile(&art, "train_step").unwrap();
+    let mut state = TrainState::initial(&art).unwrap();
+    for (i, &want) in golden.losses.iter().enumerate() {
+        let got = state.step(&step, &golden.tokens, golden.lr, golden.wd).unwrap();
+        let rel = (got - want).abs() / want.abs().max(1e-6);
+        assert!(rel < 2e-3, "step {i}: rust loss {got} vs python {want} (rel {rel:.2e})");
+    }
+}
+
+#[test]
+fn forward_runs_and_is_finite() {
+    if !have_artifacts("nano-pquant") {
+        return;
+    }
+    let art = load_artifact("nano-pquant").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let fwd = rt.compile(&art, "fwd").unwrap();
+    let state = TrainState::initial(&art).unwrap();
+    let seq = art.manifest.seq_len;
+    let tokens: Vec<i32> = (0..seq as i32).map(|i| i % art.manifest.config.vocab as i32).collect();
+    let (logits, ffn_input) = state.forward(&fwd, &tokens).unwrap();
+    assert_eq!(logits.len(), seq * art.manifest.config.vocab);
+    assert_eq!(ffn_input.len(), seq * art.manifest.config.d_model);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert!(ffn_input.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_state() {
+    if !have_artifacts("nano-pquant") {
+        return;
+    }
+    let art = load_artifact("nano-pquant").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let step = rt.compile(&art, "train_step").unwrap();
+    let mut state = TrainState::initial(&art).unwrap();
+    let golden = art.golden().unwrap().unwrap();
+    state.step(&step, &golden.tokens, 1e-3, 0.1).unwrap();
+
+    let path = format!("/tmp/pquant_ckpt_{}.npz", std::process::id());
+    state.save_checkpoint(&art, &path).unwrap();
+    let mut restored = TrainState::load_checkpoint(&art, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(restored.step, state.step);
+
+    // Continuing from the restored state must match continuing in place.
+    let a = state.step(&step, &golden.tokens, 1e-3, 0.1).unwrap();
+    let b = restored.step(&step, &golden.tokens, 1e-3, 0.1).unwrap();
+    assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+}
+
+#[test]
+fn param_by_name_finds_feature_scaling() {
+    if !have_artifacts("nano-pquant") {
+        return;
+    }
+    let art = load_artifact("nano-pquant").unwrap();
+    let state = TrainState::initial(&art).unwrap();
+    let (shape, alpha) = state.param_by_name(&art, "layers.0.alpha").unwrap();
+    assert!(shape.is_empty());
+    assert_eq!(alpha, vec![art.manifest.config.alpha_init]);
+    let (_, beta) = state.param_by_name(&art, "layers.0.beta").unwrap();
+    assert_eq!(beta, vec![art.manifest.config.beta_init]);
+}

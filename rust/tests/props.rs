@@ -1,0 +1,196 @@
+//! Cross-module property tests (the offline proptest substitute — see
+//! util::prop): coordinator, quant, gemm and tokenizer invariants.
+
+use pquant::coordinator::TwoPhaseSchedule;
+use pquant::gemm;
+use pquant::quant;
+use pquant::tokenizer::Bpe;
+use pquant::util::prop::check;
+use pquant::util::rng::Rng;
+
+#[test]
+fn schedule_lr_always_positive_and_bounded() {
+    check(1, 100, |r: &mut Rng| {
+        let total = 10 + r.below(5000) as u64;
+        let peak = r.range_f32(1e-5, 1e-1);
+        (total, peak)
+    }, |&(total, peak)| {
+        let s = TwoPhaseSchedule::paper(total, peak);
+        for step in 1..=total {
+            let lr = s.lr(step);
+            if !(lr > 0.0 && lr <= peak * 1.0001) {
+                return Err(format!("lr {lr} out of (0, {peak}] at step {step}/{total}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedule_wd_is_two_valued() {
+    check(2, 50, |r: &mut Rng| 10 + r.below(2000) as u64, |&total| {
+        let s = TwoPhaseSchedule::paper(total, 1e-3);
+        for step in 1..=total {
+            let wd = s.wd(step);
+            if wd != 0.1 && wd != 0.0 {
+                return Err(format!("wd {wd} not in {{0.1, 0}}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn binarize_dequant_preserves_sign_of_centered() {
+    check(3, 60, |r: &mut Rng| {
+        let n = 1 + r.below(500);
+        r.normal_vec(n)
+    }, |w| {
+        let b = quant::binarize(w);
+        let deq = quant::dequant_binary(&b);
+        for (orig, dq) in w.iter().zip(&deq) {
+            let centered = orig - b.mu;
+            if centered >= 0.0 && *dq < 0.0 || centered < 0.0 && *dq > 0.0 {
+                return Err(format!("sign flip: {centered} vs {dq}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ternarize_error_never_worse_than_half_scale_per_element() {
+    check(4, 60, |r: &mut Rng| {
+        let n = 1 + r.below(300);
+        r.normal_vec(n)
+    }, |w| {
+        let t = quant::ternarize(w);
+        for (orig, &q) in w.iter().zip(&t.vals) {
+            let deq = q as f32 * t.scale;
+            // |w| <= 1.5*scale ⇒ error <= 0.5*scale; beyond that the clip
+            // error grows with |w| — check the piecewise bound.
+            let bound = if orig.abs() <= 1.5 * t.scale {
+                0.5 * t.scale + 1e-5
+            } else {
+                orig.abs() - t.scale + 1e-5
+            };
+            if (orig - deq).abs() > bound {
+                return Err(format!("|{orig} - {deq}| > {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lut_gemv_equals_dense_signs_for_all_shapes() {
+    check(5, 40, |r: &mut Rng| {
+        let k = 1 + r.below(130);
+        let n = 1 + r.below(30);
+        let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+        let x: Vec<i8> = (0..k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        (k, n, signs, x)
+    }, |(k, n, signs, x)| {
+        let packed = quant::pack_signs(signs, *k, *n);
+        let luts = gemm::build_luts(x, *k);
+        let got = gemm::lut_gemv(&luts, &packed);
+        for j in 0..*n {
+            let want: i32 = (0..*k)
+                .map(|i| if signs[i * n + j] { x[i] as i32 } else { -(x[i] as i32) })
+                .sum();
+            if got[j] != want {
+                return Err(format!("col {j}: {} != {want}", got[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bpe_roundtrips_arbitrary_ascii() {
+    let corpus = pquant::data::Corpus::new(1).generate(60_000);
+    let bpe = Bpe::train(&corpus[..40_000], 400);
+    check(6, 40, |r: &mut Rng| {
+        let len = 1 + r.below(80);
+        (0..len)
+            .map(|_| (32 + r.below(95)) as u8 as char)
+            .collect::<String>()
+    }, |text| {
+        let ids = bpe.encode(text);
+        let decoded = bpe.decode(&ids);
+        if decoded == *text {
+            Ok(())
+        } else {
+            Err(format!("{text:?} → {decoded:?}"))
+        }
+    });
+}
+
+#[test]
+fn quantize_i8_rows_bounds_and_scale() {
+    check(7, 50, |r: &mut Rng| {
+        let rows = 1 + r.below(8);
+        let cols = 1 + r.below(200);
+        (rows, cols, r.normal_vec(rows * cols))
+    }, |(rows, cols, x)| {
+        let (q, gammas) = quant::quantize_i8_rows(x, *rows, *cols);
+        if gammas.iter().any(|g| !g.is_finite() || *g <= 0.0) {
+            return Err("non-finite gamma".into());
+        }
+        if q.iter().any(|&v| v < -127 || v > 127) {
+            return Err("q8 out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn footprint_traffic_never_exceeds_storage() {
+    let configs = pquant::config::paper_configs();
+    check(8, 40, |r: &mut Rng| {
+        let base = configs[r.below(configs.len())].clone();
+        let n = [1, 2, 4, 8][r.below(4)];
+        pquant::config::paper_pquant_n(&base, n)
+    }, |cfg| {
+        let f = pquant::memory::footprint(cfg);
+        if f.traffic() > f.storage() {
+            return Err(format!("traffic {} > storage {}", f.traffic(), f.storage()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_generation_tokens_always_in_vocab() {
+    check(9, 8, |r: &mut Rng| {
+        let variant = [
+            pquant::config::Variant::Fp16,
+            pquant::config::Variant::BitNet,
+            pquant::config::Variant::BitNet158,
+            pquant::config::Variant::PQuant,
+        ][r.below(4)];
+        (variant, r.next_u64())
+    }, |&(variant, seed)| {
+        let cfg = pquant::config::ModelConfig {
+            name: "prop".into(),
+            variant,
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 96,
+            r: if variant == pquant::config::Variant::PQuant { 16 } else { 0 },
+            n_experts: if variant == pquant::config::Variant::PQuant { 2 } else { 1 },
+            seq_len: 16,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        };
+        let mut m = pquant::infer::PackedModel::random(&cfg, seed);
+        let out = m.generate(&[1, 2, 3], 4);
+        if out.iter().all(|&t| (t as usize) < 64) {
+            Ok(())
+        } else {
+            Err(format!("tokens out of vocab: {out:?}"))
+        }
+    });
+}
