@@ -1,19 +1,24 @@
-//! Edge-serving demo (paper Appendix A + §4.5): batched request serving on
-//! the packed rust engines, comparing pQuant against the FP16 and
-//! BitNet1.58 baselines at identical geometry.
+//! Edge-serving demo (paper Appendix A + §4.5): the full deployment path —
+//! pack a model offline, export it as a `.pqm` artifact, load it back
+//! through the multi-model [`ModelRegistry`], and serve batched requests —
+//! comparing pQuant against the FP16 and BitNet1.58 baselines at identical
+//! geometry, then hot-swapping a variant in place.
 //!
 //!     cargo run --release --example edge_serving
 
-use anyhow::Result;
+use std::time::{Duration, Instant};
 
+use anyhow::{ensure, Result};
+
+use pquant::artifact;
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::PackedModel;
 use pquant::report::Table;
-use pquant::serve::{load_test, ServeOptions};
+use pquant::serve::{load_test, ModelRegistry, ServeOptions};
 
 fn geometry(variant: Variant, n_experts: usize) -> ModelConfig {
     ModelConfig {
-        name: format!("edge-{}", variant.name()),
+        name: format!("edge-{}-n{n_experts}", variant.name()),
         variant,
         vocab: 1024,
         d_model: 256,
@@ -34,9 +39,12 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
     let opts = ServeOptions { max_batch: 4, workers: 1 };
+    let pqm_dir = std::path::Path::new("results/pqm");
+    let registry = ModelRegistry::new();
+
     let mut t = Table::new(
-        "Edge serving at matched geometry (16 new tokens/request)",
-        &["engine", "resident MiB", "tokens/s", "p50 ms", "p95 ms", "vs fp16"],
+        "Edge serving from .pqm artifacts at matched geometry (16 new tokens/request)",
+        &["engine", ".pqm MiB", "load ms", "tokens/s", "p50 ms", "p95 ms", "vs fp16"],
     );
     let mut fp16_tps = 0.0;
     for (label, variant, n) in [
@@ -45,9 +53,30 @@ fn main() -> Result<()> {
         ("pquant n1", Variant::PQuant, 1),
         ("pquant n8", Variant::PQuant, 8),
     ] {
-        let model = PackedModel::random(&geometry(variant, n), 3);
-        let mib = model.storage_bytes() as f64 / (1024.0 * 1024.0);
-        let (responses, _, tps) = load_test(vec![model], n_requests, 8, 16, &opts);
+        // Offline pack (stand-in for train → from_state) and export.
+        let mut source = PackedModel::random(&geometry(variant, n), 3);
+        let path = pqm_dir.join(format!("{}.pqm", source.cfg.name));
+        let file_bytes = artifact::save_pqm(&source, None, &path)?;
+
+        // Load through the registry — the restartable serving path.
+        let t0 = Instant::now();
+        registry.load_pqm(label, &path)?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // The loaded model must generate exactly the in-memory tokens.
+        let (lease, mut reps) = registry.replicas(label, 1).expect("just registered");
+        let mut replica = reps.pop().unwrap();
+        ensure!(
+            replica.generate(&[5, 9, 2], 12) == source.generate(&[5, 9, 2], 12),
+            "{label}: .pqm round-trip changed generation output"
+        );
+        drop(lease);
+
+        // Serve under a held lease so a concurrent hot-swap would observe
+        // these workers through the drain barrier.
+        let (lease, models) = registry.replicas(label, opts.workers).unwrap();
+        let (responses, _, tps) = load_test(models, n_requests, 8, 16, &opts);
+        drop(lease);
         let mut lats: Vec<f64> = responses
             .iter()
             .map(|r| (r.queue_wait + r.service_time).as_secs_f64() * 1e3)
@@ -58,7 +87,8 @@ fn main() -> Result<()> {
         }
         t.row(vec![
             label.into(),
-            format!("{mib:.1}"),
+            format!("{:.1}", file_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{load_ms:.1}"),
             format!("{tps:.1}"),
             format!("{:.1}", lats[lats.len() / 2]),
             format!("{:.1}", lats[(lats.len() * 95 / 100).min(lats.len() - 1)]),
@@ -66,6 +96,28 @@ fn main() -> Result<()> {
         ]);
     }
     t.print();
-    println!("paper claims: >2x tokens/s vs FP16 (§1), traffic constant in N (§4.5)");
+
+    // Warm hot-swap: roll "pquant n1" forward to the n8 artifact without
+    // restarting the process — load new .pqm, install, drain the old
+    // generation's leases.
+    let n8_path = pqm_dir.join(format!("{}.pqm", geometry(Variant::PQuant, 8).name));
+    let report = registry.hot_swap_pqm("pquant n1", &n8_path, Duration::from_secs(2))?;
+    println!(
+        "\nhot-swapped 'pquant n1' → n8 artifact: generation {} (drained: {}, {:.1} ms)",
+        report.generation,
+        report.drained,
+        report.waited.as_secs_f64() * 1e3
+    );
+    for m in registry.info() {
+        println!(
+            "  {:12} gen {} {:10} {:7.2}M params {:7.1} MiB resident",
+            m.name,
+            m.generation,
+            m.variant.name(),
+            m.params as f64 / 1e6,
+            m.storage_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    println!("\npaper claims: >2x tokens/s vs FP16 (§1), traffic constant in N (§4.5)");
     Ok(())
 }

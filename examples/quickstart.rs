@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use pquant::coordinator::{TrainOptions, Trainer};
-use pquant::data::cached_dataset;
+use pquant::data::default_cached_dataset;
 use pquant::infer::PackedModel;
 use pquant::runtime::{load_artifact, Runtime};
 
@@ -40,8 +40,7 @@ fn main() -> Result<()> {
     );
 
     // 1. data: synthetic grammar corpus + BPE (cached across runs)
-    let (dataset, bpe) =
-        cached_dataset("results/cache/data", 0xC0FFEE, 4 * 1024 * 1024, m.config.vocab)?;
+    let (dataset, bpe) = default_cached_dataset(m.config.vocab)?;
     println!(
         "data: {} train tokens, {} valid tokens, vocab {}\n",
         dataset.train.len(),

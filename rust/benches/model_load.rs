@@ -1,0 +1,72 @@
+//! `.pqm` artifact bench: save/load wall time and bytes/s for each
+//! [`Variant`] at the same geometry as the serving bench, so artifact
+//! encode/decode cost can be read next to serving throughput
+//! (results/bench/serving.json vs results/bench/model_load.json).
+
+use pquant::artifact;
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::util::bench::Bencher;
+
+fn cfg(variant: Variant, n: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("bench-{}-n{n}", variant.name()),
+        variant,
+        vocab: 512,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 704,
+        r: if variant == Variant::PQuant { 32 } else { 0 },
+        n_experts: if variant == Variant::PQuant { n } else { 1 },
+        seq_len: 64,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn mb_per_s(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0) / secs.max(1e-12)
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    for (label, variant, n) in [
+        ("fp16", Variant::Fp16, 1),
+        ("bitnet", Variant::BitNet, 1),
+        ("bitnet1.58", Variant::BitNet158, 1),
+        ("pquant-n1", Variant::PQuant, 1),
+        ("pquant-n8", Variant::PQuant, 8),
+    ] {
+        let model = PackedModel::random(&cfg(variant, n), 7);
+        let bytes = artifact::save_pqm_bytes(&model, None);
+        let size = bytes.len();
+
+        let save_s = b
+            .bench(&format!("pqm save {label} ({:.1} MiB)", size as f64 / (1024.0 * 1024.0)), || {
+                artifact::save_pqm_bytes(&model, None)
+            })
+            .median();
+        let load_s = b
+            .bench(&format!("pqm load {label}"), || {
+                artifact::load_pqm_bytes(&bytes).expect("bench artifact is valid")
+            })
+            .median();
+        println!(
+            "  {label}: save {:.0} MiB/s, load {:.0} MiB/s",
+            mb_per_s(size, save_s),
+            mb_per_s(size, load_s)
+        );
+    }
+
+    // Disk round-trip (write + read + CRC + decode) for the pQuant variant.
+    let model = PackedModel::random(&cfg(Variant::PQuant, 8), 11);
+    let path = std::env::temp_dir().join(format!("pqm_bench_{}.pqm", std::process::id()));
+    b.bench("pqm disk round-trip pquant-n8", || {
+        artifact::save_pqm(&model, None, &path).expect("save");
+        artifact::load_pqm(&path).expect("load")
+    });
+    std::fs::remove_file(&path).ok();
+
+    b.write_json("model_load");
+}

@@ -1,0 +1,489 @@
+//! Byte-level codecs for the `.pqm` sections: a bounds-checked cursor pair
+//! plus encoders/decoders for [`ModelConfig`], [`QLinear`] and
+//! [`PackedBlock`].
+//!
+//! Everything is little-endian and self-describing enough to be validated
+//! without trusting the payload: reads go through [`ByteReader::take`]
+//! (which fails on truncation instead of panicking) and element counts are
+//! checked-multiplied before any allocation, so a corrupted or adversarial
+//! section errors out instead of OOM-ing or slicing out of bounds.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::infer::block::{DecoupledFfn, Ffn, PackedBlock};
+use crate::infer::QLinear;
+use crate::quant::{PackedBits, PackedTernary};
+
+// ---------------------------------------------------------------- writer
+
+/// Append-only little-endian byte sink.
+pub(crate) struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Raw f32 slice, no length prefix (count comes from context).
+    pub fn put_f32_raw(&mut self, xs: &[f32]) {
+        self.buf.reserve(xs.len() * 4);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// u32 length prefix + raw f32 data.
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u32(xs.len() as u32);
+        self.put_f32_raw(xs);
+    }
+
+    pub fn put_i8_raw(&mut self, xs: &[i8]) {
+        self.buf.reserve(xs.len());
+        for &x in xs {
+            self.buf.push(x as u8);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked little-endian cursor over one section payload.
+pub(crate) struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.bytes.len() - self.pos {
+            bail!(
+                "truncated section: wanted {n} bytes at offset {}, {} available",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32_raw(&mut self, count: usize) -> Result<Vec<f32>> {
+        let raw = self.take(checked_bytes(count, 4)?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// u32 length prefix + raw f32 data (pair of [`ByteWriter::put_f32s`]).
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let count = self.u32()? as usize;
+        self.f32_raw(count)
+    }
+
+    pub fn i8_raw(&mut self, count: usize) -> Result<Vec<i8>> {
+        Ok(self.take(count)?.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Error if the payload has trailing bytes (format drift guard).
+    pub fn finish(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            bail!(
+                "section has {} trailing bytes past offset {}",
+                self.bytes.len() - self.pos,
+                self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// `count * size` with overflow/absurdity guards — runs *before* any
+/// allocation so corrupt headers cannot trigger huge reserves.
+fn checked_bytes(count: usize, size: usize) -> Result<usize> {
+    match count.checked_mul(size) {
+        Some(n) => Ok(n),
+        None => bail!("element count {count} overflows"),
+    }
+}
+
+// ---------------------------------------------------------------- config
+
+fn variant_code(v: Variant) -> u8 {
+    match v {
+        Variant::Fp16 => 0,
+        Variant::BitNet => 1,
+        Variant::BitNet158 => 2,
+        Variant::PQuant => 3,
+    }
+}
+
+fn variant_from_code(c: u8) -> Result<Variant> {
+    Ok(match c {
+        0 => Variant::Fp16,
+        1 => Variant::BitNet,
+        2 => Variant::BitNet158,
+        3 => Variant::PQuant,
+        _ => bail!("unknown variant code {c}"),
+    })
+}
+
+pub(crate) fn encode_config(cfg: &ModelConfig) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(cfg.name.len() as u32);
+    w.put_bytes(cfg.name.as_bytes());
+    w.put_u8(variant_code(cfg.variant));
+    for dim in [
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.r,
+        cfg.n_experts,
+        cfg.seq_len,
+    ] {
+        w.put_u32(dim as u32);
+    }
+    w.put_f32(cfg.alpha_init);
+    w.put_f32(cfg.beta_init);
+    w.buf
+}
+
+pub(crate) fn decode_config(payload: &[u8]) -> Result<ModelConfig> {
+    let mut r = ByteReader::new(payload);
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+    let variant = variant_from_code(r.u8()?)?;
+    let mut dims = [0usize; 8];
+    for d in dims.iter_mut() {
+        *d = r.u32()? as usize;
+    }
+    let cfg = ModelConfig {
+        name,
+        variant,
+        vocab: dims[0],
+        d_model: dims[1],
+        n_layers: dims[2],
+        n_heads: dims[3],
+        d_ff: dims[4],
+        r: dims[5],
+        n_experts: dims[6],
+        seq_len: dims[7],
+        alpha_init: r.f32()?,
+        beta_init: r.f32()?,
+    };
+    r.finish()?;
+    if cfg.d_model == 0 || cfg.vocab == 0 || cfg.n_layers == 0 || cfg.n_heads == 0 {
+        bail!("config section has zero-sized geometry");
+    }
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------- linears
+
+const QL_F32: u8 = 0;
+const QL_ONE_BIT: u8 = 1;
+const QL_TERNARY: u8 = 2;
+const QL_INT8: u8 = 3;
+
+pub(crate) fn encode_qlinear(w: &mut ByteWriter, q: &QLinear) {
+    match q {
+        QLinear::F32 { w: data, k, n } => {
+            w.put_u8(QL_F32);
+            w.put_u32(*k as u32);
+            w.put_u32(*n as u32);
+            w.put_f32_raw(data);
+        }
+        QLinear::OneBit { w: p, lambda } => {
+            w.put_u8(QL_ONE_BIT);
+            w.put_u32(p.k as u32);
+            w.put_u32(p.n as u32);
+            w.put_f32(*lambda);
+            w.put_bytes(&p.bytes);
+        }
+        QLinear::Ternary { w: p, scale } => {
+            w.put_u8(QL_TERNARY);
+            w.put_u32(p.k as u32);
+            w.put_u32(p.n as u32);
+            w.put_f32(*scale);
+            w.put_bytes(&p.bytes);
+        }
+        QLinear::Int8 { w: data, gamma_w, k, n } => {
+            w.put_u8(QL_INT8);
+            w.put_u32(*k as u32);
+            w.put_u32(*n as u32);
+            w.put_f32(*gamma_w);
+            w.put_i8_raw(data);
+        }
+    }
+}
+
+pub(crate) fn decode_qlinear(r: &mut ByteReader) -> Result<QLinear> {
+    let tag = r.u8()?;
+    let k = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if k == 0 || n == 0 {
+        bail!("linear with zero dimension ({k}x{n})");
+    }
+    Ok(match tag {
+        QL_F32 => QLinear::F32 { w: r.f32_raw(checked_bytes(k, n)?)?, k, n },
+        QL_ONE_BIT => {
+            let lambda = r.f32()?;
+            let bytes_per_col = k.div_ceil(8);
+            let bytes = r.take(checked_bytes(bytes_per_col, n)?)?.to_vec();
+            QLinear::OneBit { w: PackedBits { k, n, bytes, bytes_per_col }, lambda }
+        }
+        QL_TERNARY => {
+            let scale = r.f32()?;
+            let bytes_per_col = k.div_ceil(4);
+            let bytes = r.take(checked_bytes(bytes_per_col, n)?)?.to_vec();
+            QLinear::Ternary { w: PackedTernary { k, n, bytes, bytes_per_col }, scale }
+        }
+        QL_INT8 => {
+            let gamma_w = r.f32()?;
+            QLinear::Int8 { w: r.i8_raw(checked_bytes(k, n)?)?, gamma_w, k, n }
+        }
+        t => bail!("unknown linear tag {t}"),
+    })
+}
+
+// ---------------------------------------------------------------- blocks
+
+const FFN_DENSE: u8 = 0;
+const FFN_DECOUPLED: u8 = 1;
+
+pub(crate) fn encode_block(b: &PackedBlock) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(b.n_heads as u32);
+    w.put_f32s(&b.attn_norm);
+    w.put_f32s(&b.ffn_norm);
+    for q in [&b.wq, &b.wk, &b.wv, &b.wo] {
+        encode_qlinear(&mut w, q);
+    }
+    match &b.ffn {
+        Ffn::Dense { up, down } => {
+            w.put_u8(FFN_DENSE);
+            encode_qlinear(&mut w, up);
+            encode_qlinear(&mut w, down);
+        }
+        Ffn::Decoupled(dec) => {
+            w.put_u8(FFN_DECOUPLED);
+            encode_qlinear(&mut w, &dec.up_1bit);
+            encode_qlinear(&mut w, &dec.down_1bit);
+            w.put_u32(dec.experts.len() as u32);
+            for (up, down) in &dec.experts {
+                encode_qlinear(&mut w, up);
+                encode_qlinear(&mut w, down);
+            }
+            w.put_f32s(&dec.router);
+            w.put_f32(dec.alpha);
+            w.put_f32(dec.beta);
+        }
+    }
+    w.buf
+}
+
+pub(crate) fn decode_block(payload: &[u8], cfg: &ModelConfig) -> Result<PackedBlock> {
+    let d = cfg.d_model;
+    let mut r = ByteReader::new(payload);
+    let n_heads = r.u32()? as usize;
+    if n_heads != cfg.n_heads {
+        bail!("block has {n_heads} heads, config says {}", cfg.n_heads);
+    }
+    let attn_norm = r.f32s()?;
+    let ffn_norm = r.f32s()?;
+    if attn_norm.len() != d || ffn_norm.len() != d {
+        bail!(
+            "block norms have {}/{} gains, config d_model is {d}",
+            attn_norm.len(),
+            ffn_norm.len()
+        );
+    }
+    let mut proj = Vec::with_capacity(4);
+    for name in ["wq", "wk", "wv", "wo"] {
+        let q = decode_qlinear(&mut r)?;
+        if q.shape() != (d, d) {
+            bail!("{name} has shape {:?}, want ({d}, {d})", q.shape());
+        }
+        proj.push(q);
+    }
+    let mut proj = proj.into_iter();
+    let (wq, wk, wv, wo) = (
+        proj.next().unwrap(),
+        proj.next().unwrap(),
+        proj.next().unwrap(),
+        proj.next().unwrap(),
+    );
+    let ffn = match r.u8()? {
+        FFN_DENSE => {
+            let up = decode_qlinear(&mut r)?;
+            let down = decode_qlinear(&mut r)?;
+            if up.shape() != (d, cfg.d_ff) || down.shape() != (cfg.d_ff, d) {
+                bail!(
+                    "dense FFN shapes {:?}/{:?} do not match d_ff {}",
+                    up.shape(),
+                    down.shape(),
+                    cfg.d_ff
+                );
+            }
+            Ffn::Dense { up, down }
+        }
+        FFN_DECOUPLED => {
+            let up_1bit = decode_qlinear(&mut r)?;
+            let down_1bit = decode_qlinear(&mut r)?;
+            let n1 = cfg.d_ff_1bit();
+            if up_1bit.shape() != (d, n1) || down_1bit.shape() != (n1, d) {
+                bail!(
+                    "1-bit branch shapes {:?}/{:?} do not match d_ff_1bit {n1}",
+                    up_1bit.shape(),
+                    down_1bit.shape()
+                );
+            }
+            let n_experts = r.u32()? as usize;
+            if n_experts == 0 || n_experts != cfg.n_experts.max(1) {
+                bail!("block has {n_experts} experts, config says {}", cfg.n_experts);
+            }
+            let mut experts = Vec::with_capacity(n_experts);
+            for e in 0..n_experts {
+                let up = decode_qlinear(&mut r)?;
+                let down = decode_qlinear(&mut r)?;
+                if up.shape() != (d, cfg.r) || down.shape() != (cfg.r, d) {
+                    bail!("expert {e} shapes {:?}/{:?} do not match r {}", up.shape(), down.shape(), cfg.r);
+                }
+                experts.push((up, down));
+            }
+            let router = r.f32s()?;
+            if router.len() != d * n_experts {
+                bail!("router has {} weights, want {}", router.len(), d * n_experts);
+            }
+            Ffn::Decoupled(DecoupledFfn {
+                up_1bit,
+                down_1bit,
+                experts,
+                router,
+                alpha: r.f32()?,
+                beta: r.f32()?,
+            })
+        }
+        t => bail!("unknown FFN tag {t}"),
+    };
+    r.finish()?;
+    Ok(PackedBlock {
+        attn_norm,
+        ffn_norm,
+        wq,
+        wk,
+        wv,
+        wo,
+        ffn,
+        n_heads,
+        timing: Default::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reader_rejects_truncation() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert!(r.take(2).is_ok());
+        let err = r.take(2).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_trailing_bytes() {
+        let mut r = ByteReader::new(&[0; 8]);
+        r.take(4).unwrap();
+        assert!(r.finish().is_err());
+        r.take(4).unwrap();
+        assert!(r.finish().is_ok());
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let cfg = ModelConfig {
+            name: "roundtrip".into(),
+            variant: Variant::PQuant,
+            vocab: 512,
+            d_model: 64,
+            n_layers: 3,
+            n_heads: 4,
+            d_ff: 176,
+            r: 16,
+            n_experts: 2,
+            seq_len: 32,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        };
+        assert_eq!(decode_config(&encode_config(&cfg)).unwrap(), cfg);
+    }
+
+    #[test]
+    fn qlinear_roundtrip_all_kinds() {
+        let mut rng = Rng::new(9);
+        let wf = rng.normal_vec(24 * 10);
+        for q in [
+            QLinear::f32(&wf, 24, 10),
+            QLinear::one_bit(&wf, 24, 10),
+            QLinear::ternary(&wf, 24, 10),
+            QLinear::int8(&wf, 24, 10),
+        ] {
+            let mut w = ByteWriter::new();
+            encode_qlinear(&mut w, &q);
+            let mut r = ByteReader::new(&w.buf);
+            let back = decode_qlinear(&mut r).unwrap();
+            r.finish().unwrap();
+            assert!(back == q, "mismatch after roundtrip");
+        }
+    }
+
+    #[test]
+    fn qlinear_rejects_bad_tag() {
+        let mut w = ByteWriter::new();
+        w.put_u8(9);
+        w.put_u32(4);
+        w.put_u32(4);
+        assert!(decode_qlinear(&mut ByteReader::new(&w.buf)).is_err());
+    }
+}

@@ -1,0 +1,472 @@
+//! Versioned binary `.pqm` packed-model artifacts (paper Appendix A: the
+//! offline quantize-and-pack step made shippable).
+//!
+//! A `.pqm` file serializes one complete [`PackedModel`] — config,
+//! embeddings, per-block packed 1-bit/ternary planes, INT8 expert weights,
+//! scales, router tensors — plus an optional BPE tokenizer, so `serve` and
+//! `eval` can restart from disk without a live `TrainState` or any JSON
+//! per-tensor parsing.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! [ 8] magic 0x89 "PQM" \r \n 0x1A \n    (PNG-style: catches text-mode mangling)
+//! [ 4] format version (u32)
+//! [ 4] section count (u32)
+//! [24] × N section table entries: kind u16, index u16, offset u64, len u64, crc32 u32
+//! [..] section payloads, concatenated in table order
+//! ```
+//!
+//! Loads are a single sequential read: parse the 16-byte header, walk the
+//! table, CRC-check every payload, then decode.  A truncated file, foreign
+//! magic, future version, or corrupted payload is rejected with a precise
+//! error instead of producing garbage weights.
+
+pub(crate) mod codec;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::infer::{PackedBlock, PackedModel};
+use crate::tokenizer::Bpe;
+use crate::util::json::Json;
+
+/// File magic: `0x89 "PQM" \r \n 0x1A \n`.
+pub const MAGIC: [u8; 8] = [0x89, b'P', b'Q', b'M', 0x0D, 0x0A, 0x1A, 0x0A];
+/// Current (and only) format version this build writes and reads.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_BYTES: usize = 16;
+const TABLE_ENTRY_BYTES: usize = 24;
+/// Sanity cap on the section count (a model has 4 + n_layers + 1 sections).
+const MAX_SECTIONS: usize = 65_536;
+
+/// Section kinds. `index` disambiguates repeated kinds (block layer id).
+pub mod kind {
+    pub const CONFIG: u16 = 1;
+    pub const EMBED: u16 = 2;
+    pub const LM_HEAD: u16 = 3;
+    pub const FINAL_NORM: u16 = 4;
+    pub const BLOCK: u16 = 5;
+    pub const TOKENIZER: u16 = 6;
+}
+
+/// Human name of a section kind (inspect output).
+pub fn kind_name(kind: u16) -> &'static str {
+    match kind {
+        kind::CONFIG => "config",
+        kind::EMBED => "embed",
+        kind::LM_HEAD => "lm_head",
+        kind::FINAL_NORM => "final_norm",
+        kind::BLOCK => "block",
+        kind::TOKENIZER => "tokenizer",
+        _ => "unknown",
+    }
+}
+
+/// One parsed section-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Section {
+    pub kind: u16,
+    pub index: u16,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+// ---------------------------------------------------------------- crc32
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------- save
+
+/// A model loaded from a `.pqm` artifact.
+pub struct PqmModel {
+    pub model: PackedModel,
+    pub tokenizer: Option<Bpe>,
+}
+
+/// Serialize a packed model (and optional tokenizer) to `.pqm` bytes.
+pub fn save_pqm_bytes(model: &PackedModel, tokenizer: Option<&Bpe>) -> Vec<u8> {
+    let mut payloads: Vec<(u16, u16, Vec<u8>)> = Vec::with_capacity(5 + model.blocks.len());
+    payloads.push((kind::CONFIG, 0, codec::encode_config(&model.cfg)));
+    payloads.push((kind::EMBED, 0, f32_payload(&model.embed)));
+    payloads.push((kind::LM_HEAD, 0, f32_payload(&model.lm_head)));
+    payloads.push((kind::FINAL_NORM, 0, f32_payload(&model.final_norm)));
+    for (l, block) in model.blocks.iter().enumerate() {
+        payloads.push((kind::BLOCK, l as u16, codec::encode_block(block)));
+    }
+    if let Some(bpe) = tokenizer {
+        payloads.push((kind::TOKENIZER, 0, bpe.to_json().to_string().into_bytes()));
+    }
+
+    let table_end = HEADER_BYTES + TABLE_ENTRY_BYTES * payloads.len();
+    let body: usize = payloads.iter().map(|(_, _, p)| p.len()).sum();
+    let mut out = Vec::with_capacity(table_end + body);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    let mut offset = table_end as u64;
+    for (sec_kind, index, payload) in &payloads {
+        out.extend_from_slice(&sec_kind.to_le_bytes());
+        out.extend_from_slice(&index.to_le_bytes());
+        out.extend_from_slice(&offset.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+        offset += payload.len() as u64;
+    }
+    for (_, _, payload) in &payloads {
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Write a `.pqm` artifact to disk; returns the file size in bytes.
+pub fn save_pqm(
+    model: &PackedModel,
+    tokenizer: Option<&Bpe>,
+    path: impl AsRef<Path>,
+) -> Result<u64> {
+    let path = path.as_ref();
+    let bytes = save_pqm_bytes(model, tokenizer);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {parent:?}"))?;
+        }
+    }
+    std::fs::write(path, &bytes).with_context(|| format!("writing {path:?}"))?;
+    Ok(bytes.len() as u64)
+}
+
+fn f32_payload(xs: &[f32]) -> Vec<u8> {
+    let mut w = codec::ByteWriter::new();
+    w.put_f32_raw(xs);
+    w.buf
+}
+
+// ---------------------------------------------------------------- load
+
+/// Parse + bounds-check the header and section table (no payload reads).
+fn parse_table(bytes: &[u8]) -> Result<Vec<Section>> {
+    if bytes.len() < HEADER_BYTES {
+        bail!("truncated .pqm: {} bytes, header needs {HEADER_BYTES}", bytes.len());
+    }
+    if bytes[..8] != MAGIC {
+        bail!("not a .pqm artifact (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!("unsupported .pqm format version {version} (this build reads {FORMAT_VERSION})");
+    }
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if count == 0 || count > MAX_SECTIONS {
+        bail!("implausible section count {count}");
+    }
+    let table_end = HEADER_BYTES + count * TABLE_ENTRY_BYTES;
+    if bytes.len() < table_end {
+        bail!(
+            "truncated .pqm: section table needs {table_end} bytes, file has {}",
+            bytes.len()
+        );
+    }
+    let mut sections = Vec::with_capacity(count);
+    for i in 0..count {
+        let e = &bytes[HEADER_BYTES + i * TABLE_ENTRY_BYTES..];
+        let s = Section {
+            kind: u16::from_le_bytes(e[0..2].try_into().unwrap()),
+            index: u16::from_le_bytes(e[2..4].try_into().unwrap()),
+            offset: u64::from_le_bytes(e[4..12].try_into().unwrap()),
+            len: u64::from_le_bytes(e[12..20].try_into().unwrap()),
+            crc: u32::from_le_bytes(e[20..24].try_into().unwrap()),
+        };
+        let end = s.offset.checked_add(s.len).unwrap_or(u64::MAX);
+        if s.offset < table_end as u64 || end > bytes.len() as u64 {
+            bail!(
+                "truncated .pqm: section {} [{}+{}] exceeds file size {}",
+                kind_name(s.kind),
+                s.offset,
+                s.len,
+                bytes.len()
+            );
+        }
+        sections.push(s);
+    }
+    Ok(sections)
+}
+
+fn payload<'a>(bytes: &'a [u8], s: &Section) -> &'a [u8] {
+    &bytes[s.offset as usize..(s.offset + s.len) as usize]
+}
+
+/// CRC-verify every section against its table entry.
+fn verify_crcs(bytes: &[u8], sections: &[Section]) -> Result<()> {
+    for s in sections {
+        let got = crc32(payload(bytes, s));
+        if got != s.crc {
+            bail!(
+                "section {}[{}] CRC mismatch: file says {:#010x}, payload hashes to {got:#010x} — artifact is corrupted",
+                kind_name(s.kind),
+                s.index,
+                s.crc
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Find exactly one section of `k` in the table.
+fn find_one(sections: &[Section], k: u16) -> Result<&Section> {
+    let mut found = None;
+    for s in sections {
+        if s.kind == k {
+            if found.is_some() {
+                bail!("duplicate {} section", kind_name(k));
+            }
+            found = Some(s);
+        }
+    }
+    found.ok_or_else(|| anyhow::anyhow!("missing {} section", kind_name(k)))
+}
+
+/// Decode a raw-f32 section of `k`, checking the element count.
+fn f32_section(bytes: &[u8], sections: &[Section], k: u16, want: usize) -> Result<Vec<f32>> {
+    let s = find_one(sections, k)?;
+    let mut r = codec::ByteReader::new(payload(bytes, s));
+    let xs = r.f32_raw((s.len / 4) as usize)?;
+    r.finish()?;
+    if xs.len() != want {
+        bail!("{} has {} elements, config wants {want}", kind_name(k), xs.len());
+    }
+    Ok(xs)
+}
+
+/// Deserialize a `.pqm` artifact from bytes, verifying every section CRC.
+pub fn load_pqm_bytes(bytes: &[u8]) -> Result<PqmModel> {
+    let sections = parse_table(bytes)?;
+    verify_crcs(bytes, &sections)?;
+
+    let cfg = codec::decode_config(payload(bytes, find_one(&sections, kind::CONFIG)?))?;
+    let d = cfg.d_model;
+
+    let embed = f32_section(bytes, &sections, kind::EMBED, cfg.vocab * d)?;
+    let lm_head = f32_section(bytes, &sections, kind::LM_HEAD, d * cfg.vocab)?;
+    let final_norm = f32_section(bytes, &sections, kind::FINAL_NORM, d)?;
+
+    let mut blocks: Vec<Option<PackedBlock>> = (0..cfg.n_layers).map(|_| None).collect();
+    for s in &sections {
+        if s.kind != kind::BLOCK {
+            continue;
+        }
+        let l = s.index as usize;
+        if l >= cfg.n_layers {
+            bail!("block section index {l} out of range (n_layers {})", cfg.n_layers);
+        }
+        if blocks[l].is_some() {
+            bail!("duplicate block section for layer {l}");
+        }
+        blocks[l] = Some(
+            codec::decode_block(payload(bytes, s), &cfg)
+                .with_context(|| format!("decoding block {l}"))?,
+        );
+    }
+    let blocks: Vec<PackedBlock> = blocks
+        .into_iter()
+        .enumerate()
+        .map(|(l, b)| b.ok_or_else(|| anyhow::anyhow!("missing block section for layer {l}")))
+        .collect::<Result<_>>()?;
+
+    let tokenizer = match sections.iter().find(|s| s.kind == kind::TOKENIZER) {
+        Some(s) => {
+            let text = std::str::from_utf8(payload(bytes, s))
+                .context("tokenizer section is not UTF-8")?;
+            Some(Bpe::from_json(&Json::parse(text)?).context("parsing tokenizer section")?)
+        }
+        None => None,
+    };
+
+    Ok(PqmModel {
+        model: PackedModel { cfg, embed, lm_head, final_norm, blocks },
+        tokenizer,
+    })
+}
+
+/// Load a `.pqm` artifact from disk (one sequential read + CRC checks).
+pub fn load_pqm(path: impl AsRef<Path>) -> Result<PqmModel> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    load_pqm_bytes(&bytes).with_context(|| format!("loading .pqm artifact {path:?}"))
+}
+
+// ---------------------------------------------------------------- inspect
+
+/// Cheap header-level view of an artifact: config + section table, with
+/// only the config payload CRC-verified (tensor payloads are not decoded).
+#[derive(Debug, Clone)]
+pub struct PqmInfo {
+    pub version: u32,
+    pub file_bytes: u64,
+    pub config: ModelConfig,
+    pub has_tokenizer: bool,
+    pub sections: Vec<Section>,
+}
+
+pub fn inspect_pqm_bytes(bytes: &[u8]) -> Result<PqmInfo> {
+    let sections = parse_table(bytes)?;
+    let cfg_section = sections
+        .iter()
+        .find(|s| s.kind == kind::CONFIG)
+        .ok_or_else(|| anyhow::anyhow!("missing config section"))?;
+    verify_crcs(bytes, std::slice::from_ref(cfg_section))?;
+    let config = codec::decode_config(payload(bytes, cfg_section))?;
+    Ok(PqmInfo {
+        // Report the version the *file* declares, not our compiled-in
+        // constant — they only coincide while exactly one version exists.
+        version: u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+        file_bytes: bytes.len() as u64,
+        config,
+        has_tokenizer: sections.iter().any(|s| s.kind == kind::TOKENIZER),
+        sections,
+    })
+}
+
+pub fn inspect_pqm(path: impl AsRef<Path>) -> Result<PqmInfo> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    inspect_pqm_bytes(&bytes).with_context(|| format!("inspecting .pqm artifact {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    fn nano(variant: Variant) -> PackedModel {
+        PackedModel::random(
+            &ModelConfig {
+                name: format!("pqm-{}", variant.name()),
+                variant,
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 96,
+                r: if variant == Variant::PQuant { 16 } else { 0 },
+                n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+                seq_len: 16,
+                alpha_init: 2.0,
+                beta_init: 0.2,
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_preserves_generation() {
+        for v in [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant] {
+            let mut m = nano(v);
+            let bytes = save_pqm_bytes(&m, None);
+            let mut loaded = load_pqm_bytes(&bytes).unwrap().model;
+            assert_eq!(loaded.cfg, m.cfg, "{v:?}");
+            assert_eq!(loaded.generate(&[1, 2, 3], 6), m.generate(&[1, 2, 3], 6), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn tokenizer_section_roundtrips() {
+        let m = nano(Variant::BitNet);
+        let bpe = Bpe::train("the quick brown fox the quick brown fox jumps ", 280);
+        let bytes = save_pqm_bytes(&m, Some(&bpe));
+        let loaded = load_pqm_bytes(&bytes).unwrap();
+        let tok = loaded.tokenizer.expect("tokenizer section present");
+        assert_eq!(tok.encode("the quick fox"), bpe.encode("the quick fox"));
+        assert!(load_pqm_bytes(&save_pqm_bytes(&m, None)).unwrap().tokenizer.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = save_pqm_bytes(&nano(Variant::BitNet), None);
+        bytes[0] ^= 0xFF;
+        let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut bytes = save_pqm_bytes(&nano(Variant::BitNet), None);
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_corruption_with_crc_error() {
+        let mut bytes = save_pqm_bytes(&nano(Variant::PQuant), None);
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = save_pqm_bytes(&nano(Variant::Fp16), None);
+        for cut in [4, HEADER_BYTES + 3, bytes.len() - 9] {
+            let err = load_pqm_bytes(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn inspect_reads_config_without_decoding_tensors() {
+        let m = nano(Variant::PQuant);
+        let bytes = save_pqm_bytes(&m, None);
+        let info = inspect_pqm_bytes(&bytes).unwrap();
+        assert_eq!(info.config, m.cfg);
+        assert_eq!(info.file_bytes, bytes.len() as u64);
+        assert!(!info.has_tokenizer);
+        // 4 fixed sections + 2 blocks
+        assert_eq!(info.sections.len(), 6);
+        // Corrupting a block payload does not break inspect (config-only CRC) …
+        let mut corrupt = bytes.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 1;
+        assert!(inspect_pqm_bytes(&corrupt).is_ok());
+        // … but a full load rejects it.
+        assert!(load_pqm_bytes(&corrupt).is_err());
+    }
+}

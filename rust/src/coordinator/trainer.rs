@@ -25,6 +25,9 @@ pub struct TrainOptions {
     pub single_phase: bool,
     /// Optional on-disk checkpoint path written at the end.
     pub final_checkpoint: Option<String>,
+    /// Optional packed `.pqm` artifact exported alongside the final
+    /// checkpoint (the offline quantize-and-pack step of Appendix A).
+    pub export_pqm: Option<String>,
     /// Dataset shuffle seed.
     pub data_seed: u64,
     /// Override α/β init (feature-scaling ablation, Fig 5b). Values are
@@ -46,6 +49,7 @@ impl Default for TrainOptions {
             eval_every: 0,
             single_phase: false,
             final_checkpoint: None,
+            export_pqm: None,
             data_seed: 0xDA7A,
             feature_scaling_override: None,
             inject_spike_at: None,
@@ -204,6 +208,15 @@ impl<'a> Trainer<'a> {
 
         if let Some(path) = &opts.final_checkpoint {
             self.state.save_checkpoint(self.artifact, path)?;
+        }
+        if let Some(path) = &opts.export_pqm {
+            let packed = crate::infer::PackedModel::from_state(self.artifact, &self.state)?;
+            let bytes = crate::artifact::save_pqm(&packed, None, path)?;
+            println!(
+                "[train {}] exported packed model → {path} ({:.2} MiB)",
+                manifest.config.name,
+                bytes as f64 / (1024.0 * 1024.0)
+            );
         }
 
         let tail_n = (losses.len() / 10).max(1);

@@ -86,6 +86,17 @@ impl<'a> BatchIter<'a> {
     }
 }
 
+/// Default corpus-cache parameters shared by every CLI entry point, so
+/// `eval --model` scores the same cached dataset as `eval --config`.
+pub const DEFAULT_CACHE_DIR: &str = "results/cache/data";
+pub const DEFAULT_CORPUS_SEED: u64 = 0xC0FFEE;
+pub const DEFAULT_CORPUS_BYTES: usize = 4 * 1024 * 1024;
+
+/// Load or build the default cached dataset at a given vocab size.
+pub fn default_cached_dataset(vocab_size: usize) -> Result<(Dataset, Bpe)> {
+    cached_dataset(DEFAULT_CACHE_DIR, DEFAULT_CORPUS_SEED, DEFAULT_CORPUS_BYTES, vocab_size)
+}
+
 /// Load or build a cached dataset + tokenizer under `dir`.
 pub fn cached_dataset(
     dir: &str,

@@ -11,6 +11,7 @@ pub use tasks::{task_suite, Task, TaskItem};
 
 use anyhow::Result;
 
+use crate::infer::PackedModel;
 use crate::runtime::{CompiledEntry, TrainState};
 
 /// log-softmax over one logit row.
@@ -62,6 +63,31 @@ pub fn perplexity(
         w += this_batch;
     }
     Ok((total_nll / total_tokens.max(1) as f64).exp())
+}
+
+/// Perplexity of a token stream under a *packed* model (the `.pqm` serving
+/// engine — no PJRT involved), so `eval --model out.pqm` can score a
+/// shipped artifact.  Same windowing as [`perplexity`]: non-overlapping
+/// (seq_len+1) windows, each decoded token-by-token with a fresh KV cache;
+/// `max_tokens` bounds the work.
+pub fn packed_perplexity(model: &mut PackedModel, stream: &[u32], max_tokens: usize) -> f64 {
+    assert!(stream.len() >= 2, "perplexity needs at least two tokens");
+    let seq_len = model.cfg.seq_len.min(stream.len() - 1).max(1);
+    let window = seq_len + 1;
+    let n_windows = (stream.len() / window).max(1).min(max_tokens.div_ceil(seq_len).max(1));
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for w in 0..n_windows {
+        let toks = &stream[w * window..w * window + window];
+        let mut caches = model.new_caches(seq_len);
+        for t in 0..seq_len {
+            let logits = model.decode_step(toks[t], t, &mut caches);
+            let lp = log_softmax(&logits);
+            total_nll -= lp[toks[t + 1] as usize] as f64;
+            total_tokens += 1;
+        }
+    }
+    (total_nll / total_tokens.max(1) as f64).exp()
 }
 
 /// Mean log-likelihood of `cont` tokens following `prompt` tokens.

@@ -15,14 +15,10 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{TrainOptions, Trainer};
-use crate::data::{cached_dataset, Dataset};
+use crate::data::{default_cached_dataset, Dataset};
 use crate::runtime::{load_artifact, Artifact, Runtime, TrainState};
 use crate::tokenizer::Bpe;
 use crate::util::json::{arr, num, obj, s, Json};
-
-/// Corpus size per vocab (bytes of generated text).
-const CORPUS_BYTES: usize = 4 * 1024 * 1024;
-const CORPUS_SEED: u64 = 0xC0FFEE;
 
 /// Default step counts per model size (tuned to the CPU budget; the
 /// experiment CLI exposes `--steps` to override).
@@ -152,7 +148,7 @@ impl Lab {
     /// Dataset + tokenizer for a vocab size (built once, cached on disk).
     pub fn dataset(&mut self, vocab: usize) -> Result<&(Dataset, Bpe)> {
         if !self.datasets.contains_key(&vocab) {
-            let pair = cached_dataset("results/cache/data", CORPUS_SEED, CORPUS_BYTES, vocab)?;
+            let pair = default_cached_dataset(vocab)?;
             self.datasets.insert(vocab, pair);
         }
         Ok(&self.datasets[&vocab])

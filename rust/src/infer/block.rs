@@ -38,6 +38,7 @@ impl KvCache {
 }
 
 /// The pQuant decoupled FFN weights (§3.2-3.3).
+#[derive(Clone)]
 pub struct DecoupledFfn {
     pub up_1bit: QLinear,
     pub down_1bit: QLinear,
@@ -50,12 +51,15 @@ pub struct DecoupledFfn {
 }
 
 /// FFN variants.
+#[derive(Clone)]
 pub enum Ffn {
     Dense { up: QLinear, down: QLinear },
     Decoupled(DecoupledFfn),
 }
 
-/// One transformer block with packed weights.
+/// One transformer block with packed weights. `Clone` backs per-worker
+/// serving replicas and the registry's hand-out path.
+#[derive(Clone)]
 pub struct PackedBlock {
     pub attn_norm: Vec<f32>,
     pub ffn_norm: Vec<f32>,

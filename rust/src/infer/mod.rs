@@ -55,6 +55,9 @@ impl QuantActs {
 }
 
 /// A quantized (or full-precision) linear layer, [k, n], y = x·W.
+/// `Clone` supports serving replicas; `PartialEq` is bit-exact on the
+/// packed planes and scales (artifact round-trip tests).
+#[derive(Clone, PartialEq)]
 pub enum QLinear {
     /// f32 row-major weights (FP16-baseline engine).
     F32 { w: Vec<f32>, k: usize, n: usize },

@@ -10,7 +10,9 @@ use crate::runtime::{Artifact, TrainState};
 use super::block::{DecoupledFfn, Ffn, KvCache, PackedBlock};
 use super::{rmsnorm_vec, QLinear, QuantActs};
 
-/// A deployable packed model.
+/// A deployable packed model. `Clone` yields an independent replica
+/// (weights are immutable at serve time; only per-block timing diverges).
+#[derive(Clone)]
 pub struct PackedModel {
     pub cfg: ModelConfig,
     /// Token embedding [vocab, d], full precision.

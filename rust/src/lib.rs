@@ -6,6 +6,8 @@
 //! serving, evaluation, and every paper experiment.
 //!
 //! Module map:
+//! * [`artifact`] — versioned binary `.pqm` packed-model artifacts
+//!   (section table + CRC32), the export/load half of the deployment story
 //! * [`config`] — model/variant configurations mirroring `python/compile/configs.py`
 //! * [`tensor`] — dense matrix type + the linear algebra the sensitivity
 //!   analysis needs (Cholesky inverse)
@@ -18,7 +20,8 @@
 //!   training state through the AOT train step
 //! * [`coordinator`] — two-phase schedule, training loop, checkpoints,
 //!   stability monitor
-//! * [`serve`] — threaded batching inference server
+//! * [`serve`] — threaded batching inference server + multi-model
+//!   [`serve::ModelRegistry`] (replica hand-out, warm hot-swap)
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics
@@ -29,6 +32,7 @@
 //! * [`util`] — offline substrates: JSON, RNG, bench + property harnesses,
 //!   scoped thread pool
 
+pub mod artifact;
 pub mod config;
 pub mod coordinator;
 pub mod data;

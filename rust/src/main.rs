@@ -2,9 +2,12 @@
 //!
 //! Subcommands:
 //!   experiment <id|all> [--steps N]   regenerate a paper table/figure
-//!   train --config C [--steps N] [--lr F] [--checkpoint P] [--eval-every N]
+//!   train --config C [--steps N] [--lr F] [--checkpoint P] [--export P.pqm]
 //!   eval --config C --checkpoint P    perplexity + 7-task suite
-//!   serve --config C [--requests N] [--new-tokens N] [--batch N] [--workers N]
+//!   eval --model P.pqm                packed-engine perplexity, no PJRT
+//!   export <config> <out.pqm>         checkpoint → packed `.pqm` artifact
+//!   inspect <path.pqm>                header + section table of an artifact
+//!   serve --config C | --model P.pqm  continuous-batching load test
 //!   sensitivity --config C [--checkpoint P]
 //!   list-configs                       artifacts found on disk
 //!
@@ -82,9 +85,12 @@ repro — pQuant coordinator (see README.md)
 
 USAGE:
   repro experiment <id|all> [--steps N]
-  repro train --config C [--steps N] [--lr F] [--checkpoint P] [--eval-every N] [--single-phase]
+  repro train --config C [--steps N] [--lr F] [--checkpoint P] [--export P.pqm] [--eval-every N] [--single-phase]
   repro eval --config C --checkpoint P [--items N]
-  repro serve --config C [--requests N] [--new-tokens N] [--batch N] [--workers N]
+  repro eval --model P.pqm [--tokens N]
+  repro export <config> <out.pqm> [--checkpoint P] [--tokenizer] [--random SEED]
+  repro inspect <path.pqm>
+  repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N] [--batch N] [--workers N]
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -100,6 +106,8 @@ fn main() -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "export" => cmd_export(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "list-configs" => cmd_list(),
@@ -128,12 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let art = pquant::runtime::load_artifact(config)
         .with_context(|| format!("loading artifact {config}"))?;
     let runtime = pquant::runtime::Runtime::cpu()?;
-    let (dataset, _bpe) = pquant::data::cached_dataset(
-        "results/cache/data",
-        0xC0FFEE,
-        4 * 1024 * 1024,
-        art.manifest.config.vocab,
-    )?;
+    let (dataset, _bpe) = pquant::data::default_cached_dataset(art.manifest.config.vocab)?;
     let mut trainer = Trainer::new(&runtime, &art, &dataset)?;
     let opts = TrainOptions {
         steps,
@@ -141,6 +144,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.flag("eval-every", 0u64)?,
         single_phase: args.flags.contains_key("single-phase"),
         final_checkpoint: args.flags.get("checkpoint").cloned(),
+        export_pqm: args.flags.get("export").cloned(),
         log_every: args.flag("log-every", (steps / 20).max(1))?,
         ..Default::default()
     };
@@ -160,18 +164,28 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    // Packed path: score a shipped `.pqm` artifact on the rust engine
+    // (no PJRT, no artifact dir, no checkpoint needed).
+    if let Some(path) = args.flags.get("model") {
+        let loaded = pquant::artifact::load_pqm(path)?;
+        let mut model = loaded.model;
+        let max_tokens = args.flag("tokens", 4096usize)?;
+        let (dataset, _) = pquant::data::default_cached_dataset(model.cfg.vocab)?;
+        let ppl = pquant::eval::packed_perplexity(&mut model, &dataset.valid, max_tokens);
+        println!(
+            "packed perplexity ({}, {} tokens max): {ppl:.3}",
+            model.cfg.name, max_tokens
+        );
+        println!("(zero-shot task suite needs the PJRT fwd entry: use --config/--checkpoint)");
+        return Ok(());
+    }
     let config = args.require("config")?;
     let ckpt = args.require("checkpoint")?;
     let items = args.flag("items", 40usize)?;
     let art = pquant::runtime::load_artifact(config)?;
     let runtime = pquant::runtime::Runtime::cpu()?;
     let state = pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?;
-    let (dataset, bpe) = pquant::data::cached_dataset(
-        "results/cache/data",
-        0xC0FFEE,
-        4 * 1024 * 1024,
-        art.manifest.config.vocab,
-    )?;
+    let (dataset, bpe) = pquant::data::default_cached_dataset(art.manifest.config.vocab)?;
     let fwd_key = if art.manifest.entries.contains_key("fwd_b8") { "fwd_b8" } else { "fwd" };
     let fwd = runtime.compile(&art, fwd_key)?;
     let ppl = pquant::eval::perplexity(
@@ -202,38 +216,45 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let config = args.require("config")?;
     let requests = args.flag("requests", 16usize)?;
     let new_tokens = args.flag("new-tokens", 32usize)?;
     let opts = pquant::serve::ServeOptions {
         max_batch: args.flag("batch", 4usize)?,
         workers: args.flag("workers", 1usize)?,
     };
-    let art = pquant::runtime::load_artifact(config)?;
-    let model = match args.flags.get("checkpoint") {
-        Some(ckpt) => {
-            let state = pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?;
-            pquant::infer::PackedModel::from_state(&art, &state)?
-        }
-        None => {
-            println!("(no --checkpoint: serving randomly initialized packed weights)");
-            let state = pquant::runtime::TrainState::initial(&art)?;
-            pquant::infer::PackedModel::from_state(&art, &state)?
-        }
-    };
-    let models: Vec<_> = (0..opts.workers)
-        .map(|_| {
-            // Each worker owns a replica; rebuild from the same source.
-            pquant::infer::PackedModel::from_state(
-                &art,
-                &pquant::runtime::TrainState::initial(&art).unwrap(),
-            )
-            .unwrap()
-        })
-        .collect();
-    let models = if opts.workers <= 1 { vec![model] } else { models };
+    // All serving flows through the registry: load (from .pqm or a live
+    // TrainState), register under a name, hand replicas to the workers.
+    let registry = pquant::serve::ModelRegistry::new();
+    if let Some(path) = args.flags.get("model") {
+        registry.load_pqm("serve", path)?;
+    } else {
+        let config = args.require("config")?;
+        let art = pquant::runtime::load_artifact(config)?;
+        let state = match args.flags.get("checkpoint") {
+            Some(ckpt) => pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?,
+            None => {
+                println!("(no --checkpoint: serving randomly initialized packed weights)");
+                pquant::runtime::TrainState::initial(&art)?
+            }
+        };
+        registry.register("serve", pquant::infer::PackedModel::from_state(&art, &state)?, None);
+    }
+    for m in registry.info() {
+        println!(
+            "serving {:12} gen {} {:10} {:.2}M params, {:.1} MiB packed",
+            m.name,
+            m.generation,
+            m.variant.name(),
+            m.params as f64 / 1e6,
+            m.storage_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    let (lease, models) = registry
+        .replicas("serve", opts.workers.max(1))
+        .expect("model registered above");
     let (responses, wall, tps) =
         pquant::serve::load_test(models, requests, 8, new_tokens, &opts);
+    drop(lease); // serving done — release the drain barrier
     println!(
         "{} requests × {} tokens in {:.2}s → {:.1} tokens/s",
         responses.len(),
@@ -255,6 +276,82 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_export(args: &Args) -> Result<()> {
+    let config = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro export <config> <out.pqm>"))?;
+    let out = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro export <config> <out.pqm>"))?;
+    let (model, bpe) = if let Some(seed) = args.opt_flag::<u64>("random")? {
+        // Toolchain-free path: pack a random model of a paper-scale config
+        // (bench/demo workloads where no trained checkpoint exists).
+        let cfg = pquant::config::paper_configs()
+            .into_iter()
+            .find(|c| &c.name == config)
+            .ok_or_else(|| anyhow!("--random needs a paper config name (e.g. paper-300M-pquant)"))?;
+        (pquant::infer::PackedModel::random(&cfg, seed), None)
+    } else {
+        let art = pquant::runtime::load_artifact(config)
+            .with_context(|| format!("loading artifact {config}"))?;
+        let state = match args.flags.get("checkpoint") {
+            Some(ckpt) => pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?,
+            None => {
+                println!("(no --checkpoint: exporting initial weights)");
+                pquant::runtime::TrainState::initial(&art)?
+            }
+        };
+        let model = pquant::infer::PackedModel::from_state(&art, &state)?;
+        let bpe = if args.flags.contains_key("tokenizer") {
+            let (_, bpe) = pquant::data::default_cached_dataset(art.manifest.config.vocab)?;
+            Some(bpe)
+        } else {
+            None
+        };
+        (model, bpe)
+    };
+    let bytes = pquant::artifact::save_pqm(&model, bpe.as_ref(), out)?;
+    println!(
+        "wrote {out}: {:.2} MiB, {} variant, {} blocks{}",
+        bytes as f64 / (1024.0 * 1024.0),
+        model.cfg.variant.name(),
+        model.blocks.len(),
+        if bpe.is_some() { ", tokenizer embedded" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro inspect <path.pqm>"))?;
+    let info = pquant::artifact::inspect_pqm(path)?;
+    let cfg = &info.config;
+    println!(
+        "{path}: .pqm v{}, {:.2} MiB, config {} ({}, {:.2}M params{})",
+        info.version,
+        info.file_bytes as f64 / (1024.0 * 1024.0),
+        cfg.name,
+        cfg.variant.name(),
+        cfg.param_count() as f64 / 1e6,
+        if info.has_tokenizer { ", tokenizer" } else { "" }
+    );
+    println!("{:12} {:>5} {:>12} {:>10}", "section", "index", "bytes", "crc32");
+    for s in &info.sections {
+        println!(
+            "{:12} {:>5} {:>12} {:>10}",
+            pquant::artifact::kind_name(s.kind),
+            s.index,
+            s.len,
+            format!("{:08x}", s.crc)
+        );
+    }
+    Ok(())
+}
+
 fn cmd_sensitivity(args: &Args) -> Result<()> {
     let config = args.require("config")?;
     let art = pquant::runtime::load_artifact(config)?;
@@ -263,12 +360,7 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
         Some(ckpt) => pquant::runtime::TrainState::load_checkpoint(&art, ckpt)?,
         None => pquant::runtime::TrainState::initial(&art)?,
     };
-    let (dataset, _) = pquant::data::cached_dataset(
-        "results/cache/data",
-        0xC0FFEE,
-        4 * 1024 * 1024,
-        art.manifest.config.vocab,
-    )?;
+    let (dataset, _) = pquant::data::default_cached_dataset(art.manifest.config.vocab)?;
     let fwd = runtime.compile(&art, "fwd")?;
     let seq = art.manifest.seq_len;
     let d = art.manifest.config.d_model;

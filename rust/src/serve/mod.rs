@@ -12,6 +12,10 @@
 //!   * per-request queueing/service latency and aggregate tokens/s are
 //!     recorded for the throughput experiments
 
+pub mod registry;
+
+pub use registry::{serve_model, Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
+
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -138,10 +142,9 @@ pub fn serve(
                             enqueued,
                             started,
                         });
-                        let peak = metrics.peak_active.load(Ordering::Relaxed);
-                        if active.len() > peak {
-                            metrics.peak_active.store(active.len(), Ordering::Relaxed);
-                        }
+                        // fetch_max: a load-compare-store here loses updates
+                        // when several workers race on the shared metric.
+                        metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
                     }
                     if active.is_empty() {
                         if closed.load(Ordering::Relaxed) {

@@ -1,0 +1,396 @@
+//! Multi-model serving registry: N named packed models in one server
+//! process, replica hand-out for workers, and warm hot-swap.
+//!
+//! Each registered name maps to an [`ModelEntry`] generation.  Workers
+//! [`ModelRegistry::acquire`] a [`Lease`] on the current generation and
+//! clone per-worker replicas from it; the lease count is the drain barrier.
+//! [`ModelRegistry::hot_swap`] installs a new generation immediately (new
+//! acquires see it at once) and then waits for the old generation's leases
+//! to drop — load new `.pqm`, drain, swap — so a server can roll a model
+//! forward (or serve FP16 / BitNet / pQuant variants side by side) without
+//! restarting or interrupting in-flight requests.
+
+use std::collections::HashMap;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Variant;
+use crate::infer::PackedModel;
+use crate::tokenizer::Bpe;
+
+use super::{serve, Request, Response, ServeMetrics, ServeOptions};
+
+/// One immutable generation of a registered model.
+pub struct ModelEntry {
+    pub name: String,
+    /// Monotone per-name counter; bumped by every (re-)register/swap.
+    pub generation: u64,
+    pub model: PackedModel,
+    pub tokenizer: Option<Bpe>,
+    leases: AtomicUsize,
+}
+
+impl ModelEntry {
+    /// Leases currently outstanding against this generation.
+    pub fn active_leases(&self) -> usize {
+        self.leases.load(Ordering::Acquire)
+    }
+}
+
+/// A counted handle on one model generation. Holding a lease keeps the
+/// generation visible to the drain barrier; dropping it releases the slot.
+pub struct Lease {
+    entry: Arc<ModelEntry>,
+}
+
+impl Lease {
+    /// Clone an independent serving replica (one per worker).
+    pub fn replica(&self) -> PackedModel {
+        self.entry.model.clone()
+    }
+
+    pub fn entry(&self) -> &Arc<ModelEntry> {
+        &self.entry
+    }
+}
+
+impl Deref for Lease {
+    type Target = ModelEntry;
+
+    fn deref(&self) -> &ModelEntry {
+        &self.entry
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.entry.leases.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Summary row for one registered model (list/inspect output).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub generation: u64,
+    pub variant: Variant,
+    pub params: usize,
+    pub storage_bytes: usize,
+    pub active_leases: usize,
+    pub has_tokenizer: bool,
+}
+
+/// Outcome of a [`ModelRegistry::hot_swap`].
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    /// Generation now serving under the name.
+    pub generation: u64,
+    /// Whether the previous generation fully drained within the timeout.
+    pub drained: bool,
+    /// Time spent waiting on the drain barrier.
+    pub waited: Duration,
+}
+
+/// Thread-safe registry of named packed models.
+#[derive(Default)]
+pub struct ModelRegistry {
+    slots: RwLock<HashMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Insert (or replace) a model under `name`; returns its generation.
+    /// Replacing does *not* wait for the old generation — use
+    /// [`ModelRegistry::hot_swap`] for the draining variant.
+    pub fn register(
+        &self,
+        name: &str,
+        model: PackedModel,
+        tokenizer: Option<Bpe>,
+    ) -> u64 {
+        self.install(name, model, tokenizer).generation
+    }
+
+    fn install(
+        &self,
+        name: &str,
+        model: PackedModel,
+        tokenizer: Option<Bpe>,
+    ) -> Arc<ModelEntry> {
+        let mut slots = self.slots.write().unwrap();
+        let generation = slots.get(name).map_or(0, |e| e.generation) + 1;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            generation,
+            model,
+            tokenizer,
+            leases: AtomicUsize::new(0),
+        });
+        slots.insert(name.to_string(), entry.clone());
+        entry
+    }
+
+    /// Load a `.pqm` artifact and register it; returns the generation.
+    pub fn load_pqm(&self, name: &str, path: impl AsRef<Path>) -> Result<u64> {
+        let loaded = crate::artifact::load_pqm(path)?;
+        Ok(self.register(name, loaded.model, loaded.tokenizer))
+    }
+
+    /// Acquire a lease on the current generation of `name`.
+    pub fn acquire(&self, name: &str) -> Option<Lease> {
+        let slots = self.slots.read().unwrap();
+        let entry = slots.get(name)?.clone();
+        entry.leases.fetch_add(1, Ordering::AcqRel);
+        Some(Lease { entry })
+    }
+
+    /// Clone `n` independent replicas of `name` (worker hand-out), plus
+    /// the lease covering them.  Hold the lease for as long as the
+    /// replicas serve: it is what [`ModelRegistry::hot_swap`]'s drain
+    /// barrier counts — dropping it early makes a swap report `drained`
+    /// while old-generation replicas are still running.
+    pub fn replicas(&self, name: &str, n: usize) -> Option<(Lease, Vec<PackedModel>)> {
+        let lease = self.acquire(name)?;
+        let models = (0..n.max(1)).map(|_| lease.replica()).collect();
+        Some((lease, models))
+    }
+
+    /// Warm hot-swap: install the new generation (new acquires see it
+    /// immediately), then wait up to `drain_timeout` for leases on the old
+    /// generation to drop.  Returns whether the old generation drained.
+    pub fn hot_swap(
+        &self,
+        name: &str,
+        model: PackedModel,
+        tokenizer: Option<Bpe>,
+        drain_timeout: Duration,
+    ) -> SwapReport {
+        let old = {
+            let slots = self.slots.read().unwrap();
+            slots.get(name).cloned()
+        };
+        let entry = self.install(name, model, tokenizer);
+        let t0 = Instant::now();
+        let mut drained = true;
+        if let Some(old) = old {
+            while old.active_leases() > 0 {
+                if t0.elapsed() >= drain_timeout {
+                    drained = false;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        SwapReport { generation: entry.generation, drained, waited: t0.elapsed() }
+    }
+
+    /// Load a `.pqm` artifact and hot-swap it in under `name`.
+    pub fn hot_swap_pqm(
+        &self,
+        name: &str,
+        path: impl AsRef<Path>,
+        drain_timeout: Duration,
+    ) -> Result<SwapReport> {
+        let loaded = crate::artifact::load_pqm(path)?;
+        Ok(self.hot_swap(name, loaded.model, loaded.tokenizer, drain_timeout))
+    }
+
+    /// Remove a model; returns true if it existed. In-flight leases keep
+    /// the evicted generation alive until they drop.
+    pub fn remove(&self, name: &str) -> bool {
+        self.slots.write().unwrap().remove(name).is_some()
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.slots.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Summary of every registered model, sorted by name.
+    pub fn info(&self) -> Vec<ModelInfo> {
+        let slots = self.slots.read().unwrap();
+        let mut rows: Vec<ModelInfo> = slots
+            .values()
+            .map(|e| ModelInfo {
+                name: e.name.clone(),
+                generation: e.generation,
+                variant: e.model.cfg.variant,
+                params: e.model.cfg.param_count(),
+                storage_bytes: e.model.storage_bytes(),
+                active_leases: e.active_leases(),
+                has_tokenizer: e.tokenizer.is_some(),
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Serve one registered model until the request channel closes: acquires a
+/// lease (held for the whole run — the hot-swap drain barrier), clones one
+/// replica per worker, and runs the continuous batcher.
+pub fn serve_model(
+    registry: &ModelRegistry,
+    name: &str,
+    rx: Receiver<(Request, Instant)>,
+    tx_out: Sender<Response>,
+    opts: &ServeOptions,
+    metrics: Arc<ServeMetrics>,
+) -> Result<Duration> {
+    let lease = registry
+        .acquire(name)
+        .ok_or_else(|| anyhow!("no model registered under {name:?}"))?;
+    let models: Vec<PackedModel> =
+        (0..opts.workers.max(1)).map(|_| lease.replica()).collect();
+    Ok(serve(models, rx, tx_out, opts, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny(variant: Variant, seed: u64) -> PackedModel {
+        PackedModel::random(
+            &ModelConfig {
+                name: format!("reg-{}", variant.name()),
+                variant,
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 96,
+                r: if variant == Variant::PQuant { 16 } else { 0 },
+                n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+                seq_len: 32,
+                alpha_init: 2.0,
+                beta_init: 0.2,
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn register_acquire_and_list() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.register("pquant", tiny(Variant::PQuant, 1), None), 1);
+        assert_eq!(reg.register("fp16", tiny(Variant::Fp16, 2), None), 1);
+        assert_eq!(reg.names(), vec!["fp16".to_string(), "pquant".to_string()]);
+        assert!(reg.acquire("missing").is_none());
+        let lease = reg.acquire("pquant").unwrap();
+        assert_eq!(lease.generation, 1);
+        assert_eq!(lease.active_leases(), 1);
+        let info = reg.info();
+        assert_eq!(info.len(), 2);
+        assert_eq!(info[1].active_leases, 1);
+        drop(lease);
+        assert_eq!(reg.info()[1].active_leases, 0);
+    }
+
+    #[test]
+    fn replicas_are_independent_identical_and_leased() {
+        let reg = ModelRegistry::new();
+        reg.register("m", tiny(Variant::PQuant, 3), None);
+        let (lease, mut reps) = reg.replicas("m", 2).unwrap();
+        assert_eq!(reps.len(), 2);
+        // The hand-out is covered by a live lease until the caller drops it.
+        assert_eq!(lease.active_leases(), 1);
+        let (a, b) = reps.split_at_mut(1);
+        assert_eq!(a[0].generate(&[1, 2], 5), b[0].generate(&[1, 2], 5));
+        drop(lease);
+        assert_eq!(reg.acquire("m").unwrap().active_leases(), 1);
+    }
+
+    #[test]
+    fn hot_swap_bumps_generation_and_waits_for_leases() {
+        let reg = ModelRegistry::new();
+        reg.register("m", tiny(Variant::BitNet, 1), None);
+        let lease = reg.acquire("m").unwrap();
+        assert_eq!(lease.generation, 1);
+
+        // Swap with an outstanding lease and a zero drain budget: the new
+        // generation is installed, but the old one has not drained.
+        let report = reg.hot_swap("m", tiny(Variant::BitNet158, 2), None, Duration::ZERO);
+        assert_eq!(report.generation, 2);
+        assert!(!report.drained);
+
+        // New acquires land on the new generation while the old lease lives.
+        let fresh = reg.acquire("m").unwrap();
+        assert_eq!(fresh.generation, 2);
+        assert_eq!(fresh.model.cfg.variant, Variant::BitNet158);
+        drop(fresh);
+
+        // Once the old lease drops, a re-swap drains immediately.
+        drop(lease);
+        let report = reg.hot_swap("m", tiny(Variant::PQuant, 3), None, Duration::from_secs(5));
+        assert_eq!(report.generation, 3);
+        assert!(report.drained);
+    }
+
+    #[test]
+    fn remove_keeps_inflight_leases_alive() {
+        let reg = ModelRegistry::new();
+        reg.register("m", tiny(Variant::Fp16, 1), None);
+        let lease = reg.acquire("m").unwrap();
+        assert!(reg.remove("m"));
+        assert!(!reg.remove("m"));
+        assert!(reg.acquire("m").is_none());
+        // The lease still reads the evicted generation's weights.
+        assert_eq!(lease.model.cfg.variant, Variant::Fp16);
+    }
+
+    #[test]
+    fn serve_model_matches_direct_load_test() {
+        let reg = ModelRegistry::new();
+        reg.register("m", tiny(Variant::PQuant, 5), None);
+        let opts = ServeOptions { max_batch: 2, workers: 1 };
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx_out, rx_out) = std::sync::mpsc::channel();
+        for id in 0..4u64 {
+            tx.send((Request { id, prompt: vec![3, 1], n_new: 5 }, Instant::now()))
+                .unwrap();
+        }
+        drop(tx);
+        serve_model(&reg, "m", rx, tx_out, &opts, Arc::new(ServeMetrics::default()))
+            .unwrap();
+        let mut via_registry: Vec<Response> = rx_out.iter().collect();
+        via_registry.sort_by_key(|r| r.id);
+
+        let mut direct = tiny(Variant::PQuant, 5);
+        let want = direct.generate(&[3, 1], 5);
+        assert_eq!(via_registry.len(), 4);
+        for r in &via_registry {
+            assert_eq!(r.tokens, want, "registry-served tokens diverge");
+        }
+    }
+
+    #[test]
+    fn per_name_generations_are_independent() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.register("a", tiny(Variant::Fp16, 1), None), 1);
+        assert_eq!(reg.register("a", tiny(Variant::Fp16, 2), None), 2);
+        assert_eq!(reg.register("b", tiny(Variant::BitNet, 3), None), 1);
+        assert_eq!(reg.len(), 2);
+    }
+}

@@ -1,0 +1,283 @@
+//! `.pqm` artifact integration tests: save→load must be *bit-identical* on
+//! every packed plane and produce identical decode logits for all variants;
+//! damaged files must be rejected (truncation, foreign magic, future
+//! version, CRC corruption) instead of yielding garbage weights.  Also
+//! covers the ModelRegistry serving path fed from a `.pqm` on disk.
+
+use std::time::{Duration, Instant};
+
+use pquant::artifact::{self, load_pqm_bytes, save_pqm_bytes};
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::block::Ffn;
+use pquant::infer::PackedModel;
+use pquant::serve::{ModelRegistry, Request, ServeMetrics, ServeOptions};
+use pquant::util::prop::check;
+use pquant::util::rng::Rng;
+
+const ALL_VARIANTS: [Variant; 4] =
+    [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant];
+
+fn nano_cfg(variant: Variant) -> ModelConfig {
+    ModelConfig {
+        name: format!("artifact-{}", variant.name()),
+        variant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: if variant == Variant::PQuant { 16 } else { 0 },
+        n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+        seq_len: 16,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+/// Assert every weight container of two models is exactly equal (packed
+/// planes byte-for-byte, scales bit-for-bit).
+fn assert_models_identical(a: &PackedModel, b: &PackedModel) {
+    assert_eq!(a.cfg, b.cfg);
+    assert_eq!(a.embed, b.embed);
+    assert_eq!(a.lm_head, b.lm_head);
+    assert_eq!(a.final_norm, b.final_norm);
+    assert_eq!(a.blocks.len(), b.blocks.len());
+    for (l, (ba, bb)) in a.blocks.iter().zip(&b.blocks).enumerate() {
+        assert_eq!(ba.attn_norm, bb.attn_norm, "block {l} attn_norm");
+        assert_eq!(ba.ffn_norm, bb.ffn_norm, "block {l} ffn_norm");
+        assert_eq!(ba.n_heads, bb.n_heads, "block {l} n_heads");
+        assert!(ba.wq == bb.wq, "block {l} wq plane mismatch");
+        assert!(ba.wk == bb.wk, "block {l} wk plane mismatch");
+        assert!(ba.wv == bb.wv, "block {l} wv plane mismatch");
+        assert!(ba.wo == bb.wo, "block {l} wo plane mismatch");
+        match (&ba.ffn, &bb.ffn) {
+            (Ffn::Dense { up: ua, down: da }, Ffn::Dense { up: ub, down: db }) => {
+                assert!(ua == ub && da == db, "block {l} dense ffn mismatch");
+            }
+            (Ffn::Decoupled(da), Ffn::Decoupled(db)) => {
+                assert!(da.up_1bit == db.up_1bit, "block {l} up_1bit mismatch");
+                assert!(da.down_1bit == db.down_1bit, "block {l} down_1bit mismatch");
+                assert_eq!(da.experts.len(), db.experts.len());
+                for (e, (ea, eb)) in da.experts.iter().zip(&db.experts).enumerate() {
+                    assert!(ea.0 == eb.0 && ea.1 == eb.1, "block {l} expert {e} mismatch");
+                }
+                assert_eq!(da.router, db.router, "block {l} router");
+                assert_eq!(da.alpha, db.alpha, "block {l} alpha");
+                assert_eq!(da.beta, db.beta, "block {l} beta");
+            }
+            _ => panic!("block {l}: FFN kind changed across save/load"),
+        }
+    }
+}
+
+#[test]
+fn roundtrip_is_bit_identical_for_all_variants() {
+    for v in ALL_VARIANTS {
+        let model = PackedModel::random(&nano_cfg(v), 21);
+        let loaded = load_pqm_bytes(&save_pqm_bytes(&model, None))
+            .unwrap_or_else(|e| panic!("{v:?}: {e:#}"))
+            .model;
+        assert_models_identical(&model, &loaded);
+    }
+}
+
+#[test]
+fn roundtrip_preserves_decode_logits_exactly() {
+    for v in ALL_VARIANTS {
+        let mut model = PackedModel::random(&nano_cfg(v), 33);
+        let mut loaded = load_pqm_bytes(&save_pqm_bytes(&model, None)).unwrap().model;
+        let mut caches_a = model.new_caches(8);
+        let mut caches_b = loaded.new_caches(8);
+        for (pos, &tok) in [3u32, 1, 4, 1, 5].iter().enumerate() {
+            let la = model.decode_step(tok, pos, &mut caches_a);
+            let lb = loaded.decode_step(tok, pos, &mut caches_b);
+            assert_eq!(la, lb, "{v:?}: logits diverge at pos {pos}");
+        }
+    }
+}
+
+#[test]
+fn roundtrip_property_over_random_geometries() {
+    check(
+        31,
+        12,
+        |r: &mut Rng| {
+            let variant = ALL_VARIANTS[r.below(4)];
+            let n_heads = 1 + r.below(3);
+            let d_model = n_heads * 2 * (1 + r.below(4)); // even head_dim for RoPE
+            let rr = if variant == Variant::PQuant { 4 * (1 + r.below(3)) } else { 0 };
+            let cfg = ModelConfig {
+                name: "prop-artifact".into(),
+                variant,
+                vocab: 32 + r.below(64),
+                d_model,
+                n_layers: 1 + r.below(3),
+                n_heads,
+                d_ff: rr + 8 + r.below(40),
+                r: rr,
+                n_experts: if variant == Variant::PQuant { 1 + r.below(3) } else { 1 },
+                seq_len: 16,
+                alpha_init: 2.0,
+                beta_init: 0.2,
+            };
+            (cfg, r.next_u64())
+        },
+        |(cfg, seed)| {
+            let mut model = PackedModel::random(cfg, *seed);
+            let bytes = save_pqm_bytes(&model, None);
+            let mut loaded = match load_pqm_bytes(&bytes) {
+                Ok(l) => l.model,
+                Err(e) => return Err(format!("load failed: {e:#}")),
+            };
+            if loaded.generate(&[1, 2], 4) != model.generate(&[1, 2], 4) {
+                return Err("generation diverged after round-trip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- damage
+
+#[test]
+fn truncated_files_are_rejected() {
+    let bytes = save_pqm_bytes(&PackedModel::random(&nano_cfg(Variant::PQuant), 1), None);
+    // Every prefix that cuts the header, the table, or a payload must fail
+    // with a truncation error — never panic, never return a model.
+    for cut in [0, 1, 7, 8, 15, 16, 40, bytes.len() / 2, bytes.len() - 1] {
+        let err = load_pqm_bytes(&bytes[..cut])
+            .err()
+            .unwrap_or_else(|| panic!("cut at {cut} bytes must fail"));
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err:#}");
+    }
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let mut bytes = save_pqm_bytes(&PackedModel::random(&nano_cfg(Variant::BitNet), 2), None);
+    bytes[1] = b'X';
+    let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+    // A checkpoint-like file is also refused up front.
+    let err = load_pqm_bytes(b"PQCK1\0not-a-packed-model-artifact")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("magic"), "{err}");
+}
+
+#[test]
+fn future_version_is_rejected() {
+    let mut bytes = save_pqm_bytes(&PackedModel::random(&nano_cfg(Variant::Fp16), 3), None);
+    bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("version 2"), "{err}");
+}
+
+#[test]
+fn corrupted_payload_fails_crc_not_garbage() {
+    let model = PackedModel::random(&nano_cfg(Variant::PQuant), 4);
+    let clean = save_pqm_bytes(&model, None);
+    // Flip one bit in several payload positions (past header + table);
+    // every corruption must surface as a CRC error.
+    let payload_start = clean.len() - 64;
+    for (i, pos) in [payload_start, payload_start + 17, clean.len() - 1].iter().enumerate() {
+        let mut bytes = clean.clone();
+        bytes[*pos] ^= 1 << (i % 8);
+        let err = load_pqm_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "corruption at {pos}: {err}");
+    }
+}
+
+#[test]
+fn disk_roundtrip_and_corruption_via_files() {
+    let dir = std::env::temp_dir().join(format!("pqm_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.pqm");
+
+    let mut model = PackedModel::random(&nano_cfg(Variant::PQuant), 5);
+    let written = artifact::save_pqm(&model, None, &path).unwrap();
+    assert_eq!(written, std::fs::metadata(&path).unwrap().len());
+
+    let mut loaded = artifact::load_pqm(&path).unwrap().model;
+    assert_eq!(loaded.generate(&[7, 3], 6), model.generate(&[7, 3], 6));
+
+    // Corrupt the file on disk: load must fail with a CRC error.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 5;
+    bytes[last] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = artifact::load_pqm(&path).err().expect("corrupt file must fail");
+    assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------------- registry
+
+#[test]
+fn registry_serves_identical_tokens_from_disk_artifact() {
+    let dir = std::env::temp_dir().join(format!("pqm_reg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.pqm");
+
+    let mut source = PackedModel::random(&nano_cfg(Variant::PQuant), 6);
+    artifact::save_pqm(&source, None, &path).unwrap();
+
+    let registry = ModelRegistry::new();
+    registry.load_pqm("pquant", &path).unwrap();
+
+    // Serve through the registry with two workers…
+    let opts = ServeOptions { max_batch: 2, workers: 2 };
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (tx_out, rx_out) = std::sync::mpsc::channel();
+    for id in 0..6u64 {
+        tx.send((Request { id, prompt: vec![2, 8], n_new: 5 }, Instant::now())).unwrap();
+    }
+    drop(tx);
+    pquant::serve::serve_model(
+        &registry,
+        "pquant",
+        rx,
+        tx_out,
+        &opts,
+        std::sync::Arc::new(ServeMetrics::default()),
+    )
+    .unwrap();
+
+    // …and every response must match the in-memory source model exactly
+    // (the export → load → serve acceptance criterion).
+    let want = source.generate(&[2, 8], 5);
+    let responses: Vec<_> = rx_out.iter().collect();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert_eq!(r.tokens, want, "served tokens diverge from in-memory model");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_hot_swap_from_disk_changes_served_model() {
+    let dir = std::env::temp_dir().join(format!("pqm_swap_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let a = PackedModel::random(&nano_cfg(Variant::BitNet), 7);
+    let b = PackedModel::random(&nano_cfg(Variant::BitNet158), 8);
+    let path_a = dir.join("a.pqm");
+    let path_b = dir.join("b.pqm");
+    artifact::save_pqm(&a, None, &path_a).unwrap();
+    artifact::save_pqm(&b, None, &path_b).unwrap();
+
+    let registry = ModelRegistry::new();
+    registry.load_pqm("edge", &path_a).unwrap();
+    assert_eq!(registry.acquire("edge").unwrap().model.cfg.variant, Variant::BitNet);
+
+    let report = registry
+        .hot_swap_pqm("edge", &path_b, Duration::from_secs(2))
+        .unwrap();
+    assert_eq!(report.generation, 2);
+    assert!(report.drained, "no leases were outstanding");
+    assert_eq!(registry.acquire("edge").unwrap().model.cfg.variant, Variant::BitNet158);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Tier-1 gate + style gates for the rust crate, run from rust/:
+#
+#   tools/ci.sh            # build + tests + fmt + clippy
+#   tools/ci.sh --tier1    # just the tier-1 gate (build + tests)
+#
+# Requires a rust toolchain (cargo, rustfmt, clippy) on PATH.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — install the rust toolchain first" >&2
+    exit 1
+fi
+
+if [[ ! -e vendor/xla/Cargo.toml ]]; then
+    echo "ci.sh: rust/vendor/xla is missing — Cargo.toml expects the vendored" >&2
+    echo "xla-rs (PJRT) checkout there; restore it (or repoint the path dep)" >&2
+    echo "before the gate can run." >&2
+    exit 1
+fi
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" == "--tier1" ]]; then
+    echo "ci.sh: tier-1 gate passed"
+    exit 0
+fi
+
+echo "==> style: cargo fmt --check"
+cargo fmt --check
+
+echo "==> lint: cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "ci.sh: all gates passed"
