@@ -1,11 +1,13 @@
 //! Edge-serving demo (paper Appendix A + §4.5): the full deployment path —
 //! pack a model offline, export it as a `.pqm` artifact, load it back
-//! through the multi-model [`ModelRegistry`], and serve batched requests —
-//! comparing pQuant against the FP16 and BitNet1.58 baselines at identical
-//! geometry, then hot-swapping a variant in place.
+//! through the multi-model [`ModelRegistry`], and serve streamed requests
+//! through the persistent [`Engine`] — comparing pQuant against the FP16
+//! and BitNet1.58 baselines at identical geometry, then hot-swapping a
+//! generation in place *while requests are in flight*.
 //!
 //!     cargo run --release --example edge_serving
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
@@ -14,7 +16,7 @@ use pquant::artifact;
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::PackedModel;
 use pquant::report::Table;
-use pquant::serve::{load_test, ModelRegistry, ServeOptions};
+use pquant::serve::{Engine, EngineOptions, Event, GenRequest, ModelRegistry, Ticket};
 
 fn geometry(variant: Variant, n_experts: usize) -> ModelConfig {
     ModelConfig {
@@ -38,13 +40,12 @@ fn main() -> Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
-    let opts = ServeOptions { max_batch: 4, workers: 1 };
     let pqm_dir = std::path::Path::new("results/pqm");
-    let registry = ModelRegistry::new();
+    let registry = Arc::new(ModelRegistry::new());
 
     let mut t = Table::new(
         "Edge serving from .pqm artifacts at matched geometry (16 new tokens/request)",
-        &["engine", ".pqm MiB", "load ms", "tokens/s", "p50 ms", "p95 ms", "vs fp16"],
+        &["engine", ".pqm MiB", "load ms", "tokens/s", "ttft p50 ms", "ttft p95 ms", "vs fp16"],
     );
     let mut fp16_tps = 0.0;
     for (label, variant, n) in [
@@ -72,16 +73,27 @@ fn main() -> Result<()> {
         );
         drop(lease);
 
-        // Serve under a held lease so a concurrent hot-swap would observe
-        // these workers through the drain barrier.
-        let (lease, models) = registry.replicas(label, opts.workers).unwrap();
-        let (responses, _, tps) = load_test(models, n_requests, 8, 16, &opts);
-        drop(lease);
-        let mut lats: Vec<f64> = responses
-            .iter()
-            .map(|r| (r.queue_wait + r.service_time).as_secs_f64() * 1e3)
+        // Serve through the engine: workers hold registry leases, so a
+        // concurrent hot-swap would observe them through the drain barrier.
+        let engine = Engine::start(
+            &registry,
+            EngineOptions {
+                model: label.into(),
+                max_batch: 4,
+                queue_depth: n_requests.max(64),
+                ..EngineOptions::default()
+            },
+        )?;
+        let t0 = Instant::now();
+        let tickets: Vec<Ticket> = (0..n_requests)
+            .map(|id| {
+                let prompt: Vec<u32> = (0..8).map(|i| (id as u32 + i as u32) % 1024).collect();
+                engine.submit(GenRequest::greedy(prompt, 16)).expect("queue fits the burst")
+            })
             .collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let toks: usize = tickets.into_iter().map(|t| t.wait().tokens.len()).sum();
+        let tps = toks as f64 / t0.elapsed().as_secs_f64();
+        let ttft = engine.shutdown().ttft_percentiles();
         if variant == Variant::Fp16 {
             fp16_tps = tps;
         }
@@ -90,24 +102,41 @@ fn main() -> Result<()> {
             format!("{:.1}", file_bytes as f64 / (1024.0 * 1024.0)),
             format!("{load_ms:.1}"),
             format!("{tps:.1}"),
-            format!("{:.1}", lats[lats.len() / 2]),
-            format!("{:.1}", lats[(lats.len() * 95 / 100).min(lats.len() - 1)]),
+            format!("{:.1}", ttft.p50),
+            format!("{:.1}", ttft.p95),
             format!("{:.2}x", tps / fp16_tps),
         ]);
     }
     t.print();
 
-    // Warm hot-swap: roll "pquant n1" forward to the n8 artifact without
-    // restarting the process — load new .pqm, install, drain the old
-    // generation's leases.
+    // Warm hot-swap under load: roll "pquant n1" forward to the n8 artifact
+    // while requests are still decoding — in-flight requests drain on the
+    // old generation's lease, new submissions land on the new one.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "pquant n1".into(), max_batch: 2, ..EngineOptions::default() },
+    )?;
+    let inflight = engine.submit(GenRequest::greedy(vec![5, 9, 2], 48))?;
+    // Wait until it is actually decoding so the swap races real work.
+    while !matches!(inflight.recv(), Some(Event::Token(_)) | None) {}
     let n8_path = pqm_dir.join(format!("{}.pqm", geometry(Variant::PQuant, 8).name));
     let report = registry.hot_swap_pqm("pquant n1", &n8_path, Duration::from_secs(2))?;
+    let post_swap = engine.submit(GenRequest::greedy(vec![5, 9, 2], 16))?;
+    let old = inflight.wait();
+    let new = post_swap.wait();
     println!(
         "\nhot-swapped 'pquant n1' → n8 artifact: generation {} (drained: {}, {:.1} ms)",
         report.generation,
         report.drained,
         report.waited.as_secs_f64() * 1e3
     );
+    println!(
+        "  in-flight request finished on generation {} ({} tokens); post-swap request served by generation {}",
+        old.generation,
+        old.tokens.len(),
+        new.generation
+    );
+    engine.shutdown();
     for m in registry.info() {
         println!(
             "  {:12} gen {} {:10} {:7.2}M params {:7.1} MiB resident",

@@ -1,9 +1,11 @@
-//! Serving throughput bench (§4.5): packed engines under the continuous
-//! batcher at matched geometry.
+//! Serving throughput bench (§4.5): packed engines under the `Engine`
+//! continuous batcher at matched geometry.
+
+use std::sync::Arc;
 
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::PackedModel;
-use pquant::serve::{load_test, ServeOptions};
+use pquant::serve::{Engine, EngineOptions, GenRequest, ModelRegistry, Ticket};
 use pquant::util::bench::Bencher;
 
 fn cfg(variant: Variant, n: usize) -> ModelConfig {
@@ -25,16 +27,37 @@ fn cfg(variant: Variant, n: usize) -> ModelConfig {
 
 fn main() {
     let mut b = Bencher::quick();
+    // Steady-state engine throughput: one persistent engine per variant,
+    // each iteration pushes a fresh burst of requests through it.
     for (label, variant, n) in [
         ("fp16", Variant::Fp16, 1),
         ("bitnet1.58", Variant::BitNet158, 1),
         ("pquant-n1", Variant::PQuant, 1),
         ("pquant-n8", Variant::PQuant, 8),
     ] {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register(label, PackedModel::random(&cfg(variant, n), 3), None);
+        let engine = Engine::start(
+            &registry,
+            EngineOptions {
+                model: label.into(),
+                max_batch: 4,
+                workers: 1,
+                queue_depth: 16,
+                prefill_chunk: 16,
+            },
+        )
+        .expect("model registered above");
         b.bench(&format!("serve 8req x 8tok {label}"), || {
-            let model = PackedModel::random(&cfg(variant, n), 3);
-            load_test(vec![model], 8, 4, 8, &ServeOptions { max_batch: 4, workers: 1 })
+            let tickets: Vec<Ticket> = (0..8u32)
+                .map(|id| {
+                    let prompt: Vec<u32> = (0..4).map(|i| (id + i) % 512).collect();
+                    engine.submit(GenRequest::greedy(prompt, 8)).expect("queue fits burst")
+                })
+                .collect();
+            tickets.into_iter().map(|t| t.wait().tokens.len()).sum::<usize>()
         });
+        engine.shutdown();
     }
     // decode-step microbench (single token, batch 1)
     for (label, variant, n) in [

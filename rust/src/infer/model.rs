@@ -191,7 +191,10 @@ impl PackedModel {
     }
 }
 
-fn argmax(x: &[f32]) -> usize {
+/// Greedy decode argmax. Shared with the serving sampler: engine-greedy
+/// output stays bit-exact with [`PackedModel::generate`] only while both
+/// paths use this one function (ties break to the lowest index).
+pub(crate) fn argmax(x: &[f32]) -> usize {
     let mut bi = 0;
     let mut bv = f32::NEG_INFINITY;
     for (i, &v) in x.iter().enumerate() {

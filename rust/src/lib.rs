@@ -20,8 +20,10 @@
 //!   training state through the AOT train step
 //! * [`coordinator`] — two-phase schedule, training loop, checkpoints,
 //!   stability monitor
-//! * [`serve`] — threaded batching inference server + multi-model
-//!   [`serve::ModelRegistry`] (replica hand-out, warm hot-swap)
+//! * [`serve`] — the persistent [`serve::Engine`] session API (streaming
+//!   tickets, per-request sampling, cancellation, bounded-queue
+//!   backpressure, chunked prefill) over the multi-model
+//!   [`serve::ModelRegistry`] (lease-counted replicas, warm hot-swap)
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics

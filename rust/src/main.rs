@@ -90,7 +90,9 @@ USAGE:
   repro eval --model P.pqm [--tokens N]
   repro export <config> <out.pqm> [--checkpoint P] [--tokenizer] [--random SEED]
   repro inspect <path.pqm>
-  repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N] [--batch N] [--workers N]
+  repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N]
+              [--batch N] [--workers N] [--queue N] [--prefill-chunk N]
+              [--temperature F] [--top-k N] [--seed N]
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -216,15 +218,24 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use pquant::serve::{Engine, EngineOptions, GenRequest, SamplingParams, SubmitError};
+    use std::time::{Duration, Instant};
+
     let requests = args.flag("requests", 16usize)?;
     let new_tokens = args.flag("new-tokens", 32usize)?;
-    let opts = pquant::serve::ServeOptions {
+    let opts = EngineOptions {
+        model: "serve".into(),
         max_batch: args.flag("batch", 4usize)?,
         workers: args.flag("workers", 1usize)?,
+        queue_depth: args.flag("queue", 64usize)?,
+        prefill_chunk: args.flag("prefill-chunk", 16usize)?,
     };
+    let temperature = args.flag("temperature", 0.0f32)?;
+    let top_k = args.flag("top-k", 0usize)?;
+    let seed = args.flag("seed", 0u64)?;
     // All serving flows through the registry: load (from .pqm or a live
-    // TrainState), register under a name, hand replicas to the workers.
-    let registry = pquant::serve::ModelRegistry::new();
+    // TrainState), register under a name, start the engine against it.
+    let registry = std::sync::Arc::new(pquant::serve::ModelRegistry::new());
     if let Some(path) = args.flags.get("model") {
         registry.load_pqm("serve", path)?;
     } else {
@@ -249,22 +260,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.storage_bytes as f64 / (1024.0 * 1024.0)
         );
     }
-    let (lease, models) = registry
-        .replicas("serve", opts.workers.max(1))
-        .expect("model registered above");
-    let (responses, wall, tps) =
-        pquant::serve::load_test(models, requests, 8, new_tokens, &opts);
-    drop(lease); // serving done — release the drain barrier
+    let vocab = registry.acquire("serve").expect("registered above").model.cfg.vocab as u32;
+    let engine = Engine::start(&registry, opts)?;
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let prompt: Vec<u32> = (0..8).map(|i| (id as u32 + i as u32) % vocab).collect();
+        let sampling = SamplingParams {
+            temperature,
+            top_k,
+            seed: seed.wrapping_add(id as u64),
+            stop_tokens: vec![],
+        };
+        let mut req = GenRequest::sampled(prompt, new_tokens, sampling);
+        // Block-retry on backpressure: the load generator outpacing the
+        // bounded queue is expected, not an error.
+        loop {
+            match engine.submit(req) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                Err(SubmitError::QueueFull(r)) => {
+                    req = r;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(SubmitError::ShuttingDown(_)) => bail!("engine shut down mid-test"),
+            }
+        }
+    }
+    let stats: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    let wall = t0.elapsed();
+    let metrics = engine.shutdown();
+    let toks = metrics.tokens_out.load(std::sync::atomic::Ordering::Relaxed) as f64;
     println!(
         "{} requests × {} tokens in {:.2}s → {:.1} tokens/s",
-        responses.len(),
+        stats.len(),
         new_tokens,
         wall.as_secs_f64(),
-        tps
+        toks / wall.as_secs_f64()
     );
-    let mut lats: Vec<f64> = responses
+    let mut lats: Vec<f64> = stats
         .iter()
-        .map(|r| (r.queue_wait + r.service_time).as_secs_f64() * 1e3)
+        .map(|s| (s.queue_wait + s.service_time).as_secs_f64() * 1e3)
         .collect();
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!(
@@ -272,6 +310,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lats[lats.len() / 2],
         lats[(lats.len() * 95 / 100).min(lats.len() - 1)],
         lats.last().unwrap()
+    );
+    let qw = metrics.queue_wait_percentiles();
+    let tt = metrics.ttft_percentiles();
+    println!(
+        "queue wait ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   ttft ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        qw.p50, qw.p95, qw.p99, tt.p50, tt.p95, tt.p99
     );
     Ok(())
 }

@@ -1,0 +1,762 @@
+//! The `Engine` session API: a persistent continuous-batching server over
+//! registry-leased replicas, with streaming, sampling, cancellation and
+//! bounded-queue backpressure.
+//!
+//! Lifecycle:
+//!   * [`Engine::start`] spawns `workers` decode threads against a named
+//!     model in a [`ModelRegistry`](super::ModelRegistry).  Workers acquire
+//!     a [`Lease`](super::Lease) per generation at admission time, so a
+//!     [`hot_swap`](super::ModelRegistry::hot_swap) is actually picked up:
+//!     new admissions decode on the new generation while in-flight requests
+//!     drain on the old lease (the lease drop *is* the drain barrier).
+//!   * [`Engine::submit`] enforces a bounded admission queue; when it is
+//!     full the caller gets [`SubmitError::QueueFull`] back immediately
+//!     instead of unbounded buffering — backpressure, not memory growth.
+//!   * Each accepted request returns a [`Ticket`]: a streaming event
+//!     channel ([`Event::Prefilled`] / [`Event::Token`] / [`Event::Done`])
+//!     plus [`Ticket::cancel`], observed between decode slices.
+//!
+//! Scheduling: the worker loop runs *slices* over the active set — each
+//! slice advances a request by either one prefill chunk
+//! ([`EngineOptions::prefill_chunk`] prompt tokens) or one decoded token —
+//! so a long prompt never stalls the whole batch, and the active set
+//! (prefilling + decoding) never exceeds `max_batch`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::infer::{KvCache, PackedModel};
+use crate::util::rng::Rng;
+
+use super::{Lease, ModelRegistry};
+
+/// Per-request sampling policy. The default is greedy argmax, which
+/// reproduces [`PackedModel::generate`] bit-exactly.
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0.0` means greedy argmax.
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest logits; `0` means the full
+    /// vocabulary. Ignored under greedy.
+    pub top_k: usize,
+    /// Seed for the per-request [`Rng`] — outputs are deterministic per
+    /// (prompt, params, seed) regardless of batching or worker count.
+    pub seed: u64,
+    /// Emitting any of these tokens ends the generation early (the stop
+    /// token itself is included in the output).
+    pub stop_tokens: Vec<u32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0, stop_tokens: Vec::new() }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams::default()
+    }
+}
+
+/// A generation request submitted to an [`Engine`].
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    /// Token budget; `0` completes immediately at admission with empty
+    /// output (it never reaches the decode loop, so no underflow).
+    pub n_new: usize,
+    pub sampling: SamplingParams,
+}
+
+impl GenRequest {
+    /// Greedy request — today's default serving behavior.
+    pub fn greedy(prompt: Vec<u32>, n_new: usize) -> GenRequest {
+        GenRequest { prompt, n_new, sampling: SamplingParams::greedy() }
+    }
+
+    pub fn sampled(prompt: Vec<u32>, n_new: usize, sampling: SamplingParams) -> GenRequest {
+        GenRequest { prompt, n_new, sampling }
+    }
+}
+
+/// Why a generation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted the full `n_new` budget.
+    Length,
+    /// Hit one of `stop_tokens`.
+    Stop,
+    /// [`Ticket::cancel`] (or engine teardown) ended it early.
+    Cancelled,
+}
+
+/// Final accounting for one request, delivered in [`Event::Done`].
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Registry generation of the replica that served the request.
+    pub generation: u64,
+    /// Submission → admission into the active set.
+    pub queue_wait: Duration,
+    /// Submission → first emitted token (None if cancelled before one).
+    pub ttft: Option<Duration>,
+    /// Admission → completion.
+    pub service_time: Duration,
+}
+
+/// Streaming events delivered on a [`Ticket`], in order:
+/// `Prefilled`, then zero or more `Token`s, then exactly one `Done`.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The whole prompt has been fed through the model.
+    Prefilled { prompt_len: usize },
+    /// One decoded token, as soon as it exists.
+    Token(u32),
+    /// Terminal event; no further events follow.
+    Done(GenStats),
+}
+
+/// Why [`Engine::submit`] rejected a request. The request rides back in
+/// the error so backpressured callers can retry without cloning.
+#[derive(Debug, Clone)]
+pub enum SubmitError {
+    /// The bounded admission queue is full — retry later (backpressure).
+    QueueFull(GenRequest),
+    /// The engine is shutting down; no new work is accepted.
+    ShuttingDown(GenRequest),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => write!(f, "admission queue full"),
+            SubmitError::ShuttingDown(_) => write!(f, "engine shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Client handle on one submitted request: a streaming event receiver plus
+/// cooperative cancellation.
+pub struct Ticket {
+    pub id: u64,
+    events: Receiver<Event>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl Ticket {
+    /// Request cancellation; the worker observes it between decode slices
+    /// and finishes the request with [`FinishReason::Cancelled`].
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Blocking receive of the next event; `None` once the stream ends.
+    pub fn recv(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Drain the stream to completion and return the final stats.
+    pub fn wait(self) -> GenStats {
+        let mut streamed = Vec::new();
+        loop {
+            match self.events.recv() {
+                Ok(Event::Done(stats)) => return stats,
+                Ok(Event::Token(t)) => streamed.push(t),
+                Ok(Event::Prefilled { .. }) => {}
+                // Worker died without a Done (engine torn down mid-flight):
+                // surface what streamed as a cancelled result.
+                Err(_) => {
+                    return GenStats {
+                        id: self.id,
+                        tokens: streamed,
+                        finish: FinishReason::Cancelled,
+                        generation: 0,
+                        queue_wait: Duration::ZERO,
+                        ttft: None,
+                        service_time: Duration::ZERO,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Latency summary (milliseconds) over recorded per-request samples.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub n: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    fn of(samples: &[f64]) -> Percentiles {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |q: usize| s[(s.len() * q / 100).min(s.len() - 1)];
+        Percentiles { n: s.len(), p50: at(50), p95: at(95), p99: at(99) }
+    }
+}
+
+/// Latency samples kept per series: a persistent engine must not grow
+/// metric storage without bound, so the ring holds the most recent window
+/// and percentile queries sort at most this many samples.
+const LATENCY_SAMPLES: usize = 4096;
+
+#[derive(Debug, Default)]
+struct SampleRing {
+    samples: Vec<f64>,
+    next: usize,
+}
+
+impl SampleRing {
+    fn push(&mut self, v: f64) {
+        if self.samples.len() < LATENCY_SAMPLES {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+        }
+        self.next = (self.next + 1) % LATENCY_SAMPLES;
+    }
+}
+
+/// Aggregate serving metrics, shared by all workers of one engine.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub completed: AtomicUsize,
+    pub cancelled: AtomicUsize,
+    pub tokens_out: AtomicUsize,
+    /// Peak concurrent active requests observed (batcher invariant probe).
+    pub peak_active: AtomicUsize,
+    queue_wait_ms: Mutex<SampleRing>,
+    ttft_ms: Mutex<SampleRing>,
+}
+
+impl ServeMetrics {
+    fn record_latency(&self, queue_wait: Duration, ttft: Option<Duration>) {
+        self.queue_wait_ms.lock().unwrap().push(queue_wait.as_secs_f64() * 1e3);
+        if let Some(t) = ttft {
+            self.ttft_ms.lock().unwrap().push(t.as_secs_f64() * 1e3);
+        }
+    }
+
+    /// p50/p95/p99 of submission → admission, in ms (most recent window).
+    pub fn queue_wait_percentiles(&self) -> Percentiles {
+        Percentiles::of(&self.queue_wait_ms.lock().unwrap().samples)
+    }
+
+    /// p50/p95/p99 of submission → first token, in ms (most recent window).
+    pub fn ttft_percentiles(&self) -> Percentiles {
+        Percentiles::of(&self.ttft_ms.lock().unwrap().samples)
+    }
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Registry name the workers serve.
+    pub model: String,
+    /// Max concurrent requests per worker (prefilling + decoding).
+    pub max_batch: usize,
+    /// Decode threads; each holds its own replica(s).
+    pub workers: usize,
+    /// Bounded admission queue depth; beyond it `submit` returns
+    /// [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+    /// Prompt tokens fed per scheduling slice, so prefill interleaves with
+    /// decode instead of stalling the active set.
+    pub prefill_chunk: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            model: "default".into(),
+            max_batch: 4,
+            workers: 1,
+            queue_depth: 64,
+            prefill_chunk: 16,
+        }
+    }
+}
+
+struct Admission {
+    id: u64,
+    req: GenRequest,
+    enqueued: Instant,
+    events: Sender<Event>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// Persistent serving engine. Dropping (or [`Engine::shutdown`]) closes the
+/// admission queue, drains in-flight requests, and joins the workers.
+pub struct Engine {
+    tx: Option<SyncSender<Admission>>,
+    handles: Vec<JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    next_id: AtomicU64,
+}
+
+impl Engine {
+    /// Spawn the decode workers against `opts.model` in `registry`. Fails
+    /// fast if no such model is registered.
+    pub fn start(registry: &Arc<ModelRegistry>, opts: EngineOptions) -> Result<Engine> {
+        registry
+            .acquire(&opts.model)
+            .ok_or_else(|| anyhow!("no model registered under {:?}", opts.model))?;
+        let (tx, rx) = sync_channel(opts.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(ServeMetrics::default());
+        let handles = (0..opts.workers.max(1))
+            .map(|_| {
+                let registry = registry.clone();
+                let rx = rx.clone();
+                let metrics = metrics.clone();
+                let opts = opts.clone();
+                std::thread::spawn(move || worker_loop(registry, rx, opts, metrics))
+            })
+            .collect();
+        Ok(Engine { tx: Some(tx), handles, metrics, next_id: AtomicU64::new(0) })
+    }
+
+    /// Submit a request. Zero-budget requests complete immediately with
+    /// empty output; otherwise the request enters the bounded queue or is
+    /// rejected with [`SubmitError::QueueFull`].
+    pub fn submit(&self, req: GenRequest) -> std::result::Result<Ticket, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::ShuttingDown(req));
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (etx, erx) = channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let ticket = Ticket { id, events: erx, cancelled: cancelled.clone() };
+        if req.n_new == 0 {
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = etx.send(Event::Done(GenStats {
+                id,
+                tokens: Vec::new(),
+                finish: FinishReason::Length,
+                generation: 0,
+                queue_wait: Duration::ZERO,
+                ttft: None,
+                service_time: Duration::ZERO,
+            }));
+            return Ok(ticket);
+        }
+        let adm = Admission { id, req, enqueued: Instant::now(), events: etx, cancelled };
+        match tx.try_send(adm) {
+            Ok(()) => Ok(ticket),
+            Err(TrySendError::Full(adm)) => Err(SubmitError::QueueFull(adm.req)),
+            Err(TrySendError::Disconnected(adm)) => Err(SubmitError::ShuttingDown(adm.req)),
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// Stop accepting work, drain in-flight requests, join the workers.
+    pub fn shutdown(mut self) -> Arc<ServeMetrics> {
+        self.close();
+        self.metrics.clone()
+    }
+
+    fn close(&mut self) {
+        self.tx.take(); // disconnect: workers drain their active sets, then exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+// ------------------------------------------------------------------ worker
+
+/// One leased replica a worker decodes on. Dropping the slot drops the
+/// lease — that is what the registry's hot-swap drain barrier counts.
+struct ReplicaSlot {
+    lease: Lease,
+    model: PackedModel,
+    inflight: usize,
+}
+
+/// Worker-local replica pool. Requests pin the slot (generation) they were
+/// admitted on; new admissions track the registry's current generation.
+struct ReplicaPool {
+    registry: Arc<ModelRegistry>,
+    name: String,
+    slots: Vec<Option<ReplicaSlot>>,
+    newest: Option<usize>,
+}
+
+impl ReplicaPool {
+    /// Slot serving the registry's *current* generation, cloning a fresh
+    /// replica if a hot-swap moved past everything we hold. Returns `None`
+    /// only when the model was removed and no replica survives.
+    fn current_slot(&mut self) -> Option<usize> {
+        match self.registry.acquire(&self.name) {
+            Some(lease) => {
+                if let Some(n) = self.newest {
+                    if let Some(s) = self.slots[n].as_ref() {
+                        // Entry identity, not generation number: a
+                        // remove+re-register resets the per-name counter,
+                        // so equal numbers can name different weights.
+                        if Arc::ptr_eq(s.lease.entry(), lease.entry()) {
+                            return Some(n); // probe lease drops here
+                        }
+                    }
+                }
+                let model = lease.replica();
+                let slot = ReplicaSlot { lease, model, inflight: 0 };
+                let idx = match self.slots.iter().position(|s| s.is_none()) {
+                    Some(i) => {
+                        self.slots[i] = Some(slot);
+                        i
+                    }
+                    None => {
+                        self.slots.push(Some(slot));
+                        self.slots.len() - 1
+                    }
+                };
+                if let Some(prev) = self.newest {
+                    if prev != idx {
+                        self.retire_if_idle(prev);
+                    }
+                }
+                self.newest = Some(idx);
+                Some(idx)
+            }
+            // Removed from the registry: keep draining on the newest
+            // surviving replica (the lease keeps its weights alive).
+            None => self.newest.filter(|&n| self.slots[n].is_some()),
+        }
+    }
+
+    /// One request on `idx` finished; drop the slot (and its lease) once it
+    /// is idle and superseded. The newest slot is kept without probing the
+    /// registry — a swap that outran it is caught by the next admission
+    /// (`current_slot`) or by idle housekeeping (`drop_idle_stale`), so the
+    /// common no-swap completion pays no registry round-trip.
+    fn release(&mut self, idx: usize) {
+        let Some(s) = self.slots[idx].as_mut() else { return };
+        s.inflight -= 1;
+        if s.inflight == 0 && Some(idx) != self.newest {
+            self.drop_slot(idx);
+        }
+    }
+
+    /// Idle housekeeping: release leases a hot-swap (or removal) has moved
+    /// past, so a drain barrier is not held open by an idle worker.
+    fn drop_idle_stale(&mut self) {
+        for idx in 0..self.slots.len() {
+            let idle = self.slots[idx].as_ref().is_some_and(|s| s.inflight == 0);
+            if idle && (Some(idx) != self.newest || self.entry_stale(idx)) {
+                self.drop_slot(idx);
+            }
+        }
+    }
+
+    /// Does the registry currently serve a different entry than `idx` holds?
+    fn entry_stale(&self, idx: usize) -> bool {
+        let held = self.slots[idx].as_ref().unwrap().lease.entry();
+        match self.registry.acquire(&self.name) {
+            Some(current) => !Arc::ptr_eq(held, current.entry()),
+            None => true, // model removed: holding the lease serves nothing
+        }
+    }
+
+    fn drop_slot(&mut self, idx: usize) {
+        self.slots[idx] = None;
+        if Some(idx) == self.newest {
+            self.newest = None;
+        }
+    }
+
+    fn retire_if_idle(&mut self, idx: usize) {
+        if self.slots[idx].as_ref().is_some_and(|s| s.inflight == 0) {
+            self.drop_slot(idx);
+        }
+    }
+}
+
+/// One in-flight request: its own caches, RNG, and event stream; pinned to
+/// the replica slot it was admitted on.
+struct ActiveRequest {
+    id: u64,
+    prompt: Vec<u32>,
+    n_new: usize,
+    sampling: SamplingParams,
+    rng: Rng,
+    tokens: Vec<u32>,
+    last_logits: Vec<f32>,
+    /// Prompt tokens fed so far; prefill is done when it reaches
+    /// `prompt.len()`.
+    prefill_pos: usize,
+    pos: usize,
+    caches: Vec<KvCache>,
+    slot: usize,
+    generation: u64,
+    enqueued: Instant,
+    started: Instant,
+    first_token: Option<Duration>,
+    events: Sender<Event>,
+    cancelled: Arc<AtomicBool>,
+}
+
+fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
+    let queue_wait = a.started - a.enqueued;
+    match reason {
+        FinishReason::Cancelled => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
+        _ => metrics.completed.fetch_add(1, Ordering::Relaxed),
+    };
+    metrics.record_latency(queue_wait, a.first_token);
+    let _ = a.events.send(Event::Done(GenStats {
+        id: a.id,
+        tokens: a.tokens,
+        finish: reason,
+        generation: a.generation,
+        queue_wait,
+        ttft: a.first_token,
+        service_time: a.started.elapsed(),
+    }));
+}
+
+/// Reject an admission that never reached the active set.
+fn reject(adm: Admission, metrics: &ServeMetrics) {
+    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+    let _ = adm.events.send(Event::Done(GenStats {
+        id: adm.id,
+        tokens: Vec::new(),
+        finish: FinishReason::Cancelled,
+        generation: 0,
+        queue_wait: adm.enqueued.elapsed(),
+        ttft: None,
+        service_time: Duration::ZERO,
+    }));
+}
+
+fn worker_loop(
+    registry: Arc<ModelRegistry>,
+    rx: Arc<Mutex<Receiver<Admission>>>,
+    opts: EngineOptions,
+    metrics: Arc<ServeMetrics>,
+) {
+    let max_batch = opts.max_batch.max(1);
+    let prefill_chunk = opts.prefill_chunk.max(1);
+    let mut pool = ReplicaPool {
+        registry,
+        name: opts.model.clone(),
+        slots: Vec::new(),
+        newest: None,
+    };
+    let mut active: Vec<ActiveRequest> = Vec::new();
+    let mut closed = false;
+    loop {
+        // ---- admission: fill free batch slots from the shared queue ----
+        while active.len() < max_batch && !closed {
+            // Never hold the queue lock across a blocking wait: an idle
+            // worker parked inside the Mutex would stall every sibling's
+            // admission check (which runs once per decode slice).
+            let polled = {
+                let rx = rx.lock().unwrap();
+                match rx.try_recv() {
+                    Ok(adm) => Some(adm),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        closed = true;
+                        None
+                    }
+                }
+            };
+            let Some(adm) = polled else { break };
+            if adm.cancelled.load(Ordering::Relaxed) {
+                reject(adm, &metrics);
+                continue;
+            }
+            let Some(slot) = pool.current_slot() else {
+                reject(adm, &metrics); // model gone, nothing to drain on
+                continue;
+            };
+            let started = Instant::now();
+            let (generation, vocab, caches) = {
+                let s = pool.slots[slot].as_mut().unwrap();
+                s.inflight += 1;
+                let max_seq = adm.req.prompt.len() + adm.req.n_new + 1;
+                (s.lease.generation, s.model.cfg.vocab, s.model.new_caches(max_seq))
+            };
+            if adm.req.prompt.is_empty() {
+                let _ = adm.events.send(Event::Prefilled { prompt_len: 0 });
+            }
+            active.push(ActiveRequest {
+                id: adm.id,
+                rng: Rng::new(adm.req.sampling.seed),
+                tokens: Vec::with_capacity(adm.req.n_new),
+                last_logits: vec![0.0; vocab],
+                prefill_pos: 0,
+                pos: 0,
+                caches,
+                slot,
+                generation,
+                enqueued: adm.enqueued,
+                started,
+                first_token: None,
+                events: adm.events,
+                cancelled: adm.cancelled,
+                prompt: adm.req.prompt,
+                n_new: adm.req.n_new,
+                sampling: adm.req.sampling,
+            });
+            metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
+        }
+        if active.is_empty() {
+            pool.drop_idle_stale();
+            if closed {
+                return;
+            }
+            // Idle backoff outside the queue lock (see admission above).
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        // ---- one slice per active: a prefill chunk or one decoded token --
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].cancelled.load(Ordering::Relaxed) {
+                let a = active.swap_remove(i);
+                pool.release(a.slot);
+                finish(a, FinishReason::Cancelled, &metrics);
+                continue;
+            }
+            let slot = active[i].slot;
+            let model = &mut pool.slots[slot].as_mut().unwrap().model;
+            let a = &mut active[i];
+            if a.prefill_pos < a.prompt.len() {
+                let end = (a.prefill_pos + prefill_chunk).min(a.prompt.len());
+                for pos in a.prefill_pos..end {
+                    a.last_logits = model.decode_step(a.prompt[pos], pos, &mut a.caches);
+                }
+                a.prefill_pos = end;
+                if end == a.prompt.len() {
+                    a.pos = end;
+                    let _ = a.events.send(Event::Prefilled { prompt_len: end });
+                }
+                i += 1;
+                continue;
+            }
+            let next = sample_token(&a.last_logits, &a.sampling, &mut a.rng);
+            a.tokens.push(next);
+            if a.first_token.is_none() {
+                a.first_token = Some(a.enqueued.elapsed());
+            }
+            metrics.tokens_out.fetch_add(1, Ordering::Relaxed);
+            let _ = a.events.send(Event::Token(next));
+            let stopped = a.sampling.stop_tokens.contains(&next);
+            if stopped || a.tokens.len() >= a.n_new {
+                let a = active.swap_remove(i);
+                pool.release(a.slot);
+                finish(a, if stopped { FinishReason::Stop } else { FinishReason::Length }, &metrics);
+            } else {
+                a.last_logits = model.decode_step(next, a.pos, &mut a.caches);
+                a.pos += 1;
+                i += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- sampling
+
+// The one argmax: greedy engine output is bit-exact with
+// `PackedModel::generate` only while both call the same function.
+use crate::infer::model::argmax;
+
+/// Greedy argmax when `temperature <= 0`, otherwise temperature softmax
+/// over the top-k logits, drawn from the request's seeded RNG.
+fn sample_token(logits: &[f32], p: &SamplingParams, rng: &mut Rng) -> u32 {
+    if p.temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    let k = if p.top_k == 0 { logits.len() } else { p.top_k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if k < idx.len() {
+        // O(V) partition of the k largest — a full-vocab sort per decoded
+        // token is wasted work when k is small.
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    // Stable softmax over the (unordered) candidate set.
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) / p.temperature) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_samples() {
+        let p = Percentiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(p.n, 10);
+        assert_eq!(p.p50, 6.0);
+        assert_eq!(p.p95, 10.0);
+        assert_eq!(p.p99, 10.0);
+        assert_eq!(Percentiles::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.5];
+        let mut rng = Rng::new(1);
+        let p = SamplingParams::greedy();
+        for _ in 0..5 {
+            assert_eq!(sample_token(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_and_top_k_bounded() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let p = SamplingParams { temperature: 0.8, top_k: 4, seed: 9, stop_tokens: vec![] };
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..50).map(|_| sample_token(&logits, &p, &mut rng)).collect::<Vec<u32>>()
+        };
+        assert_eq!(draw(9), draw(9));
+        // Every draw must come from the 4 largest logits.
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let top: Vec<u32> = order[..4].iter().map(|&i| i as u32).collect();
+        assert!(draw(9).iter().all(|t| top.contains(t)));
+    }
+}

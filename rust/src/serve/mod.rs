@@ -1,37 +1,43 @@
-//! Threaded serving engine: request queue → continuous token-level batcher
-//! → packed-model decode workers (the §4.5 / Appendix A deployment story:
-//! edge inference where GEMV dominates and weight traffic is the
+//! Serving layer: the persistent [`Engine`] session API over the
+//! multi-model [`ModelRegistry`] (the §4.5 / Appendix A deployment story:
+//! edge inference where 1-bit GEMV dominates and weight traffic is the
 //! bottleneck).
 //!
 //! Architecture (std threads; the offline environment has no tokio):
-//!   * clients submit [`Request`]s over an mpsc channel
-//!   * each worker owns one [`PackedModel`] replica and runs *continuous
-//!     batching*: an active set of ≤ `max_batch` requests advances one
-//!     token per iteration; finished requests are replaced from the queue
-//!     immediately (no wave barriers)
-//!   * per-request queueing/service latency and aggregate tokens/s are
-//!     recorded for the throughput experiments
+//!   * [`Engine::start`] spawns continuous-batching decode workers against
+//!     a named, registry-leased model — a [`ModelRegistry::hot_swap`] is
+//!     picked up at admission time, so new requests decode on the new
+//!     generation while in-flight ones drain on the old lease
+//!   * [`Engine::submit`] enforces a bounded admission queue
+//!     ([`SubmitError::QueueFull`] is backpressure, not buffering) and
+//!     returns a [`Ticket`] streaming [`Event::Prefilled`] /
+//!     [`Event::Token`] / [`Event::Done`], with [`Ticket::cancel`]
+//!   * requests carry [`SamplingParams`] — greedy by default (bit-exact
+//!     with [`PackedModel::generate`]), or seeded temperature / top-k —
+//!     plus stop tokens
+//!   * workers interleave chunked prefill with decode slices, so a long
+//!     prompt never stalls the active set; [`ServeMetrics`] records
+//!     per-request queue-wait and time-to-first-token percentiles
+//!
+//! [`load_test`] survives as a thin convenience shim over an ephemeral
+//! `Engine` for the throughput experiments.
 
+pub mod engine;
 pub mod registry;
 
-pub use registry::{serve_model, Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
+pub use engine::{
+    Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, Percentiles,
+    SamplingParams, ServeMetrics, SubmitError, Ticket,
+};
+pub use registry::{Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::infer::{KvCache, PackedModel};
+use crate::infer::PackedModel;
 
-/// A generation request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<u32>,
-    pub n_new: usize,
-}
-
-/// A completed generation.
+/// A completed generation (the [`load_test`] result row).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -40,7 +46,7 @@ pub struct Response {
     pub service_time: Duration,
 }
 
-/// Server tuning knobs.
+/// Load-test tuning knobs (the engine exposes more via [`EngineOptions`]).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Max concurrent requests per worker (continuous batch width).
@@ -55,148 +61,10 @@ impl Default for ServeOptions {
     }
 }
 
-struct Active {
-    id: u64,
-    tokens: Vec<u32>,  // emitted so far
-    last_logits: Vec<f32>,
-    remaining: usize,
-    pos: usize,
-    caches: Vec<KvCache>,
-    enqueued: Instant,
-    started: Instant,
-}
-
-/// Aggregate serving metrics.
-#[derive(Debug, Default)]
-pub struct ServeMetrics {
-    pub completed: AtomicUsize,
-    pub tokens_out: AtomicUsize,
-    /// Peak concurrent active requests observed (batcher invariant probe).
-    pub peak_active: AtomicUsize,
-}
-
-/// Run workers until the request channel closes; responses go to `tx_out`.
-/// Returns aggregate wall time once all workers drain.
-pub fn serve(
-    models: Vec<PackedModel>,
-    rx: Receiver<(Request, Instant)>,
-    tx_out: Sender<Response>,
-    opts: &ServeOptions,
-    metrics: Arc<ServeMetrics>,
-) -> Duration {
-    assert!(!models.is_empty());
-    let rx = Arc::new(Mutex::new(rx));
-    let closed = Arc::new(AtomicBool::new(false));
-    let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for mut model in models {
-            let rx = rx.clone();
-            let tx_out = tx_out.clone();
-            let metrics = metrics.clone();
-            let closed = closed.clone();
-            let max_batch = opts.max_batch;
-            scope.spawn(move || {
-                let mut active: Vec<Active> = Vec::new();
-                loop {
-                    // Refill the active set.
-                    while active.len() < max_batch && !closed.load(Ordering::Relaxed) {
-                        let polled = {
-                            let rx = rx.lock().unwrap();
-                            if active.is_empty() {
-                                // Block briefly when idle.
-                                match rx.recv_timeout(Duration::from_millis(20)) {
-                                    Ok(r) => Some(r),
-                                    Err(RecvTimeoutError::Timeout) => None,
-                                    Err(RecvTimeoutError::Disconnected) => {
-                                        closed.store(true, Ordering::Relaxed);
-                                        None
-                                    }
-                                }
-                            } else {
-                                match rx.try_recv() {
-                                    Ok(r) => Some(r),
-                                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                        closed.store(true, Ordering::Relaxed);
-                                        None
-                                    }
-                                }
-                            }
-                        };
-                        let Some((req, enqueued)) = polled else { break };
-                        let started = Instant::now();
-                        // Prefill: feed the prompt.
-                        let max_seq = req.prompt.len() + req.n_new + 1;
-                        let mut caches = model.new_caches(max_seq);
-                        let mut logits = vec![0.0f32; model.cfg.vocab];
-                        for (pos, &t) in req.prompt.iter().enumerate() {
-                            logits = model.decode_step(t, pos, &mut caches);
-                        }
-                        active.push(Active {
-                            id: req.id,
-                            tokens: Vec::with_capacity(req.n_new),
-                            last_logits: logits,
-                            remaining: req.n_new,
-                            pos: req.prompt.len(),
-                            caches,
-                            enqueued,
-                            started,
-                        });
-                        // fetch_max: a load-compare-store here loses updates
-                        // when several workers race on the shared metric.
-                        metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
-                    }
-                    if active.is_empty() {
-                        if closed.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        continue;
-                    }
-                    // One decode step for every active request.
-                    let mut i = 0;
-                    while i < active.len() {
-                        let a = &mut active[i];
-                        let next = argmax(&a.last_logits) as u32;
-                        a.tokens.push(next);
-                        a.remaining -= 1;
-                        metrics.tokens_out.fetch_add(1, Ordering::Relaxed);
-                        if a.remaining == 0 {
-                            let a = active.swap_remove(i);
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            let _ = tx_out.send(Response {
-                                id: a.id,
-                                queue_wait: a.started - a.enqueued,
-                                service_time: a.started.elapsed(),
-                                tokens: a.tokens,
-                            });
-                        } else {
-                            a.last_logits = model.decode_step(next, a.pos, &mut a.caches);
-                            a.pos += 1;
-                            i += 1;
-                        }
-                    }
-                }
-            });
-        }
-        drop(tx_out);
-    });
-    t0.elapsed()
-}
-
-fn argmax(x: &[f32]) -> usize {
-    let mut bi = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &v) in x.iter().enumerate() {
-        if v > bv {
-            bi = i;
-            bv = v;
-        }
-    }
-    bi
-}
-
-/// Convenience one-shot load test: submit `n_requests` identical-shape
-/// requests, wait for completion, return (responses, wall, tokens/s).
+/// Convenience one-shot load test — a thin shim over an ephemeral
+/// [`Engine`]: register the model, submit `n_requests` identical-shape
+/// greedy requests, wait for completion, return (responses, wall,
+/// tokens/s). One worker is spawned per supplied replica.
 pub fn load_test(
     models: Vec<PackedModel>,
     n_requests: usize,
@@ -204,17 +72,54 @@ pub fn load_test(
     n_new: usize,
     opts: &ServeOptions,
 ) -> (Vec<Response>, Duration, f64) {
+    assert!(!models.is_empty());
+    // The engine serves one registry name, so only `models[0]`'s weights
+    // are served; the extra elements just set the worker count. The assert
+    // catches geometry mismatches loudly, but same-config models with
+    // different weights cannot be distinguished here — don't pass any.
+    assert!(
+        models.iter().all(|m| m.cfg == models[0].cfg),
+        "load_test takes replicas of one model, got mixed configs"
+    );
+    let workers = models.len();
     let vocab = models[0].cfg.vocab as u32;
-    let (tx, rx) = std::sync::mpsc::channel();
-    let (tx_out, rx_out) = std::sync::mpsc::channel();
-    let metrics = Arc::new(ServeMetrics::default());
-    for id in 0..n_requests {
-        let prompt: Vec<u32> = (0..prompt_len).map(|i| (id as u32 + i as u32) % vocab).collect();
-        tx.send((Request { id: id as u64, prompt, n_new }, Instant::now())).unwrap();
-    }
-    drop(tx);
-    let wall = serve(models, rx, tx_out, opts, metrics.clone());
-    let responses: Vec<Response> = rx_out.iter().collect();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("load-test", models.into_iter().next().unwrap(), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "load-test".into(),
+            max_batch: opts.max_batch,
+            workers,
+            queue_depth: n_requests.max(1),
+            ..EngineOptions::default()
+        },
+    )
+    .expect("model registered above");
+    let t0 = Instant::now();
+    let tickets: Vec<Ticket> = (0..n_requests)
+        .map(|id| {
+            let prompt: Vec<u32> =
+                (0..prompt_len).map(|i| (id as u32 + i as u32) % vocab).collect();
+            engine
+                .submit(GenRequest::greedy(prompt, n_new))
+                .expect("queue sized to hold every request")
+        })
+        .collect();
+    let responses: Vec<Response> = tickets
+        .into_iter()
+        .map(|t| {
+            let stats = t.wait();
+            Response {
+                id: stats.id,
+                tokens: stats.tokens,
+                queue_wait: stats.queue_wait,
+                service_time: stats.service_time,
+            }
+        })
+        .collect();
+    let wall = t0.elapsed();
+    let metrics = engine.shutdown();
     let toks = metrics.tokens_out.load(Ordering::Relaxed) as f64;
     (responses, wall, toks / wall.as_secs_f64())
 }
@@ -257,22 +162,6 @@ mod tests {
     }
 
     #[test]
-    fn batcher_never_exceeds_capacity() {
-        let metrics = Arc::new(ServeMetrics::default());
-        let (tx, rx) = std::sync::mpsc::channel();
-        let (tx_out, rx_out) = std::sync::mpsc::channel();
-        for id in 0..12 {
-            tx.send((Request { id, prompt: vec![1, 2], n_new: 4 }, Instant::now())).unwrap();
-        }
-        drop(tx);
-        let opts = ServeOptions { max_batch: 3, workers: 1 };
-        serve(vec![tiny_model()], rx, tx_out, &opts, metrics.clone());
-        let _ = rx_out;
-        assert!(metrics.peak_active.load(Ordering::Relaxed) <= 3);
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 12);
-    }
-
-    #[test]
     fn two_workers_split_the_load() {
         let (responses, _, _) = load_test(
             vec![tiny_model(), tiny_model()],
@@ -289,24 +178,40 @@ mod tests {
 
     #[test]
     fn deterministic_tokens_for_same_prompt() {
-        let (responses, _, _) =
-            load_test(vec![tiny_model()], 3, 0, 5, &ServeOptions::default());
-        // prompt depends on id, so use fresh identical requests instead:
-        let (tx, rx) = std::sync::mpsc::channel();
-        let (tx_out, rx_out) = std::sync::mpsc::channel();
-        for id in 0..3 {
-            tx.send((Request { id, prompt: vec![7, 9], n_new: 5 }, Instant::now())).unwrap();
-        }
-        drop(tx);
-        serve(
-            vec![tiny_model()],
-            rx,
-            tx_out,
-            &ServeOptions::default(),
-            Arc::new(ServeMetrics::default()),
+        // Identical greedy prompts must produce identical streams, and they
+        // must match the reference single-request decode loop.
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register("m", tiny_model(), None);
+        let engine = Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), ..EngineOptions::default() },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|_| engine.submit(GenRequest::greedy(vec![7, 9], 5)).unwrap())
+            .collect();
+        let streams: Vec<Vec<u32>> =
+            tickets.into_iter().map(|t| t.wait().tokens).collect();
+        assert!(streams.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(streams[0], tiny_model().generate(&[7, 9], 5));
+    }
+
+    #[test]
+    fn zero_budget_requests_complete_immediately_with_empty_output() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register("m", tiny_model(), None);
+        let engine = Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), ..EngineOptions::default() },
+        )
+        .unwrap();
+        let stats = engine.submit(GenRequest::greedy(vec![1, 2, 3], 0)).unwrap().wait();
+        assert!(stats.tokens.is_empty());
+        assert_eq!(stats.finish, FinishReason::Length);
+        assert_eq!(
+            engine.metrics().completed.load(Ordering::Relaxed),
+            1,
+            "zero-budget requests still count as completed"
         );
-        let rs: Vec<Response> = rx_out.iter().collect();
-        assert!(rs.windows(2).all(|w| w[0].tokens == w[1].tokens));
-        let _ = responses;
     }
 }

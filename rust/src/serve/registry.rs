@@ -14,17 +14,14 @@ use std::collections::HashMap;
 use std::ops::Deref;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::config::Variant;
 use crate::infer::PackedModel;
 use crate::tokenizer::Bpe;
-
-use super::{serve, Request, Response, ServeMetrics, ServeOptions};
 
 /// One immutable generation of a registered model.
 pub struct ModelEntry {
@@ -245,25 +242,6 @@ impl ModelRegistry {
     }
 }
 
-/// Serve one registered model until the request channel closes: acquires a
-/// lease (held for the whole run — the hot-swap drain barrier), clones one
-/// replica per worker, and runs the continuous batcher.
-pub fn serve_model(
-    registry: &ModelRegistry,
-    name: &str,
-    rx: Receiver<(Request, Instant)>,
-    tx_out: Sender<Response>,
-    opts: &ServeOptions,
-    metrics: Arc<ServeMetrics>,
-) -> Result<Duration> {
-    let lease = registry
-        .acquire(name)
-        .ok_or_else(|| anyhow!("no model registered under {name:?}"))?;
-    let models: Vec<PackedModel> =
-        (0..opts.workers.max(1)).map(|_| lease.replica()).collect();
-    Ok(serve(models, rx, tx_out, opts, metrics))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,28 +338,23 @@ mod tests {
     }
 
     #[test]
-    fn serve_model_matches_direct_load_test() {
-        let reg = ModelRegistry::new();
+    fn engine_served_tokens_match_direct_generation() {
+        use super::super::{Engine, EngineOptions, GenRequest};
+        let reg = Arc::new(ModelRegistry::new());
         reg.register("m", tiny(Variant::PQuant, 5), None);
-        let opts = ServeOptions { max_batch: 2, workers: 1 };
-
-        let (tx, rx) = std::sync::mpsc::channel();
-        let (tx_out, rx_out) = std::sync::mpsc::channel();
-        for id in 0..4u64 {
-            tx.send((Request { id, prompt: vec![3, 1], n_new: 5 }, Instant::now()))
-                .unwrap();
-        }
-        drop(tx);
-        serve_model(&reg, "m", rx, tx_out, &opts, Arc::new(ServeMetrics::default()))
-            .unwrap();
-        let mut via_registry: Vec<Response> = rx_out.iter().collect();
-        via_registry.sort_by_key(|r| r.id);
+        let engine = Engine::start(
+            &reg,
+            EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..4)
+            .map(|_| engine.submit(GenRequest::greedy(vec![3, 1], 5)).unwrap())
+            .collect();
 
         let mut direct = tiny(Variant::PQuant, 5);
         let want = direct.generate(&[3, 1], 5);
-        assert_eq!(via_registry.len(), 4);
-        for r in &via_registry {
-            assert_eq!(r.tokens, want, "registry-served tokens diverge");
+        for t in tickets {
+            assert_eq!(t.wait().tokens, want, "registry-served tokens diverge");
         }
     }
 

@@ -4,13 +4,14 @@
 //! version, CRC corruption) instead of yielding garbage weights.  Also
 //! covers the ModelRegistry serving path fed from a `.pqm` on disk.
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use pquant::artifact::{self, load_pqm_bytes, save_pqm_bytes};
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::block::Ffn;
 use pquant::infer::PackedModel;
-use pquant::serve::{ModelRegistry, Request, ServeMetrics, ServeOptions};
+use pquant::serve::{Engine, EngineOptions, GenRequest, ModelRegistry};
 use pquant::util::prop::check;
 use pquant::util::rng::Rng;
 
@@ -223,35 +224,31 @@ fn registry_serves_identical_tokens_from_disk_artifact() {
     let mut source = PackedModel::random(&nano_cfg(Variant::PQuant), 6);
     artifact::save_pqm(&source, None, &path).unwrap();
 
-    let registry = ModelRegistry::new();
+    let registry = Arc::new(ModelRegistry::new());
     registry.load_pqm("pquant", &path).unwrap();
 
-    // Serve through the registry with two workers…
-    let opts = ServeOptions { max_batch: 2, workers: 2 };
-    let (tx, rx) = std::sync::mpsc::channel();
-    let (tx_out, rx_out) = std::sync::mpsc::channel();
-    for id in 0..6u64 {
-        tx.send((Request { id, prompt: vec![2, 8], n_new: 5 }, Instant::now())).unwrap();
-    }
-    drop(tx);
-    pquant::serve::serve_model(
+    // Serve through the engine with two workers…
+    let engine = Engine::start(
         &registry,
-        "pquant",
-        rx,
-        tx_out,
-        &opts,
-        std::sync::Arc::new(ServeMetrics::default()),
+        EngineOptions {
+            model: "pquant".into(),
+            max_batch: 2,
+            workers: 2,
+            ..EngineOptions::default()
+        },
     )
     .unwrap();
+    let tickets: Vec<_> = (0..6)
+        .map(|_| engine.submit(GenRequest::greedy(vec![2, 8], 5)).unwrap())
+        .collect();
 
     // …and every response must match the in-memory source model exactly
     // (the export → load → serve acceptance criterion).
     let want = source.generate(&[2, 8], 5);
-    let responses: Vec<_> = rx_out.iter().collect();
-    assert_eq!(responses.len(), 6);
-    for r in &responses {
-        assert_eq!(r.tokens, want, "served tokens diverge from in-memory model");
+    for t in tickets {
+        assert_eq!(t.wait().tokens, want, "served tokens diverge from in-memory model");
     }
+    engine.shutdown();
 
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,338 @@
+//! Integration tests for the `Engine` session API: streaming agreement,
+//! cancellation, backpressure, stop tokens, seeded sampling, chunked
+//! prefill batch-invariants, and registry hot-swap under live traffic.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::serve::{
+    Engine, EngineOptions, Event, FinishReason, GenRequest, ModelRegistry, SamplingParams,
+    SubmitError,
+};
+
+fn nano_cfg(variant: Variant, name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: if variant == Variant::PQuant { 16 } else { 0 },
+        n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn registry_with(name: &str, model: PackedModel) -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(name, model, None);
+    registry
+}
+
+fn engine_on(registry: &Arc<ModelRegistry>, name: &str, max_batch: usize) -> Engine {
+    Engine::start(
+        registry,
+        EngineOptions { model: name.into(), max_batch, ..EngineOptions::default() },
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------- streaming
+
+#[test]
+fn streamed_tokens_match_batch_result_and_reference_decode() {
+    let model = PackedModel::random(&nano_cfg(Variant::PQuant, "stream"), 11);
+    let mut reference = model.clone();
+    let registry = registry_with("m", model);
+    let engine = engine_on(&registry, "m", 2);
+
+    let ticket = engine.submit(GenRequest::greedy(vec![5, 9, 2], 10)).unwrap();
+    let mut streamed = Vec::new();
+    let mut prefilled = false;
+    let stats = loop {
+        match ticket.recv().expect("stream must end with Done") {
+            Event::Prefilled { prompt_len } => {
+                assert_eq!(prompt_len, 3);
+                assert!(streamed.is_empty(), "Prefilled must precede tokens");
+                prefilled = true;
+            }
+            Event::Token(t) => streamed.push(t),
+            Event::Done(stats) => break stats,
+        }
+    };
+    assert!(prefilled);
+    // Streamed tokens, the batch result, and the single-request reference
+    // decode loop must all agree bit-exactly under greedy sampling.
+    assert_eq!(streamed, stats.tokens);
+    assert_eq!(stats.tokens, reference.generate(&[5, 9, 2], 10));
+    assert_eq!(stats.finish, FinishReason::Length);
+    assert!(stats.ttft.is_some());
+    engine.shutdown();
+}
+
+// ------------------------------------------------------------- cancellation
+
+#[test]
+fn cancel_mid_generation_stops_early() {
+    let registry =
+        registry_with("m", PackedModel::random(&nano_cfg(Variant::PQuant, "cancel"), 3));
+    let engine = engine_on(&registry, "m", 2);
+
+    let ticket = engine.submit(GenRequest::greedy(vec![1, 2], 5000)).unwrap();
+    // Let it stream a few tokens so cancellation lands mid-generation.
+    let mut seen = 0;
+    while seen < 3 {
+        if let Event::Token(_) = ticket.recv().unwrap() {
+            seen += 1;
+        }
+    }
+    ticket.cancel();
+    let stats = ticket.wait();
+    assert_eq!(stats.finish, FinishReason::Cancelled);
+    assert!(stats.tokens.len() >= 3);
+    assert!(stats.tokens.len() < 5000, "cancellation must cut the budget short");
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+}
+
+// ------------------------------------------------------------- backpressure
+
+#[test]
+fn tiny_queue_rejects_with_queue_full() {
+    let registry =
+        registry_with("m", PackedModel::random(&nano_cfg(Variant::PQuant, "queue"), 5));
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 1,
+            workers: 1,
+            queue_depth: 1,
+            prefill_chunk: 16,
+        },
+    )
+    .unwrap();
+
+    // One slot decoding + one queued: a fast burst must overflow.
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..8 {
+        match engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 64)) {
+            Ok(t) => accepted.push(t),
+            Err(SubmitError::QueueFull(req)) => {
+                assert_eq!(req.n_new, 64, "rejected request rides back intact");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "burst of 8 must overflow a depth-1 queue on 1 slot");
+    assert!(!accepted.is_empty());
+    for t in accepted {
+        assert_eq!(t.wait().tokens.len(), 64, "accepted requests still complete");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn fresh_engine_on_same_registry_keeps_serving() {
+    let registry =
+        registry_with("m", PackedModel::random(&nano_cfg(Variant::PQuant, "shut"), 5));
+    let engine = engine_on(&registry, "m", 2);
+    engine.submit(GenRequest::greedy(vec![1], 2)).unwrap().wait();
+    // After shutdown the engine is consumed; a fresh engine on the same
+    // registry keeps serving — sessions are cheap, models are not.
+    engine.shutdown();
+    let engine = engine_on(&registry, "m", 2);
+    assert_eq!(engine.submit(GenRequest::greedy(vec![1], 2)).unwrap().wait().tokens.len(), 2);
+}
+
+// -------------------------------------------------------------- stop tokens
+
+#[test]
+fn stop_token_exits_early() {
+    let model = PackedModel::random(&nano_cfg(Variant::BitNet158, "stop"), 9);
+    let mut reference = model.clone();
+    let full = reference.generate(&[3, 1], 12);
+    let stop = full[2];
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+
+    let registry = registry_with("m", model);
+    let engine = engine_on(&registry, "m", 2);
+    let req = GenRequest::sampled(
+        vec![3, 1],
+        12,
+        SamplingParams { stop_tokens: vec![stop], ..SamplingParams::greedy() },
+    );
+    let stats = engine.submit(req).unwrap().wait();
+    assert_eq!(stats.finish, FinishReason::Stop);
+    assert_eq!(stats.tokens, full[..=cut].to_vec(), "stop token is included, then exit");
+    engine.shutdown();
+}
+
+// ----------------------------------------------------------------- sampling
+
+#[test]
+fn seeded_sampling_is_deterministic_across_sessions() {
+    let registry =
+        registry_with("m", PackedModel::random(&nano_cfg(Variant::PQuant, "sample"), 21));
+    let sampled = |seed: u64| {
+        let engine = engine_on(&registry, "m", 4);
+        let req = GenRequest::sampled(
+            vec![7, 4],
+            8,
+            SamplingParams { temperature: 0.8, top_k: 8, seed, stop_tokens: vec![] },
+        );
+        let stats = engine.submit(req).unwrap().wait();
+        engine.shutdown();
+        stats.tokens
+    };
+    let a = sampled(1234);
+    let b = sampled(1234);
+    assert_eq!(a, b, "same seed must reproduce the same stream across engines");
+    assert_eq!(a.len(), 8);
+    assert!(a.iter().all(|&t| t < 64));
+}
+
+// ----------------------------------------------- chunked prefill invariants
+
+#[test]
+fn chunked_prefill_never_exceeds_max_batch() {
+    let registry =
+        registry_with("m", PackedModel::random(&nano_cfg(Variant::PQuant, "chunk"), 7));
+    // Prompts much longer than the chunk, so several requests sit in
+    // prefill at once while others decode.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 3,
+            workers: 1,
+            queue_depth: 16,
+            prefill_chunk: 4,
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..12)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..20).map(|i| (id + i) % 64).collect();
+            engine.submit(GenRequest::greedy(prompt, 4)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().tokens.len(), 4);
+    }
+    let metrics = engine.shutdown();
+    // The active set counts prefilling requests too — interleaving must
+    // never grow it past max_batch (peak_active uses fetch_max, so racing
+    // workers cannot lose updates).
+    assert!(metrics.peak_active.load(Ordering::Relaxed) <= 3);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 12);
+    let qw = metrics.queue_wait_percentiles();
+    assert_eq!(qw.n, 12);
+    assert!(qw.p50 <= qw.p95 && qw.p95 <= qw.p99);
+    assert_eq!(metrics.ttft_percentiles().n, 12);
+}
+
+#[test]
+fn prefill_chunking_is_bit_exact_with_full_prefill() {
+    let model = PackedModel::random(&nano_cfg(Variant::PQuant, "exact"), 13);
+    let mut reference = model.clone();
+    let prompt: Vec<u32> = (0..23).map(|i| (i * 3) % 64).collect();
+    let want = reference.generate(&prompt, 6);
+    let registry = registry_with("m", model);
+    for chunk in [1, 4, 64] {
+        let engine = Engine::start(
+            &registry,
+            EngineOptions {
+                model: "m".into(),
+                max_batch: 2,
+                workers: 1,
+                queue_depth: 8,
+                prefill_chunk: chunk,
+            },
+        )
+        .unwrap();
+        let stats = engine.submit(GenRequest::greedy(prompt.clone(), 6)).unwrap().wait();
+        assert_eq!(stats.tokens, want, "prefill_chunk={chunk} changed the stream");
+        engine.shutdown();
+    }
+}
+
+// ----------------------------------------------------- hot-swap under load
+
+#[test]
+fn hot_swap_drains_inflight_on_old_generation_and_admits_on_new() {
+    let model_a = PackedModel::random(&nano_cfg(Variant::PQuant, "gen-a"), 31);
+    let model_b = PackedModel::random(&nano_cfg(Variant::PQuant, "gen-b"), 32);
+    let mut ref_a = model_a.clone();
+    let mut ref_b = model_b.clone();
+
+    let registry = registry_with("m", model_a);
+    let engine = engine_on(&registry, "m", 2);
+
+    // Get a request actively decoding on generation 1.
+    let inflight = engine.submit(GenRequest::greedy(vec![1, 2], 40)).unwrap();
+    loop {
+        match inflight.recv().unwrap() {
+            Event::Token(_) => break,
+            Event::Prefilled { .. } => {}
+            Event::Done(_) => panic!("finished before the swap raced it"),
+        }
+    }
+
+    // Install generation 2 without waiting for the drain.
+    let report = registry.hot_swap("m", model_b, None, Duration::ZERO);
+    assert_eq!(report.generation, 2);
+
+    // New admission lands on the new generation while the old one drains.
+    let post = engine.submit(GenRequest::greedy(vec![1, 2], 5)).unwrap();
+    let old = inflight.wait();
+    let new = post.wait();
+    assert_eq!(old.generation, 1);
+    assert_eq!(old.finish, FinishReason::Length);
+    assert_eq!(old.tokens, ref_a.generate(&[1, 2], 40), "drained on old weights");
+    assert_eq!(new.generation, 2);
+    assert_eq!(new.tokens, ref_b.generate(&[1, 2], 5), "admitted on new weights");
+
+    // With the old generation's work finished, its lease is released — a
+    // further swap drains promptly even though the engine sits idle.
+    let report = registry.hot_swap(
+        "m",
+        PackedModel::random(&nano_cfg(Variant::PQuant, "gen-c"), 33),
+        None,
+        Duration::from_secs(10),
+    );
+    assert_eq!(report.generation, 3);
+    assert!(report.drained, "idle engine must not hold the drain barrier open");
+    engine.shutdown();
+}
+
+// -------------------------------------------------------------- multi-model
+
+#[test]
+fn engines_on_different_names_serve_their_own_models() {
+    let a = PackedModel::random(&nano_cfg(Variant::Fp16, "name-a"), 41);
+    let b = PackedModel::random(&nano_cfg(Variant::BitNet158, "name-b"), 42);
+    let mut ref_a = a.clone();
+    let mut ref_b = b.clone();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", a, None);
+    registry.register("b", b, None);
+
+    let ea = engine_on(&registry, "a", 2);
+    let eb = engine_on(&registry, "b", 2);
+    let ta = ea.submit(GenRequest::greedy(vec![9, 9], 6)).unwrap();
+    let tb = eb.submit(GenRequest::greedy(vec![9, 9], 6)).unwrap();
+    assert_eq!(ta.wait().tokens, ref_a.generate(&[9, 9], 6));
+    assert_eq!(tb.wait().tokens, ref_b.generate(&[9, 9], 6));
+    assert!(Engine::start(&registry, EngineOptions::default()).is_err(), "unknown name");
+}

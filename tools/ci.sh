@@ -24,8 +24,11 @@ fi
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
-echo "==> tier-1: cargo test -q"
+echo "==> tier-1: cargo test -q   (includes tests/integration_serve.rs)"
 cargo test -q
+
+echo "==> tier-1: cargo bench --no-run (benches must keep compiling)"
+cargo bench --no-run
 
 if [[ "${1:-}" == "--tier1" ]]; then
     echo "ci.sh: tier-1 gate passed"
