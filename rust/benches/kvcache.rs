@@ -1,0 +1,109 @@
+//! Paged KV-cache bench: block alloc/free cycles, append throughput of
+//! paged vs contiguous layouts, and shared- vs unshared-prefix prefill
+//! through the packed model (the compute the prefix map saves).
+
+use std::sync::Arc;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::{KvCache, PackedModel};
+use pquant::kvcache::{BlockPool, KvPoolOptions, KvStore, PagedSeq, PrefixTag};
+use pquant::util::bench::Bencher;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "bench-kvcache".into(),
+        variant: Variant::PQuant,
+        vocab: 256,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 352,
+        r: 32,
+        n_experts: 2,
+        seq_len: 128,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    let cfg = cfg();
+    let pool = Arc::new(BlockPool::new(
+        KvPoolOptions { n_blocks: 4096, block_size: 16 },
+        cfg.n_layers,
+        cfg.d_model,
+    ));
+
+    // Admission + page-table construction + release, no decode.
+    b.bench("pool admit/release 128-token seq", || {
+        let adm = pool.admit(&[], 128, PrefixTag::default()).expect("pool sized for bench");
+        PagedSeq::new(&pool, adm)
+    });
+
+    // Append throughput: one 128-token sequence, all layers.
+    let row = vec![0.5f32; cfg.d_model];
+    b.bench("paged append 128 tok x 4 layers", || {
+        let adm = pool.admit(&[], 128, PrefixTag::default()).expect("pool sized for bench");
+        let mut seq = PagedSeq::new(&pool, adm);
+        for _ in 0..128 {
+            for l in 0..cfg.n_layers {
+                seq.layer(l).push(&row, &row).expect("reserved up front");
+            }
+        }
+        seq.len()
+    });
+    b.bench("contiguous append 128 tok x 4 layers", || {
+        let mut caches: Vec<KvCache> =
+            (0..cfg.n_layers).map(|_| KvCache::new(128, cfg.d_model)).collect();
+        for _ in 0..128 {
+            for c in caches.iter_mut() {
+                c.push(&row, &row).expect("sized up front");
+            }
+        }
+        caches[0].len
+    });
+
+    // Prefill with and without a registered prefix: the shared path skips
+    // the covered positions entirely (attention compute, not just bytes).
+    let mut model = PackedModel::random(&cfg, 7);
+    let prompt: Vec<u32> = (0..64u32).map(|i| (i * 5) % 256).collect();
+    let tag = PrefixTag(1, 1);
+    let total = prompt.len() + 16;
+    {
+        // Register the prompt's prefixes once, outside the timed region.
+        let adm = pool.admit(&prompt, total, tag).expect("pool sized for bench");
+        let mut seq = PagedSeq::new(&pool, adm);
+        for (pos, &t) in prompt.iter().enumerate() {
+            model.decode_step_paged(t, pos, &mut seq).expect("reserved up front");
+        }
+        pool.register_prefix(&prompt, &mut seq);
+    }
+    let fresh_tag = PrefixTag(2, 2); // never registered: full prefill
+    b.bench("prefill 64-token prompt, unshared", || {
+        let adm = pool.admit(&prompt, total, fresh_tag).expect("pool sized for bench");
+        let mut seq = PagedSeq::new(&pool, adm);
+        let mut logits = Vec::new();
+        for pos in seq.len()..prompt.len() {
+            logits = model.decode_step_paged(prompt[pos], pos, &mut seq).expect("reserved");
+        }
+        logits
+    });
+    b.bench("prefill 64-token prompt, shared prefix", || {
+        let adm = pool.admit(&prompt, total, tag).expect("pool sized for bench");
+        let mut seq = PagedSeq::new(&pool, adm);
+        assert!(!seq.is_empty(), "prefix must actually hit");
+        let mut logits = Vec::new();
+        for pos in seq.len()..prompt.len() {
+            logits = model.decode_step_paged(prompt[pos], pos, &mut seq).expect("reserved");
+        }
+        logits
+    });
+
+    let s = pool.stats();
+    println!(
+        "  pool after bench: hit rate {:.2}, cow {}, evicted {}, prefixes {}",
+        s.shared_hit_rate, s.cow_copies, s.evicted_blocks, s.registered_prefixes
+    );
+    b.write_json("kvcache");
+}

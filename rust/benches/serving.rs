@@ -45,6 +45,7 @@ fn main() {
                 workers: 1,
                 queue_depth: 16,
                 prefill_chunk: 16,
+                ..EngineOptions::default()
             },
         )
         .expect("model registered above");

@@ -9,10 +9,17 @@
 use std::time::Duration;
 
 use crate::config::Variant;
+use crate::kvcache::{KvError, KvStore};
 
 use super::{rmsnorm_vec, silu, softmax, QLinear, QuantActs};
 
-/// Per-layer attention KV cache.
+/// Per-layer attention KV cache, contiguous layout — the fast path for
+/// single-sequence decode ([`PackedModel::generate`]) where the caller
+/// sizes the cache up front. The paged serving path lives in
+/// [`crate::kvcache`]; both implement [`KvStore`] and produce
+/// bit-identical attention.
+///
+/// [`PackedModel::generate`]: crate::infer::PackedModel::generate
 pub struct KvCache {
     pub k: Vec<f32>, // [t, d]
     pub v: Vec<f32>,
@@ -25,15 +32,34 @@ impl KvCache {
         KvCache { k: vec![0.0; max_seq * d], v: vec![0.0; max_seq * d], len: 0, d }
     }
 
-    pub fn push(&mut self, k: &[f32], v: &[f32]) {
-        assert!(self.len * self.d + self.d <= self.k.len(), "KV cache overflow");
+    /// Append one row. A full cache is a recoverable error (a failed
+    /// request), not a panic (a dead serving worker).
+    pub fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError> {
+        if self.len * self.d + self.d > self.k.len() {
+            return Err(KvError::CacheOverflow { cap: self.k.len() / self.d.max(1) });
+        }
         self.k[self.len * self.d..(self.len + 1) * self.d].copy_from_slice(k);
         self.v[self.len * self.d..(self.len + 1) * self.d].copy_from_slice(v);
         self.len += 1;
+        Ok(())
     }
 
     pub fn reset(&mut self) {
         self.len = 0;
+    }
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError> {
+        KvCache::push(self, k, v)
+    }
+
+    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+        f(&self.k[..self.len * self.d], &self.v[..self.len * self.d]);
     }
 }
 
@@ -114,9 +140,25 @@ fn rope_rotate(x: &mut [f32], pos: usize, n_heads: usize) {
 }
 
 impl PackedBlock {
-    /// Decode one token: x is the residual stream vector [d]; returns the
-    /// updated residual. `pos` is the cache position of this token.
+    /// Decode one token on the contiguous fast path: `x` is the residual
+    /// stream vector [d]; returns the updated residual. `pos` is the cache
+    /// position of this token. The cache is caller-sized, so overflow is a
+    /// programming error here — recoverable callers use
+    /// [`PackedBlock::try_forward`].
     pub fn forward(&mut self, x: &[f32], pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        self.try_forward(x, pos, cache).expect("contiguous KV cache sized by caller")
+    }
+
+    /// Decode one token against any [`KvStore`] (contiguous or paged).
+    /// Attention walks the cache as ordered contiguous segments, so the
+    /// float ops — and therefore the output bits — are identical across
+    /// layouts.
+    pub fn try_forward<C: KvStore + ?Sized>(
+        &mut self,
+        x: &[f32],
+        pos: usize,
+        cache: &mut C,
+    ) -> Result<Vec<f32>, KvError> {
         let d = x.len();
         let hd = d / self.n_heads;
 
@@ -135,25 +177,37 @@ impl PackedBlock {
         let t0 = std::time::Instant::now();
         rope_rotate(&mut q, pos, self.n_heads);
         rope_rotate(&mut k, pos, self.n_heads);
-        cache.push(&k, &v);
-        let t_len = cache.len;
+        cache.push(&k, &v)?;
+        let t_len = cache.len();
         let mut ctx = vec![0.0f32; d];
         let scale = 1.0 / (hd as f32).sqrt();
         let mut scores = vec![0.0f32; t_len];
+        // The cache is walked as ordered contiguous segments (one for the
+        // contiguous layout, one per page when paged) — same rows, same
+        // order, same float ops, so the layouts are bit-identical.
         for h in 0..self.n_heads {
             let qh = &q[h * hd..(h + 1) * hd];
-            for (t, s) in scores.iter_mut().enumerate() {
-                let kh = &cache.k[t * d + h * hd..t * d + (h + 1) * hd];
-                *s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-            }
+            let mut t = 0;
+            cache.for_each_segment(&mut |ks, _| {
+                for kr in ks.chunks_exact(d) {
+                    let kh = &kr[h * hd..(h + 1) * hd];
+                    scores[t] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    t += 1;
+                }
+            });
             softmax(&mut scores);
             let ch = &mut ctx[h * hd..(h + 1) * hd];
-            for (t, &p) in scores.iter().enumerate() {
-                let vh = &cache.v[t * d + h * hd..t * d + (h + 1) * hd];
-                for (c, &vv) in ch.iter_mut().zip(vh) {
-                    *c += p * vv;
+            let mut t = 0;
+            cache.for_each_segment(&mut |_, vs| {
+                for vr in vs.chunks_exact(d) {
+                    let p = scores[t];
+                    let vh = &vr[h * hd..(h + 1) * hd];
+                    for (c, &vv) in ch.iter_mut().zip(vh) {
+                        *c += p * vv;
+                    }
+                    t += 1;
                 }
-            }
+            });
         }
         self.timing.attn_core += t0.elapsed();
 
@@ -228,7 +282,7 @@ impl PackedBlock {
         for (xv, yv) in x1.iter_mut().zip(&y) {
             *xv += yv;
         }
-        x1
+        Ok(x1)
     }
 
     /// Resident weight bytes of this block.
@@ -337,19 +391,23 @@ mod tests {
     #[test]
     fn kv_cache_grows_and_resets() {
         let mut cache = KvCache::new(4, 8);
-        cache.push(&[1.0; 8], &[2.0; 8]);
-        cache.push(&[3.0; 8], &[4.0; 8]);
+        cache.push(&[1.0; 8], &[2.0; 8]).unwrap();
+        cache.push(&[3.0; 8], &[4.0; 8]).unwrap();
         assert_eq!(cache.len, 2);
         cache.reset();
         assert_eq!(cache.len, 0);
     }
 
     #[test]
-    #[should_panic(expected = "KV cache overflow")]
-    fn kv_cache_overflow_panics() {
+    fn kv_cache_overflow_is_recoverable() {
         let mut cache = KvCache::new(1, 4);
-        cache.push(&[0.0; 4], &[0.0; 4]);
-        cache.push(&[0.0; 4], &[0.0; 4]);
+        cache.push(&[0.0; 4], &[0.0; 4]).unwrap();
+        assert_eq!(
+            cache.push(&[0.0; 4], &[0.0; 4]),
+            Err(KvError::CacheOverflow { cap: 1 }),
+            "a full cache must fail the push, not kill the thread"
+        );
+        assert_eq!(cache.len, 1, "failed push must not corrupt the cache");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::{ModelConfig, Variant};
+use crate::kvcache::{KvError, PagedSeq};
 use crate::runtime::{Artifact, TrainState};
 
 use super::block::{DecoupledFfn, Ffn, KvCache, PackedBlock};
@@ -135,15 +136,48 @@ impl PackedModel {
             .collect()
     }
 
-    /// Decode one token: returns the logits row [vocab].
+    /// Decode one token on caller-sized contiguous caches: returns the
+    /// logits row [vocab]. Overflow is a sizing bug here — recoverable
+    /// callers (the serving engine) use [`PackedModel::try_decode_step`]
+    /// or [`PackedModel::decode_step_paged`].
     pub fn decode_step(&mut self, token: u32, pos: usize, caches: &mut [KvCache]) -> Vec<f32> {
+        self.try_decode_step(token, pos, caches).expect("contiguous KV caches sized by caller")
+    }
+
+    /// Decode one token; a full cache is a recoverable error.
+    pub fn try_decode_step(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &mut [KvCache],
+    ) -> std::result::Result<Vec<f32>, KvError> {
         let d = self.cfg.d_model;
         let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
         for (block, cache) in self.blocks.iter_mut().zip(caches.iter_mut()) {
-            x = block.forward(&x, pos, cache);
+            x = block.try_forward(&x, pos, cache)?;
         }
         let xn = rmsnorm_vec(&x, &self.final_norm);
-        crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab)
+        Ok(crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab))
+    }
+
+    /// Decode one token against a paged sequence from a
+    /// [`BlockPool`](crate::kvcache::BlockPool). Bit-identical to the
+    /// contiguous path (both walk the cache as ordered segments); errors
+    /// instead of panicking when the sequence outgrows its reservation.
+    pub fn decode_step_paged(
+        &mut self,
+        token: u32,
+        pos: usize,
+        seq: &mut PagedSeq,
+    ) -> std::result::Result<Vec<f32>, KvError> {
+        let d = self.cfg.d_model;
+        let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        for (l, block) in self.blocks.iter_mut().enumerate() {
+            let mut layer = seq.layer(l);
+            x = block.try_forward(&x, pos, &mut layer)?;
+        }
+        let xn = rmsnorm_vec(&x, &self.final_norm);
+        Ok(crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab))
     }
 
     /// Greedy generation: feed `prompt`, then emit `n_new` tokens.
@@ -242,6 +276,28 @@ mod tests {
         let mut a = PackedModel::random(&nano_cfg(Variant::PQuant), 5);
         let mut b = PackedModel::random(&nano_cfg(Variant::PQuant), 5);
         assert_eq!(a.generate(&[1, 2], 6), b.generate(&[1, 2], 6));
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_bit_exactly() {
+        use crate::kvcache::{BlockPool, KvPoolOptions, PrefixTag};
+        use std::sync::Arc;
+        let cfg = nano_cfg(Variant::PQuant);
+        let mut a = PackedModel::random(&cfg, 9);
+        let mut b = PackedModel::random(&cfg, 9);
+        let pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 64, block_size: 4 },
+            cfg.n_layers,
+            cfg.d_model,
+        ));
+        let adm = pool.admit(&[], 12, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&pool, adm);
+        let mut caches = a.new_caches(12);
+        for (pos, &t) in [1u32, 5, 9, 2, 7].iter().enumerate() {
+            let la = a.decode_step(t, pos, &mut caches);
+            let lb = b.decode_step_paged(t, pos, &mut seq).unwrap();
+            assert_eq!(la, lb, "paged logits diverge at pos {pos}");
+        }
     }
 
     #[test]

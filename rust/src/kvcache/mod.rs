@@ -1,0 +1,132 @@
+//! Paged KV-cache subsystem: a fixed block budget under the whole serving
+//! stack.
+//!
+//! With 1-bit weights the KV cache — not the model — dominates serving
+//! memory (the BitNet-style regime in PAPERS.md), so KV memory must be a
+//! managed, metered resource rather than a per-request `Vec` sized to the
+//! worst case.  This module provides:
+//!
+//! * [`BlockPool`] — owns a fixed budget of `n_blocks` fixed-size KV
+//!   blocks (`block_size` tokens × `d_model` floats for K and V, per
+//!   layer).  Admission reserves blocks up front
+//!   ([`BlockPool::admit`]), so a sequence that was admitted can always
+//!   finish — exhaustion surfaces as a recoverable
+//!   [`KvError::OutOfBlocks`] at admission, never a worker panic.
+//! * [`PagedSeq`] — one sequence's per-layer page tables mapping token
+//!   positions to blocks.  Blocks are either owned (writable) or shared
+//!   (frozen [`SharedBlock`]s behind `Arc`); writing into a shared block
+//!   copies it first (copy-on-write on divergence).
+//! * **Prefix sharing** — completed prefills register their block-aligned
+//!   prompt prefixes in a hash over prompt tokens
+//!   ([`BlockPool::register_prefix`]); later admissions with a matching
+//!   prompt attach the frozen blocks and skip the covered prefill compute
+//!   ([`Admitted::shared_len`]).  Entries are tagged with a
+//!   [`PrefixTag`] (model generation identity) so a hot-swap can never
+//!   leak stale KV into a new generation.
+//! * [`KvStore`] — the per-layer cache abstraction attention decodes
+//!   against.  The contiguous [`KvCache`](crate::infer::KvCache) fast
+//!   path and the paged [`PagedLayer`] both implement it, and both expose
+//!   the cache as ordered contiguous segments, so the attention arithmetic
+//!   (and therefore greedy output) is bit-identical across the two.
+//!
+//! The serving [`Engine`](crate::serve::Engine) layers budgeted admission,
+//! preemption and pool metrics on top; see `serve/engine.rs`.
+
+pub mod pool;
+pub mod seq;
+
+pub use pool::{Admitted, BlockPool, KvPoolStats, PrefixTag, Reservation};
+pub use seq::{PagedLayer, PagedSeq};
+
+/// Recoverable KV-cache errors. These replace the seed's `assert!` overflow
+/// panic: a cache that cannot grow fails the one request, not the worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    /// The pool cannot cover a reservation (admission-time backpressure).
+    OutOfBlocks { needed: usize, available: usize },
+    /// A fixed-capacity contiguous cache is full (`cap` tokens).
+    CacheOverflow { cap: usize },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { needed, available } => {
+                write!(f, "KV pool exhausted: need {needed} blocks, {available} available")
+            }
+            KvError::CacheOverflow { cap } => {
+                write!(f, "KV cache overflow: capacity {cap} tokens")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Pool geometry knobs (engine-facing; layer count and width come from the
+/// model config at [`BlockPool::new`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolOptions {
+    /// Total physical blocks in the budget (per-layer granularity: one
+    /// sequence of `t` tokens uses `ceil(t / block_size)` blocks per layer).
+    pub n_blocks: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+}
+
+impl Default for KvPoolOptions {
+    fn default() -> Self {
+        KvPoolOptions { n_blocks: 4096, block_size: 16 }
+    }
+}
+
+/// One layer's KV cache as attention sees it: append one row per decoded
+/// token, read back the whole history as ordered contiguous segments.
+///
+/// Both implementations expose whole rows (multiples of `d` floats) in
+/// position order, so a consumer that walks segments row-by-row performs
+/// exactly the same float ops in the same order regardless of layout —
+/// the paged path is bit-identical to the contiguous one by construction.
+pub trait KvStore {
+    /// Tokens currently cached.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one token's K and V rows (`d` floats each). Recoverable:
+    /// a full cache returns [`KvError`], it does not panic.
+    fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError>;
+
+    /// Visit the ordered contiguous `(k, v)` slabs covering positions
+    /// `[0, len)` without allocating — the decode hot path. Each slab
+    /// holds a whole number of rows.
+    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32]));
+
+    /// Allocating convenience view of the same walk (tests, inspection).
+    fn segments(&self) -> Vec<(&[f32], &[f32])> {
+        let mut segs = Vec::new();
+        self.for_each_segment(&mut |k, v| segs.push((k, v)));
+        segs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_render_both_counts() {
+        let e = KvError::OutOfBlocks { needed: 8, available: 3 };
+        let s = format!("{e}");
+        assert!(s.contains('8') && s.contains('3'), "{s}");
+        assert!(format!("{}", KvError::CacheOverflow { cap: 4 }).contains('4'));
+    }
+
+    #[test]
+    fn default_options_are_sane() {
+        let o = KvPoolOptions::default();
+        assert!(o.n_blocks > 0 && o.block_size > 0);
+    }
+}

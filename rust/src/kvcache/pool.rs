@@ -1,0 +1,736 @@
+//! The block pool: a fixed budget of KV blocks, reservation-based
+//! admission, and the prefix-share map.
+//!
+//! Accounting model: every resident block carries exactly one charge
+//! against the budget.  A sequence's [`Reservation`] charges its
+//! worst-case block count at admission ([`BlockPool::admit`]) so a decode
+//! can never run out of KV mid-flight; frozen prefix blocks transfer their
+//! charge to the share map at registration
+//! ([`BlockPool::register_prefix`]) and return it on eviction.  Buffers
+//! themselves are allocated lazily and recycled on release, so the budget
+//! is a ceiling, not a preallocation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::seq::PagedSeq;
+use super::{KvError, KvPoolOptions};
+
+/// Identity of the model weights a shared prefix was computed under:
+/// (process-unique registry-entry id, generation).  Two prompts may only
+/// share KV if their tags are equal — a hot-swap changes the tag, so
+/// stale blocks can never serve a new generation, and the never-reused
+/// entry id disambiguates a remove+re-register that resets the per-name
+/// generation counter (an address would be vulnerable to allocator
+/// reuse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PrefixTag(pub usize, pub u64);
+
+/// One frozen KV block: `filled` rows of K and V, immutable once built.
+/// Shared across sequences behind `Arc`; writers copy first (CoW).
+pub struct SharedBlock {
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) filled: usize,
+}
+
+/// One writable block buffer (`block_size * d` floats for each of K, V).
+pub(crate) struct KvBuf {
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) filled: usize,
+}
+
+impl KvBuf {
+    pub(crate) fn empty() -> KvBuf {
+        KvBuf { k: Vec::new(), v: Vec::new(), filled: 0 }
+    }
+}
+
+/// A block-budget charge held against the pool; dropping it releases the
+/// remaining charge. Sequences own one; the share map holds its charges
+/// internally.
+pub struct Reservation {
+    pub(crate) pool: Arc<BlockPool>,
+    pub(crate) charged: usize,
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        if self.charged > 0 {
+            self.pool.release(self.charged);
+            self.charged = 0;
+        }
+    }
+}
+
+/// Per layer, the `(block, filled)` pages attached from the share map.
+pub(crate) type SharedPages = Vec<Vec<(Arc<SharedBlock>, usize)>>;
+
+/// A granted admission: the reservation plus any shared prefix attached
+/// from the map. Consumed by [`PagedSeq::new`]; dropping it un-admits
+/// (the reservation releases, the shared blocks detach).
+pub struct Admitted {
+    pub(crate) shared_len: usize,
+    /// Per layer: `(block, filled)` covering positions `[0, shared_len)`.
+    pub(crate) layers: SharedPages,
+    pub(crate) reservation: Reservation,
+    /// Owned blocks the sequence may still materialize.
+    pub(crate) allow: usize,
+    pub(crate) tag: PrefixTag,
+    /// Hit-rate contributions, counted only when the admission
+    /// materializes into a [`PagedSeq`] — a bounced admission (e.g. the
+    /// engine queue was full) must not skew the counters.
+    pub(crate) metric_prompt_blocks: usize,
+    pub(crate) metric_shared_blocks: usize,
+}
+
+impl Admitted {
+    /// Prompt tokens covered by the attached shared prefix (prefill for
+    /// these positions can be skipped).
+    pub fn shared_len(&self) -> usize {
+        self.shared_len
+    }
+
+    /// Blocks charged against the pool by this admission.
+    pub fn blocks_reserved(&self) -> usize {
+        self.reservation.charged
+    }
+
+    /// Weight identity the shared prefix (and future registrations) are
+    /// keyed under.
+    pub fn tag(&self) -> PrefixTag {
+        self.tag
+    }
+
+    /// Re-key the admission (valid once sharing is discarded): new KV must
+    /// be registered under the weights that will actually compute it.
+    pub fn retag(&mut self, tag: PrefixTag) {
+        debug_assert_eq!(self.shared_len, 0, "retag with shared blocks attached");
+        self.tag = tag;
+    }
+
+    /// Detach the shared prefix (e.g. the serving generation moved between
+    /// submit and admission) and reserve the delta so owned blocks can
+    /// cover the whole prompt instead.
+    pub fn discard_sharing(&mut self) -> Result<(), KvError> {
+        if self.shared_len == 0 {
+            return Ok(());
+        }
+        let pool = self.reservation.pool.clone();
+        let delta = (self.shared_len / pool.block_size) * pool.n_layers;
+        if delta > 0 {
+            let mut st = pool.state.lock().unwrap();
+            pool.reserve_locked(&mut st, delta)?;
+        }
+        self.reservation.charged += delta;
+        self.allow += delta;
+        self.layers.clear();
+        self.shared_len = 0;
+        self.metric_shared_blocks = 0;
+        Ok(())
+    }
+}
+
+struct ShareEntry {
+    tag: PrefixTag,
+    /// Prompt tokens covered (== key length).
+    len: usize,
+    /// Per layer, blocks covering `[0, len)`.
+    layers: Vec<Vec<Arc<SharedBlock>>>,
+}
+
+/// Map-side bookkeeping for one physical shared block: the map's own
+/// handle plus how many [`ShareEntry`]s reference it (boundary entries of
+/// one prompt share their leading blocks).
+struct MapBlock {
+    arc: Arc<SharedBlock>,
+    refs: usize,
+}
+
+struct PoolState {
+    /// Unreserved budget, in blocks.
+    available: usize,
+    /// Low-water mark of `available` (peak pressure gauge).
+    min_available: usize,
+    /// Retired buffers awaiting reuse (bounded by `n_blocks`).
+    recycle: Vec<KvBuf>,
+    /// Prefix-token hash: prompt prefix -> frozen blocks.
+    share: HashMap<Vec<u32>, ShareEntry>,
+    /// Unique physical blocks held by the map, keyed by `Arc` pointer.
+    map_blocks: HashMap<usize, MapBlock>,
+}
+
+/// Entries above this are reclaimed opportunistically even without budget
+/// pressure, bounding share-map growth on long-running engines.
+const SHARE_ENTRY_SOFT_CAP: usize = 1024;
+
+/// Max block-boundary entries registered per prompt. Long prompts get
+/// evenly-spaced boundaries (always including the last) instead of one
+/// per block, keeping registration work and key memory linear.
+const MAX_BOUNDARY_ENTRIES: usize = 8;
+
+/// Max prefix lengths probed per admission (the exact prompt plus the
+/// largest block-aligned prefixes, descending). Bounds the hashing done
+/// under the pool lock; a very long prompt only loses matches against
+/// tiny prefixes of itself, which save little anyway.
+const MAX_LOOKUP_CANDIDATES: usize = 32;
+
+/// Snapshot of the pool's counters (all monotone except the gauges).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPoolStats {
+    pub n_blocks: usize,
+    pub block_size: usize,
+    /// Blocks currently charged (sequence reservations + map-held).
+    pub in_use: usize,
+    /// `in_use / n_blocks`.
+    pub utilization: f64,
+    /// Most blocks ever charged at once (pressure high-water mark).
+    pub peak_in_use: usize,
+    /// `peak_in_use / n_blocks`.
+    pub peak_utilization: f64,
+    /// Physical prompt blocks attached from the share map (hits).
+    pub shared_attached: usize,
+    /// Physical prompt blocks across all admissions (hit denominator).
+    pub prompt_blocks: usize,
+    /// `shared_attached / prompt_blocks`.
+    pub shared_hit_rate: f64,
+    /// Copy-on-write block copies (shared prefix diverged into new tokens).
+    pub cow_copies: usize,
+    /// Map-held blocks reclaimed under pressure.
+    pub evicted_blocks: usize,
+    /// Reserved blocks returned without ever being materialized (early
+    /// stop-token finishes, cancellations).
+    pub unused_tail_returned: usize,
+    /// Live prefix entries in the share map.
+    pub registered_prefixes: usize,
+}
+
+/// Fixed budget of fixed-size KV blocks shared by every sequence of one
+/// serving engine. See the module docs for the accounting model.
+pub struct BlockPool {
+    pub(crate) n_blocks: usize,
+    pub(crate) block_size: usize,
+    pub(crate) n_layers: usize,
+    pub(crate) d: usize,
+    state: Mutex<PoolState>,
+    shared_attached: AtomicUsize,
+    prompt_blocks: AtomicUsize,
+    cow_copies: AtomicUsize,
+    evicted_blocks: AtomicUsize,
+    unused_tail: AtomicUsize,
+}
+
+impl std::fmt::Debug for BlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BlockPool")
+            .field("n_blocks", &s.n_blocks)
+            .field("block_size", &s.block_size)
+            .field("in_use", &s.in_use)
+            .field("registered_prefixes", &s.registered_prefixes)
+            .finish()
+    }
+}
+
+impl BlockPool {
+    /// A pool for models of `n_layers` layers and width `d`.
+    pub fn new(opts: KvPoolOptions, n_layers: usize, d: usize) -> BlockPool {
+        assert!(opts.n_blocks > 0 && opts.block_size > 0 && n_layers > 0 && d > 0);
+        BlockPool {
+            n_blocks: opts.n_blocks,
+            block_size: opts.block_size,
+            n_layers,
+            d,
+            state: Mutex::new(PoolState {
+                available: opts.n_blocks,
+                min_available: opts.n_blocks,
+                recycle: Vec::new(),
+                share: HashMap::new(),
+                map_blocks: HashMap::new(),
+            }),
+            shared_attached: AtomicUsize::new(0),
+            prompt_blocks: AtomicUsize::new(0),
+            cow_copies: AtomicUsize::new(0),
+            evicted_blocks: AtomicUsize::new(0),
+            unused_tail: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Model width (`d_model`) each block row holds.
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    /// Unreserved blocks right now.
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap().available
+    }
+
+    /// Worst-case physical blocks for a sequence of `total_tokens`, with
+    /// no prefix sharing.
+    pub fn blocks_for(&self, total_tokens: usize) -> usize {
+        total_tokens.div_ceil(self.block_size).max(1) * self.n_layers
+    }
+
+    /// Admit a sequence that will hold at most `total_tokens` positions
+    /// (prompt + generation budget): look up the longest registered prefix
+    /// of `prompt` under `tag`, attach its blocks, and reserve the rest of
+    /// the worst case. Fails with [`KvError::OutOfBlocks`] — after
+    /// evicting unused shared prefixes — when the budget cannot cover it.
+    pub fn admit(
+        self: &Arc<Self>,
+        prompt: &[u32],
+        total_tokens: usize,
+        tag: PrefixTag,
+    ) -> Result<Admitted, KvError> {
+        self.admit_inner(prompt, total_tokens, tag, true)
+    }
+
+    /// Re-admission of a preempted sequence (prompt + already-emitted
+    /// tokens): identical to [`BlockPool::admit`] but skips the
+    /// prompt/hit counters, so recompute does not double-count sharing
+    /// metrics.
+    pub fn readmit(
+        self: &Arc<Self>,
+        prompt: &[u32],
+        total_tokens: usize,
+        tag: PrefixTag,
+    ) -> Result<Admitted, KvError> {
+        self.admit_inner(prompt, total_tokens, tag, false)
+    }
+
+    fn admit_inner(
+        self: &Arc<Self>,
+        prompt: &[u32],
+        total_tokens: usize,
+        tag: PrefixTag,
+        count_metrics: bool,
+    ) -> Result<Admitted, KvError> {
+        let bs = self.block_size;
+        let l = prompt.len();
+        debug_assert!(total_tokens >= l);
+        let logical = total_tokens.div_ceil(bs).max(1);
+        let mut st = self.state.lock().unwrap();
+
+        // Longest matching prefix: the exact prompt (partial-tail entry),
+        // then block-aligned lengths descending. The match is capped at
+        // `l - 1` so the final prompt position is always re-decoded — its
+        // logits seed generation, and KV sharing caches K/V, not logits.
+        let mut shared_len = 0usize;
+        let mut shared_layers: SharedPages = Vec::new();
+        if l > 1 {
+            let mut cands: Vec<usize> = Vec::new();
+            if l % bs != 0 {
+                cands.push(l);
+            }
+            let mut j = l / bs;
+            while j > 0 && cands.len() < MAX_LOOKUP_CANDIDATES {
+                cands.push(j * bs);
+                j -= 1;
+            }
+            for cand in cands {
+                let Some(entry) = st.share.get(&prompt[..cand]) else { continue };
+                if entry.tag != tag || entry.len != cand {
+                    continue;
+                }
+                let e = cand.min(l - 1);
+                if e == 0 {
+                    break;
+                }
+                let nb = e.div_ceil(bs);
+                shared_layers = entry
+                    .layers
+                    .iter()
+                    .map(|blocks| {
+                        blocks
+                            .iter()
+                            .take(nb)
+                            .enumerate()
+                            .map(|(j, b)| (b.clone(), (e - j * bs).min(bs)))
+                            .collect()
+                    })
+                    .collect();
+                shared_len = e;
+                break;
+            }
+        }
+
+        let full_shared = shared_len / bs;
+        let need = (logical - full_shared) * self.n_layers;
+        self.reserve_locked(&mut st, need)?;
+        drop(st);
+
+        Ok(Admitted {
+            shared_len,
+            layers: shared_layers,
+            reservation: Reservation { pool: self.clone(), charged: need },
+            allow: need,
+            tag,
+            metric_prompt_blocks: if count_metrics { l.div_ceil(bs) * self.n_layers } else { 0 },
+            metric_shared_blocks: if count_metrics && shared_len > 0 {
+                shared_len.div_ceil(bs) * self.n_layers
+            } else {
+                0
+            },
+        })
+    }
+
+    /// Record one materialized admission's hit-rate contribution (called
+    /// from [`PagedSeq::new`]).
+    pub(crate) fn note_admitted(&self, prompt_blocks: usize, shared_blocks: usize) {
+        if prompt_blocks > 0 {
+            self.prompt_blocks.fetch_add(prompt_blocks, Ordering::Relaxed);
+        }
+        if shared_blocks > 0 {
+            self.shared_attached.fetch_add(shared_blocks, Ordering::Relaxed);
+        }
+    }
+
+    /// Reserve a raw block count (no prefix lookup). Used by tests and
+    /// benches; the engine admits through [`BlockPool::admit`].
+    pub fn try_reserve(self: &Arc<Self>, blocks: usize) -> Result<Reservation, KvError> {
+        let mut st = self.state.lock().unwrap();
+        self.reserve_locked(&mut st, blocks)?;
+        Ok(Reservation { pool: self.clone(), charged: blocks })
+    }
+
+    /// Register `prompt`'s prefixes from a sequence whose prefill just
+    /// completed: freeze the fully-covered prompt blocks in place
+    /// (transferring their budget charge to the map), insert one entry per
+    /// block boundary, and — budget permitting — snapshot the partial tail
+    /// under the full-prompt key. Idempotent per key; entries under a
+    /// stale tag are replaced.
+    pub fn register_prefix(&self, prompt: &[u32], seq: &mut PagedSeq) {
+        let bs = self.block_size;
+        let l = prompt.len();
+        if l == 0 || seq.len() < l {
+            return;
+        }
+        let full = l / bs;
+        let tag = seq.tag;
+        let mut st = self.state.lock().unwrap();
+        if st.share.len() > SHARE_ENTRY_SOFT_CAP {
+            self.evict_unused_locked(&mut st);
+        }
+        seq.freeze_blocks(full);
+        let seq_ptrs = seq.shared_ptrs();
+
+        // Evenly-spaced block boundaries (all of them for short prompts),
+        // always ending at the last full block.
+        let boundaries: Vec<usize> = if full <= MAX_BOUNDARY_ENTRIES {
+            (1..=full).collect()
+        } else {
+            (1..=MAX_BOUNDARY_ENTRIES).map(|i| i * full / MAX_BOUNDARY_ENTRIES).collect()
+        };
+        for j in boundaries {
+            let key = &prompt[..j * bs];
+            match st.share.get(key) {
+                Some(existing) if existing.tag == tag => continue,
+                Some(existing) => {
+                    // Stale tag (old generation). Only replace once no
+                    // sequence is attached: removal returns the blocks'
+                    // budget charges, which must not happen while the
+                    // memory is still resident with a live user.
+                    if !Self::entry_unused(&st.map_blocks, existing) {
+                        continue;
+                    }
+                    self.remove_entry_locked(&mut st, key.to_vec());
+                }
+                None => {}
+            }
+            let mut layers: Vec<Vec<Arc<SharedBlock>>> = Vec::with_capacity(self.n_layers);
+            for layer in 0..self.n_layers {
+                let mut blocks = Vec::with_capacity(j);
+                for b in 0..j {
+                    match seq.shared_arc(layer, b) {
+                        Some(arc) => blocks.push(arc),
+                        // A non-frozen block here means the sequence
+                        // geometry disagrees with the prompt; bail out.
+                        None => return,
+                    }
+                }
+                layers.push(blocks);
+            }
+            self.insert_entry_locked(&mut st, key.to_vec(), tag, j * bs, layers, seq, &seq_ptrs);
+        }
+
+        // Partial tail: snapshot rows [full*bs, l) under the full-prompt
+        // key so identical prompts share everything and diverge by CoW.
+        let rem = l % bs;
+        if rem > 0 {
+            let key = prompt.to_vec();
+            match st.share.get(&key) {
+                Some(existing) if existing.tag == tag => return,
+                Some(existing) => {
+                    if !Self::entry_unused(&st.map_blocks, existing) {
+                        return;
+                    }
+                    self.remove_entry_locked(&mut st, key.clone());
+                }
+                None => {}
+            }
+            if st.available < self.n_layers {
+                return; // don't starve admissions to cache a tail
+            }
+            let floats = bs * self.d;
+            let mut layers: Vec<Vec<Arc<SharedBlock>>> = Vec::with_capacity(self.n_layers);
+            for layer in 0..self.n_layers {
+                let mut blocks = Vec::with_capacity(full + 1);
+                for b in 0..full {
+                    match seq.shared_arc(layer, b) {
+                        Some(arc) => blocks.push(arc),
+                        None => return,
+                    }
+                }
+                let Some((src_k, src_v, filled)) = seq.block_rows(layer, full) else { return };
+                if filled < rem {
+                    return;
+                }
+                let mut buf = Self::take_buf_locked(&mut st, floats);
+                buf.k[..rem * self.d].copy_from_slice(&src_k[..rem * self.d]);
+                buf.v[..rem * self.d].copy_from_slice(&src_v[..rem * self.d]);
+                blocks.push(Arc::new(SharedBlock { k: buf.k, v: buf.v, filled: rem }));
+                layers.push(blocks);
+            }
+            st.available -= self.n_layers; // the map's charge for the snapshots
+            st.min_available = st.min_available.min(st.available);
+            self.insert_entry_locked(&mut st, key, tag, l, layers, seq, &seq_ptrs);
+        }
+    }
+
+    /// No sequence outside the map holds any of this entry's blocks.
+    fn entry_unused(map_blocks: &HashMap<usize, MapBlock>, e: &ShareEntry) -> bool {
+        e.layers.iter().flatten().all(|a| {
+            let refs = map_blocks.get(&(Arc::as_ptr(a) as usize)).map_or(0, |m| m.refs);
+            // Holders: the map's handle + `refs` entries. More means a
+            // live sequence is attached.
+            Arc::strong_count(a) <= 1 + refs
+        })
+    }
+
+    /// Insert one entry, updating per-block map refs. A block entering the
+    /// map for the first time from the sequence's frozen pages transfers
+    /// one budget charge from the sequence's reservation to the map.
+    #[allow(clippy::too_many_arguments)]
+    fn insert_entry_locked(
+        &self,
+        st: &mut PoolState,
+        key: Vec<u32>,
+        tag: PrefixTag,
+        len: usize,
+        layers: Vec<Vec<Arc<SharedBlock>>>,
+        seq: &mut PagedSeq,
+        seq_ptrs: &std::collections::HashSet<usize>,
+    ) {
+        for arc in layers.iter().flatten() {
+            let ptr = Arc::as_ptr(arc) as usize;
+            match st.map_blocks.get_mut(&ptr) {
+                Some(mb) => mb.refs += 1,
+                None => {
+                    st.map_blocks.insert(ptr, MapBlock { arc: arc.clone(), refs: 1 });
+                    // Transfer the charge for a block the sequence froze;
+                    // snapshot blocks were charged from `available` above
+                    // and are recognized by not belonging to the sequence.
+                    if seq_ptrs.contains(&ptr) {
+                        seq.transfer_charge();
+                    }
+                }
+            }
+        }
+        st.share.insert(key, ShareEntry { tag, len, layers });
+    }
+
+    fn remove_entry_locked(&self, st: &mut PoolState, key: Vec<u32>) {
+        let Some(entry) = st.share.remove(&key) else { return };
+        for arc in entry.layers.into_iter().flatten() {
+            let ptr = Arc::as_ptr(&arc) as usize;
+            let gone = match st.map_blocks.get_mut(&ptr) {
+                Some(mb) => {
+                    mb.refs -= 1;
+                    mb.refs == 0
+                }
+                None => false,
+            };
+            drop(arc);
+            if gone {
+                let mb = st.map_blocks.remove(&ptr).unwrap();
+                st.available += 1;
+                self.evicted_blocks.fetch_add(1, Ordering::Relaxed);
+                if let Ok(sb) = Arc::try_unwrap(mb.arc) {
+                    Self::push_recycle(st, self.n_blocks, KvBuf { k: sb.k, v: sb.v, filled: 0 });
+                }
+            }
+        }
+    }
+
+    /// Evict every entry whose blocks have no users outside the map.
+    fn evict_unused_locked(&self, st: &mut PoolState) {
+        let keys: Vec<Vec<u32>> = {
+            let share = &st.share;
+            let map_blocks = &st.map_blocks;
+            share
+                .iter()
+                .filter(|(_, e)| Self::entry_unused(map_blocks, e))
+                .map(|(k, _)| k.clone())
+                .collect()
+        };
+        for key in keys {
+            self.remove_entry_locked(st, key);
+        }
+    }
+
+    fn reserve_locked(&self, st: &mut PoolState, need: usize) -> Result<(), KvError> {
+        if st.available < need {
+            self.evict_unused_locked(st);
+        }
+        if st.available < need {
+            return Err(KvError::OutOfBlocks { needed: need, available: st.available });
+        }
+        st.available -= need;
+        st.min_available = st.min_available.min(st.available);
+        Ok(())
+    }
+
+    pub(crate) fn release(&self, blocks: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.available += blocks;
+        debug_assert!(st.available <= self.n_blocks, "over-released KV blocks");
+    }
+
+    pub(crate) fn take_buf(&self) -> KvBuf {
+        let mut st = self.state.lock().unwrap();
+        Self::take_buf_locked(&mut st, self.block_size * self.d)
+    }
+
+    fn take_buf_locked(st: &mut PoolState, floats: usize) -> KvBuf {
+        match st.recycle.pop() {
+            Some(mut b) => {
+                b.filled = 0;
+                b
+            }
+            None => KvBuf { k: vec![0.0; floats], v: vec![0.0; floats], filled: 0 },
+        }
+    }
+
+    pub(crate) fn recycle(&self, bufs: Vec<KvBuf>) {
+        if bufs.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for b in bufs {
+            Self::push_recycle(&mut st, self.n_blocks, b);
+        }
+    }
+
+    fn push_recycle(st: &mut PoolState, cap: usize, mut b: KvBuf) {
+        if st.recycle.len() < cap && !b.k.is_empty() {
+            b.filled = 0;
+            st.recycle.push(b);
+        }
+    }
+
+    pub(crate) fn note_cow(&self) {
+        self.cow_copies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_unused_tail(&self, blocks: usize) {
+        self.unused_tail.fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let (available, min_available, registered) = {
+            let st = self.state.lock().unwrap();
+            (st.available, st.min_available, st.share.len())
+        };
+        let in_use = self.n_blocks - available;
+        let peak_in_use = self.n_blocks - min_available;
+        let shared = self.shared_attached.load(Ordering::Relaxed);
+        let prompt = self.prompt_blocks.load(Ordering::Relaxed);
+        KvPoolStats {
+            n_blocks: self.n_blocks,
+            block_size: self.block_size,
+            in_use,
+            utilization: in_use as f64 / self.n_blocks as f64,
+            peak_in_use,
+            peak_utilization: peak_in_use as f64 / self.n_blocks as f64,
+            shared_attached: shared,
+            prompt_blocks: prompt,
+            shared_hit_rate: if prompt == 0 { 0.0 } else { shared as f64 / prompt as f64 },
+            cow_copies: self.cow_copies.load(Ordering::Relaxed),
+            evicted_blocks: self.evicted_blocks.load(Ordering::Relaxed),
+            unused_tail_returned: self.unused_tail.load(Ordering::Relaxed),
+            registered_prefixes: registered,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n_blocks: usize, bs: usize) -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks, block_size: bs },
+            2, // layers
+            4, // d
+        ))
+    }
+
+    #[test]
+    fn reserve_and_release_round_trip() {
+        let p = pool(10, 4);
+        assert_eq!(p.available(), 10);
+        let r = p.try_reserve(6).unwrap();
+        assert_eq!(p.available(), 4);
+        assert!(matches!(
+            p.try_reserve(5),
+            Err(KvError::OutOfBlocks { needed: 5, available: 4 })
+        ));
+        drop(r);
+        assert_eq!(p.available(), 10);
+    }
+
+    #[test]
+    fn admit_reserves_worst_case_without_sharing() {
+        let p = pool(64, 4);
+        // 10 tokens over block_size 4 -> 3 logical blocks x 2 layers = 6.
+        let a = p.admit(&[1, 2, 3], 10, PrefixTag::default()).unwrap();
+        assert_eq!(a.blocks_reserved(), 6);
+        assert_eq!(a.shared_len(), 0);
+        assert_eq!(p.available(), 58);
+        drop(a);
+        assert_eq!(p.available(), 64);
+    }
+
+    #[test]
+    fn blocks_for_matches_admit_math() {
+        let p = pool(64, 4);
+        assert_eq!(p.blocks_for(10), 6);
+        assert_eq!(p.blocks_for(8), 4);
+        assert_eq!(p.blocks_for(0), 2);
+    }
+
+    #[test]
+    fn stats_track_utilization() {
+        let p = pool(8, 4);
+        let _r = p.try_reserve(2).unwrap();
+        let s = p.stats();
+        assert_eq!(s.in_use, 2);
+        assert!((s.utilization - 0.25).abs() < 1e-9);
+        assert_eq!(s.registered_prefixes, 0);
+    }
+}

@@ -1,0 +1,332 @@
+//! Per-sequence page tables over the block pool.
+//!
+//! A [`PagedSeq`] owns one page table per layer. Pages are either owned
+//! buffers (writable, drawn from the sequence's reserved allowance) or
+//! frozen [`SharedBlock`]s attached from the prefix map; writing into a
+//! shared page copies it first (copy-on-write), which is how two requests
+//! with the same prompt diverge into their own generations.
+
+use std::sync::Arc;
+
+use super::pool::{Admitted, BlockPool, KvBuf, Reservation, SharedBlock};
+use super::{KvError, KvStore};
+
+pub(crate) enum Page {
+    Owned(KvBuf),
+    Shared { blk: Arc<SharedBlock>, filled: usize },
+}
+
+impl Page {
+    fn filled(&self) -> usize {
+        match self {
+            Page::Owned(b) => b.filled,
+            Page::Shared { filled, .. } => *filled,
+        }
+    }
+}
+
+pub(crate) struct LayerPages {
+    pub(crate) blocks: Vec<Page>,
+    pub(crate) len: usize,
+}
+
+/// One sequence's paged KV across all layers of a model. Created from a
+/// pool [`Admitted`]; dropping it recycles owned buffers and releases the
+/// remaining reservation.
+pub struct PagedSeq {
+    pool: Arc<BlockPool>,
+    layers: Vec<LayerPages>,
+    pub(crate) reservation: Reservation,
+    /// Owned blocks this sequence may still materialize (worst case was
+    /// reserved up front, so `push` never races the pool).
+    allow: usize,
+    pub(crate) tag: super::PrefixTag,
+    block_size: usize,
+    d: usize,
+}
+
+impl PagedSeq {
+    pub fn new(pool: &Arc<BlockPool>, admitted: Admitted) -> PagedSeq {
+        let shared_len = admitted.shared_len;
+        let layers: Vec<LayerPages> = if shared_len == 0 {
+            (0..pool.n_layers()).map(|_| LayerPages { blocks: Vec::new(), len: 0 }).collect()
+        } else {
+            admitted
+                .layers
+                .into_iter()
+                .map(|blocks| LayerPages {
+                    blocks: blocks
+                        .into_iter()
+                        .map(|(blk, filled)| Page::Shared { blk, filled })
+                        .collect(),
+                    len: shared_len,
+                })
+                .collect()
+        };
+        debug_assert_eq!(layers.len(), pool.n_layers());
+        // Hit-rate metrics count here — at materialization — so a bounced
+        // admission (queue full, generation moved) never skews them.
+        pool.note_admitted(admitted.metric_prompt_blocks, admitted.metric_shared_blocks);
+        PagedSeq {
+            pool: pool.clone(),
+            layers,
+            reservation: admitted.reservation,
+            allow: admitted.allow,
+            tag: admitted.tag,
+            block_size: pool.block_size(),
+            d: pool.width(),
+        }
+    }
+
+    /// Tokens cached (identical across layers between decode steps).
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len)
+    }
+
+    /// Weight identity this sequence's KV was computed under.
+    pub fn tag(&self) -> super::PrefixTag {
+        self.tag
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Physical blocks currently mapped by this sequence.
+    pub fn blocks_in_use(&self) -> usize {
+        self.layers.iter().map(|l| l.blocks.len()).sum()
+    }
+
+    /// Mutable single-layer view for one decode step.
+    pub fn layer(&mut self, l: usize) -> PagedLayer<'_> {
+        PagedLayer {
+            pages: &mut self.layers[l],
+            pool: &self.pool,
+            allow: &mut self.allow,
+            block_size: self.block_size,
+            d: self.d,
+        }
+    }
+
+    /// Freeze the first `n` (full) blocks of every layer in place so the
+    /// prefix map can hold them. Idempotent; partial blocks are skipped.
+    pub(crate) fn freeze_blocks(&mut self, n: usize) {
+        let bs = self.block_size;
+        for layer in &mut self.layers {
+            for page in layer.blocks.iter_mut().take(n) {
+                if page.filled() < bs {
+                    continue;
+                }
+                let old = std::mem::replace(page, Page::Owned(KvBuf::empty()));
+                *page = match old {
+                    Page::Owned(buf) => Page::Shared {
+                        filled: buf.filled,
+                        blk: Arc::new(SharedBlock { k: buf.k, v: buf.v, filled: buf.filled }),
+                    },
+                    shared => shared,
+                };
+            }
+        }
+    }
+
+    pub(crate) fn shared_arc(&self, layer: usize, block: usize) -> Option<Arc<SharedBlock>> {
+        match self.layers.get(layer)?.blocks.get(block)? {
+            Page::Shared { blk, .. } => Some(blk.clone()),
+            Page::Owned(_) => None,
+        }
+    }
+
+    /// Raw `(k, v, filled)` rows of one block (snapshot source).
+    pub(crate) fn block_rows(&self, layer: usize, block: usize) -> Option<(&[f32], &[f32], usize)> {
+        match self.layers.get(layer)?.blocks.get(block)? {
+            Page::Owned(b) => Some((&b.k, &b.v, b.filled)),
+            Page::Shared { blk, filled } => Some((&blk.k, &blk.v, *filled)),
+        }
+    }
+
+    /// Pointer identities of every shared block this sequence references
+    /// (O(1) membership for the registration charge-transfer check).
+    pub(crate) fn shared_ptrs(&self) -> std::collections::HashSet<usize> {
+        self.layers
+            .iter()
+            .flat_map(|l| {
+                l.blocks.iter().filter_map(|p| match p {
+                    Page::Shared { blk, .. } => Some(Arc::as_ptr(blk) as usize),
+                    Page::Owned(_) => None,
+                })
+            })
+            .collect()
+    }
+
+    /// Move one block's budget charge from this sequence to the map.
+    pub(crate) fn transfer_charge(&mut self) {
+        debug_assert!(self.reservation.charged > 0, "charge transfer without charge");
+        self.reservation.charged = self.reservation.charged.saturating_sub(1);
+    }
+}
+
+impl Drop for PagedSeq {
+    fn drop(&mut self) {
+        if self.allow > 0 {
+            self.pool.note_unused_tail(self.allow);
+        }
+        let layers = std::mem::take(&mut self.layers);
+        let mut bufs = Vec::new();
+        for layer in layers {
+            for page in layer.blocks {
+                match page {
+                    Page::Owned(b) => bufs.push(b),
+                    Page::Shared { blk, .. } => {
+                        // Frozen blocks the map never took (or already
+                        // evicted) are ours alone — recycle the buffer.
+                        if let Ok(sb) = Arc::try_unwrap(blk) {
+                            bufs.push(KvBuf { k: sb.k, v: sb.v, filled: 0 });
+                        }
+                    }
+                }
+            }
+        }
+        self.pool.recycle(bufs);
+        // `reservation` drops after this, releasing the remaining charge.
+    }
+}
+
+/// One layer of a [`PagedSeq`] as attention sees it. Implements
+/// [`KvStore`], so [`PackedBlock::try_forward`](crate::infer::PackedBlock)
+/// decodes against paged and contiguous caches through the same code.
+pub struct PagedLayer<'a> {
+    pages: &'a mut LayerPages,
+    pool: &'a BlockPool,
+    allow: &'a mut usize,
+    block_size: usize,
+    d: usize,
+}
+
+impl PagedLayer<'_> {
+    fn alloc_owned(&mut self) -> Result<KvBuf, KvError> {
+        if *self.allow == 0 {
+            return Err(KvError::OutOfBlocks { needed: 1, available: 0 });
+        }
+        *self.allow -= 1;
+        Ok(self.pool.take_buf())
+    }
+
+    /// Replace a shared page with an owned copy of its filled rows.
+    fn cow(&mut self, bi: usize) -> Result<(), KvError> {
+        let mut buf = self.alloc_owned()?;
+        if let Page::Shared { blk, filled } = &self.pages.blocks[bi] {
+            let n = *filled * self.d;
+            buf.k[..n].copy_from_slice(&blk.k[..n]);
+            buf.v[..n].copy_from_slice(&blk.v[..n]);
+            buf.filled = *filled;
+        }
+        self.pages.blocks[bi] = Page::Owned(buf);
+        self.pool.note_cow();
+        Ok(())
+    }
+}
+
+impl KvStore for PagedLayer<'_> {
+    fn len(&self) -> usize {
+        self.pages.len
+    }
+
+    fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError> {
+        let (bs, d) = (self.block_size, self.d);
+        debug_assert_eq!(k.len(), d);
+        debug_assert_eq!(v.len(), d);
+        let pos = self.pages.len;
+        let bi = pos / bs;
+        let off = pos % bs;
+        if bi == self.pages.blocks.len() {
+            debug_assert_eq!(off, 0);
+            let buf = self.alloc_owned()?;
+            self.pages.blocks.push(Page::Owned(buf));
+        } else if matches!(self.pages.blocks[bi], Page::Shared { .. }) {
+            self.cow(bi)?;
+        }
+        let Some(Page::Owned(buf)) = self.pages.blocks.get_mut(bi) else {
+            return Err(KvError::CacheOverflow { cap: pos });
+        };
+        if buf.filled != off {
+            return Err(KvError::CacheOverflow { cap: pos });
+        }
+        buf.k[off * d..(off + 1) * d].copy_from_slice(k);
+        buf.v[off * d..(off + 1) * d].copy_from_slice(v);
+        buf.filled = off + 1;
+        self.pages.len = pos + 1;
+        Ok(())
+    }
+
+    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+        let d = self.d;
+        for p in self.pages.blocks.iter().filter(|p| p.filled() > 0) {
+            match p {
+                Page::Owned(b) => f(&b.k[..b.filled * d], &b.v[..b.filled * d]),
+                Page::Shared { blk, filled } => f(&blk.k[..filled * d], &blk.v[..filled * d]),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{KvPoolOptions, PrefixTag};
+    use super::*;
+
+    fn tiny_pool() -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 16, block_size: 4 }, 1, 2))
+    }
+
+    #[test]
+    fn push_fills_blocks_and_segments_cover_all_rows() {
+        let pool = tiny_pool();
+        let adm = pool.admit(&[], 10, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&pool, adm);
+        for i in 0..10 {
+            let row = [i as f32, -(i as f32)];
+            seq.layer(0).push(&row, &row).unwrap();
+        }
+        assert_eq!(seq.len(), 10);
+        assert_eq!(seq.blocks_in_use(), 3);
+        let layer = seq.layer(0);
+        let segs = layer.segments();
+        let rows: usize = segs.iter().map(|(k, _)| k.len() / 2).sum();
+        assert_eq!(rows, 10);
+        // Position order is preserved across segment boundaries.
+        let flat: Vec<f32> = segs.iter().flat_map(|(k, _)| k.iter().copied()).collect();
+        assert_eq!(flat[8], 4.0, "block boundary row must follow in order");
+    }
+
+    #[test]
+    fn exhausting_the_allowance_is_an_error_not_a_panic() {
+        let pool = tiny_pool();
+        let adm = pool.admit(&[], 4, PrefixTag::default()).unwrap();
+        assert_eq!(adm.blocks_reserved(), 1);
+        let mut seq = PagedSeq::new(&pool, adm);
+        let row = [0.0f32; 2];
+        for _ in 0..4 {
+            seq.layer(0).push(&row, &row).unwrap();
+        }
+        assert!(matches!(
+            seq.layer(0).push(&row, &row),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+    }
+
+    #[test]
+    fn dropping_a_seq_returns_its_blocks() {
+        let pool = tiny_pool();
+        let adm = pool.admit(&[], 12, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&pool, adm);
+        let row = [1.0f32; 2];
+        for _ in 0..5 {
+            seq.layer(0).push(&row, &row).unwrap();
+        }
+        assert_eq!(pool.available(), 13);
+        drop(seq);
+        assert_eq!(pool.available(), 16);
+        // One block reserved for tokens 5..12 was never materialized.
+        assert!(pool.stats().unused_tail_returned >= 1);
+    }
+}

@@ -16,13 +16,19 @@
 //! * [`gemm`] — the Figure-8 engines: f32 GEMM, INT8 GEMM, T-MAC-style LUT
 //!   W1A8 GEMV, packed ternary GEMV
 //! * [`infer`] — pure-rust packed-weight transformer inference engine
+//! * [`kvcache`] — paged KV-cache subsystem: fixed block budget
+//!   ([`kvcache::BlockPool`]), per-sequence page tables with copy-on-write
+//!   ([`kvcache::PagedSeq`]), prompt-prefix sharing, and recoverable
+//!   [`kvcache::KvError`]s in place of overflow panics; attention decodes
+//!   paged and contiguous caches bit-identically via [`kvcache::KvStore`]
 //! * [`runtime`] — PJRT client wrapper: load HLO-text artifacts, thread
 //!   training state through the AOT train step
 //! * [`coordinator`] — two-phase schedule, training loop, checkpoints,
 //!   stability monitor
 //! * [`serve`] — the persistent [`serve::Engine`] session API (streaming
 //!   tickets, per-request sampling, cancellation, bounded-queue
-//!   backpressure, chunked prefill) over the multi-model
+//!   backpressure, chunked prefill, KV-budgeted admission with priority
+//!   preemption over a [`kvcache::BlockPool`]) over the multi-model
 //!   [`serve::ModelRegistry`] (lease-counted replicas, warm hot-swap)
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
@@ -42,6 +48,7 @@ pub mod eval;
 pub mod experiments;
 pub mod gemm;
 pub mod infer;
+pub mod kvcache;
 pub mod memory;
 pub mod quant;
 pub mod report;

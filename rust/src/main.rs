@@ -93,6 +93,7 @@ USAGE:
   repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N]
               [--batch N] [--workers N] [--queue N] [--prefill-chunk N]
               [--temperature F] [--top-k N] [--seed N]
+              [--kv-blocks N] [--kv-block-size N]   (0 kv-blocks: unmetered legacy caches)
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -219,16 +220,23 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use pquant::serve::{Engine, EngineOptions, GenRequest, SamplingParams, SubmitError};
-    use std::time::{Duration, Instant};
+    use std::time::Instant;
 
     let requests = args.flag("requests", 16usize)?;
     let new_tokens = args.flag("new-tokens", 32usize)?;
+    let kv_defaults = pquant::kvcache::KvPoolOptions::default();
+    let kv_blocks = args.flag("kv-blocks", kv_defaults.n_blocks)?;
+    let kv = (kv_blocks > 0).then_some(pquant::kvcache::KvPoolOptions {
+        n_blocks: kv_blocks,
+        block_size: args.flag("kv-block-size", kv_defaults.block_size)?.max(1),
+    });
     let opts = EngineOptions {
         model: "serve".into(),
         max_batch: args.flag("batch", 4usize)?,
         workers: args.flag("workers", 1usize)?,
         queue_depth: args.flag("queue", 64usize)?,
         prefill_chunk: args.flag("prefill-chunk", 16usize)?,
+        kv,
     };
     let temperature = args.flag("temperature", 0.0f32)?;
     let top_k = args.flag("top-k", 0usize)?;
@@ -272,21 +280,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: seed.wrapping_add(id as u64),
             stop_tokens: vec![],
         };
-        let mut req = GenRequest::sampled(prompt, new_tokens, sampling);
-        // Block-retry on backpressure: the load generator outpacing the
-        // bounded queue is expected, not an error.
-        loop {
-            match engine.submit(req) {
-                Ok(t) => {
-                    tickets.push(t);
-                    break;
-                }
-                Err(SubmitError::QueueFull(r)) => {
-                    req = r;
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-                Err(SubmitError::ShuttingDown(_)) => bail!("engine shut down mid-test"),
+        let req = GenRequest::sampled(prompt, new_tokens, sampling);
+        // submit_blocking absorbs QueueFull/KvExhausted backpressure (the
+        // load generator outpacing the queue or the KV budget is expected;
+        // both drain as in-flight requests finish); terminal errors stop
+        // the run.
+        match engine.submit_blocking(req) {
+            Ok(t) => tickets.push(t),
+            Err(e @ SubmitError::KvTooLarge(_)) => {
+                bail!("{e}: raise --kv-blocks or lower --new-tokens")
             }
+            Err(e) => bail!("submit failed: {e}"),
         }
     }
     let stats: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
@@ -317,6 +321,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "queue wait ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   ttft ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
         qw.p50, qw.p95, qw.p99, tt.p50, tt.p95, tt.p99
     );
+    if let Some(kv) = metrics.kv() {
+        println!(
+            "kv pool: {} x {}-token blocks, peak utilization {:.0}% | shared-block hit rate \
+             {:.0}% ({} of {} prompt blocks) | cow {} | preempted {} | unused tail returned {}",
+            kv.n_blocks,
+            kv.block_size,
+            kv.peak_utilization * 100.0,
+            kv.shared_hit_rate * 100.0,
+            kv.shared_attached,
+            kv.prompt_blocks,
+            kv.cow_copies,
+            metrics.preempted.load(std::sync::atomic::Ordering::Relaxed),
+            kv.unused_tail_returned,
+        );
+    }
     Ok(())
 }
 

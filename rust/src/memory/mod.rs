@@ -14,8 +14,17 @@
 //!                α/β/λ/γ/μ fused (§4.5: "merged during inference")
 //! Embeddings, LM head and norms stay fp16 in every variant (Table 3
 //! "memory footprint include the storage of Embeddings and LayerNorm").
+//!
+//! KV-cache term: once weights are 1-bit, the KV cache dominates serving
+//! memory, so [`Footprint`] carries an explicit `kv_bytes` term sized by
+//! [`kv_seq_bytes`] (one sequence) or [`kv_pool_bytes`] (a whole
+//! [`BlockPool`](crate::kvcache::BlockPool) budget: `n_blocks` blocks of
+//! `block_size` tokens × `d_model` f32 K and V rows, per layer).
+//! `storage()` includes it; `traffic()` keeps the paper's Fig-6 semantics
+//! (weight bytes moved per forward pass) and does not.
 
 use crate::config::{ModelConfig, Variant};
+use crate::kvcache::KvPoolOptions;
 
 /// Byte counts for one model; `traffic` = bytes moved per forward pass
 /// (activated weights), `storage` = resident bytes (all weights).
@@ -31,10 +40,14 @@ pub struct Footprint {
     pub ffn_8bit_total_bytes: usize,
     pub router_bytes: usize,
     pub scale_bytes: usize,
+    /// Resident KV-cache bytes (0 from [`footprint`]; attach a serving
+    /// budget with [`Footprint::with_kv`]).
+    pub kv_bytes: usize,
 }
 
 impl Footprint {
-    /// Bytes transferred per forward pass (Fig 6).
+    /// Bytes transferred per forward pass (Fig 6 — weights only; the KV
+    /// term is resident state, not per-pass weight traffic).
     pub fn traffic(&self) -> usize {
         self.embed_bytes
             + self.norm_bytes
@@ -45,7 +58,7 @@ impl Footprint {
             + self.scale_bytes
     }
 
-    /// Resident storage (Table 3 "Memory", Appendix D.1).
+    /// Resident storage (Table 3 "Memory", Appendix D.1) plus the KV term.
     pub fn storage(&self) -> usize {
         self.embed_bytes
             + self.norm_bytes
@@ -54,10 +67,33 @@ impl Footprint {
             + self.ffn_8bit_total_bytes
             + self.router_bytes
             + self.scale_bytes
+            + self.kv_bytes
+    }
+
+    /// Attach a KV-cache byte count (see [`kv_seq_bytes`] /
+    /// [`kv_pool_bytes`]).
+    pub fn with_kv(mut self, kv_bytes: usize) -> Footprint {
+        self.kv_bytes = kv_bytes;
+        self
     }
 }
 
 const FP16: usize = 2;
+/// KV rows are f32 in the packed engine (activations are requantized per
+/// token; the cache itself stays full precision).
+const KV_F32: usize = 4;
+
+/// Resident KV bytes for one sequence of `tokens` positions: K and V rows
+/// of `d_model` floats per layer.
+pub fn kv_seq_bytes(cfg: &ModelConfig, tokens: usize) -> usize {
+    2 * tokens * cfg.d_model * cfg.n_layers * KV_F32
+}
+
+/// Worst-case resident bytes of a whole paged KV pool budget
+/// (blocks are per-layer, so `n_blocks` already counts layers).
+pub fn kv_pool_bytes(cfg: &ModelConfig, opts: &KvPoolOptions) -> usize {
+    2 * opts.n_blocks * opts.block_size * cfg.d_model * KV_F32
+}
 
 /// Compute the footprint model for a config.
 pub fn footprint(cfg: &ModelConfig) -> Footprint {
@@ -102,6 +138,7 @@ pub fn footprint(cfg: &ModelConfig) -> Footprint {
         ffn_8bit_total_bytes: ffn_8bit_total,
         router_bytes,
         scale_bytes: scales,
+        kv_bytes: 0,
     }
 }
 
@@ -177,5 +214,34 @@ mod tests {
         let fp = footprint(&by_name("paper-1.3B-fp16"));
         let bn = footprint(&by_name("paper-1.3B-bitnet"));
         assert_eq!(fp.attn_bytes, bn.attn_bytes * 16);
+    }
+
+    #[test]
+    fn kv_term_adds_to_storage_not_traffic() {
+        let cfg = by_name("paper-1.3B-pquant");
+        let base = footprint(&cfg);
+        let kv = kv_seq_bytes(&cfg, 2048);
+        assert_eq!(kv, 2 * 2048 * cfg.d_model * cfg.n_layers * 4);
+        let with = footprint(&cfg).with_kv(kv);
+        assert_eq!(with.storage(), base.storage() + kv);
+        assert_eq!(with.traffic(), base.traffic(), "Fig-6 traffic is weights only");
+    }
+
+    #[test]
+    fn kv_dominates_pquant_weights_at_serving_depth() {
+        // The regime motivating the paged pool: with 1-bit blocks, a
+        // few concurrent long sequences out-weigh the packed weights.
+        let cfg = by_name("paper-1.3B-pquant");
+        let weights = footprint(&cfg);
+        let block_weights = weights.storage() - weights.embed_bytes;
+        assert!(kv_seq_bytes(&cfg, 4096) * 8 > block_weights);
+    }
+
+    #[test]
+    fn pool_bytes_scale_with_budget() {
+        let cfg = by_name("paper-300M-pquant");
+        let small = crate::kvcache::KvPoolOptions { n_blocks: 64, block_size: 16 };
+        let big = crate::kvcache::KvPoolOptions { n_blocks: 128, block_size: 16 };
+        assert_eq!(kv_pool_bytes(&cfg, &big), 2 * kv_pool_bytes(&cfg, &small));
     }
 }

@@ -1,6 +1,7 @@
 //! The `Engine` session API: a persistent continuous-batching server over
-//! registry-leased replicas, with streaming, sampling, cancellation and
-//! bounded-queue backpressure.
+//! registry-leased replicas, with streaming, sampling, cancellation,
+//! bounded-queue backpressure, and KV-budgeted admission over a paged
+//! [`BlockPool`].
 //!
 //! Lifecycle:
 //!   * [`Engine::start`] spawns `workers` decode threads against a named
@@ -12,6 +13,19 @@
 //!   * [`Engine::submit`] enforces a bounded admission queue; when it is
 //!     full the caller gets [`SubmitError::QueueFull`] back immediately
 //!     instead of unbounded buffering — backpressure, not memory growth.
+//!   * KV memory is metered: with a pool configured
+//!     ([`EngineOptions::kv`], the default), `submit` reserves the
+//!     request's worst-case block count up front.  A dry pool returns
+//!     [`SubmitError::KvExhausted`] — the KV sibling of `QueueFull` —
+//!     and, if the request outranks an in-flight one
+//!     ([`GenRequest::priority`]), flags the lowest-priority victim for
+//!     preemption: its blocks are freed and it re-queues for deterministic
+//!     recompute (greedy resume re-feeds prompt + emitted tokens, so the
+//!     final stream is identical to an uninterrupted run).
+//!   * Prompts with a previously-served block-aligned prefix attach the
+//!     frozen KV blocks and skip the covered prefill compute; shared
+//!     blocks are tagged by model generation so a hot-swap never leaks
+//!     stale KV.
 //!   * Each accepted request returns a [`Ticket`]: a streaming event
 //!     channel ([`Event::Prefilled`] / [`Event::Token`] / [`Event::Done`])
 //!     plus [`Ticket::cancel`], observed between decode slices.
@@ -22,6 +36,7 @@
 //! so a long prompt never stalls the whole batch, and the active set
 //! (prefilling + decoding) never exceeds `max_batch`.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
@@ -33,6 +48,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::infer::{KvCache, PackedModel};
+use crate::kvcache::{Admitted, BlockPool, KvError, KvPoolOptions, KvPoolStats, PagedSeq, PrefixTag};
 use crate::util::rng::Rng;
 
 use super::{Lease, ModelRegistry};
@@ -74,16 +90,25 @@ pub struct GenRequest {
     /// output (it never reaches the decode loop, so no underflow).
     pub n_new: usize,
     pub sampling: SamplingParams,
+    /// Scheduling priority (higher wins). When the KV pool runs dry, a
+    /// submission may preempt an in-flight request of *strictly lower*
+    /// priority; equal-priority requests never preempt each other.
+    pub priority: i32,
 }
 
 impl GenRequest {
     /// Greedy request — today's default serving behavior.
     pub fn greedy(prompt: Vec<u32>, n_new: usize) -> GenRequest {
-        GenRequest { prompt, n_new, sampling: SamplingParams::greedy() }
+        GenRequest { prompt, n_new, sampling: SamplingParams::greedy(), priority: 0 }
     }
 
     pub fn sampled(prompt: Vec<u32>, n_new: usize, sampling: SamplingParams) -> GenRequest {
-        GenRequest { prompt, n_new, sampling }
+        GenRequest { prompt, n_new, sampling, priority: 0 }
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> GenRequest {
+        self.priority = priority;
+        self
     }
 }
 
@@ -96,6 +121,8 @@ pub enum FinishReason {
     Stop,
     /// [`Ticket::cancel`] (or engine teardown) ended it early.
     Cancelled,
+    /// A KV-cache error ended it (the request fails, the worker survives).
+    Failed,
 }
 
 /// Final accounting for one request, delivered in [`Event::Done`].
@@ -132,14 +159,46 @@ pub enum Event {
 pub enum SubmitError {
     /// The bounded admission queue is full — retry later (backpressure).
     QueueFull(GenRequest),
+    /// The KV block pool cannot cover the request's worst case — retry as
+    /// in-flight requests finish and free blocks (backpressure). If the
+    /// request outranked an in-flight one, a preemption has been flagged
+    /// and a retry will find the blocks freed.
+    KvExhausted(GenRequest),
+    /// The request's worst-case KV need exceeds the entire pool — no
+    /// amount of draining (or retrying) can ever admit it. Shrink the
+    /// prompt/budget or grow the pool (`--kv-blocks`).
+    KvTooLarge(GenRequest),
     /// The engine is shutting down; no new work is accepted.
     ShuttingDown(GenRequest),
+}
+
+impl SubmitError {
+    /// Transient backpressure ([`SubmitError::QueueFull`] /
+    /// [`SubmitError::KvExhausted`]): a retry can succeed once in-flight
+    /// work drains. The other variants are terminal for this request.
+    pub fn is_backpressure(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_) | SubmitError::KvExhausted(_))
+    }
+
+    /// Take the request back out of the error for a retry.
+    pub fn into_request(self) -> GenRequest {
+        match self {
+            SubmitError::QueueFull(r)
+            | SubmitError::KvExhausted(r)
+            | SubmitError::KvTooLarge(r)
+            | SubmitError::ShuttingDown(r) => r,
+        }
+    }
 }
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::QueueFull(_) => write!(f, "admission queue full"),
+            SubmitError::KvExhausted(_) => write!(f, "KV block pool exhausted"),
+            SubmitError::KvTooLarge(_) => {
+                write!(f, "request exceeds the whole KV block pool")
+            }
             SubmitError::ShuttingDown(_) => write!(f, "engine shutting down"),
         }
     }
@@ -246,11 +305,17 @@ impl SampleRing {
 pub struct ServeMetrics {
     pub completed: AtomicUsize,
     pub cancelled: AtomicUsize,
+    /// Requests ended by a KV-cache error (the worker survives).
+    pub failed: AtomicUsize,
+    /// Requests preempted: KV blocks freed, re-queued for recompute.
+    pub preempted: AtomicUsize,
     pub tokens_out: AtomicUsize,
     /// Peak concurrent active requests observed (batcher invariant probe).
     pub peak_active: AtomicUsize,
     queue_wait_ms: Mutex<SampleRing>,
     ttft_ms: Mutex<SampleRing>,
+    /// The workers' KV pool (None on the legacy contiguous path).
+    pool: Option<Arc<BlockPool>>,
 }
 
 impl ServeMetrics {
@@ -270,6 +335,12 @@ impl ServeMetrics {
     pub fn ttft_percentiles(&self) -> Percentiles {
         Percentiles::of(&self.ttft_ms.lock().unwrap().samples)
     }
+
+    /// KV pool utilization, shared-block hit rate, CoW/eviction counters —
+    /// `None` when the engine runs without a pool.
+    pub fn kv(&self) -> Option<KvPoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
+    }
 }
 
 /// Engine tuning knobs.
@@ -287,6 +358,11 @@ pub struct EngineOptions {
     /// Prompt tokens fed per scheduling slice, so prefill interleaves with
     /// decode instead of stalling the active set.
     pub prefill_chunk: usize,
+    /// KV block-pool geometry. `Some` (the default) meters KV memory:
+    /// admission reserves blocks, prompts share prefixes, preemption kicks
+    /// in under pressure. `None` falls back to per-request contiguous
+    /// caches with no budget (the seed behavior).
+    pub kv: Option<KvPoolOptions>,
 }
 
 impl Default for EngineOptions {
@@ -297,6 +373,7 @@ impl Default for EngineOptions {
             workers: 1,
             queue_depth: 64,
             prefill_chunk: 16,
+            kv: Some(KvPoolOptions::default()),
         }
     }
 }
@@ -307,7 +384,57 @@ struct Admission {
     enqueued: Instant,
     events: Sender<Event>,
     cancelled: Arc<AtomicBool>,
+    /// KV reservation + shared prefix granted at submit time (pool mode).
+    admitted: Option<Admitted>,
 }
+
+/// Entry in the engine-wide in-flight index, used by `submit` to pick a
+/// preemption victim without touching worker state.
+struct ActiveInfo {
+    priority: i32,
+    preempt: Arc<AtomicBool>,
+}
+
+/// A pending high-priority submission that flagged a preemption: while it
+/// stands (and has not expired), workers do not resume lower-priority
+/// preempted requests, so the retrying submitter wins the freed blocks.
+struct Demand {
+    priority: i32,
+    expires: Instant,
+}
+
+/// A preempted request parked for recompute: everything needed to re-feed
+/// prompt + emitted tokens and continue the stream deterministically.
+struct Preempted {
+    id: u64,
+    prompt: Vec<u32>,
+    emitted: Vec<u32>,
+    n_new: usize,
+    sampling: SamplingParams,
+    priority: i32,
+    rng: Rng,
+    /// Weight identity the emitted tokens were decoded under; resume on a
+    /// different generation would silently splice two models' outputs.
+    tag: PrefixTag,
+    prefilled_sent: bool,
+    enqueued: Instant,
+    started: Instant,
+    first_token: Option<Duration>,
+    events: Sender<Event>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// State shared between `submit` and the workers (beyond the queue).
+#[derive(Default)]
+struct EngineShared {
+    requeue: Mutex<VecDeque<Preempted>>,
+    active: Mutex<HashMap<u64, ActiveInfo>>,
+    demand: Mutex<Option<Demand>>,
+}
+
+/// How long a flagged preemption holds resume of lower-priority requests
+/// open for the retrying submitter.
+const DEMAND_TTL: Duration = Duration::from_millis(250);
 
 /// Persistent serving engine. Dropping (or [`Engine::shutdown`]) closes the
 /// admission queue, drains in-flight requests, and joins the workers.
@@ -316,33 +443,55 @@ pub struct Engine {
     handles: Vec<JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
     next_id: AtomicU64,
+    registry: Arc<ModelRegistry>,
+    model: String,
+    pool: Option<Arc<BlockPool>>,
+    shared: Arc<EngineShared>,
 }
 
 impl Engine {
     /// Spawn the decode workers against `opts.model` in `registry`. Fails
     /// fast if no such model is registered.
     pub fn start(registry: &Arc<ModelRegistry>, opts: EngineOptions) -> Result<Engine> {
-        registry
+        let probe = registry
             .acquire(&opts.model)
             .ok_or_else(|| anyhow!("no model registered under {:?}", opts.model))?;
+        let pool = opts
+            .kv
+            .map(|kv| Arc::new(BlockPool::new(kv, probe.model.cfg.n_layers, probe.model.cfg.d_model)));
+        drop(probe);
         let (tx, rx) = sync_channel(opts.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(ServeMetrics::default());
+        let metrics = Arc::new(ServeMetrics { pool: pool.clone(), ..Default::default() });
+        let shared = Arc::new(EngineShared::default());
         let handles = (0..opts.workers.max(1))
             .map(|_| {
                 let registry = registry.clone();
                 let rx = rx.clone();
                 let metrics = metrics.clone();
                 let opts = opts.clone();
-                std::thread::spawn(move || worker_loop(registry, rx, opts, metrics))
+                let pool = pool.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(registry, rx, opts, metrics, pool, shared))
             })
             .collect();
-        Ok(Engine { tx: Some(tx), handles, metrics, next_id: AtomicU64::new(0) })
+        Ok(Engine {
+            tx: Some(tx),
+            handles,
+            metrics,
+            next_id: AtomicU64::new(0),
+            registry: registry.clone(),
+            model: opts.model,
+            pool,
+            shared,
+        })
     }
 
     /// Submit a request. Zero-budget requests complete immediately with
-    /// empty output; otherwise the request enters the bounded queue or is
-    /// rejected with [`SubmitError::QueueFull`].
+    /// empty output; otherwise the request reserves its KV worst case
+    /// against the pool ([`SubmitError::KvExhausted`] is the block-budget
+    /// sibling of [`SubmitError::QueueFull`]) and enters the bounded
+    /// queue.
     pub fn submit(&self, req: GenRequest) -> std::result::Result<Ticket, SubmitError> {
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::ShuttingDown(req));
@@ -364,16 +513,118 @@ impl Engine {
             }));
             return Ok(ticket);
         }
-        let adm = Admission { id, req, enqueued: Instant::now(), events: etx, cancelled };
+        let admitted = match self.pool.as_ref() {
+            None => None,
+            Some(kvp) => {
+                let total = kv_worst_case(req.prompt.len(), req.n_new);
+                // A worst case no drain can ever cover must fail fast, not
+                // spin retry loops (and, preempted mid-flight, it could
+                // never re-admit once its shared prefix was evicted).
+                if kvp.blocks_for(total) > kvp.n_blocks() {
+                    return Err(SubmitError::KvTooLarge(req));
+                }
+                match kvp.admit(&req.prompt, total, self.current_tag()) {
+                    Ok(a) => {
+                        self.clear_demand_if_covered(req.priority);
+                        Some(a)
+                    }
+                    Err(KvError::OutOfBlocks { .. } | KvError::CacheOverflow { .. }) => {
+                        self.flag_preemption(req.priority);
+                        return Err(SubmitError::KvExhausted(req));
+                    }
+                }
+            }
+        };
+        let adm =
+            Admission { id, req, enqueued: Instant::now(), events: etx, cancelled, admitted };
         match tx.try_send(adm) {
+            // A dropped rejection releases its KV reservation on the way out.
             Ok(()) => Ok(ticket),
             Err(TrySendError::Full(adm)) => Err(SubmitError::QueueFull(adm.req)),
             Err(TrySendError::Disconnected(adm)) => Err(SubmitError::ShuttingDown(adm.req)),
         }
     }
 
+    /// [`Engine::submit`], blocking on backpressure: retries while the
+    /// admission queue or the KV pool is full (both drain as in-flight
+    /// requests finish) and returns any terminal error as-is.
+    pub fn submit_blocking(&self, req: GenRequest) -> std::result::Result<Ticket, SubmitError> {
+        let mut req = req;
+        loop {
+            match self.submit(req) {
+                Ok(t) => return Ok(t),
+                Err(e) if e.is_backpressure() => {
+                    req = e.into_request();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Identity of the weights currently serving `self.model` — the share
+    /// tag new KV will be keyed under.
+    fn current_tag(&self) -> PrefixTag {
+        match self.registry.acquire(&self.model) {
+            Some(lease) => PrefixTag(lease.uid as usize, lease.generation),
+            None => PrefixTag::default(),
+        }
+    }
+
+    /// Flag the lowest-priority in-flight request strictly below
+    /// `priority` for preemption, and post a demand so workers hold its
+    /// resume until the retrying submitter claims the freed blocks.
+    fn flag_preemption(&self, priority: i32) {
+        let flagged = {
+            let act = self.shared.active.lock().unwrap();
+            // One victim at a time: while a flagged preemption is still in
+            // flight (its blocks not yet freed), a 1ms-retry loop must not
+            // cascade through the whole active set flagging more.
+            if act.values().any(|i| i.preempt.load(Ordering::Relaxed)) {
+                true
+            } else {
+                let victim = act
+                    .iter()
+                    .filter(|(_, i)| i.priority < priority)
+                    .min_by_key(|(id, i)| (i.priority, std::cmp::Reverse(**id)));
+                match victim {
+                    Some((_, info)) => {
+                        info.preempt.store(true, Ordering::Relaxed);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        };
+        if flagged {
+            let mut d = self.shared.demand.lock().unwrap();
+            // Never downgrade a live demand: a lower-priority waiter must
+            // not open the resume gate a higher-priority one closed.
+            let floor = d
+                .as_ref()
+                .filter(|dd| Instant::now() < dd.expires)
+                .map_or(i32::MIN, |dd| dd.priority);
+            *d = Some(Demand {
+                priority: priority.max(floor),
+                expires: Instant::now() + DEMAND_TTL,
+            });
+        }
+    }
+
+    fn clear_demand_if_covered(&self, priority: i32) {
+        let mut d = self.shared.demand.lock().unwrap();
+        if d.as_ref().is_some_and(|dd| priority >= dd.priority) {
+            *d = None;
+        }
+    }
+
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
         &self.metrics
+    }
+
+    /// The engine's KV pool, when admission is block-budgeted.
+    pub fn kv_pool(&self) -> Option<&Arc<BlockPool>> {
+        self.pool.as_ref()
     }
 
     /// Stop accepting work, drain in-flight requests, join the workers.
@@ -404,6 +655,15 @@ struct ReplicaSlot {
     lease: Lease,
     model: PackedModel,
     inflight: usize,
+}
+
+impl ReplicaSlot {
+    /// Weight identity this slot decodes with (the prefix-share tag).
+    /// Built on the entry's process-unique `uid`, not its address — a
+    /// recycled allocation must never revive another model's KV.
+    fn tag(&self) -> PrefixTag {
+        PrefixTag(self.lease.uid as usize, self.lease.generation)
+    }
 }
 
 /// Worker-local replica pool. Requests pin the slot (generation) they were
@@ -505,21 +765,55 @@ impl ReplicaPool {
     }
 }
 
-/// One in-flight request: its own caches, RNG, and event stream; pinned to
-/// the replica slot it was admitted on.
+/// Per-request KV state: paged against the engine pool, or the legacy
+/// caller-sized contiguous caches.
+enum RequestKv {
+    Contig(Vec<KvCache>),
+    Paged(PagedSeq),
+}
+
+/// Worst-case KV positions a request can occupy: every prompt token plus
+/// every decoded token except the last sampled one, which is emitted but
+/// never fed back through the model.
+fn kv_worst_case(prompt_len: usize, n_new: usize) -> usize {
+    prompt_len + n_new.saturating_sub(1)
+}
+
+fn kv_step(
+    model: &mut PackedModel,
+    token: u32,
+    pos: usize,
+    kv: &mut RequestKv,
+) -> std::result::Result<Vec<f32>, KvError> {
+    match kv {
+        RequestKv::Contig(caches) => model.try_decode_step(token, pos, caches),
+        RequestKv::Paged(seq) => model.decode_step_paged(token, pos, seq),
+    }
+}
+
+/// One in-flight request: its own KV state, RNG, and event stream; pinned
+/// to the replica slot it was admitted on.
 struct ActiveRequest {
     id: u64,
-    prompt: Vec<u32>,
+    /// Original prompt length (`fed[..prompt_len]` is the prompt; a resume
+    /// re-feeds emitted tokens after it).
+    prompt_len: usize,
+    fed: Vec<u32>,
     n_new: usize,
+    priority: i32,
     sampling: SamplingParams,
     rng: Rng,
     tokens: Vec<u32>,
     last_logits: Vec<f32>,
-    /// Prompt tokens fed so far; prefill is done when it reaches
-    /// `prompt.len()`.
+    /// Fed tokens processed so far; prefill is done when it reaches
+    /// `fed.len()`.
     prefill_pos: usize,
     pos: usize,
-    caches: Vec<KvCache>,
+    kv: RequestKv,
+    /// Prompt prefix registered for sharing (or not applicable).
+    registered: bool,
+    prefilled_sent: bool,
+    preempt: Arc<AtomicBool>,
     slot: usize,
     generation: u64,
     enqueued: Instant,
@@ -533,6 +827,7 @@ fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     let queue_wait = a.started - a.enqueued;
     match reason {
         FinishReason::Cancelled => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
+        FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
         _ => metrics.completed.fetch_add(1, Ordering::Relaxed),
     };
     metrics.record_latency(queue_wait, a.first_token);
@@ -547,18 +842,72 @@ fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     }));
 }
 
-/// Reject an admission that never reached the active set.
-fn reject(adm: Admission, metrics: &ServeMetrics) {
-    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-    let _ = adm.events.send(Event::Done(GenStats {
-        id: adm.id,
+/// End a request that never reached (or could not re-enter) the active
+/// set. `Cancelled` for requests the client gave up on (or whose model
+/// vanished); `Failed` for engine-side KV/geometry failures the client
+/// never asked for.
+fn reject_parts_as(
+    id: u64,
+    enqueued: Instant,
+    events: &Sender<Event>,
+    metrics: &ServeMetrics,
+    finish: FinishReason,
+) {
+    match finish {
+        FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
+    };
+    let _ = events.send(Event::Done(GenStats {
+        id,
         tokens: Vec::new(),
-        finish: FinishReason::Cancelled,
+        finish,
         generation: 0,
-        queue_wait: adm.enqueued.elapsed(),
+        queue_wait: enqueued.elapsed(),
         ttft: None,
         service_time: Duration::ZERO,
     }));
+}
+
+fn reject_parts(id: u64, enqueued: Instant, events: &Sender<Event>, metrics: &ServeMetrics) {
+    reject_parts_as(id, enqueued, events, metrics, FinishReason::Cancelled);
+}
+
+fn fail_parts(id: u64, enqueued: Instant, events: &Sender<Event>, metrics: &ServeMetrics) {
+    reject_parts_as(id, enqueued, events, metrics, FinishReason::Failed);
+}
+
+/// Finish a preempted request that cannot resume (cancelled while parked,
+/// or the serving model changed out from under it).
+fn finish_preempted(p: Preempted, reason: FinishReason, metrics: &ServeMetrics) {
+    match reason {
+        FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
+    };
+    let queue_wait = p.started - p.enqueued;
+    metrics.record_latency(queue_wait, p.first_token);
+    let _ = p.events.send(Event::Done(GenStats {
+        id: p.id,
+        tokens: p.emitted,
+        finish: reason,
+        generation: 0,
+        queue_wait,
+        ttft: p.first_token,
+        service_time: p.started.elapsed(),
+    }));
+}
+
+/// Is resume of a request at `priority` held open for a pending
+/// higher-priority demand?
+fn demand_blocks(shared: &EngineShared, priority: i32) -> bool {
+    let mut d = shared.demand.lock().unwrap();
+    match d.as_ref() {
+        Some(dd) if Instant::now() >= dd.expires => {
+            *d = None;
+            false
+        }
+        Some(dd) => priority < dd.priority,
+        None => false,
+    }
 }
 
 fn worker_loop(
@@ -566,6 +915,8 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Admission>>>,
     opts: EngineOptions,
     metrics: Arc<ServeMetrics>,
+    kv_pool: Option<Arc<BlockPool>>,
+    shared: Arc<EngineShared>,
 ) {
     let max_batch = opts.max_batch.max(1);
     let prefill_chunk = opts.prefill_chunk.max(1);
@@ -578,6 +929,85 @@ fn worker_loop(
     let mut active: Vec<ActiveRequest> = Vec::new();
     let mut closed = false;
     loop {
+        // ---- resume preempted requests into free batch slots ----
+        while active.len() < max_batch {
+            let Some(kvp) = kv_pool.as_ref() else { break };
+            let Some(p) = shared.requeue.lock().unwrap().pop_front() else { break };
+            if p.cancelled.load(Ordering::Relaxed) {
+                finish_preempted(p, FinishReason::Cancelled, &metrics);
+                continue;
+            }
+            if demand_blocks(&shared, p.priority) {
+                shared.requeue.lock().unwrap().push_front(p);
+                break;
+            }
+            let Some(slot) = pool.current_slot() else {
+                // Model gone, nothing to resume on.
+                finish_preempted(p, FinishReason::Cancelled, &metrics);
+                continue;
+            };
+            let slot_tag = pool.slots[slot].as_ref().unwrap().tag();
+            if slot_tag != p.tag {
+                // The model was hot-swapped while this request was parked.
+                // Its emitted tokens came from the old weights, so a
+                // resume would splice two generations into one stream —
+                // fail it instead. (This also covers geometry changes:
+                // a different entry always means a different tag.)
+                finish_preempted(p, FinishReason::Failed, &metrics);
+                continue;
+            }
+            let mut fed = p.prompt.clone();
+            fed.extend_from_slice(&p.emitted);
+            // Re-feeding prompt + emitted and finishing the remaining
+            // budget needs the same worst case the first admission did.
+            let total = kv_worst_case(p.prompt.len(), p.n_new);
+            let admitted = match kvp.readmit(&fed, total, slot_tag) {
+                Ok(a) => a,
+                Err(_) => {
+                    // Blocks not free yet; park it and move on.
+                    shared.requeue.lock().unwrap().push_front(p);
+                    break;
+                }
+            };
+            let (generation, vocab) = {
+                let s = pool.slots[slot].as_mut().unwrap();
+                s.inflight += 1;
+                (s.lease.generation, s.model.cfg.vocab)
+            };
+            let seq = PagedSeq::new(kvp, admitted);
+            let prefill_pos = seq.len();
+            let preempt = Arc::new(AtomicBool::new(false));
+            shared
+                .active
+                .lock()
+                .unwrap()
+                .insert(p.id, ActiveInfo { priority: p.priority, preempt: preempt.clone() });
+            active.push(ActiveRequest {
+                id: p.id,
+                prompt_len: p.prompt.len(),
+                fed,
+                n_new: p.n_new,
+                priority: p.priority,
+                sampling: p.sampling,
+                rng: p.rng,
+                tokens: p.emitted,
+                last_logits: vec![0.0; vocab],
+                prefill_pos,
+                pos: 0,
+                kv: RequestKv::Paged(seq),
+                registered: true, // resume never re-registers prefixes
+                prefilled_sent: p.prefilled_sent,
+                preempt,
+                slot,
+                generation,
+                enqueued: p.enqueued,
+                started: p.started,
+                first_token: p.first_token,
+                events: p.events,
+                cancelled: p.cancelled,
+            });
+            metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
+        }
         // ---- admission: fill free batch slots from the shared queue ----
         while active.len() < max_batch && !closed {
             // Never hold the queue lock across a blocking wait: an idle
@@ -595,48 +1025,103 @@ fn worker_loop(
                 }
             };
             let Some(adm) = polled else { break };
-            if adm.cancelled.load(Ordering::Relaxed) {
-                reject(adm, &metrics);
-                continue;
+            let Admission { id, req, enqueued, events, cancelled, admitted } = adm;
+            if cancelled.load(Ordering::Relaxed) {
+                reject_parts(id, enqueued, &events, &metrics);
+                continue; // `admitted` drops here, releasing the reservation
             }
             let Some(slot) = pool.current_slot() else {
-                reject(adm, &metrics); // model gone, nothing to drain on
+                reject_parts(id, enqueued, &events, &metrics); // model gone
                 continue;
             };
             let started = Instant::now();
-            let (generation, vocab, caches) = {
+            let (generation, vocab, slot_tag, slot_geometry_ok) = {
                 let s = pool.slots[slot].as_mut().unwrap();
                 s.inflight += 1;
-                let max_seq = adm.req.prompt.len() + adm.req.n_new + 1;
-                (s.lease.generation, s.model.cfg.vocab, s.model.new_caches(max_seq))
+                let geometry_ok = kv_pool.as_ref().map_or(true, |kvp| {
+                    s.model.cfg.n_layers == kvp.n_layers() && s.model.cfg.d_model == kvp.width()
+                });
+                (s.lease.generation, s.model.cfg.vocab, s.tag(), geometry_ok)
             };
-            if adm.req.prompt.is_empty() {
-                let _ = adm.events.send(Event::Prefilled { prompt_len: 0 });
+            if !slot_geometry_ok {
+                // A hot-swap changed the model's layer count or width out
+                // from under the pool: fail the request, don't panic the
+                // worker indexing a mis-sized page table.
+                pool.release(slot);
+                fail_parts(id, enqueued, &events, &metrics);
+                continue;
             }
+            let kv = match (kv_pool.as_ref(), admitted) {
+                (Some(kvp), Some(mut a)) => {
+                    if a.tag() != slot_tag {
+                        // The serving generation moved between submit and
+                        // admission: stale shared KV must not feed the new
+                        // weights.
+                        if a.discard_sharing().is_err() {
+                            pool.release(slot);
+                            fail_parts(id, enqueued, &events, &metrics);
+                            continue;
+                        }
+                        a.retag(slot_tag);
+                    }
+                    RequestKv::Paged(PagedSeq::new(kvp, a))
+                }
+                // `submit` always admits against the pool before enqueueing;
+                // an un-admitted request must not decode unmetered.
+                (Some(_), None) => {
+                    pool.release(slot);
+                    fail_parts(id, enqueued, &events, &metrics);
+                    continue;
+                }
+                (None, _) => {
+                    let s = pool.slots[slot].as_mut().unwrap();
+                    RequestKv::Contig(s.model.new_caches(kv_worst_case(req.prompt.len(), req.n_new)))
+                }
+            };
+            let prefill_pos = match &kv {
+                RequestKv::Paged(seq) => seq.len(), // shared prefix already cached
+                RequestKv::Contig(_) => 0,
+            };
+            let mut prefilled_sent = false;
+            if req.prompt.is_empty() {
+                let _ = events.send(Event::Prefilled { prompt_len: 0 });
+                prefilled_sent = true;
+            }
+            let preempt = Arc::new(AtomicBool::new(false));
+            shared
+                .active
+                .lock()
+                .unwrap()
+                .insert(id, ActiveInfo { priority: req.priority, preempt: preempt.clone() });
             active.push(ActiveRequest {
-                id: adm.id,
-                rng: Rng::new(adm.req.sampling.seed),
-                tokens: Vec::with_capacity(adm.req.n_new),
+                id,
+                prompt_len: req.prompt.len(),
+                rng: Rng::new(req.sampling.seed),
+                tokens: Vec::with_capacity(req.n_new),
                 last_logits: vec![0.0; vocab],
-                prefill_pos: 0,
+                prefill_pos,
                 pos: 0,
-                caches,
+                kv,
+                registered: false,
+                prefilled_sent,
+                preempt,
                 slot,
                 generation,
-                enqueued: adm.enqueued,
+                enqueued,
                 started,
                 first_token: None,
-                events: adm.events,
-                cancelled: adm.cancelled,
-                prompt: adm.req.prompt,
-                n_new: adm.req.n_new,
-                sampling: adm.req.sampling,
+                events,
+                cancelled,
+                fed: req.prompt,
+                n_new: req.n_new,
+                priority: req.priority,
+                sampling: req.sampling,
             });
             metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
         }
         if active.is_empty() {
             pool.drop_idle_stale();
-            if closed {
+            if closed && shared.requeue.lock().unwrap().is_empty() {
                 return;
             }
             // Idle backoff outside the queue lock (see admission above).
@@ -649,21 +1134,76 @@ fn worker_loop(
             if active[i].cancelled.load(Ordering::Relaxed) {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
+                shared.active.lock().unwrap().remove(&a.id);
                 finish(a, FinishReason::Cancelled, &metrics);
                 continue;
+            }
+            if active[i].preempt.load(Ordering::Relaxed)
+                && matches!(active[i].kv, RequestKv::Paged(_))
+            {
+                let a = active.swap_remove(i);
+                pool.release(a.slot);
+                shared.active.lock().unwrap().remove(&a.id);
+                metrics.preempted.fetch_add(1, Ordering::Relaxed);
+                let tag = match &a.kv {
+                    RequestKv::Paged(seq) => seq.tag(),
+                    RequestKv::Contig(_) => PrefixTag::default(),
+                };
+                shared.requeue.lock().unwrap().push_back(Preempted {
+                    id: a.id,
+                    prompt: a.fed[..a.prompt_len].to_vec(),
+                    emitted: a.tokens,
+                    n_new: a.n_new,
+                    sampling: a.sampling,
+                    priority: a.priority,
+                    rng: a.rng,
+                    tag,
+                    prefilled_sent: a.prefilled_sent,
+                    enqueued: a.enqueued,
+                    started: a.started,
+                    first_token: a.first_token,
+                    events: a.events,
+                    cancelled: a.cancelled,
+                });
+                continue; // a.kv drops here — its blocks return to the pool
             }
             let slot = active[i].slot;
             let model = &mut pool.slots[slot].as_mut().unwrap().model;
             let a = &mut active[i];
-            if a.prefill_pos < a.prompt.len() {
-                let end = (a.prefill_pos + prefill_chunk).min(a.prompt.len());
+            if a.prefill_pos < a.fed.len() {
+                let end = (a.prefill_pos + prefill_chunk).min(a.fed.len());
+                let mut kv_err = false;
                 for pos in a.prefill_pos..end {
-                    a.last_logits = model.decode_step(a.prompt[pos], pos, &mut a.caches);
+                    match kv_step(model, a.fed[pos], pos, &mut a.kv) {
+                        Ok(logits) => a.last_logits = logits,
+                        Err(_) => {
+                            kv_err = true;
+                            break;
+                        }
+                    }
+                }
+                if kv_err {
+                    let a = active.swap_remove(i);
+                    pool.release(a.slot);
+                    shared.active.lock().unwrap().remove(&a.id);
+                    finish(a, FinishReason::Failed, &metrics);
+                    continue;
                 }
                 a.prefill_pos = end;
-                if end == a.prompt.len() {
+                if end == a.fed.len() {
                     a.pos = end;
-                    let _ = a.events.send(Event::Prefilled { prompt_len: end });
+                    if !a.prefilled_sent {
+                        a.prefilled_sent = true;
+                        let _ = a.events.send(Event::Prefilled { prompt_len: a.prompt_len });
+                    }
+                    if !a.registered && a.prompt_len > 0 {
+                        a.registered = true;
+                        if let (Some(kvp), RequestKv::Paged(seq)) =
+                            (kv_pool.as_ref(), &mut a.kv)
+                        {
+                            kvp.register_prefix(&a.fed[..a.prompt_len], seq);
+                        }
+                    }
                 }
                 i += 1;
                 continue;
@@ -679,11 +1219,25 @@ fn worker_loop(
             if stopped || a.tokens.len() >= a.n_new {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
+                shared.active.lock().unwrap().remove(&a.id);
+                // Dropping the request's PagedSeq returns every block it
+                // held — including the reserved-but-unused tail a stop
+                // token left behind — to the pool.
                 finish(a, if stopped { FinishReason::Stop } else { FinishReason::Length }, &metrics);
             } else {
-                a.last_logits = model.decode_step(next, a.pos, &mut a.caches);
-                a.pos += 1;
-                i += 1;
+                match kv_step(model, next, a.pos, &mut a.kv) {
+                    Ok(logits) => {
+                        a.last_logits = logits;
+                        a.pos += 1;
+                        i += 1;
+                    }
+                    Err(_) => {
+                        let a = active.swap_remove(i);
+                        pool.release(a.slot);
+                        shared.active.lock().unwrap().remove(&a.id);
+                        finish(a, FinishReason::Failed, &metrics);
+                    }
+                }
             }
         }
     }
@@ -758,5 +1312,12 @@ mod tests {
         order.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
         let top: Vec<u32> = order[..4].iter().map(|&i| i as u32).collect();
         assert!(draw(9).iter().all(|t| top.contains(t)));
+    }
+
+    #[test]
+    fn priority_builder_sets_priority() {
+        let r = GenRequest::greedy(vec![1], 4).with_priority(7);
+        assert_eq!(r.priority, 7);
+        assert_eq!(GenRequest::greedy(vec![1], 4).priority, 0);
     }
 }

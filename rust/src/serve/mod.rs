@@ -9,9 +9,12 @@
 //!     picked up at admission time, so new requests decode on the new
 //!     generation while in-flight ones drain on the old lease
 //!   * [`Engine::submit`] enforces a bounded admission queue
-//!     ([`SubmitError::QueueFull`] is backpressure, not buffering) and
-//!     returns a [`Ticket`] streaming [`Event::Prefilled`] /
-//!     [`Event::Token`] / [`Event::Done`], with [`Ticket::cancel`]
+//!     ([`SubmitError::QueueFull`] is backpressure, not buffering) and a
+//!     KV block budget ([`SubmitError::KvExhausted`], reserved against the
+//!     paged [`crate::kvcache::BlockPool`]; higher-priority submissions
+//!     may preempt in-flight work), and returns a [`Ticket`] streaming
+//!     [`Event::Prefilled`] / [`Event::Token`] / [`Event::Done`], with
+//!     [`Ticket::cancel`]
 //!   * requests carry [`SamplingParams`] — greedy by default (bit-exact
 //!     with [`PackedModel::generate`]), or seeded temperature / top-k —
 //!     plus stop tokens
@@ -101,9 +104,12 @@ pub fn load_test(
         .map(|id| {
             let prompt: Vec<u32> =
                 (0..prompt_len).map(|i| (id as u32 + i as u32) % vocab).collect();
+            // The queue is sized for the burst, but the KV pool may not
+            // be: submit_blocking absorbs the KvExhausted backpressure
+            // until in-flight requests free blocks.
             engine
-                .submit(GenRequest::greedy(prompt, n_new))
-                .expect("queue sized to hold every request")
+                .submit_blocking(GenRequest::greedy(prompt, n_new))
+                .unwrap_or_else(|e| panic!("load_test submit failed: {e}"))
         })
         .collect();
     let responses: Vec<Response> = tickets

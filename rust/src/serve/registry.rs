@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::ops::Deref;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
@@ -23,11 +23,19 @@ use crate::config::Variant;
 use crate::infer::PackedModel;
 use crate::tokenizer::Bpe;
 
+/// Process-wide entry counter backing [`ModelEntry::uid`].
+static ENTRY_UID: AtomicU64 = AtomicU64::new(1);
+
 /// One immutable generation of a registered model.
 pub struct ModelEntry {
     pub name: String,
     /// Monotone per-name counter; bumped by every (re-)register/swap.
     pub generation: u64,
+    /// Process-unique id, never reused — unlike the entry's address, which
+    /// the allocator can recycle after a remove + re-register. Identity
+    /// checks that outlive the entry (e.g. KV prefix-share tags) must use
+    /// this, not the pointer.
+    pub uid: u64,
     pub model: PackedModel,
     pub tokenizer: Option<Bpe>,
     leases: AtomicUsize,
@@ -128,6 +136,7 @@ impl ModelRegistry {
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             generation,
+            uid: ENTRY_UID.fetch_add(1, Ordering::Relaxed),
             model,
             tokenizer,
             leases: AtomicUsize::new(0),

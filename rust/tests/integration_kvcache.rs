@@ -1,0 +1,433 @@
+//! Integration tests for the paged KV-cache subsystem: bit-exactness of
+//! paged vs contiguous attention (property-tested across random shapes,
+//! block sizes and positions), prefix-share attach + copy-on-write
+//! correctness, pool budget accounting, and the engine-level behaviors —
+//! `KvExhausted` backpressure that drains as blocks free, deterministic
+//! preempt-and-recompute, and prefix sharing across concurrent requests.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::{KvCache, PackedBlock, PackedModel};
+use pquant::kvcache::{
+    BlockPool, KvError, KvPoolOptions, KvStore, PagedSeq, PrefixTag,
+};
+use pquant::serve::{
+    Engine, EngineOptions, Event, FinishReason, GenRequest, ModelRegistry, SamplingParams,
+    SubmitError,
+};
+use pquant::util::prop::check;
+use pquant::util::rng::Rng;
+
+fn nano_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: 16,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn registry_with(name: &str, model: PackedModel) -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(name, model, None);
+    registry
+}
+
+/// Submit, blocking on KvExhausted until admission (bounded by a timeout
+/// so a bug fails the test instead of hanging it).
+fn submit_blocking(engine: &Engine, mut req: GenRequest) -> pquant::serve::Ticket {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match engine.submit(req) {
+            Ok(t) => return t,
+            Err(SubmitError::KvExhausted(r)) | Err(SubmitError::QueueFull(r)) => {
+                assert!(Instant::now() < deadline, "admission never drained");
+                req = r;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+}
+
+// ----------------------------------------------------- paged bit-exactness
+
+#[test]
+fn prop_paged_block_attention_bit_identical_to_contiguous() {
+    let variants =
+        [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant];
+    check(
+        0xA11,
+        20,
+        |r| {
+            let d = [16usize, 32, 64][r.below(3)];
+            let heads = [2usize, 4][r.below(2)];
+            let seq_len = 1 + r.below(20);
+            let block_size = [1usize, 2, 3, 5, 8, 16][r.below(6)];
+            let variant = variants[r.below(4)];
+            (d, heads, seq_len, block_size, variant, r.next_u64())
+        },
+        |&(d, heads, seq_len, block_size, variant, seed)| {
+            let mut block_a = PackedBlock::random(variant, d, heads, 2 * d, 8, 2, seed);
+            let mut block_b = block_a.clone();
+            let mut cache = KvCache::new(seq_len, d);
+            let pool = Arc::new(BlockPool::new(
+                KvPoolOptions { n_blocks: 64, block_size },
+                1,
+                d,
+            ));
+            let adm = pool
+                .admit(&[], seq_len, PrefixTag::default())
+                .map_err(|e| format!("admit failed: {e}"))?;
+            let mut seq = PagedSeq::new(&pool, adm);
+            for pos in 0..seq_len {
+                let x = Rng::new(seed ^ (pos as u64 + 1)).normal_vec(d);
+                let ya = block_a
+                    .try_forward(&x, pos, &mut cache)
+                    .map_err(|e| format!("contig: {e}"))?;
+                let mut layer = seq.layer(0);
+                let yb = block_b
+                    .try_forward(&x, pos, &mut layer)
+                    .map_err(|e| format!("paged: {e}"))?;
+                if ya != yb {
+                    return Err(format!("outputs diverge at pos {pos}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shared_prefix_and_cow_are_bit_exact() {
+    let cfg = nano_cfg("prop-share");
+    check(
+        0x5AFE,
+        12,
+        |r| {
+            let prompt_len = 2 + r.below(18);
+            let block_size = [2usize, 4, 8, 16][r.below(4)];
+            let n_cont = 1 + r.below(5);
+            (prompt_len, block_size, n_cont, r.next_u64())
+        },
+        |&(prompt_len, block_size, n_cont, seed)| {
+            let mut model_ref = PackedModel::random(&cfg, 77);
+            let mut model_paged = model_ref.clone();
+            let pool = Arc::new(BlockPool::new(
+                KvPoolOptions { n_blocks: 512, block_size },
+                cfg.n_layers,
+                cfg.d_model,
+            ));
+            let mut prompt_rng = Rng::new(seed);
+            let prompt: Vec<u32> =
+                (0..prompt_len).map(|_| prompt_rng.below(64) as u32).collect();
+            let tag = PrefixTag(7, 1);
+            let total = prompt_len + n_cont;
+
+            // Sequence A: full prefill, register, then continue.
+            let adm = pool.admit(&prompt, total, tag).map_err(|e| format!("{e}"))?;
+            if adm.shared_len() != 0 {
+                return Err("first admission must not find a prefix".into());
+            }
+            let mut seq_a = PagedSeq::new(&pool, adm);
+            for (pos, &t) in prompt.iter().enumerate() {
+                model_paged.decode_step_paged(t, pos, &mut seq_a).map_err(|e| format!("{e}"))?;
+            }
+            pool.register_prefix(&prompt, &mut seq_a);
+            let cont_a: Vec<u32> = (0..n_cont).map(|i| (i as u32 * 13 + 5) % 64).collect();
+            for (i, &t) in cont_a.iter().enumerate() {
+                model_paged
+                    .decode_step_paged(t, prompt_len + i, &mut seq_a)
+                    .map_err(|e| format!("{e}"))?;
+            }
+
+            // Sequence B: same prompt attaches the shared prefix, then
+            // diverges into different tokens (copy-on-write path).
+            let adm = pool.admit(&prompt, total, tag).map_err(|e| format!("{e}"))?;
+            let shared = adm.shared_len();
+            if shared == 0 {
+                return Err("second admission must attach the registered prefix".into());
+            }
+            if shared >= prompt_len {
+                return Err(format!(
+                    "shared len {shared} must leave the last prompt token to re-decode"
+                ));
+            }
+            let mut seq_b = PagedSeq::new(&pool, adm);
+            let cont_b: Vec<u32> = (0..n_cont).map(|i| (i as u32 * 7 + 3) % 64).collect();
+            let fed_b: Vec<u32> =
+                prompt.iter().copied().chain(cont_b.iter().copied()).collect();
+            // Contiguous reference over B's full fed sequence.
+            let mut caches = model_ref.new_caches(total);
+            let mut want = Vec::new();
+            for (pos, &t) in fed_b.iter().enumerate() {
+                want.push(model_ref.decode_step(t, pos, &mut caches));
+            }
+            for pos in shared..fed_b.len() {
+                let got = model_paged
+                    .decode_step_paged(fed_b[pos], pos, &mut seq_b)
+                    .map_err(|e| format!("{e}"))?;
+                if got != want[pos] {
+                    return Err(format!(
+                        "shared/CoW logits diverge at pos {pos} (shared={shared})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------- budget accounting
+
+#[test]
+fn admit_fails_recoverably_when_pool_too_small() {
+    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 3, block_size: 4 }, 2, 8));
+    // 8 tokens -> 2 logical blocks x 2 layers = 4 > 3.
+    match pool.admit(&[1, 2], 8, PrefixTag::default()) {
+        Err(KvError::OutOfBlocks { needed: 4, available: 3 }) => {}
+        other => panic!("expected OutOfBlocks, got {other:?}", other = other.map(|_| ())),
+    }
+    // Nothing leaked by the failed admission.
+    assert_eq!(pool.available(), 3);
+}
+
+#[test]
+fn eviction_reclaims_unused_shared_prefixes_under_pressure() {
+    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 8, block_size: 4 }, 1, 4));
+    let prompt: Vec<u32> = (0..8).collect();
+    let adm = pool.admit(&prompt, 8, PrefixTag(1, 1)).unwrap();
+    let mut seq = PagedSeq::new(&pool, adm);
+    let row = [0.25f32; 4];
+    for _ in 0..8 {
+        seq.layer(0).push(&row, &row).unwrap();
+    }
+    pool.register_prefix(&prompt, &mut seq);
+    assert!(pool.stats().registered_prefixes >= 1);
+    drop(seq);
+    // The map still holds the two frozen prompt blocks...
+    assert_eq!(pool.available(), 6);
+    // ...until budget pressure evicts them (no live users).
+    let r = pool.try_reserve(7).expect("eviction must reclaim map blocks");
+    assert_eq!(pool.available(), 1);
+    assert!(pool.stats().evicted_blocks >= 2);
+    drop(r);
+}
+
+// --------------------------------------------------- engine: kv exhaustion
+
+#[test]
+fn kv_exhausted_blocks_admission_then_drains_as_blocks_free() {
+    let model = PackedModel::random(&nano_cfg("kv-drain"), 5);
+    let mut reference = model.clone();
+    let registry = registry_with("m", model);
+    // Pool fits exactly one request: 4 prompt + 12 new = 16 tokens over
+    // 8-token blocks -> 2 logical x 2 layers = 4 blocks.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let first = engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 12)).unwrap();
+    // The pool is now fully reserved: the next submission must bounce.
+    let second = match engine.submit(GenRequest::greedy(vec![5, 6, 7, 8], 12)) {
+        Err(SubmitError::KvExhausted(req)) => {
+            assert_eq!(req.n_new, 12, "request rides back in the error");
+            req
+        }
+        other => panic!("expected KvExhausted, got {:?}", other.map(|_| ()).map_err(|e| e.to_string())),
+    };
+    // Retrying drains: the first request finishes, frees its blocks, and
+    // the second is admitted and completes correctly.
+    let second = submit_blocking(&engine, second);
+    assert_eq!(first.wait().tokens, reference.generate(&[1, 2, 3, 4], 12));
+    assert_eq!(second.wait().tokens, reference.generate(&[5, 6, 7, 8], 12));
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+    let kv = metrics.kv().expect("paged engine reports pool stats");
+    assert_eq!(kv.n_blocks, 4);
+    assert_eq!(kv.in_use, 0, "all blocks returned after the drain");
+}
+
+#[test]
+fn oversized_request_fails_fast_instead_of_retrying_forever() {
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("too-large"), 7));
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    // Worst case 1004 tokens -> 126 logical x 2 layers, far beyond 4
+    // blocks: no drain can ever admit this, so it must not be KvExhausted
+    // (which means "retry"), and it must not flag any preemption.
+    match engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 1000)) {
+        Err(SubmitError::KvTooLarge(req)) => assert_eq!(req.n_new, 1000),
+        other => panic!(
+            "expected KvTooLarge, got {:?}",
+            other.map(|_| ()).map_err(|e| e.to_string())
+        ),
+    }
+    // The pool is untouched and normally-sized requests still serve.
+    let stats = engine.submit(GenRequest::greedy(vec![1, 2], 4)).unwrap().wait();
+    assert_eq!(stats.tokens.len(), 4);
+    engine.shutdown();
+}
+
+// ---------------------------------------------- engine: preempt + recompute
+
+#[test]
+fn preemption_frees_blocks_and_recompute_is_deterministic() {
+    let model = PackedModel::random(&nano_cfg("preempt"), 9);
+    let mut reference = model.clone();
+    let registry = registry_with("m", model);
+    // Pool fits exactly one long request: 4 + 400 tokens over 8-token
+    // blocks -> 51 logical x 2 layers = 102 blocks.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            kv: Some(KvPoolOptions { n_blocks: 102, block_size: 8 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let low = engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 400)).unwrap();
+    // Let it decode for real before the high-priority request races it.
+    loop {
+        match low.recv().expect("stream open") {
+            Event::Token(_) => break,
+            _ => {}
+        }
+    }
+    let high_req = GenRequest::greedy(vec![9, 8, 7, 6], 400).with_priority(5);
+    let high = match engine.submit(high_req) {
+        Err(SubmitError::KvExhausted(req)) => submit_blocking(&engine, req),
+        Ok(t) => t, // only possible if low finished first — the asserts below catch it
+        Err(e) => panic!("unexpected submit error: {e}"),
+    };
+    let high_stats = high.wait();
+    assert_eq!(high_stats.finish, FinishReason::Length);
+    assert_eq!(high_stats.tokens, reference.generate(&[9, 8, 7, 6], 400));
+    // The preempted request resumes after the blocks free and its
+    // recompute continues the identical greedy stream.
+    let low_stats = low.wait();
+    assert_eq!(low_stats.finish, FinishReason::Length);
+    assert_eq!(low_stats.tokens, reference.generate(&[1, 2, 3, 4], 400));
+    let metrics = engine.shutdown();
+    assert_eq!(
+        metrics.preempted.load(Ordering::Relaxed),
+        1,
+        "exactly one preemption must have occurred"
+    );
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+}
+
+// ------------------------------------------------- engine: prefix sharing
+
+#[test]
+fn concurrent_same_prompt_requests_share_prefix_blocks_and_agree() {
+    let model = PackedModel::random(&nano_cfg("share"), 21);
+    let mut reference = model.clone();
+    let registry = registry_with("m", model);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 4, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let prompt: Vec<u32> = (0..20).map(|i| (i * 3 + 1) % 64).collect();
+    let want = reference.generate(&prompt, 6);
+    // Warm-up registers the prompt's prefix blocks at prefill completion.
+    assert_eq!(engine.submit(GenRequest::greedy(prompt.clone(), 6)).unwrap().wait().tokens, want);
+    // A concurrent burst of identical prompts shares them.
+    let tickets: Vec<_> = (0..4)
+        .map(|_| engine.submit(GenRequest::greedy(prompt.clone(), 6)).unwrap())
+        .collect();
+    for t in tickets {
+        assert_eq!(t.wait().tokens, want, "shared-prefix decode must stay bit-exact");
+    }
+    let metrics = engine.shutdown();
+    let kv = metrics.kv().unwrap();
+    assert!(
+        kv.shared_attached > 0,
+        "burst must attach shared blocks (hit rate {})",
+        kv.shared_hit_rate
+    );
+    assert!(kv.registered_prefixes >= 1);
+    assert!(kv.cow_copies >= 1, "divergence into generation must copy-on-write");
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 5);
+}
+
+#[test]
+fn stop_token_finish_returns_unused_tail_blocks() {
+    let model = PackedModel::random(&nano_cfg("tail"), 13);
+    let mut reference = model.clone();
+    let full = reference.generate(&[3, 1], 12);
+    let stop = full[2];
+    let registry = registry_with("m", model);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    // Budget 40 new tokens but stop after ~3: the reserved tail was never
+    // materialized and must be returned (and counted) at completion.
+    let req = GenRequest::sampled(
+        vec![3, 1],
+        40,
+        SamplingParams { stop_tokens: vec![stop], ..SamplingParams::greedy() },
+    );
+    let stats = engine.submit(req).unwrap().wait();
+    assert_eq!(stats.finish, FinishReason::Stop);
+    let metrics = engine.shutdown();
+    let kv = metrics.kv().unwrap();
+    assert!(
+        kv.unused_tail_returned > 0,
+        "early stop must return reserved-but-unused tail blocks"
+    );
+    // The share map may retain the registered prompt snapshot (one block
+    // per layer); everything the request itself held must be back.
+    assert!(
+        kv.in_use <= 2,
+        "only the registered prompt snapshot may stay resident, saw {}",
+        kv.in_use
+    );
+}
+
+// ------------------------------------------- engine: legacy contiguous mode
+
+#[test]
+fn engine_without_pool_still_serves_and_reports_no_kv_stats() {
+    let model = PackedModel::random(&nano_cfg("legacy"), 3);
+    let mut reference = model.clone();
+    let registry = registry_with("m", model);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), kv: None, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let stats = engine.submit(GenRequest::greedy(vec![7, 9], 5)).unwrap().wait();
+    assert_eq!(stats.tokens, reference.generate(&[7, 9], 5));
+    let metrics = engine.shutdown();
+    assert!(metrics.kv().is_none(), "no pool, no pool stats");
+}

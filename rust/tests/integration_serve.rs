@@ -117,6 +117,7 @@ fn tiny_queue_rejects_with_queue_full() {
             workers: 1,
             queue_depth: 1,
             prefill_chunk: 16,
+            ..EngineOptions::default()
         },
     )
     .unwrap();
@@ -218,6 +219,7 @@ fn chunked_prefill_never_exceeds_max_batch() {
             workers: 1,
             queue_depth: 16,
             prefill_chunk: 4,
+            ..EngineOptions::default()
         },
     )
     .unwrap();
@@ -258,6 +260,7 @@ fn prefill_chunking_is_bit_exact_with_full_prefill() {
                 workers: 1,
                 queue_depth: 8,
                 prefill_chunk: chunk,
+                ..EngineOptions::default()
             },
         )
         .unwrap();
