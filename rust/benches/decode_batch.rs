@@ -1,0 +1,86 @@
+//! Batched decode throughput: aggregate tokens/sec of the fused
+//! weight-stationary batch step at batch 1 / 4 / 16 on a small packed
+//! model. The acceptance bar for the batch path is batch-16 aggregate
+//! throughput ≥ 3× batch-1 (each packed weight column is read once per
+//! step instead of once per request). Run with
+//! `cargo bench --bench decode_batch`; writes
+//! `results/bench/decode_batch.json` including the batch-16 / batch-1
+//! ratio.
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
+use pquant::util::bench::Bencher;
+use pquant::util::json::{arr, num, obj};
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "decode-batch-bench".into(),
+        variant: Variant::PQuant,
+        vocab: 2048,
+        d_model: 256,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 704,
+        r: 32,
+        n_experts: 2,
+        seq_len: 256,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn main() {
+    let cfg = small_cfg();
+    let mut model = PackedModel::random(&cfg, 7);
+    let mut b = Bencher::quick();
+    let cap = 256usize;
+    let mut tps: Vec<(usize, f64)> = Vec::new();
+
+    for &bs in &[1usize, 4, 16] {
+        let mut caches: Vec<Vec<KvCache>> = (0..bs).map(|_| model.new_caches(cap)).collect();
+        let mut scratch = Scratch::new();
+        let mut pos = 0usize;
+        let vocab = cfg.vocab;
+        let stats = b.bench(&format!("decode_step_batch b={bs:<2} (aggregate step)"), || {
+            if pos >= cap {
+                for c in caches.iter_mut() {
+                    for l in c.iter_mut() {
+                        l.reset();
+                    }
+                }
+                pos = 0;
+            }
+            let toks: Vec<u32> = (0..bs).map(|si| ((pos * 7 + si) % vocab) as u32).collect();
+            let mut steps: Vec<SeqStep> = caches
+                .iter_mut()
+                .zip(&toks)
+                .map(|(c, t)| {
+                    SeqStep::new(std::slice::from_ref(t), pos, BatchKv::Contig(&mut c[..]), true)
+                })
+                .collect();
+            model.decode_step_batch(&mut steps, &mut scratch);
+            pos += 1;
+            scratch.logits_row(0)[0]
+        });
+        tps.push((bs, bs as f64 / stats.median()));
+    }
+
+    for &(bs, t) in &tps {
+        println!("batch {bs:>2}: {t:.0} tokens/s aggregate");
+    }
+    let ratio = tps.last().unwrap().1 / tps[0].1;
+    println!("batch-16 vs batch-1 aggregate throughput: {ratio:.2}x");
+
+    let entries: Vec<_> = tps
+        .iter()
+        .map(|&(bs, t)| obj(vec![("batch", num(bs as f64)), ("tokens_per_sec", num(t))]))
+        .collect();
+    let payload = obj(vec![
+        ("batches", arr(entries)),
+        ("batch16_vs_batch1_ratio", num(ratio)),
+    ]);
+    std::fs::create_dir_all("results/bench").ok();
+    std::fs::write("results/bench/decode_batch.json", payload.to_string_pretty()).ok();
+    println!("[bench] wrote results/bench/decode_batch.json");
+    b.write_json("decode_batch_raw");
+}

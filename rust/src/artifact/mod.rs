@@ -313,7 +313,14 @@ pub fn load_pqm_bytes(bytes: &[u8]) -> Result<PqmModel> {
     };
 
     Ok(PqmModel {
-        model: PackedModel { cfg, embed, lm_head, final_norm, blocks },
+        model: PackedModel {
+            cfg,
+            embed,
+            lm_head,
+            final_norm,
+            blocks,
+            rope: Default::default(),
+        },
         tokenizer,
     })
 }

@@ -344,7 +344,7 @@ fn rebuild_with_scheme(
             timing: Default::default(),
         });
     }
-    Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks })
+    Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks, rope: Default::default() })
 }
 
 /// Teacher-forced perplexity under the rust engine.

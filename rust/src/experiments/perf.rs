@@ -167,15 +167,18 @@ pub fn fig8() -> Result<()> {
         ("pQuant", Variant::PQuant),
     ] {
         let mut block = PackedBlock::random(variant, d, heads, ff, r, 1, 99);
+        block.timing.mode = crate::infer::TimingMode::Accumulate;
         let mut cache = KvCache::new(seq + decode_tokens + 1, d);
+        let mut rope = crate::infer::RopeTable::default();
+        rope.ensure(d / heads / 2, seq + decode_tokens + 1);
         let x = crate::util::rng::Rng::new(1).normal_vec(d);
         // fill the cache to seq entries (prefill context)
         for pos in 0..seq {
-            block.forward(&x, pos, &mut cache);
+            block.forward(&x, pos, &mut cache, &rope);
         }
         block.timing.reset();
         for pos in seq..seq + decode_tokens {
-            block.forward(&x, pos, &mut cache);
+            block.forward(&x, pos, &mut cache, &rope);
         }
         let tm = block.timing.clone();
         let per = |dur: std::time::Duration| dur.as_secs_f64() * 1e3 / decode_tokens as f64;

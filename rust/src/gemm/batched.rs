@@ -1,0 +1,288 @@
+//! Weight-stationary batched GEMM engines — the multi-user decode path.
+//!
+//! The GEMV engines in [`crate::gemm`] are optimal when one request decodes
+//! alone, but a serving worker with B in-flight requests would sweep every
+//! packed weight column B times per scheduling round. These kernels walk
+//! each weight column **once** and accumulate into all B output rows from B
+//! per-row lookup tables (or B quantized activation rows), so decode
+//! throughput scales with batch size instead of replaying weight reads.
+//!
+//! Layout contract: every kernel writes its accumulators `yt` in
+//! **[n, b]** order — column j's B accumulators are contiguous at
+//! `yt[j*b .. (j+1)*b]`. That keeps the per-column inner loop allocation-
+//! free and lets the thread splitter cut on column boundaries
+//! ([`par_chunks_mut_granular`] with `granule = b`). Callers scatter back
+//! to row-major [b, n] during dequantization, which they must do anyway to
+//! apply per-row scales.
+//!
+//! Bit-exactness: the integer kernels perform, per (row, column), exactly
+//! the adds of the corresponding GEMV in the same order, so results are
+//! bit-identical to the per-row path (property-tested below and in
+//! `tests/integration_batch.rs`). The f32 kernel preserves the GEMV's
+//! k-major accumulation order and its skip-zero behavior, so it too is
+//! bit-identical.
+
+use crate::quant::{PackedBits, PackedTernary};
+use crate::util::threads::{num_threads, par_chunks_mut_granular};
+
+use super::lut::Luts;
+use super::TernaryLuts;
+
+/// Floor on accumulator elements per thread before another scoped thread
+/// is worth spawning (threads are spawned per call; tiny shapes should
+/// stay single-threaded).
+const MIN_ELEMS_PER_THREAD: usize = 1 << 12;
+
+fn thread_count(total_elems: usize, cols: usize) -> usize {
+    num_threads()
+        .min(cols.max(1))
+        .min(total_elems / MIN_ELEMS_PER_THREAD + 1)
+}
+
+/// Batched LUT W1A8 GEMM: `yt[j*b + r] = Σ_groups luts[r][nibble(g, col j)]`
+/// for `b = luts.len()` rows. Each packed column is read once for the whole
+/// batch; with `b == 1` this degenerates to [`super::lut_gemv_into`] and is
+/// bit-identical to it for every `b`.
+pub fn lut_gemm_into(luts: &[Luts], w: &PackedBits, yt: &mut [i32]) {
+    let b = luts.len();
+    assert!(b > 0, "empty batch");
+    assert_eq!(yt.len(), w.n * b);
+    for l in luts {
+        // Exactly the bound the unsafe indexing needs: the inner loop
+        // reads nibble groups 0..2*bytes_per_col of each table.
+        assert!(l.n_groups >= w.bytes_per_col * 2, "LUTs built for smaller k");
+    }
+    let threads = thread_count(yt.len(), w.n);
+    par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
+        let col0 = start / b;
+        for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
+            let j = col0 + cj;
+            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+            accs.fill(0);
+            for (byte_idx, &byte) in col.iter().enumerate() {
+                let g = byte_idx * 2;
+                let lo = (byte & 0x0F) as usize;
+                let hi = (byte >> 4) as usize;
+                for (r, acc) in accs.iter_mut().enumerate() {
+                    let t = &luts[r].tables;
+                    *acc += unsafe {
+                        // In bounds: g+1 < n_groups (assert above) and
+                        // lo/hi < 16 — same argument as lut_gemv_into.
+                        *t.get_unchecked(g * 16 + lo) as i32
+                            + *t.get_unchecked((g + 1) * 16 + hi) as i32
+                    };
+                }
+            }
+        }
+    });
+}
+
+/// Batched packed-ternary GEMM over per-row byte-indexed tables; the
+/// weight-stationary twin of [`super::ternary_gemv_into`].
+pub fn ternary_gemm_into(luts: &[TernaryLuts], w: &PackedTernary, yt: &mut [i32]) {
+    let b = luts.len();
+    assert!(b > 0, "empty batch");
+    assert_eq!(yt.len(), w.n * b);
+    for l in luts {
+        assert!(l.n_groups >= w.bytes_per_col, "LUTs built for smaller k");
+    }
+    let threads = thread_count(yt.len(), w.n);
+    par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
+        let col0 = start / b;
+        for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
+            let j = col0 + cj;
+            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+            accs.fill(0);
+            for (g, &byte) in col.iter().enumerate() {
+                for (r, acc) in accs.iter_mut().enumerate() {
+                    *acc += unsafe {
+                        // in bounds: g < bytes_per_col <= n_groups, byte < 256
+                        *luts[r].tables.get_unchecked(g * 256 + byte as usize) as i32
+                    };
+                }
+            }
+        }
+    });
+}
+
+/// Batched INT8 GEMM with i32 accumulation: `xs` is [b, k] row-major
+/// quantized activations, `w` is [k, n] row-major weights, `yt` is the
+/// [n, b] accumulator. Walks `w` row-major once per batch step; exact
+/// integer arithmetic, bit-identical to [`super::i8_gemv`] per row.
+pub fn i8_gemm_batch_into(xs: &[i8], w: &[i8], b: usize, k: usize, n: usize, yt: &mut [i32]) {
+    assert!(b > 0, "empty batch");
+    assert_eq!(xs.len(), b * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(yt.len(), n * b);
+    let threads = thread_count(yt.len(), n);
+    par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
+        let col0 = start / b;
+        let cols = chunk.len() / b;
+        chunk.fill(0);
+        for kk in 0..k {
+            let wrow = &w[kk * n + col0..kk * n + col0 + cols];
+            for r in 0..b {
+                let xv = xs[r * k + kk] as i32;
+                if xv == 0 {
+                    continue;
+                }
+                for (cj, &wv) in wrow.iter().enumerate() {
+                    chunk[cj * b + r] += xv * wv as i32;
+                }
+            }
+        }
+    });
+}
+
+/// Batched f32 GEMM into a [n, b] accumulator, preserving
+/// [`super::f32_gemv`]'s k-major accumulation order and skip-zero rows so
+/// every output row is bit-identical to the GEMV path (the serving
+/// lm_head and FP16-baseline batch engine).
+pub fn f32_gemm_batch_into(xs: &[f32], w: &[f32], b: usize, k: usize, n: usize, yt: &mut [f32]) {
+    assert!(b > 0, "empty batch");
+    assert_eq!(xs.len(), b * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(yt.len(), n * b);
+    let threads = thread_count(yt.len(), n);
+    par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
+        let col0 = start / b;
+        let cols = chunk.len() / b;
+        chunk.fill(0.0);
+        for kk in 0..k {
+            let wrow = &w[kk * n + col0..kk * n + col0 + cols];
+            for r in 0..b {
+                let xv = xs[r * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (cj, &wv) in wrow.iter().enumerate() {
+                    chunk[cj * b + r] += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        build_luts, build_ternary_luts, f32_gemv, i8_gemv, lut_gemv, ternary_gemv,
+    };
+    use super::*;
+    use crate::quant::{pack_signs, pack_ternary};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_i8_rows(r: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (r.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn lut_gemm_matches_per_row_gemv_bitexactly() {
+        prop::check(71, 40, |r: &mut Rng| {
+            let k = 1 + r.below(150);
+            let n = 1 + r.below(20);
+            let b = 1 + r.below(9);
+            let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+            let xs = rand_i8_rows(r, b * k);
+            (k, n, b, signs, xs)
+        }, |(k, n, b, signs, xs)| {
+            let w = pack_signs(signs, *k, *n);
+            let luts: Vec<_> = (0..*b).map(|r| build_luts(&xs[r * k..(r + 1) * k], *k)).collect();
+            let mut yt = vec![0i32; w.n * b];
+            lut_gemm_into(&luts, &w, &mut yt);
+            for r in 0..*b {
+                let want = lut_gemv(&luts[r], &w);
+                for j in 0..*n {
+                    if yt[j * b + r] != want[j] {
+                        return Err(format!("row {r} col {j}: {} vs {}", yt[j * b + r], want[j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ternary_gemm_matches_per_row_gemv_bitexactly() {
+        prop::check(72, 30, |r: &mut Rng| {
+            let k = 1 + r.below(100);
+            let n = 1 + r.below(16);
+            let b = 1 + r.below(7);
+            let vals: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+            let xs = rand_i8_rows(r, b * k);
+            (k, n, b, vals, xs)
+        }, |(k, n, b, vals, xs)| {
+            let w = pack_ternary(vals, *k, *n);
+            let luts: Vec<_> =
+                (0..*b).map(|r| build_ternary_luts(&xs[r * k..(r + 1) * k], *k)).collect();
+            let mut yt = vec![0i32; w.n * b];
+            ternary_gemm_into(&luts, &w, &mut yt);
+            for r in 0..*b {
+                let want = ternary_gemv(&xs[r * k..(r + 1) * k], &w);
+                for j in 0..*n {
+                    if yt[j * b + r] != want[j] {
+                        return Err(format!("row {r} col {j}: {} vs {}", yt[j * b + r], want[j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i8_gemm_batch_matches_per_row_gemv_bitexactly() {
+        prop::check(73, 30, |r: &mut Rng| {
+            let k = 1 + r.below(80);
+            let n = 1 + r.below(20);
+            let b = 1 + r.below(9);
+            let w = rand_i8_rows(r, k * n);
+            let xs = rand_i8_rows(r, b * k);
+            (k, n, b, w, xs)
+        }, |(k, n, b, w, xs)| {
+            let mut yt = vec![0i32; n * b];
+            i8_gemm_batch_into(xs, w, *b, *k, *n, &mut yt);
+            for r in 0..*b {
+                let want = i8_gemv(&xs[r * k..(r + 1) * k], w, *k, *n);
+                for j in 0..*n {
+                    if yt[j * b + r] != want[j] {
+                        return Err(format!("row {r} col {j}: {} vs {}", yt[j * b + r], want[j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_gemm_batch_matches_per_row_gemv_bitexactly() {
+        prop::check(74, 30, |r: &mut Rng| {
+            let k = 1 + r.below(60);
+            let n = 1 + r.below(20);
+            let b = 1 + r.below(9);
+            let mut w = r.normal_vec(k * n);
+            let mut xs = r.normal_vec(b * k);
+            // sprinkle exact zeros so the skip-zero path is exercised
+            for i in (0..w.len()).step_by(7) {
+                w[i] = 0.0;
+            }
+            for i in (0..xs.len()).step_by(5) {
+                xs[i] = 0.0;
+            }
+            (k, n, b, w, xs)
+        }, |(k, n, b, w, xs)| {
+            let mut yt = vec![0f32; n * b];
+            f32_gemm_batch_into(xs, w, *b, *k, *n, &mut yt);
+            for r in 0..*b {
+                let want = f32_gemv(&xs[r * k..(r + 1) * k], w, *k, *n);
+                for j in 0..*n {
+                    // bit-exact, not approximate: same adds in same order
+                    if yt[j * b + r].to_bits() != want[j].to_bits() {
+                        return Err(format!("row {r} col {j}: {} vs {}", yt[j * b + r], want[j]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -34,8 +34,20 @@ pub struct Luts {
 /// Build the group-of-4 tables for activations `x` (length ≥ k; entries
 /// past k must be zero — `lut_gemv` pads internally).
 pub fn build_luts(x: &[i8], k: usize) -> Luts {
+    let mut out = Luts { tables: Vec::new(), n_groups: 0 };
+    build_luts_into(x, k, &mut out);
+    out
+}
+
+/// [`build_luts`] into caller-owned storage — the batched decode path
+/// rebuilds per-row tables every token, so the `Vec` must be reusable
+/// (steady state performs no allocation once capacity is warm).
+pub fn build_luts_into(x: &[i8], k: usize, out: &mut Luts) {
     let n_groups = k.div_ceil(8) * 2; // nibbles per packed byte column
-    let mut tables = vec![0i16; n_groups * 16];
+    out.n_groups = n_groups;
+    let tables = &mut out.tables;
+    tables.clear();
+    tables.resize(n_groups * 16, 0);
     for g in 0..n_groups {
         let base = g * 4;
         let mut xs = [0i16; 4];
@@ -52,7 +64,6 @@ pub fn build_luts(x: &[i8], k: usize) -> Luts {
             t[p] = t[p & (p - 1)] + 2 * xs[low];
         }
     }
-    Luts { tables, n_groups }
 }
 
 /// LUT GEMV: y[n] = Σ_groups table[g][nibble(g, col)], i32 accumulation.
@@ -67,7 +78,10 @@ pub fn lut_gemv(luts: &Luts, w: &PackedBits) -> Vec<i32> {
 /// Allocation-free variant for the serving hot loop.
 pub fn lut_gemv_into(luts: &Luts, w: &PackedBits, y: &mut [i32]) {
     assert_eq!(y.len(), w.n);
-    assert!(luts.n_groups * 4 >= w.k, "LUTs built for smaller k");
+    // The unsafe nibble walk reads groups 0..2*bytes_per_col, so that —
+    // not ceil-divided k — is the bound that keeps it in range for
+    // hand-built Luts.
+    assert!(luts.n_groups >= w.bytes_per_col * 2, "LUTs built for smaller k");
     let threads = num_threads().min(w.n.max(1));
     par_chunks_mut(y, threads, |_, start, chunk| {
         for (jj, acc) in chunk.iter_mut().enumerate() {

@@ -8,10 +8,16 @@
 //! * [`f32_gemm`]/[`f32_gemv`] — the FP16-baseline engine.
 //! * [`i8_gemm`]/[`i8_gemv`] — INT8 engine for the high-precision branch.
 //! * [`ternary_gemv`] — packed 2-bit BitNet1.58 engine.
+//! * [`batched`] — weight-stationary batched twins of every engine: each
+//!   packed weight column is read **once** per batch step and accumulated
+//!   into B output rows (the multi-user decode path; integer accumulation
+//!   keeps every row bit-identical to the GEMV engines).
 
+pub mod batched;
 pub mod lut;
 
-pub use lut::{build_luts, lut_gemv, lut_gemv_into};
+pub use batched::{f32_gemm_batch_into, i8_gemm_batch_into, lut_gemm_into, ternary_gemm_into};
+pub use lut::{build_luts, build_luts_into, lut_gemv, lut_gemv_into};
 
 use crate::quant::PackedTernary;
 use crate::util::threads::par_chunks_mut;
@@ -138,8 +144,19 @@ pub struct TernaryLuts {
 /// Built incrementally: clear the lowest set 2-bit field and add its
 /// contribution — 256 adds per group.
 pub fn build_ternary_luts(x: &[i8], k: usize) -> TernaryLuts {
+    let mut out = TernaryLuts { tables: Vec::new(), n_groups: 0 };
+    build_ternary_luts_into(x, k, &mut out);
+    out
+}
+
+/// [`build_ternary_luts`] into caller-owned storage (batched decode
+/// rebuilds per-row tables every token without allocating).
+pub fn build_ternary_luts_into(x: &[i8], k: usize, out: &mut TernaryLuts) {
     let n_groups = k.div_ceil(4);
-    let mut tables = vec![0i16; n_groups * 256];
+    out.n_groups = n_groups;
+    let tables = &mut out.tables;
+    tables.clear();
+    tables.resize(n_groups * 256, 0);
     for g in 0..n_groups {
         let base = g * 4;
         let mut xs = [0i16; 4];
@@ -162,7 +179,6 @@ pub fn build_ternary_luts(x: &[i8], k: usize) -> TernaryLuts {
             t[b] = t[prev] + contrib;
         }
     }
-    TernaryLuts { tables, n_groups }
 }
 
 /// Allocation-free ternary GEMV over prebuilt tables.

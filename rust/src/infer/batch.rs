@@ -1,0 +1,480 @@
+//! Batched decode substrate: shared per-row quantized activations, the
+//! per-worker [`Scratch`] arena, and the [`SeqStep`] descriptor that lets
+//! one fused forward pass advance a mixed set of sequences.
+//!
+//! The design is weight-stationary end to end: a batch step quantizes all
+//! B rows once ([`QuantActsBatch`]), builds all per-row LUTs once, then
+//! every linear reads each packed weight column a single time for the
+//! whole batch ([`crate::gemm::batched`]). All intermediate buffers live
+//! in the [`Scratch`], so the steady-state decode loop performs **zero
+//! heap allocations** in the linear layers once capacities are warm
+//! (verified by `tests/alloc_free.rs`).
+//!
+//! Rows are sequences' next tokens (decode) *or* prompt-chunk tokens
+//! (prefill): a chunk of M prompt tokens is M rows of the same
+//! [`SeqStep`], turning chunked prefill into an M-row GEMM instead of M
+//! GEMVs. Attention stays per-sequence — each row has its own cache and
+//! position — and within a step rows are attended in position order, so
+//! batched output is bit-identical to the one-token-at-a-time path.
+
+use crate::config::ModelConfig;
+use crate::gemm::{self, lut::Luts, TernaryLuts};
+use crate::kvcache::{KvError, KvStore, PagedLayer, PagedSeq};
+use crate::quant;
+
+use super::block::KvCache;
+
+/// Per-batch quantized activations: B rows quantized once, per-row lookup
+/// tables built once, shared by every linear reading the same input batch
+/// (the batched form of [`QuantActs`](super::QuantActs)). Reusable: a
+/// fresh [`QuantActsBatch::quantize_rows`] invalidates the tables without
+/// releasing their storage.
+#[derive(Default)]
+pub struct QuantActsBatch {
+    b: usize,
+    k: usize,
+    x_q: Vec<i8>,
+    gammas: Vec<f32>,
+    luts: Vec<Luts>,
+    tluts: Vec<TernaryLuts>,
+    luts_built: bool,
+    tluts_built: bool,
+    lut_builds: usize,
+    grew: bool,
+}
+
+impl QuantActsBatch {
+    pub fn new() -> QuantActsBatch {
+        QuantActsBatch::default()
+    }
+
+    /// Quantize `b` rows of width `k` (row-major `xs`), invalidating any
+    /// previously built tables. Per-row arithmetic is identical to
+    /// [`QuantActs::quantize`](super::QuantActs::quantize).
+    pub fn quantize_rows(&mut self, xs: &[f32], b: usize, k: usize) {
+        assert!(xs.len() >= b * k);
+        self.b = b;
+        self.k = k;
+        grow(&mut self.x_q, b * k, &mut self.grew);
+        grow(&mut self.gammas, b, &mut self.grew);
+        for r in 0..b {
+            self.gammas[r] = quant::quantize_i8_row_into(
+                &xs[r * k..(r + 1) * k],
+                &mut self.x_q[r * k..(r + 1) * k],
+            );
+        }
+        self.luts_built = false;
+        self.tluts_built = false;
+    }
+
+    /// Rows in the current batch.
+    pub fn rows(&self) -> usize {
+        self.b
+    }
+
+    /// Row width of the current batch.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Per-row quantization scales γ.
+    pub fn gammas(&self) -> &[f32] {
+        &self.gammas[..self.b]
+    }
+
+    /// Quantized rows, row-major [b, k].
+    pub fn x_q(&self) -> &[i8] {
+        &self.x_q[..self.b * self.k]
+    }
+
+    /// One row's quantized activations.
+    pub fn x_q_row(&self, r: usize) -> &[i8] {
+        &self.x_q[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Per-row group-of-4 LUTs for the 1-bit engines, built once per
+    /// quantization (lazily, like the single-token path).
+    pub fn luts(&mut self) -> &[Luts] {
+        if !self.luts_built {
+            if self.luts.len() < self.b {
+                self.grew = true;
+                self.luts.resize_with(self.b, || Luts { tables: Vec::new(), n_groups: 0 });
+            }
+            for r in 0..self.b {
+                gemm::build_luts_into(
+                    &self.x_q[r * self.k..(r + 1) * self.k],
+                    self.k,
+                    &mut self.luts[r],
+                );
+            }
+            self.luts_built = true;
+            self.lut_builds += 1;
+        }
+        &self.luts[..self.b]
+    }
+
+    /// Per-row byte-indexed tables for the ternary engine.
+    pub fn ternary_luts(&mut self) -> &[TernaryLuts] {
+        if !self.tluts_built {
+            if self.tluts.len() < self.b {
+                self.grew = true;
+                self.tluts
+                    .resize_with(self.b, || TernaryLuts { tables: Vec::new(), n_groups: 0 });
+            }
+            for r in 0..self.b {
+                gemm::build_ternary_luts_into(
+                    &self.x_q[r * self.k..(r + 1) * self.k],
+                    self.k,
+                    &mut self.tluts[r],
+                );
+            }
+            self.tluts_built = true;
+            self.lut_builds += 1;
+        }
+        &self.tluts[..self.b]
+    }
+
+    /// Table builds paid since construction (shared-read invariant probe:
+    /// one per quantization per engine family, however many linears read
+    /// the batch).
+    pub fn lut_build_count(&self) -> usize {
+        self.lut_builds
+    }
+
+    /// Pre-size the quantization buffers for up to `b` rows of width `k`
+    /// (expert sub-batch sizes vary step to step, so steady-state
+    /// allocation-freedom needs the worst case reserved up front).
+    pub(crate) fn reserve(&mut self, b: usize, k: usize) {
+        grow(&mut self.x_q, b * k, &mut self.grew);
+        grow(&mut self.gammas, b, &mut self.grew);
+    }
+
+    fn take_grew(&mut self) -> bool {
+        std::mem::replace(&mut self.grew, false)
+    }
+}
+
+/// Integer/float accumulator scratch for the batched kernels' [n, b]
+/// outputs, reused across every linear of a batch step.
+#[derive(Default)]
+pub struct AccScratch {
+    yi: Vec<i32>,
+    yf: Vec<f32>,
+    grew: bool,
+}
+
+impl AccScratch {
+    pub fn i32_acc(&mut self, len: usize) -> &mut [i32] {
+        grow(&mut self.yi, len, &mut self.grew);
+        &mut self.yi[..len]
+    }
+
+    pub fn f32_acc(&mut self, len: usize) -> &mut [f32] {
+        grow(&mut self.yf, len, &mut self.grew);
+        &mut self.yf[..len]
+    }
+}
+
+/// Grow-only resize that records whether a reallocation happened.
+pub(crate) fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize, grew: &mut bool) {
+    if v.len() < len {
+        if len > v.capacity() {
+            *grew = true;
+        }
+        v.resize(len, T::default());
+    }
+}
+
+/// Grow-only resize in power-of-two jumps, for buffers whose need creeps
+/// up by one each token (attention scores): from a warm state the next
+/// reallocation is a doubling, not every step.
+pub(crate) fn grow_pow2(v: &mut Vec<f32>, need: usize, grew: &mut bool) {
+    if v.len() < need {
+        let cap = need.next_power_of_two();
+        if cap > v.capacity() {
+            *grew = true;
+        }
+        v.resize(cap, 0.0);
+    }
+}
+
+/// One sequence's KV state inside a batch step: the contiguous fast path
+/// or a paged sequence — mixes freely within one batch.
+pub enum BatchKv<'a> {
+    Contig(&'a mut [KvCache]),
+    Paged(&'a mut PagedSeq),
+}
+
+impl BatchKv<'_> {
+    /// Tokens already cached for this sequence.
+    pub fn len(&self) -> usize {
+        match self {
+            BatchKv::Contig(c) => c.first().map_or(0, |k| k.len),
+            BatchKv::Paged(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One layer's cache view for attention.
+    pub(crate) fn layer(&mut self, l: usize) -> KvLayerRef<'_> {
+        match self {
+            BatchKv::Contig(c) => KvLayerRef::Contig(&mut c[l]),
+            BatchKv::Paged(s) => KvLayerRef::Paged(s.layer(l)),
+        }
+    }
+}
+
+/// Layer-level cache handle unifying the two layouts behind [`KvStore`],
+/// so the batched attention walks either bit-identically.
+pub(crate) enum KvLayerRef<'a> {
+    Contig(&'a mut KvCache),
+    Paged(PagedLayer<'a>),
+}
+
+impl KvStore for KvLayerRef<'_> {
+    fn len(&self) -> usize {
+        match self {
+            KvLayerRef::Contig(c) => c.len,
+            KvLayerRef::Paged(p) => p.len(),
+        }
+    }
+
+    fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError> {
+        match self {
+            KvLayerRef::Contig(c) => c.push(k, v),
+            KvLayerRef::Paged(p) => p.push(k, v),
+        }
+    }
+
+    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+        match self {
+            KvLayerRef::Contig(c) => c.for_each_segment(f),
+            KvLayerRef::Paged(p) => p.for_each_segment(f),
+        }
+    }
+}
+
+/// One sequence's contribution to a fused batch step: its next tokens
+/// (one for decode, a prompt chunk for prefill), the position of the
+/// first, and its KV state. `err` is set by the step if this sequence's
+/// cache failed — the other sequences in the batch are unaffected.
+pub struct SeqStep<'a> {
+    pub tokens: &'a [u32],
+    pub pos: usize,
+    pub kv: BatchKv<'a>,
+    /// Compute logits for the last row (decode rows and prompt-completing
+    /// prefill chunks want them; interior prefill chunks skip the lm_head).
+    pub want_logits: bool,
+    pub err: Option<KvError>,
+}
+
+impl<'a> SeqStep<'a> {
+    pub fn new(tokens: &'a [u32], pos: usize, kv: BatchKv<'a>, want_logits: bool) -> SeqStep<'a> {
+        SeqStep { tokens, pos, kv, want_logits, err: None }
+    }
+}
+
+/// Per-worker scratch arena for the fused batch step: every intermediate
+/// the forward pass needs, grown on demand and reused forever after.
+/// Holding one per serving worker makes the steady-state decode loop
+/// allocation-free in the linear layers.
+#[derive(Default)]
+pub struct Scratch {
+    /// Residual rows [b, d]; taken/returned by `decode_step_batch`.
+    pub(crate) xs: Vec<f32>,
+    /// Normed rows [b, d].
+    pub(crate) xn: Vec<f32>,
+    pub(crate) q: Vec<f32>,
+    pub(crate) kr: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) ctx: Vec<f32>,
+    pub(crate) o: Vec<f32>,
+    /// FFN hidden rows [b, d_ff-ish].
+    pub(crate) h1: Vec<f32>,
+    pub(crate) y1: Vec<f32>,
+    /// Router logits [b, n_experts].
+    pub(crate) router: Vec<f32>,
+    pub(crate) gates: Vec<f32>,
+    pub(crate) eidx: Vec<usize>,
+    /// Per-expert row-index groups (reused; capacity b each).
+    pub(crate) groups: Vec<Vec<usize>>,
+    /// Gathered expert inputs [g, d] (i8) and hidden/output rows.
+    pub(crate) xq_g: Vec<i8>,
+    pub(crate) hg: Vec<f32>,
+    pub(crate) yg: Vec<f32>,
+    /// Per-sequence attention score buffers (pow2 growth), so sequences'
+    /// attention can run on separate threads within one batch step.
+    pub(crate) scores_pool: Vec<Vec<f32>>,
+    /// Gathered final-norm rows for the batched lm_head, and which step
+    /// each came from.
+    pub(crate) head_rows: Vec<f32>,
+    pub(crate) head_idx: Vec<usize>,
+    /// Logits rows [n_steps, vocab]; rows of steps with `want_logits`.
+    pub(crate) logits: Vec<f32>,
+    pub(crate) acts: QuantActsBatch,
+    pub(crate) acts_ctx: QuantActsBatch,
+    pub(crate) acts_h: QuantActsBatch,
+    pub(crate) acts_e: QuantActsBatch,
+    pub(crate) acc: AccScratch,
+    pub(crate) vocab: usize,
+    pub(crate) grew: bool,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Size every buffer for a batch of `b` rows over `n_steps` sequences
+    /// of this model geometry. Grow-only; steady state is a no-op.
+    pub(crate) fn ensure(&mut self, cfg: &ModelConfig, b: usize, n_steps: usize) {
+        let d = cfg.d_model;
+        let h_max = cfg.d_ff.max(d);
+        let n_exp = cfg.n_experts.max(1);
+        let g = &mut self.grew;
+        grow(&mut self.xs, b * d, g);
+        grow(&mut self.xn, b * d, g);
+        grow(&mut self.q, b * d, g);
+        grow(&mut self.kr, b * d, g);
+        grow(&mut self.v, b * d, g);
+        grow(&mut self.ctx, b * d, g);
+        grow(&mut self.o, b * d, g);
+        grow(&mut self.h1, b * h_max, g);
+        grow(&mut self.y1, b * d, g);
+        grow(&mut self.router, b * n_exp, g);
+        grow(&mut self.gates, b, g);
+        grow(&mut self.eidx, b, g);
+        if self.groups.len() < n_exp {
+            *g = true;
+            self.groups.resize_with(n_exp, Vec::new);
+        }
+        for grp in &mut self.groups {
+            if grp.capacity() < b {
+                *g = true;
+                grp.reserve(b - grp.capacity());
+            }
+        }
+        grow(&mut self.xq_g, b * d, g);
+        grow(&mut self.hg, b * cfg.r.max(1), g);
+        grow(&mut self.yg, b * d, g);
+        self.acts_e.reserve(b, cfg.r.max(1));
+        if self.scores_pool.len() < n_steps {
+            *g = true;
+            self.scores_pool.resize_with(n_steps, Vec::new);
+        }
+        grow(&mut self.head_rows, n_steps * d, g);
+        grow(&mut self.head_idx, n_steps, g);
+        grow(&mut self.logits, n_steps * cfg.vocab, g);
+        self.vocab = cfg.vocab;
+    }
+
+    /// Logits row of step `si` from the last batch step (valid only for
+    /// steps that wanted logits and did not error).
+    pub fn logits_row(&self, si: usize) -> &[f32] {
+        &self.logits[si * self.vocab..(si + 1) * self.vocab]
+    }
+
+    /// Did any buffer reallocate since the last call? Steady-state decode
+    /// must answer `false` — the allocation-free invariant probe.
+    pub fn take_grew(&mut self) -> bool {
+        let children = self.acts.take_grew()
+            | self.acts_ctx.take_grew()
+            | self.acts_h.take_grew()
+            | self.acts_e.take_grew()
+            | std::mem::replace(&mut self.acc.grew, false);
+        std::mem::replace(&mut self.grew, false) | children
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{QuantActs, QLinear};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_quantization_matches_single_rows_bitexactly() {
+        let mut rng = Rng::new(11);
+        let (b, k) = (5, 96);
+        let xs = rng.normal_vec(b * k);
+        let mut batch = QuantActsBatch::new();
+        batch.quantize_rows(&xs, b, k);
+        for r in 0..b {
+            let single = QuantActs::quantize(&xs[r * k..(r + 1) * k]);
+            assert_eq!(batch.x_q_row(r), &single.x_q[..], "row {r} x_q");
+            assert_eq!(batch.gammas()[r], single.gamma, "row {r} gamma");
+        }
+    }
+
+    #[test]
+    fn batch_luts_built_once_and_shared_across_linears() {
+        let mut rng = Rng::new(12);
+        let (b, k, n) = (3, 64, 32);
+        let up1 = QLinear::one_bit(&rng.normal_vec(k * n), k, n);
+        let up8 = QLinear::int8(&rng.normal_vec(k * 16), k, 16);
+        let xs = rng.normal_vec(b * k);
+        let mut acts = QuantActsBatch::new();
+        acts.quantize_rows(&xs, b, k);
+        let mut acc = AccScratch::default();
+        let mut y = vec![0.0f32; b * n];
+        up1.forward_batch_into(&xs, &mut acts, &mut y, &mut acc);
+        let tables_ptr = acts.luts()[0].tables.as_ptr();
+        let mut y8 = vec![0.0f32; b * 16];
+        up8.forward_batch_into(&xs, &mut acts, &mut y8, &mut acc);
+        assert_eq!(acts.lut_build_count(), 1, "INT8 branch must reuse the quantization");
+        assert_eq!(acts.luts()[0].tables.as_ptr(), tables_ptr, "tables rebuilt");
+    }
+
+    #[test]
+    fn forward_batch_matches_single_forward_bitexactly() {
+        let mut rng = Rng::new(13);
+        let (b, k, n) = (4, 80, 24);
+        for lin in [
+            QLinear::one_bit(&rng.normal_vec(k * n), k, n),
+            QLinear::ternary(&rng.normal_vec(k * n), k, n),
+            QLinear::int8(&rng.normal_vec(k * n), k, n),
+            QLinear::f32(&rng.normal_vec(k * n), k, n),
+        ] {
+            let xs = rng.normal_vec(b * k);
+            let mut acts = QuantActsBatch::new();
+            acts.quantize_rows(&xs, b, k);
+            let mut acc = AccScratch::default();
+            let mut y = vec![0.0f32; b * n];
+            lin.forward_batch_into(&xs, &mut acts, &mut y, &mut acc);
+            for r in 0..b {
+                let row = &xs[r * k..(r + 1) * k];
+                let mut single = QuantActs::quantize(row);
+                let want = lin.forward(row, &mut single);
+                assert_eq!(&y[r * n..(r + 1) * n], &want[..], "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_grow_is_tracked_and_settles() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            variant: crate::config::Variant::PQuant,
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 48,
+            r: 8,
+            n_experts: 2,
+            seq_len: 8,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        };
+        let mut s = Scratch::new();
+        s.ensure(&cfg, 4, 4);
+        assert!(s.take_grew(), "first ensure must grow");
+        s.ensure(&cfg, 4, 4);
+        assert!(!s.take_grew(), "steady-state ensure must not grow");
+        s.ensure(&cfg, 2, 2);
+        assert!(!s.take_grew(), "smaller batch must reuse capacity");
+    }
+}

@@ -2,16 +2,21 @@
 //! variant FFN (dense quantized, or pQuant's decoupled branches with a
 //! top-1 router over the INT8 experts).
 //!
-//! The decode path is per-token GEMV — the edge regime the paper's
-//! Appendix A targets ("the batch size is typically one and the most
-//! time-consuming operation becomes GEMV").
+//! Two decode paths share every numeric: the per-token GEMV path — the
+//! edge regime the paper's Appendix A targets ("the batch size is
+//! typically one and the most time-consuming operation becomes GEMV") —
+//! and [`PackedBlock::try_forward_batch`], the weight-stationary serving
+//! path where one fused step advances many sequences and each packed
+//! weight column is read once for the whole batch. Greedy outputs are
+//! bit-identical across the two.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::Variant;
 use crate::kvcache::{KvError, KvStore};
 
-use super::{rmsnorm_vec, silu, softmax, QLinear, QuantActs};
+use super::batch::{grow_pow2, Scratch, SeqStep};
+use super::{rmsnorm_into, rmsnorm_vec, silu, softmax, QLinear, QuantActs};
 
 /// Per-layer attention KV cache, contiguous layout — the fast path for
 /// single-sequence decode ([`PackedModel::generate`]) where the caller
@@ -99,10 +104,22 @@ pub struct PackedBlock {
     pub timing: BlockTiming,
 }
 
+/// Whether a block accumulates per-component wall time. `Off` (the
+/// default) skips every `Instant::now()` in the decode hot loop — eight
+/// clock reads per layer per token are measurable at serving rates — so
+/// profiling is opt-in (the Fig 8 harness turns it on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimingMode {
+    #[default]
+    Off,
+    Accumulate,
+}
+
 /// Per-component cumulative wall time (Fig 8: "computation time across
-/// components in a Transformer block").
+/// components in a Transformer block"), gated by [`TimingMode`].
 #[derive(Debug, Clone, Default)]
 pub struct BlockTiming {
+    pub mode: TimingMode,
     pub attn_proj: Duration,
     pub attn_core: Duration,
     pub ffn_1bit: Duration,
@@ -117,25 +134,199 @@ impl BlockTiming {
             + self.router + self.norm_quant
     }
 
+    /// Clear the accumulators, keeping the mode.
     pub fn reset(&mut self) {
-        *self = BlockTiming::default();
+        *self = BlockTiming { mode: self.mode, ..BlockTiming::default() };
+    }
+
+    /// Read the clock only when accumulating.
+    #[inline]
+    fn tick(&self) -> Option<Instant> {
+        match self.mode {
+            TimingMode::Off => None,
+            TimingMode::Accumulate => Some(Instant::now()),
+        }
     }
 }
 
-fn rope_rotate(x: &mut [f32], pos: usize, n_heads: usize) {
+/// Fold an elapsed interval into `acc` (no-op when timing is off).
+#[inline]
+fn lap(acc: &mut Duration, t0: Option<Instant>) {
+    if let Some(t) = t0 {
+        *acc += t.elapsed();
+    }
+}
+
+/// Precomputed RoPE sin/cos rows ([position, half-dim]), grown on demand.
+/// The old per-call `powf`/`sin_cos` ran per head per layer per token in
+/// the decode hot loop; the table computes each (pos, i) angle once with
+/// the identical expressions, so rotation output is bit-identical.
+#[derive(Debug, Clone, Default)]
+pub struct RopeTable {
+    half: usize,
+    len: usize,
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+}
+
+impl RopeTable {
+    /// Make rows `0..n_pos` available for head half-dim `half` (grows in
+    /// power-of-two jumps so steady-state decode never reallocates).
+    pub fn ensure(&mut self, half: usize, n_pos: usize) {
+        if half != self.half {
+            self.half = half;
+            self.len = 0;
+            self.sin.clear();
+            self.cos.clear();
+        }
+        if n_pos <= self.len || half == 0 {
+            self.len = self.len.max(n_pos);
+            return;
+        }
+        let cap = n_pos.next_power_of_two();
+        self.sin.resize(cap * half, 0.0);
+        self.cos.resize(cap * half, 0.0);
+        for pos in self.len..cap {
+            for i in 0..half {
+                let freq = 1.0f32 / 10000f32.powf(i as f32 / half as f32);
+                let angle = pos as f32 * freq;
+                let (s, c) = angle.sin_cos();
+                self.sin[pos * half + i] = s;
+                self.cos[pos * half + i] = c;
+            }
+        }
+        self.len = cap;
+    }
+
+    /// Positions currently tabulated.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn row(&self, pos: usize) -> (&[f32], &[f32]) {
+        let half = self.half;
+        (
+            &self.sin[pos * half..(pos + 1) * half],
+            &self.cos[pos * half..(pos + 1) * half],
+        )
+    }
+}
+
+/// Rotate q/k in place from the precomputed table (`rope.ensure` must
+/// cover `pos`).
+pub fn rope_rotate(x: &mut [f32], pos: usize, n_heads: usize, rope: &RopeTable) {
     let hd = x.len() / n_heads;
     let half = hd / 2;
+    debug_assert_eq!(half, rope.half, "RopeTable built for another head size");
+    assert!(pos < rope.len, "RopeTable not ensured through pos {pos}");
+    let (sin, cos) = rope.row(pos);
     for h in 0..n_heads {
         let base = h * hd;
         for i in 0..half {
-            let freq = 1.0f32 / 10000f32.powf(i as f32 / half as f32);
-            let angle = pos as f32 * freq;
-            let (sin, cos) = angle.sin_cos();
+            let (s, c) = (sin[i], cos[i]);
             let a = x[base + i];
             let b = x[base + half + i];
-            x[base + i] = a * cos - b * sin;
-            x[base + half + i] = a * sin + b * cos;
+            x[base + i] = a * c - b * s;
+            x[base + half + i] = a * s + b * c;
         }
+    }
+}
+
+/// One row of attention over any [`KvStore`]: scores (len == cache.len())
+/// are scratch, `ctx` must be zeroed [d]. Both the single-token and the
+/// batched paths call this one function, so their float ops — and
+/// therefore their output bits — are identical by construction. The cache
+/// is walked as ordered contiguous segments (one for the contiguous
+/// layout, one per page when paged) — same rows, same order, same float
+/// ops, so the layouts are bit-identical too.
+fn attend_into<C: KvStore + ?Sized>(
+    q: &[f32],
+    cache: &C,
+    n_heads: usize,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..n_heads {
+        let qh = &q[h * hd..(h + 1) * hd];
+        let mut t = 0;
+        cache.for_each_segment(&mut |ks, _| {
+            for kr in ks.chunks_exact(d) {
+                let kh = &kr[h * hd..(h + 1) * hd];
+                scores[t] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                t += 1;
+            }
+        });
+        softmax(scores);
+        let ch = &mut ctx[h * hd..(h + 1) * hd];
+        let mut t = 0;
+        cache.for_each_segment(&mut |_, vs| {
+            for vr in vs.chunks_exact(d) {
+                let p = scores[t];
+                let vh = &vr[h * hd..(h + 1) * hd];
+                for (c, &vv) in ch.iter_mut().zip(vh) {
+                    *c += p * vv;
+                }
+                t += 1;
+            }
+        });
+    }
+}
+
+/// One sequence's attention within a batch step: rope-rotate and push its
+/// rows in position order, attending each against the sequence's own
+/// cache. `q`/`k`/`v`/`ctx`/`xs` are this sequence's row spans ([rows, d]);
+/// `scores` is pre-grown to cover the final cache length. On a cache
+/// failure the sequence's `err` is set and its rows zeroed — the rest of
+/// the batch is unaffected. Self-contained (no `&mut PackedBlock`), so
+/// sequences can run on separate scoped threads.
+#[allow(clippy::too_many_arguments)]
+fn attend_seq(
+    step: &mut SeqStep<'_>,
+    layer: usize,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &[f32],
+    ctx: &mut [f32],
+    xs: &mut [f32],
+    scores: &mut [f32],
+    rope: &RopeTable,
+    n_heads: usize,
+    d: usize,
+) {
+    if step.err.is_some() {
+        return;
+    }
+    let rows = step.tokens.len();
+    let mut cache = step.kv.layer(layer);
+    for i in 0..rows {
+        let pos = step.pos + i;
+        rope_rotate(&mut q[i * d..(i + 1) * d], pos, n_heads, rope);
+        rope_rotate(&mut k[i * d..(i + 1) * d], pos, n_heads, rope);
+        if let Err(e) = cache.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]) {
+            step.err = Some(e);
+            // Dead sequence: zero its rows so later layers stay finite
+            // (outputs are discarded by the caller).
+            xs.fill(0.0);
+            ctx.fill(0.0);
+            return;
+        }
+        let t_len = cache.len();
+        ctx[i * d..(i + 1) * d].fill(0.0);
+        attend_into(
+            &q[i * d..(i + 1) * d],
+            &cache,
+            n_heads,
+            &mut scores[..t_len],
+            &mut ctx[i * d..(i + 1) * d],
+        );
     }
 }
 
@@ -144,9 +335,15 @@ impl PackedBlock {
     /// stream vector [d]; returns the updated residual. `pos` is the cache
     /// position of this token. The cache is caller-sized, so overflow is a
     /// programming error here — recoverable callers use
-    /// [`PackedBlock::try_forward`].
-    pub fn forward(&mut self, x: &[f32], pos: usize, cache: &mut KvCache) -> Vec<f32> {
-        self.try_forward(x, pos, cache).expect("contiguous KV cache sized by caller")
+    /// [`PackedBlock::try_forward`]. `rope` must cover `pos`.
+    pub fn forward(
+        &mut self,
+        x: &[f32],
+        pos: usize,
+        cache: &mut KvCache,
+        rope: &RopeTable,
+    ) -> Vec<f32> {
+        self.try_forward(x, pos, cache, rope).expect("contiguous KV cache sized by caller")
     }
 
     /// Decode one token against any [`KvStore`] (contiguous or paged).
@@ -158,94 +355,67 @@ impl PackedBlock {
         x: &[f32],
         pos: usize,
         cache: &mut C,
+        rope: &RopeTable,
     ) -> Result<Vec<f32>, KvError> {
         let d = x.len();
-        let hd = d / self.n_heads;
 
         // ---- attention ----
-        let t0 = std::time::Instant::now();
+        let t0 = self.timing.tick();
         let xn = rmsnorm_vec(x, &self.attn_norm);
         let mut acts = QuantActs::quantize(&xn);
-        self.timing.norm_quant += t0.elapsed();
+        lap(&mut self.timing.norm_quant, t0);
 
-        let t0 = std::time::Instant::now();
+        let t0 = self.timing.tick();
         let mut q = self.wq.forward(&xn, &mut acts);
         let mut k = self.wk.forward(&xn, &mut acts);
         let v = self.wv.forward(&xn, &mut acts);
-        self.timing.attn_proj += t0.elapsed();
+        lap(&mut self.timing.attn_proj, t0);
 
-        let t0 = std::time::Instant::now();
-        rope_rotate(&mut q, pos, self.n_heads);
-        rope_rotate(&mut k, pos, self.n_heads);
+        let t0 = self.timing.tick();
+        rope_rotate(&mut q, pos, self.n_heads, rope);
+        rope_rotate(&mut k, pos, self.n_heads, rope);
         cache.push(&k, &v)?;
         let t_len = cache.len();
         let mut ctx = vec![0.0f32; d];
-        let scale = 1.0 / (hd as f32).sqrt();
         let mut scores = vec![0.0f32; t_len];
-        // The cache is walked as ordered contiguous segments (one for the
-        // contiguous layout, one per page when paged) — same rows, same
-        // order, same float ops, so the layouts are bit-identical.
-        for h in 0..self.n_heads {
-            let qh = &q[h * hd..(h + 1) * hd];
-            let mut t = 0;
-            cache.for_each_segment(&mut |ks, _| {
-                for kr in ks.chunks_exact(d) {
-                    let kh = &kr[h * hd..(h + 1) * hd];
-                    scores[t] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    t += 1;
-                }
-            });
-            softmax(&mut scores);
-            let ch = &mut ctx[h * hd..(h + 1) * hd];
-            let mut t = 0;
-            cache.for_each_segment(&mut |_, vs| {
-                for vr in vs.chunks_exact(d) {
-                    let p = scores[t];
-                    let vh = &vr[h * hd..(h + 1) * hd];
-                    for (c, &vv) in ch.iter_mut().zip(vh) {
-                        *c += p * vv;
-                    }
-                    t += 1;
-                }
-            });
-        }
-        self.timing.attn_core += t0.elapsed();
+        attend_into(&q, cache, self.n_heads, &mut scores, &mut ctx);
+        lap(&mut self.timing.attn_core, t0);
 
-        let t0 = std::time::Instant::now();
+        let t0 = self.timing.tick();
         let mut acts_ctx = QuantActs::quantize(&ctx);
         let o = self.wo.forward(&ctx, &mut acts_ctx);
-        self.timing.attn_proj += t0.elapsed();
+        lap(&mut self.timing.attn_proj, t0);
 
         let mut x1: Vec<f32> = x.iter().zip(&o).map(|(a, b)| a + b).collect();
 
         // ---- FFN ----
-        let t0 = std::time::Instant::now();
+        let t0 = self.timing.tick();
         let xn = rmsnorm_vec(&x1, &self.ffn_norm);
         let mut acts = QuantActs::quantize(&xn);
-        self.timing.norm_quant += t0.elapsed();
+        lap(&mut self.timing.norm_quant, t0);
 
         let y = match &self.ffn {
             Ffn::Dense { up, down } => {
-                let t0 = std::time::Instant::now();
+                let t0 = self.timing.tick();
                 let mut h = up.forward(&xn, &mut acts);
                 silu(&mut h);
                 let mut acts_h = QuantActs::quantize(&h);
                 let out = down.forward(&h, &mut acts_h);
-                self.timing.ffn_1bit += t0.elapsed();
+                lap(&mut self.timing.ffn_1bit, t0);
                 out
             }
             Ffn::Decoupled(dec) => {
                 // 1-bit branch (shares acts/LUTs with the expert up-proj —
                 // the Appendix A "no redundant data reads" point)
-                let t0 = std::time::Instant::now();
+                let t0 = self.timing.tick();
                 let mut h1 = dec.up_1bit.forward(&xn, &mut acts);
                 silu(&mut h1);
                 let mut acts_h1 = QuantActs::quantize(&h1);
                 let y1 = dec.down_1bit.forward(&h1, &mut acts_h1);
-                self.timing.ffn_1bit += t0.elapsed();
+                lap(&mut self.timing.ffn_1bit, t0);
 
                 // top-1 router (full precision, tiny)
-                let t0 = std::time::Instant::now();
+                let t0 = self.timing.tick();
                 let n_exp = dec.experts.len();
                 let (expert_idx, gate) = if n_exp == 1 {
                     (0usize, 1.0f32)
@@ -262,16 +432,18 @@ impl PackedBlock {
                     }
                     (bi, bp)
                 };
-                self.timing.router += t0.elapsed();
+                lap(&mut self.timing.router, t0);
 
-                // single activated INT8 expert (traffic constant in N)
-                let t0 = std::time::Instant::now();
+                // single activated INT8 expert (traffic constant in N);
+                // the up-projection reads the shared `acts` built for the
+                // 1-bit branch — one quantization, one set of tables.
+                let t0 = self.timing.tick();
                 let (up8, down8) = &dec.experts[expert_idx];
                 let mut h8 = up8.forward(&xn, &mut acts);
                 silu(&mut h8);
                 let mut acts_h8 = QuantActs::quantize(&h8);
                 let y8 = down8.forward(&h8, &mut acts_h8);
-                self.timing.ffn_8bit += t0.elapsed();
+                lap(&mut self.timing.ffn_8bit, t0);
 
                 y1.iter()
                     .zip(&y8)
@@ -283,6 +455,321 @@ impl PackedBlock {
             *xv += yv;
         }
         Ok(x1)
+    }
+
+    /// One fused batch step through this block: `xs` holds the residual
+    /// rows of every sequence's tokens ([b, d], ordered as `steps`), and
+    /// is updated in place. Linears run batched (each weight column read
+    /// once for the whole batch); attention runs per sequence against its
+    /// own cache, rows in position order, so batched output is
+    /// bit-identical to B single-token calls. A cache failure marks that
+    /// step's `err` and zeroes its rows — the rest of the batch is
+    /// unaffected. All intermediates live in `scratch`; once warm, no
+    /// allocation happens here.
+    pub fn try_forward_batch(
+        &mut self,
+        layer: usize,
+        xs: &mut [f32],
+        steps: &mut [SeqStep<'_>],
+        rope: &RopeTable,
+        scratch: &mut Scratch,
+    ) {
+        let d = self.attn_norm.len();
+        let b = xs.len() / d;
+        debug_assert_eq!(b, steps.iter().map(|s| s.tokens.len()).sum::<usize>());
+        let Scratch {
+            xn,
+            q,
+            kr,
+            v,
+            ctx,
+            o,
+            h1,
+            y1,
+            router,
+            gates,
+            eidx,
+            groups,
+            xq_g,
+            hg,
+            yg,
+            scores_pool,
+            acts,
+            acts_ctx,
+            acts_h,
+            acts_e,
+            acc,
+            grew,
+            ..
+        } = scratch;
+
+        // ---- attention: norm + one shared quantization + batched QKV ----
+        let t0 = self.timing.tick();
+        for r in 0..b {
+            rmsnorm_into(&xs[r * d..(r + 1) * d], &self.attn_norm, &mut xn[r * d..(r + 1) * d]);
+        }
+        acts.quantize_rows(&xn[..b * d], b, d);
+        lap(&mut self.timing.norm_quant, t0);
+
+        let t0 = self.timing.tick();
+        self.wq.forward_batch_into(&xn[..b * d], acts, &mut q[..b * d], acc);
+        self.wk.forward_batch_into(&xn[..b * d], acts, &mut kr[..b * d], acc);
+        self.wv.forward_batch_into(&xn[..b * d], acts, &mut v[..b * d], acc);
+        lap(&mut self.timing.attn_proj, t0);
+
+        // ---- attention core: per sequence, rows in position order.
+        // Different sequences are independent (own cache, own rows), so
+        // with several in flight each runs on its own thread — the only
+        // per-row serial section of the step otherwise. Score buffers are
+        // pre-grown here (sequentially), so the spawned work allocates
+        // nothing.
+        let t0 = self.timing.tick();
+        let n_heads = self.n_heads;
+        for (si, step) in steps.iter().enumerate() {
+            if step.err.is_none() {
+                let need = step.kv.len() + step.tokens.len();
+                grow_pow2(&mut scores_pool[si], need, grew);
+            }
+        }
+        // Rough attention MAC count decides whether spawning is worth it;
+        // groups of contiguous sequences keep the spawn count at or below
+        // the core count.
+        let attn_work: usize = steps
+            .iter()
+            .map(|s| (s.kv.len() + s.tokens.len()) * s.tokens.len())
+            .sum::<usize>()
+            * d;
+        let t_groups = crate::util::threads::num_threads()
+            .min(steps.len())
+            .min(attn_work / (1 << 17) + 1);
+        if t_groups > 1 {
+            let per = steps.len().div_ceil(t_groups);
+            std::thread::scope(|scope| {
+                let mut q_rest = &mut q[..b * d];
+                let mut k_rest = &mut kr[..b * d];
+                let mut v_rest = &v[..b * d];
+                let mut c_rest = &mut ctx[..b * d];
+                let mut x_rest = &mut xs[..b * d];
+                let mut steps_rest = &mut steps[..];
+                let mut pool_rest = &mut scores_pool[..];
+                while !steps_rest.is_empty() {
+                    let take = per.min(steps_rest.len());
+                    let (sgrp, st) = steps_rest.split_at_mut(take);
+                    steps_rest = st;
+                    let (pgrp, pt) = pool_rest.split_at_mut(take);
+                    pool_rest = pt;
+                    let rows_grp: usize = sgrp.iter().map(|s| s.tokens.len()).sum();
+                    let (qh, qt) = q_rest.split_at_mut(rows_grp * d);
+                    q_rest = qt;
+                    let (kh, kt) = k_rest.split_at_mut(rows_grp * d);
+                    k_rest = kt;
+                    let (vh, vt) = v_rest.split_at(rows_grp * d);
+                    v_rest = vt;
+                    let (ch, ct) = c_rest.split_at_mut(rows_grp * d);
+                    c_rest = ct;
+                    let (xh, xt) = x_rest.split_at_mut(rows_grp * d);
+                    x_rest = xt;
+                    scope.spawn(move || {
+                        let mut r0 = 0usize;
+                        for (step, sbuf) in sgrp.iter_mut().zip(pgrp.iter_mut()) {
+                            let rows = step.tokens.len();
+                            let span = r0 * d..(r0 + rows) * d;
+                            attend_seq(
+                                step,
+                                layer,
+                                &mut qh[span.clone()],
+                                &mut kh[span.clone()],
+                                &vh[span.clone()],
+                                &mut ch[span.clone()],
+                                &mut xh[span],
+                                sbuf,
+                                rope,
+                                n_heads,
+                                d,
+                            );
+                            r0 += rows;
+                        }
+                    });
+                }
+            });
+        } else {
+            let mut r0 = 0usize;
+            for (si, step) in steps.iter_mut().enumerate() {
+                let rows = step.tokens.len();
+                let span = r0 * d..(r0 + rows) * d;
+                attend_seq(
+                    step,
+                    layer,
+                    &mut q[span.clone()],
+                    &mut kr[span.clone()],
+                    &v[span.clone()],
+                    &mut ctx[span.clone()],
+                    &mut xs[span],
+                    &mut scores_pool[si],
+                    rope,
+                    n_heads,
+                    d,
+                );
+                r0 += rows;
+            }
+        }
+        lap(&mut self.timing.attn_core, t0);
+
+        // ---- output projection + residual ----
+        let t0 = self.timing.tick();
+        acts_ctx.quantize_rows(&ctx[..b * d], b, d);
+        self.wo.forward_batch_into(&ctx[..b * d], acts_ctx, &mut o[..b * d], acc);
+        lap(&mut self.timing.attn_proj, t0);
+        for (xv, ov) in xs[..b * d].iter_mut().zip(o[..b * d].iter()) {
+            *xv += ov;
+        }
+
+        // ---- FFN: norm + one shared quantization for both branches ----
+        let t0 = self.timing.tick();
+        for r in 0..b {
+            rmsnorm_into(&xs[r * d..(r + 1) * d], &self.ffn_norm, &mut xn[r * d..(r + 1) * d]);
+        }
+        acts.quantize_rows(&xn[..b * d], b, d);
+        lap(&mut self.timing.norm_quant, t0);
+
+        match &self.ffn {
+            Ffn::Dense { up, down } => {
+                let t0 = self.timing.tick();
+                let (_, n_ff) = up.shape();
+                up.forward_batch_into(&xn[..b * d], acts, &mut h1[..b * n_ff], acc);
+                for r in 0..b {
+                    silu(&mut h1[r * n_ff..(r + 1) * n_ff]);
+                }
+                acts_h.quantize_rows(&h1[..b * n_ff], b, n_ff);
+                down.forward_batch_into(&h1[..b * n_ff], acts_h, &mut y1[..b * d], acc);
+                lap(&mut self.timing.ffn_1bit, t0);
+                for (xv, yv) in xs[..b * d].iter_mut().zip(y1[..b * d].iter()) {
+                    *xv += yv;
+                }
+            }
+            Ffn::Decoupled(dec) => {
+                // 1-bit branch (shares acts/LUTs with the expert up-proj —
+                // the Appendix A "no redundant data reads" point)
+                let t0 = self.timing.tick();
+                let (_, n1) = dec.up_1bit.shape();
+                dec.up_1bit.forward_batch_into(&xn[..b * d], acts, &mut h1[..b * n1], acc);
+                for r in 0..b {
+                    silu(&mut h1[r * n1..(r + 1) * n1]);
+                }
+                acts_h.quantize_rows(&h1[..b * n1], b, n1);
+                dec.down_1bit.forward_batch_into(&h1[..b * n1], acts_h, &mut y1[..b * d], acc);
+                lap(&mut self.timing.ffn_1bit, t0);
+
+                // top-1 router per row (full precision, tiny)
+                let t0 = self.timing.tick();
+                let n_exp = dec.experts.len();
+                if n_exp == 1 {
+                    for r in 0..b {
+                        eidx[r] = 0;
+                        gates[r] = 1.0;
+                    }
+                } else {
+                    let yf = acc.f32_acc(n_exp * b);
+                    crate::gemm::f32_gemm_batch_into(&xn[..b * d], &dec.router, b, d, n_exp, yf);
+                    for r in 0..b {
+                        let row = &mut router[r * n_exp..(r + 1) * n_exp];
+                        for (j, out) in row.iter_mut().enumerate() {
+                            *out = yf[j * b + r];
+                        }
+                        softmax(row);
+                        let (mut bi, mut bp) = (0usize, f32::NEG_INFINITY);
+                        for (i, &p) in row.iter().enumerate() {
+                            if p > bp {
+                                bi = i;
+                                bp = p;
+                            }
+                        }
+                        eidx[r] = bi;
+                        gates[r] = bp;
+                    }
+                }
+                lap(&mut self.timing.router, t0);
+
+                // group rows by routed expert; each group runs batched on
+                // the shared quantized activations (no re-quantization)
+                let t0 = self.timing.tick();
+                for grp in groups.iter_mut() {
+                    grp.clear();
+                }
+                let mut r0 = 0usize;
+                for step in steps.iter() {
+                    let rows = step.tokens.len();
+                    if step.err.is_none() {
+                        for i in 0..rows {
+                            groups[eidx[r0 + i]].push(r0 + i);
+                        }
+                    }
+                    r0 += rows;
+                }
+                for (e, grp) in groups.iter().enumerate().take(n_exp) {
+                    if grp.is_empty() {
+                        continue;
+                    }
+                    let (up8, down8) = &dec.experts[e];
+                    let gb = grp.len();
+                    match (up8.int8_parts(), down8.int8_parts()) {
+                        (Some((uw, ug, uk, un)), Some((dw, dg, dk, dn))) => {
+                            debug_assert_eq!(uk, d);
+                            debug_assert_eq!(dn, d);
+                            debug_assert_eq!(dk, un);
+                            for (gi, &r) in grp.iter().enumerate() {
+                                xq_g[gi * uk..(gi + 1) * uk].copy_from_slice(acts.x_q_row(r));
+                            }
+                            let yi = acc.i32_acc(un * gb);
+                            crate::gemm::i8_gemm_batch_into(&xq_g[..gb * uk], uw, gb, uk, un, yi);
+                            for (gi, &r) in grp.iter().enumerate() {
+                                let s = 1.0 / (ug * acts.gammas()[r]);
+                                let row = &mut hg[gi * un..(gi + 1) * un];
+                                for (j, out) in row.iter_mut().enumerate() {
+                                    *out = yi[j * gb + gi] as f32 * s;
+                                }
+                                silu(row);
+                            }
+                            acts_e.quantize_rows(&hg[..gb * un], gb, un);
+                            let yi = acc.i32_acc(dn * gb);
+                            crate::gemm::i8_gemm_batch_into(acts_e.x_q(), dw, gb, dk, dn, yi);
+                            for (gi, _) in grp.iter().enumerate() {
+                                let s = 1.0 / (dg * acts_e.gammas()[gi]);
+                                let yrow = &mut yg[gi * d..(gi + 1) * d];
+                                for (j, out) in yrow.iter_mut().enumerate() {
+                                    *out = yi[j * gb + gi] as f32 * s;
+                                }
+                            }
+                            for (gi, &r) in grp.iter().enumerate() {
+                                let gate = gates[r];
+                                for j in 0..d {
+                                    xs[r * d + j] +=
+                                        dec.beta * y1[r * d + j] + dec.alpha * gate * yg[gi * d + j];
+                                }
+                            }
+                        }
+                        _ => {
+                            // Non-INT8 experts (no packer produces them):
+                            // per-row fallback through the single path.
+                            for &r in grp.iter() {
+                                let xrow = &xn[r * d..(r + 1) * d];
+                                let mut a = QuantActs::quantize(xrow);
+                                let mut h8 = up8.forward(xrow, &mut a);
+                                silu(&mut h8);
+                                let mut a8 = QuantActs::quantize(&h8);
+                                let y8 = down8.forward(&h8, &mut a8);
+                                let gate = gates[r];
+                                for j in 0..d {
+                                    xs[r * d + j] +=
+                                        dec.beta * y1[r * d + j] + dec.alpha * gate * y8[j];
+                                }
+                            }
+                        }
+                    }
+                }
+                lap(&mut self.timing.ffn_8bit, t0);
+            }
+        }
     }
 
     /// Resident weight bytes of this block.
@@ -367,14 +854,21 @@ impl PackedBlock {
 mod tests {
     use super::*;
 
+    fn rope_for(d: usize, n_heads: usize, n_pos: usize) -> RopeTable {
+        let mut rope = RopeTable::default();
+        rope.ensure(d / n_heads / 2, n_pos);
+        rope
+    }
+
     fn run_block(variant: Variant) -> Vec<f32> {
         let d = 64;
         let mut block = PackedBlock::random(variant, d, 4, 176, 16, 2, 42);
         let mut cache = KvCache::new(8, d);
+        let rope = rope_for(d, 4, 8);
         let x = crate::util::rng::Rng::new(1).normal_vec(d);
         let mut out = vec![];
         for pos in 0..4 {
-            out = block.forward(&x, pos, &mut cache);
+            out = block.forward(&x, pos, &mut cache, &rope);
         }
         out
     }
@@ -411,18 +905,32 @@ mod tests {
     }
 
     #[test]
-    fn timing_accumulates() {
+    fn timing_accumulates_when_enabled() {
         let d = 64;
         let mut block = PackedBlock::random(Variant::PQuant, d, 4, 176, 16, 4, 7);
+        block.timing.mode = TimingMode::Accumulate;
         let mut cache = KvCache::new(8, d);
+        let rope = rope_for(d, 4, 8);
         let x = vec![0.5; d];
-        block.forward(&x, 0, &mut cache);
+        block.forward(&x, 0, &mut cache, &rope);
         let t = block.timing.clone();
         assert!(t.total() > Duration::ZERO);
         assert!(t.ffn_8bit > Duration::ZERO, "expert branch must be timed");
         assert!(t.router > Duration::ZERO, "router must be timed");
         block.timing.reset();
         assert_eq!(block.timing.total(), Duration::ZERO);
+        assert_eq!(block.timing.mode, TimingMode::Accumulate, "reset keeps the mode");
+    }
+
+    #[test]
+    fn timing_off_is_free() {
+        let d = 64;
+        let mut block = PackedBlock::random(Variant::PQuant, d, 4, 176, 16, 2, 7);
+        assert_eq!(block.timing.mode, TimingMode::Off, "profiling must be opt-in");
+        let mut cache = KvCache::new(8, d);
+        let rope = rope_for(d, 4, 8);
+        block.forward(&vec![0.5; d], 0, &mut cache, &rope);
+        assert_eq!(block.timing.total(), Duration::ZERO, "Off must not accumulate");
     }
 
     #[test]
@@ -438,9 +946,32 @@ mod tests {
     #[test]
     fn rope_preserves_norm() {
         let mut x = crate::util::rng::Rng::new(3).normal_vec(32);
+        let rope = rope_for(32, 4, 8);
         let before: f32 = x.iter().map(|v| v * v).sum();
-        rope_rotate(&mut x, 7, 4);
+        rope_rotate(&mut x, 7, 4, &rope);
         let after: f32 = x.iter().map(|v| v * v).sum();
         assert!((before - after).abs() / before < 1e-5);
+    }
+
+    #[test]
+    fn rope_table_matches_on_the_fly_math() {
+        // The table must store exactly what the old inline computation
+        // produced: freq = 10000^(-i/half), angle = pos * freq.
+        let mut rope = RopeTable::default();
+        rope.ensure(4, 10);
+        assert!(rope.len() >= 10);
+        for pos in [0usize, 3, 9] {
+            let (sin, cos) = rope.row(pos);
+            for i in 0..4 {
+                let freq = 1.0f32 / 10000f32.powf(i as f32 / 4.0);
+                let (s, c) = (pos as f32 * freq).sin_cos();
+                assert_eq!(sin[i].to_bits(), s.to_bits(), "sin pos {pos} i {i}");
+                assert_eq!(cos[i].to_bits(), c.to_bits(), "cos pos {pos} i {i}");
+            }
+        }
+        // Growing keeps earlier rows intact.
+        let before = rope.row(3).0.to_vec();
+        rope.ensure(4, 100);
+        assert_eq!(rope.row(3).0, &before[..]);
     }
 }

@@ -12,35 +12,43 @@
 //! scales), so logits agree with the AOT fwd path up to activation
 //! re-quantization order.
 
+pub mod batch;
 pub mod block;
 pub mod model;
 
-pub use block::{KvCache, PackedBlock};
+pub use batch::{BatchKv, QuantActsBatch, Scratch, SeqStep};
+pub use block::{KvCache, PackedBlock, RopeTable, TimingMode};
 pub use model::PackedModel;
 
 use crate::gemm::{self, lut::Luts, TernaryLuts};
 use crate::quant::{self, PackedBits, PackedTernary};
 
+use batch::AccScratch;
+
 /// Per-token quantized activations, shared across every linear that reads
 /// the same input vector (Appendix A: the fused-read optimization — build
-/// the LUTs once, use them for Q/K/V and both FFN branches).
+/// the LUTs once, use them for Q/K/V and both FFN branches — including the
+/// decoupled FFN's INT8 expert up-projection, which reads `x_q` instead of
+/// re-quantizing its input).
 pub struct QuantActs {
     pub x_q: Vec<i8>,
     pub gamma: f32,
     luts: Option<Luts>,
     tluts: Option<TernaryLuts>,
+    lut_builds: usize,
 }
 
 impl QuantActs {
     pub fn quantize(x: &[f32]) -> QuantActs {
         let (x_q, gammas) = quant::quantize_i8_rows(x, 1, x.len());
-        QuantActs { x_q, gamma: gammas[0], luts: None, tluts: None }
+        QuantActs { x_q, gamma: gammas[0], luts: None, tluts: None, lut_builds: 0 }
     }
 
     /// Lazily build the group-of-4 LUTs for the 1-bit path.
     pub fn luts(&mut self, k: usize) -> &Luts {
         if self.luts.is_none() {
             self.luts = Some(gemm::build_luts(&self.x_q, k));
+            self.lut_builds += 1;
         }
         self.luts.as_ref().unwrap()
     }
@@ -49,8 +57,16 @@ impl QuantActs {
     pub fn ternary_luts(&mut self, k: usize) -> &TernaryLuts {
         if self.tluts.is_none() {
             self.tluts = Some(gemm::build_ternary_luts(&self.x_q, k));
+            self.lut_builds += 1;
         }
         self.tluts.as_ref().unwrap()
+    }
+
+    /// How many table builds this activation set has paid for — the
+    /// shared-read invariant probe: every linear fed the same input must
+    /// reuse one build (asserted by tests, not just documented).
+    pub fn lut_build_count(&self) -> usize {
+        self.lut_builds
     }
 }
 
@@ -111,6 +127,81 @@ impl QLinear {
         }
     }
 
+    /// Raw INT8 parts `(w, gamma_w, k, n)` — the batched expert path
+    /// gathers sub-batches per routed expert and needs the planes directly.
+    pub fn int8_parts(&self) -> Option<(&[i8], f32, usize, usize)> {
+        match self {
+            QLinear::Int8 { w, gamma_w, k, n } => Some((w, *gamma_w, *k, *n)),
+            _ => None,
+        }
+    }
+
+    /// Batched y = X·W over B rows sharing one [`QuantActsBatch`]: each
+    /// packed weight column is read once for the whole batch (weight-
+    /// stationary), then dequantized into row-major `y` ([b, n]) with the
+    /// per-row scale. Bit-identical to B calls of [`QLinear::forward`];
+    /// allocation-free once `acc`'s capacity is warm.
+    pub fn forward_batch_into(
+        &self,
+        xs: &[f32],
+        acts: &mut QuantActsBatch,
+        y: &mut [f32],
+        acc: &mut AccScratch,
+    ) {
+        let (k, n) = self.shape();
+        let b = acts.rows();
+        debug_assert_eq!(xs.len(), b * k);
+        debug_assert_eq!(y.len(), b * n);
+        match self {
+            QLinear::F32 { w, .. } => {
+                let yf = acc.f32_acc(n * b);
+                gemm::f32_gemm_batch_into(xs, w, b, k, n, yf);
+                for r in 0..b {
+                    let row = &mut y[r * n..(r + 1) * n];
+                    for (j, out) in row.iter_mut().enumerate() {
+                        *out = yf[j * b + r];
+                    }
+                }
+            }
+            QLinear::OneBit { w, lambda } => {
+                debug_assert_eq!(acts.k(), w.k);
+                let yi = acc.i32_acc(n * b);
+                gemm::lut_gemm_into(acts.luts(), w, yi);
+                for r in 0..b {
+                    let scale = lambda / acts.gammas()[r];
+                    let row = &mut y[r * n..(r + 1) * n];
+                    for (j, out) in row.iter_mut().enumerate() {
+                        *out = yi[j * b + r] as f32 * scale;
+                    }
+                }
+            }
+            QLinear::Ternary { w, scale } => {
+                debug_assert_eq!(acts.k(), w.k);
+                let yi = acc.i32_acc(n * b);
+                gemm::ternary_gemm_into(acts.ternary_luts(), w, yi);
+                for r in 0..b {
+                    let s = scale / acts.gammas()[r];
+                    let row = &mut y[r * n..(r + 1) * n];
+                    for (j, out) in row.iter_mut().enumerate() {
+                        *out = yi[j * b + r] as f32 * s;
+                    }
+                }
+            }
+            QLinear::Int8 { w, gamma_w, .. } => {
+                debug_assert_eq!(acts.k(), k);
+                let yi = acc.i32_acc(n * b);
+                gemm::i8_gemm_batch_into(acts.x_q(), w, b, k, n, yi);
+                for r in 0..b {
+                    let s = 1.0 / (gamma_w * acts.gammas()[r]);
+                    let row = &mut y[r * n..(r + 1) * n];
+                    for (j, out) in row.iter_mut().enumerate() {
+                        *out = yi[j * b + r] as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
     /// y = x·W for one token, reusing the shared quantized activations.
     pub fn forward(&self, x: &[f32], acts: &mut QuantActs) -> Vec<f32> {
         match self {
@@ -141,12 +232,25 @@ impl QLinear {
     }
 }
 
+/// RMSNorm ε (same as the L1 kernel).
+const RMS_EPS: f32 = 1e-5;
+
+/// RMSNorm one vector into a caller-owned buffer (the allocation-free
+/// batched decode path); same arithmetic as [`rmsnorm_vec`].
+pub fn rmsnorm_into(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + RMS_EPS).sqrt();
+    for ((o, v), g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * r * g;
+    }
+}
+
 /// RMSNorm over one vector (same ε as the L1 kernel).
 pub fn rmsnorm_vec(x: &[f32], gain: &[f32]) -> Vec<f32> {
-    const EPS: f32 = 1e-5;
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let r = 1.0 / (ms + EPS).sqrt();
-    x.iter().zip(gain).map(|(v, g)| v * r * g).collect()
+    let mut out = vec![0.0f32; x.len()];
+    rmsnorm_into(x, gain, &mut out);
+    out
 }
 
 /// SiLU activation.
@@ -235,6 +339,32 @@ mod tests {
         let a = acts.luts(64) as *const _;
         let b = acts.luts(64) as *const _;
         assert_eq!(a, b, "LUTs must be built once");
+    }
+
+    #[test]
+    fn one_bit_and_int8_linears_share_one_quantization() {
+        // The decoupled FFN feeds the same normed input through the 1-bit
+        // up-projection and the INT8 expert up-projection; both must read
+        // the one shared QuantActs (one LUT build, one x_q buffer) rather
+        // than re-quantizing.
+        let mut rng = Rng::new(6);
+        let (k, n1, r) = (64, 48, 16);
+        let up1 = QLinear::one_bit(&rng.normal_vec(k * n1), k, n1);
+        let up8 = QLinear::int8(&rng.normal_vec(k * r), k, r);
+        let x = rng.normal_vec(k);
+        let mut acts = QuantActs::quantize(&x);
+        let xq_ptr = acts.x_q.as_ptr();
+        let y1 = up1.forward(&x, &mut acts);
+        let luts_ptr = acts.luts(k).tables.as_ptr();
+        let y8 = up8.forward(&x, &mut acts);
+        assert_eq!(acts.lut_build_count(), 1, "one LUT build for both branches");
+        assert_eq!(acts.x_q.as_ptr(), xq_ptr, "x_q must not be reallocated");
+        assert_eq!(acts.luts(k).tables.as_ptr(), luts_ptr, "tables must be reused");
+        // And sharing must not change the numbers vs fresh activations.
+        let mut fresh = QuantActs::quantize(&x);
+        assert_eq!(y1, up1.forward(&x, &mut fresh));
+        let mut fresh = QuantActs::quantize(&x);
+        assert_eq!(y8, up8.forward(&x, &mut fresh));
     }
 
     #[test]

@@ -8,11 +8,13 @@ use crate::config::{ModelConfig, Variant};
 use crate::kvcache::{KvError, PagedSeq};
 use crate::runtime::{Artifact, TrainState};
 
-use super::block::{DecoupledFfn, Ffn, KvCache, PackedBlock};
-use super::{rmsnorm_vec, QLinear, QuantActs};
+use super::batch::{Scratch, SeqStep};
+use super::block::{DecoupledFfn, Ffn, KvCache, PackedBlock, RopeTable, TimingMode};
+use super::{rmsnorm_into, rmsnorm_vec, QLinear, QuantActs};
 
 /// A deployable packed model. `Clone` yields an independent replica
-/// (weights are immutable at serve time; only per-block timing diverges).
+/// (weights are immutable at serve time; only per-block timing and the
+/// grown-on-demand RoPE table diverge).
 #[derive(Clone)]
 pub struct PackedModel {
     pub cfg: ModelConfig,
@@ -22,6 +24,9 @@ pub struct PackedModel {
     pub lm_head: Vec<f32>,
     pub final_norm: Vec<f32>,
     pub blocks: Vec<PackedBlock>,
+    /// Precomputed RoPE sin/cos rows shared by every block (grown on
+    /// demand; the hot loop never calls `powf`/`sin_cos`).
+    pub rope: RopeTable,
 }
 
 impl PackedModel {
@@ -100,7 +105,7 @@ impl PackedModel {
             });
         }
 
-        Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks })
+        Ok(PackedModel { cfg, embed, lm_head, final_norm, blocks, rope: RopeTable::default() })
     }
 
     /// Random model of a given config (bench workloads).
@@ -126,6 +131,21 @@ impl PackedModel {
             lm_head: rng.normal_vec(d * cfg.vocab),
             final_norm: vec![1.0; d],
             blocks,
+            rope: RopeTable::default(),
+        }
+    }
+
+    /// Half head-dim of this geometry (the RoPE table's row width).
+    fn rope_half(&self) -> usize {
+        self.cfg.d_model / self.cfg.n_heads / 2
+    }
+
+    /// Enable or disable per-component decode timing on every block
+    /// (opt-in: serving replicas default to [`TimingMode::Off`] so the
+    /// hot loop pays no clock reads).
+    pub fn set_timing(&mut self, mode: TimingMode) {
+        for b in &mut self.blocks {
+            b.timing.mode = mode;
         }
     }
 
@@ -152,9 +172,11 @@ impl PackedModel {
         caches: &mut [KvCache],
     ) -> std::result::Result<Vec<f32>, KvError> {
         let d = self.cfg.d_model;
+        self.rope.ensure(self.rope_half(), pos + 1);
         let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let rope = &self.rope;
         for (block, cache) in self.blocks.iter_mut().zip(caches.iter_mut()) {
-            x = block.try_forward(&x, pos, cache)?;
+            x = block.try_forward(&x, pos, cache, rope)?;
         }
         let xn = rmsnorm_vec(&x, &self.final_norm);
         Ok(crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab))
@@ -171,13 +193,97 @@ impl PackedModel {
         seq: &mut PagedSeq,
     ) -> std::result::Result<Vec<f32>, KvError> {
         let d = self.cfg.d_model;
+        self.rope.ensure(self.rope_half(), pos + 1);
         let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let rope = &self.rope;
         for (l, block) in self.blocks.iter_mut().enumerate() {
             let mut layer = seq.layer(l);
-            x = block.try_forward(&x, pos, &mut layer)?;
+            x = block.try_forward(&x, pos, &mut layer, rope)?;
         }
         let xn = rmsnorm_vec(&x, &self.final_norm);
         Ok(crate::gemm::f32_gemv(&xn, &self.lm_head, d, self.cfg.vocab))
+    }
+
+    /// One fused batch step over a mixed set of sequences (contiguous or
+    /// paged KV, decoding or prefilling): every linear in every layer runs
+    /// batched across all rows — each packed weight column read once per
+    /// step — while attention and KV stay per-sequence. Greedy outputs are
+    /// bit-identical to per-sequence [`PackedModel::decode_step`] calls
+    /// (property-tested in `tests/integration_batch.rs`).
+    ///
+    /// Per-sequence cache failures land in [`SeqStep::err`] (the rest of
+    /// the batch is unaffected). Logits of each step's last row — for
+    /// steps with `want_logits` — are written into `scratch` and read back
+    /// via [`Scratch::logits_row`]. Once `scratch` is warm, the loop
+    /// performs no heap allocation in the linear layers
+    /// (`tests/alloc_free.rs`).
+    pub fn decode_step_batch(&mut self, steps: &mut [SeqStep<'_>], scratch: &mut Scratch) {
+        let d = self.cfg.d_model;
+        let b: usize = steps.iter().map(|s| s.tokens.len()).sum();
+        if b == 0 {
+            return;
+        }
+        let max_pos = steps.iter().map(|s| s.pos + s.tokens.len()).max().unwrap_or(1);
+        self.rope.ensure(self.rope_half(), max_pos);
+        scratch.ensure(&self.cfg, b, steps.len());
+
+        // Embed every row.
+        let mut xs = std::mem::take(&mut scratch.xs);
+        {
+            let mut r = 0usize;
+            for step in steps.iter() {
+                for &tok in step.tokens {
+                    let t = tok as usize;
+                    xs[r * d..(r + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+                    r += 1;
+                }
+            }
+        }
+
+        let rope = &self.rope;
+        for (l, block) in self.blocks.iter_mut().enumerate() {
+            block.try_forward_batch(l, &mut xs[..b * d], steps, rope, scratch);
+        }
+
+        // Final norm + batched lm_head for the rows that want logits.
+        let mut logits = std::mem::take(&mut scratch.logits);
+        let mut w = 0usize;
+        let mut r0 = 0usize;
+        for (si, step) in steps.iter().enumerate() {
+            let rows = step.tokens.len();
+            if step.want_logits && step.err.is_none() && rows > 0 {
+                let r = r0 + rows - 1;
+                rmsnorm_into(
+                    &xs[r * d..(r + 1) * d],
+                    &self.final_norm,
+                    &mut scratch.head_rows[w * d..(w + 1) * d],
+                );
+                scratch.head_idx[w] = si;
+                w += 1;
+            }
+            r0 += rows;
+        }
+        if w > 0 {
+            let vocab = self.cfg.vocab;
+            let yf = scratch.acc.f32_acc(vocab * w);
+            crate::gemm::f32_gemm_batch_into(
+                &scratch.head_rows[..w * d],
+                &self.lm_head,
+                w,
+                d,
+                vocab,
+                yf,
+            );
+            for wi in 0..w {
+                let si = scratch.head_idx[wi];
+                let row = &mut logits[si * vocab..(si + 1) * vocab];
+                for (j, out) in row.iter_mut().enumerate() {
+                    *out = yf[j * w + wi];
+                }
+            }
+        }
+        scratch.logits = logits;
+        scratch.xs = xs;
     }
 
     /// Greedy generation: feed `prompt`, then emit `n_new` tokens.
@@ -310,9 +416,21 @@ mod tests {
     #[test]
     fn timing_summary_accumulates_across_blocks() {
         let mut m = PackedModel::random(&nano_cfg(Variant::PQuant), 2);
+        m.set_timing(TimingMode::Accumulate);
         m.generate(&[1], 3);
         assert!(m.timing_summary().total().as_nanos() > 0);
         m.reset_timing();
         assert_eq!(m.timing_summary().total().as_nanos(), 0);
+    }
+
+    #[test]
+    fn timing_is_off_by_default() {
+        let mut m = PackedModel::random(&nano_cfg(Variant::PQuant), 2);
+        m.generate(&[1], 3);
+        assert_eq!(
+            m.timing_summary().total().as_nanos(),
+            0,
+            "serving replicas must not pay clock reads unless profiling is on"
+        );
     }
 }

@@ -14,8 +14,14 @@
 //! * [`quant`] — sign/absmean 1-bit, ternary, INT8 absmax, group/channel
 //!   quantizers + bit-packing (8 weights/byte)
 //! * [`gemm`] — the Figure-8 engines: f32 GEMM, INT8 GEMM, T-MAC-style LUT
-//!   W1A8 GEMV, packed ternary GEMV
-//! * [`infer`] — pure-rust packed-weight transformer inference engine
+//!   W1A8 GEMV, packed ternary GEMV, plus their weight-stationary batched
+//!   twins ([`gemm::batched`]: each packed weight column read once per
+//!   batch step, bit-identical to the GEMV paths)
+//! * [`infer`] — pure-rust packed-weight transformer inference engine:
+//!   single-token decode, and the fused batched path
+//!   ([`infer::PackedModel::decode_step_batch`] over [`infer::SeqStep`]s
+//!   with a per-worker allocation-free [`infer::Scratch`]; precomputed
+//!   RoPE tables, opt-in per-component timing)
 //! * [`kvcache`] — paged KV-cache subsystem: fixed block budget
 //!   ([`kvcache::BlockPool`]), per-sequence page tables with copy-on-write
 //!   ([`kvcache::PagedSeq`]), prompt-prefix sharing, and recoverable
@@ -29,7 +35,10 @@
 //!   tickets, per-request sampling, cancellation, bounded-queue
 //!   backpressure, chunked prefill, KV-budgeted admission with priority
 //!   preemption over a [`kvcache::BlockPool`]) over the multi-model
-//!   [`serve::ModelRegistry`] (lease-counted replicas, warm hot-swap)
+//!   [`serve::ModelRegistry`] (lease-counted replicas, warm hot-swap);
+//!   workers advance the whole active set with one fused
+//!   weight-stationary batch step per round (decode rows + prefill-chunk
+//!   rows), bit-exact with unbatched decoding
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics

@@ -321,6 +321,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "queue wait ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   ttft ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
         qw.p50, qw.p95, qw.p99, tt.p50, tt.p95, tt.p99
     );
+    let occ = metrics.batch_occupancy_percentiles();
+    println!(
+        "decode batch occupancy: {:.1} rows/step mean ({:.1} seqs/step)  p50 {:.0}  p95 {:.0} over {} fused steps",
+        metrics.mean_batch_rows(),
+        metrics.mean_batch_seqs(),
+        occ.p50,
+        occ.p95,
+        metrics.batch_steps.load(std::sync::atomic::Ordering::Relaxed)
+    );
     if let Some(kv) = metrics.kv() {
         println!(
             "kv pool: {} x {}-token blocks, peak utilization {:.0}% | shared-block hit rate \

@@ -80,6 +80,20 @@ pub fn quantize_i8(x: &[f32]) -> Quantized8 {
     Quantized8 { vals, gamma }
 }
 
+/// Quantize one activation row into a caller-owned buffer and return its
+/// γ — the single allocation-free primitive behind [`quantize_i8_rows`]
+/// and the batched activation path, so every caller performs bit-identical
+/// arithmetic.
+pub fn quantize_i8_row_into(row: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), out.len());
+    let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let gamma = Q8_BOUND / (absmax + EPS);
+    for (dst, v) in out.iter_mut().zip(row) {
+        *dst = (v * gamma).round().clamp(-Q8_BOUND, Q8_BOUND) as i8;
+    }
+    gamma
+}
+
 /// Per-row (token) INT8 absmax over a [rows, cols] row-major buffer;
 /// mirrors `absmax_quantize(axis=-1)`. Returns per-row γ.
 pub fn quantize_i8_rows(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
@@ -87,13 +101,10 @@ pub fn quantize_i8_rows(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f3
     let mut vals = vec![0i8; x.len()];
     let mut gammas = vec![0.0f32; rows];
     for r in 0..rows {
-        let row = &x[r * cols..(r + 1) * cols];
-        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let gamma = Q8_BOUND / (absmax + EPS);
-        gammas[r] = gamma;
-        for (dst, v) in vals[r * cols..(r + 1) * cols].iter_mut().zip(row) {
-            *dst = (v * gamma).round().clamp(-Q8_BOUND, Q8_BOUND) as i8;
-        }
+        gammas[r] = quantize_i8_row_into(
+            &x[r * cols..(r + 1) * cols],
+            &mut vals[r * cols..(r + 1) * cols],
+        );
     }
     (vals, gammas)
 }

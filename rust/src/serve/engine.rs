@@ -30,11 +30,17 @@
 //!     channel ([`Event::Prefilled`] / [`Event::Token`] / [`Event::Done`])
 //!     plus [`Ticket::cancel`], observed between decode slices.
 //!
-//! Scheduling: the worker loop runs *slices* over the active set — each
-//! slice advances a request by either one prefill chunk
-//! ([`EngineOptions::prefill_chunk`] prompt tokens) or one decoded token —
-//! so a long prompt never stalls the whole batch, and the active set
-//! (prefilling + decoding) never exceeds `max_batch`.
+//! Scheduling: the worker loop runs one **fused batch step** per round —
+//! it gathers the active set's next tokens (one decode row per decoding
+//! request, one [`EngineOptions::prefill_chunk`]-row prompt chunk per
+//! prefilling request), runs a single batched forward in which every
+//! packed weight column is read once for the whole batch
+//! ([`PackedModel::decode_step_batch`]), then fans logits/errors back out
+//! to the tickets. A long prompt still never stalls the batch (chunks
+//! interleave with decode rows), the active set never exceeds
+//! `max_batch`, and greedy output stays bit-exact with the unbatched
+//! [`PackedModel::generate`]. [`ServeMetrics::batch_occupancy_percentiles`]
+//! reports rows per fused step.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -47,7 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::infer::{KvCache, PackedModel};
+use crate::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
 use crate::kvcache::{Admitted, BlockPool, KvError, KvPoolOptions, KvPoolStats, PagedSeq, PrefixTag};
 use crate::util::rng::Rng;
 
@@ -312,8 +318,15 @@ pub struct ServeMetrics {
     pub tokens_out: AtomicUsize,
     /// Peak concurrent active requests observed (batcher invariant probe).
     pub peak_active: AtomicUsize,
+    /// Fused batch steps executed (one per replica slot per round).
+    pub batch_steps: AtomicUsize,
+    /// Total rows (decode tokens + prefill-chunk tokens) over batch steps.
+    pub batch_rows: AtomicUsize,
+    /// Total sequences over batch steps.
+    pub batch_seqs: AtomicUsize,
     queue_wait_ms: Mutex<SampleRing>,
     ttft_ms: Mutex<SampleRing>,
+    batch_occ: Mutex<SampleRing>,
     /// The workers' KV pool (None on the legacy contiguous path).
     pool: Option<Arc<BlockPool>>,
 }
@@ -324,6 +337,39 @@ impl ServeMetrics {
         if let Some(t) = ttft {
             self.ttft_ms.lock().unwrap().push(t.as_secs_f64() * 1e3);
         }
+    }
+
+    /// One fused batch step of `seqs` sequences covering `rows` rows.
+    fn record_batch(&self, seqs: usize, rows: usize) {
+        self.batch_steps.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.fetch_add(rows, Ordering::Relaxed);
+        self.batch_seqs.fetch_add(seqs, Ordering::Relaxed);
+        self.batch_occ.lock().unwrap().push(rows as f64);
+    }
+
+    /// p50/p95/p99 of rows per fused batch step (decode batch occupancy —
+    /// how much weight-read amortization the scheduler is achieving).
+    pub fn batch_occupancy_percentiles(&self) -> Percentiles {
+        Percentiles::of(&self.batch_occ.lock().unwrap().samples)
+    }
+
+    /// Mean rows per fused batch step over the engine's lifetime.
+    pub fn mean_batch_rows(&self) -> f64 {
+        let steps = self.batch_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.batch_rows.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// Mean sequences per fused batch step (rows minus this is the share
+    /// contributed by multi-row prefill chunks).
+    pub fn mean_batch_seqs(&self) -> f64 {
+        let steps = self.batch_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.batch_seqs.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
     /// p50/p95/p99 of submission → admission, in ms (most recent window).
@@ -779,18 +825,6 @@ fn kv_worst_case(prompt_len: usize, n_new: usize) -> usize {
     prompt_len + n_new.saturating_sub(1)
 }
 
-fn kv_step(
-    model: &mut PackedModel,
-    token: u32,
-    pos: usize,
-    kv: &mut RequestKv,
-) -> std::result::Result<Vec<f32>, KvError> {
-    match kv {
-        RequestKv::Contig(caches) => model.try_decode_step(token, pos, caches),
-        RequestKv::Paged(seq) => model.decode_step_paged(token, pos, seq),
-    }
-}
-
 /// One in-flight request: its own KV state, RNG, and event stream; pinned
 /// to the replica slot it was admitted on.
 struct ActiveRequest {
@@ -927,6 +961,18 @@ fn worker_loop(
         newest: None,
     };
     let mut active: Vec<ActiveRequest> = Vec::new();
+    // Per-worker scratch arena: every batch step's intermediates live
+    // here, so the steady-state decode loop allocates nothing per token.
+    let mut scratch = Scratch::new();
+    // Round-bookkeeping buffers, reused across rounds for the same reason
+    // (the borrow-holding `steps` list itself is necessarily per-round).
+    // Each owner records (active index, prefill chunk end if prefilling,
+    // want_logits) at step-build time, so fan-out never re-derives the
+    // chunking decision.
+    let mut slots_in_play: Vec<usize> = Vec::new();
+    let mut owners: Vec<(usize, Option<usize>, bool)> = Vec::new();
+    let mut errs: Vec<Option<KvError>> = Vec::new();
+    let mut failed: Vec<usize> = Vec::new();
     let mut closed = false;
     loop {
         // ---- resume preempted requests into free batch slots ----
@@ -1128,7 +1174,13 @@ fn worker_loop(
             std::thread::sleep(Duration::from_millis(2));
             continue;
         }
-        // ---- one slice per active: a prefill chunk or one decoded token --
+        // ---- fused batch round: sweep + sample, then one batched forward
+        //      per replica slot, then fan results back out to tickets ----
+        //
+        // Phase 1: cancellation/preemption sweep and sampling. Every
+        // decode-ready request samples its next token from `last_logits`
+        // (finishing here if the budget or a stop token says so);
+        // survivors contribute one decode row to this round's batch.
         let mut i = 0;
         while i < active.len() {
             if active[i].cancelled.load(Ordering::Relaxed) {
@@ -1167,45 +1219,9 @@ fn worker_loop(
                 });
                 continue; // a.kv drops here — its blocks return to the pool
             }
-            let slot = active[i].slot;
-            let model = &mut pool.slots[slot].as_mut().unwrap().model;
             let a = &mut active[i];
             if a.prefill_pos < a.fed.len() {
-                let end = (a.prefill_pos + prefill_chunk).min(a.fed.len());
-                let mut kv_err = false;
-                for pos in a.prefill_pos..end {
-                    match kv_step(model, a.fed[pos], pos, &mut a.kv) {
-                        Ok(logits) => a.last_logits = logits,
-                        Err(_) => {
-                            kv_err = true;
-                            break;
-                        }
-                    }
-                }
-                if kv_err {
-                    let a = active.swap_remove(i);
-                    pool.release(a.slot);
-                    shared.active.lock().unwrap().remove(&a.id);
-                    finish(a, FinishReason::Failed, &metrics);
-                    continue;
-                }
-                a.prefill_pos = end;
-                if end == a.fed.len() {
-                    a.pos = end;
-                    if !a.prefilled_sent {
-                        a.prefilled_sent = true;
-                        let _ = a.events.send(Event::Prefilled { prompt_len: a.prompt_len });
-                    }
-                    if !a.registered && a.prompt_len > 0 {
-                        a.registered = true;
-                        if let (Some(kvp), RequestKv::Paged(seq)) =
-                            (kv_pool.as_ref(), &mut a.kv)
-                        {
-                            kvp.register_prefix(&a.fed[..a.prompt_len], seq);
-                        }
-                    }
-                }
-                i += 1;
+                i += 1; // prefilling: contributes a prompt chunk below
                 continue;
             }
             let next = sample_token(&a.last_logits, &a.sampling, &mut a.rng);
@@ -1225,19 +1241,95 @@ fn worker_loop(
                 // token left behind — to the pool.
                 finish(a, if stopped { FinishReason::Stop } else { FinishReason::Length }, &metrics);
             } else {
-                match kv_step(model, next, a.pos, &mut a.kv) {
-                    Ok(logits) => {
-                        a.last_logits = logits;
-                        a.pos += 1;
-                        i += 1;
+                i += 1;
+            }
+        }
+
+        // Phase 2: one fused batch step per replica slot. Prefill chunks
+        // are rows too — a chunk of M prompt tokens is an M-row GEMM
+        // instead of M GEMVs — so the whole active set advances with each
+        // packed weight column read once.
+        slots_in_play.clear();
+        slots_in_play.extend(active.iter().map(|a| a.slot));
+        slots_in_play.sort_unstable();
+        slots_in_play.dedup();
+        for gi in 0..slots_in_play.len() {
+            let slot_id = slots_in_play[gi];
+            owners.clear();
+            let mut steps: Vec<SeqStep<'_>> = Vec::new();
+            for (ai, a) in active.iter_mut().enumerate() {
+                if a.slot != slot_id {
+                    continue;
+                }
+                let ActiveRequest { fed, prefill_pos, pos, tokens, kv, .. } = a;
+                let (toks, start, chunk_end, want): (&[u32], usize, Option<usize>, bool) =
+                    if *prefill_pos < fed.len() {
+                        let end = (*prefill_pos + prefill_chunk).min(fed.len());
+                        (&fed[*prefill_pos..end], *prefill_pos, Some(end), end == fed.len())
+                    } else {
+                        // Decode row: the token sampled in phase 1.
+                        (&tokens[tokens.len() - 1..], *pos, None, true)
+                    };
+                let bkv = match kv {
+                    RequestKv::Contig(c) => BatchKv::Contig(&mut c[..]),
+                    RequestKv::Paged(s) => BatchKv::Paged(s),
+                };
+                owners.push((ai, chunk_end, want));
+                steps.push(SeqStep::new(toks, start, bkv, want));
+            }
+            if steps.is_empty() {
+                continue;
+            }
+            let rows: usize = steps.iter().map(|s| s.tokens.len()).sum();
+            let model = &mut pool.slots[slot_id].as_mut().unwrap().model;
+            model.decode_step_batch(&mut steps, &mut scratch);
+            metrics.record_batch(steps.len(), rows);
+            errs.clear();
+            errs.extend(steps.iter().map(|s| s.err.clone()));
+            drop(steps);
+            // Fan results back out to the tickets, driven by what was
+            // recorded at step-build time (never re-derived).
+            failed.clear();
+            for (k, &(ai, chunk_end, want)) in owners.iter().enumerate() {
+                if errs[k].is_some() {
+                    failed.push(ai);
+                    continue;
+                }
+                let a = &mut active[ai];
+                match chunk_end {
+                    Some(end) => {
+                        a.prefill_pos = end;
+                        if want {
+                            // This chunk completed the prompt.
+                            a.pos = end;
+                            if !a.prefilled_sent {
+                                a.prefilled_sent = true;
+                                let _ =
+                                    a.events.send(Event::Prefilled { prompt_len: a.prompt_len });
+                            }
+                            if !a.registered && a.prompt_len > 0 {
+                                a.registered = true;
+                                if let (Some(kvp), RequestKv::Paged(seq)) =
+                                    (kv_pool.as_ref(), &mut a.kv)
+                                {
+                                    kvp.register_prefix(&a.fed[..a.prompt_len], seq);
+                                }
+                            }
+                            a.last_logits.copy_from_slice(scratch.logits_row(k));
+                        }
                     }
-                    Err(_) => {
-                        let a = active.swap_remove(i);
-                        pool.release(a.slot);
-                        shared.active.lock().unwrap().remove(&a.id);
-                        finish(a, FinishReason::Failed, &metrics);
+                    None => {
+                        a.last_logits.copy_from_slice(scratch.logits_row(k));
+                        a.pos += 1;
                     }
                 }
+            }
+            failed.sort_unstable_by(|x, y| y.cmp(x));
+            for ai in failed.drain(..) {
+                let a = active.swap_remove(ai);
+                pool.release(a.slot);
+                shared.active.lock().unwrap().remove(&a.id);
+                finish(a, FinishReason::Failed, &metrics);
             }
         }
     }

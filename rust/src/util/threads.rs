@@ -4,9 +4,25 @@
 //! worker per chunk on std::thread::scope — the only parallel pattern the
 //! GEMM hot paths need (disjoint output rows).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Optional global cap on worker threads (0 = uncapped). Tests that count
+/// heap allocations set this to 1 so the kernels take the no-spawn fast
+/// path; serving deployments can use it to co-tenant workers.
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap [`num_threads`] at `cap` (0 restores the hardware default).
+pub fn set_thread_cap(cap: usize) {
+    THREAD_CAP.store(cap, Ordering::Relaxed);
+}
+
 /// Number of worker threads to use for data-parallel loops.
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    match THREAD_CAP.load(Ordering::Relaxed) {
+        0 => n,
+        cap => n.min(cap),
+    }
 }
 
 /// Split `out` into `n_chunks` near-equal contiguous chunks and call
@@ -31,6 +47,43 @@ where
         let mut idx = 0usize;
         while !rest.is_empty() {
             let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            scope.spawn(move || fref(idx, start, head));
+            start += take;
+            idx += 1;
+            rest = tail;
+        }
+    });
+}
+
+/// [`par_chunks_mut`], but every chunk boundary falls on a multiple of
+/// `granule` — the batched GEMM kernels use `granule = b` so one output
+/// column's `b` accumulators never straddle two threads. `out.len()` must
+/// be a multiple of `granule`.
+pub fn par_chunks_mut_granular<T: Send, F>(out: &mut [T], n_chunks: usize, granule: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let granule = granule.max(1);
+    debug_assert_eq!(n % granule, 0, "length must be a granule multiple");
+    let units = n / granule;
+    let n_chunks = n_chunks.clamp(1, units);
+    if n_chunks == 1 {
+        f(0, 0, out);
+        return;
+    }
+    let per = units.div_ceil(n_chunks) * granule;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut start = 0usize;
+        let mut idx = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
             let (head, tail) = rest.split_at_mut(take);
             let fref = &f;
             scope.spawn(move || fref(idx, start, head));
@@ -72,5 +125,34 @@ mod tests {
     fn empty_ok() {
         let mut v: Vec<u32> = vec![];
         par_chunks_mut(&mut v, 4, |_, _, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn granular_boundaries_respect_granule() {
+        // 7 granules of 3: any chunking must split on multiples of 3.
+        let mut v = vec![0usize; 21];
+        par_chunks_mut_granular(&mut v, 4, 3, |_, start, chunk| {
+            assert_eq!(start % 3, 0);
+            assert_eq!(chunk.len() % 3, 0);
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn thread_cap_limits_and_restores() {
+        // The cap is process-global and sibling tests in this binary run
+        // concurrently, so only use caps at or above any real core count —
+        // tests relying on cap = 1 live alone in tests/alloc_free.rs.
+        set_thread_cap(usize::MAX);
+        assert!(num_threads() >= 1, "huge cap must not zero the count");
+        set_thread_cap(1 << 20);
+        assert!(num_threads() <= 1 << 20);
+        set_thread_cap(0);
+        assert!(num_threads() >= 1, "cap 0 restores the hardware default");
     }
 }

@@ -1,0 +1,301 @@
+//! Integration tests for the weight-stationary batched decode path:
+//! batch-of-B fused steps must be bit-identical to per-sequence
+//! single-token decoding, across variants, batch sizes, prefill-chunk
+//! row counts, and contiguous/paged KV mixes — and the serving engine
+//! must produce identical greedy generations whether its worker batches
+//! one request or many.
+
+use std::sync::Arc;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
+use pquant::kvcache::{BlockPool, KvPoolOptions, PagedSeq, PrefixTag};
+use pquant::serve::{Engine, EngineOptions, GenRequest, ModelRegistry};
+use pquant::util::prop;
+use pquant::util::rng::Rng;
+
+fn nano_cfg(variant: Variant) -> ModelConfig {
+    ModelConfig {
+        name: format!("batch-{}", variant.name()),
+        variant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: if variant == Variant::PQuant { 16 } else { 0 },
+        n_experts: if variant == Variant::PQuant { 2 } else { 1 },
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+/// Sequential reference: logits of each sequence decoded one token at a
+/// time on its own contiguous caches.
+fn reference_logits(model: &mut PackedModel, seqs: &[Vec<u32>]) -> Vec<Vec<f32>> {
+    seqs.iter()
+        .map(|toks| {
+            let mut caches = model.new_caches(toks.len() + 1);
+            let mut logits = Vec::new();
+            for (pos, &t) in toks.iter().enumerate() {
+                logits = model.decode_step(t, pos, &mut caches);
+            }
+            logits
+        })
+        .collect()
+}
+
+#[test]
+fn batched_decode_matches_sequential_bitexactly_across_variants() {
+    for variant in [Variant::Fp16, Variant::BitNet, Variant::BitNet158, Variant::PQuant] {
+        let cfg = nano_cfg(variant);
+        let mut model = PackedModel::random(&cfg, 21);
+        let mut batched = PackedModel::random(&cfg, 21);
+        // 3 sequences of different lengths, decoded together step by step.
+        let seqs: Vec<Vec<u32>> =
+            vec![vec![1, 5, 9, 2, 7], vec![3, 3, 60, 11, 8], vec![40, 0, 2, 63, 30]];
+        let want = reference_logits(&mut model, &seqs);
+
+        let mut caches: Vec<Vec<KvCache>> =
+            (0..seqs.len()).map(|_| batched.new_caches(8)).collect();
+        let mut scratch = Scratch::new();
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); seqs.len()];
+        for pos in 0..5 {
+            let toks: Vec<u32> = seqs.iter().map(|s| s[pos]).collect();
+            let mut steps: Vec<SeqStep> = caches
+                .iter_mut()
+                .zip(&toks)
+                .map(|(c, t)| {
+                    SeqStep::new(std::slice::from_ref(t), pos, BatchKv::Contig(&mut c[..]), true)
+                })
+                .collect();
+            batched.decode_step_batch(&mut steps, &mut scratch);
+            for (si, step) in steps.iter().enumerate() {
+                assert!(step.err.is_none(), "{variant:?} seq {si} errored");
+            }
+            drop(steps);
+            for (si, g) in got.iter_mut().enumerate() {
+                *g = scratch.logits_row(si).to_vec();
+            }
+        }
+        for (si, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{variant:?} seq {si}: batched logits diverge");
+        }
+    }
+}
+
+#[test]
+fn prefill_chunk_rows_match_token_at_a_time_bitexactly() {
+    // A chunk of M prompt tokens fed as M rows of one SeqStep must produce
+    // the same final logits as M sequential decode_steps.
+    let cfg = nano_cfg(Variant::PQuant);
+    let mut reference = PackedModel::random(&cfg, 5);
+    let mut batched = PackedModel::random(&cfg, 5);
+    let prompt: Vec<u32> = vec![9, 1, 33, 7, 12, 40, 2];
+    let want = reference_logits(&mut reference, &[prompt.clone()]);
+
+    let mut caches = batched.new_caches(prompt.len() + 1);
+    let mut scratch = Scratch::new();
+    // Feed in two chunks: 4 rows then 3 rows (the second wants logits).
+    for (start, end) in [(0usize, 4usize), (4, 7)] {
+        let mut steps = [SeqStep::new(
+            &prompt[start..end],
+            start,
+            BatchKv::Contig(&mut caches[..]),
+            end == prompt.len(),
+        )];
+        batched.decode_step_batch(&mut steps, &mut scratch);
+        assert!(steps[0].err.is_none());
+    }
+    assert_eq!(scratch.logits_row(0), &want[0][..], "chunked prefill diverges");
+}
+
+#[test]
+fn mixed_contiguous_and_paged_rows_decode_bitexactly() {
+    prop::check(81, 8, |r: &mut Rng| {
+        let n_seqs = 2 + r.below(3);
+        let len = 3 + r.below(5);
+        let seqs: Vec<Vec<u32>> =
+            (0..n_seqs).map(|_| (0..len).map(|_| r.below(64) as u32).collect()).collect();
+        (n_seqs, len, seqs)
+    }, |(n_seqs, len, seqs)| {
+        let cfg = nano_cfg(Variant::PQuant);
+        let mut reference = PackedModel::random(&cfg, 9);
+        let mut batched = PackedModel::random(&cfg, 9);
+        let want = reference_logits(&mut reference, seqs);
+
+        let pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 128, block_size: 4 },
+            cfg.n_layers,
+            cfg.d_model,
+        ));
+        // Even-indexed sequences get paged KV, odd get contiguous.
+        let mut paged: Vec<Option<PagedSeq>> = (0..*n_seqs)
+            .map(|si| {
+                (si % 2 == 0).then(|| {
+                    let adm = pool.admit(&[], len + 1, PrefixTag::default()).unwrap();
+                    PagedSeq::new(&pool, adm)
+                })
+            })
+            .collect();
+        let mut contig: Vec<Vec<KvCache>> =
+            (0..*n_seqs).map(|_| batched.new_caches(len + 1)).collect();
+        let mut scratch = Scratch::new();
+        let mut got: Vec<Vec<f32>> = vec![Vec::new(); *n_seqs];
+        for pos in 0..*len {
+            let toks: Vec<u32> = seqs.iter().map(|s| s[pos]).collect();
+            let mut steps: Vec<SeqStep> = Vec::new();
+            for (si, (p, c)) in paged.iter_mut().zip(contig.iter_mut()).enumerate() {
+                let kv = match p {
+                    Some(seq) => BatchKv::Paged(seq),
+                    None => BatchKv::Contig(&mut c[..]),
+                };
+                steps.push(SeqStep::new(std::slice::from_ref(&toks[si]), pos, kv, true));
+            }
+            batched.decode_step_batch(&mut steps, &mut scratch);
+            for (si, step) in steps.iter().enumerate() {
+                if step.err.is_some() {
+                    return Err(format!("seq {si} errored at pos {pos}"));
+                }
+            }
+            drop(steps);
+            for (si, g) in got.iter_mut().enumerate() {
+                *g = scratch.logits_row(si).to_vec();
+            }
+        }
+        for (si, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            if g != w {
+                return Err(format!("seq {si}: mixed-layout batched logits diverge"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_of_one_matches_batch_of_many_bitexactly() {
+    let cfg = nano_cfg(Variant::PQuant);
+    let mut solo = PackedModel::random(&cfg, 31);
+    let mut many = PackedModel::random(&cfg, 31);
+    let seqs: Vec<Vec<u32>> = (0..4).map(|s| (0..6).map(|t| (s * 11 + t) as u32 % 64).collect()).collect();
+
+    // batch-of-1 fused steps per sequence
+    let mut scratch = Scratch::new();
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for toks in &seqs {
+        let mut caches = solo.new_caches(toks.len() + 1);
+        let mut last = Vec::new();
+        for (pos, t) in toks.iter().enumerate() {
+            let mut steps = [SeqStep::new(
+                std::slice::from_ref(t),
+                pos,
+                BatchKv::Contig(&mut caches[..]),
+                true,
+            )];
+            solo.decode_step_batch(&mut steps, &mut scratch);
+            assert!(steps[0].err.is_none());
+            drop(steps);
+            last = scratch.logits_row(0).to_vec();
+        }
+        want.push(last);
+    }
+
+    // batch-of-4 fused steps
+    let mut caches: Vec<Vec<KvCache>> = (0..seqs.len()).map(|_| many.new_caches(8)).collect();
+    let mut scratch = Scratch::new();
+    let mut got: Vec<Vec<f32>> = vec![Vec::new(); seqs.len()];
+    for pos in 0..6 {
+        let toks: Vec<u32> = seqs.iter().map(|s| s[pos]).collect();
+        let mut steps: Vec<SeqStep> = caches
+            .iter_mut()
+            .zip(&toks)
+            .map(|(c, t)| {
+                SeqStep::new(std::slice::from_ref(t), pos, BatchKv::Contig(&mut c[..]), true)
+            })
+            .collect();
+        many.decode_step_batch(&mut steps, &mut scratch);
+        drop(steps);
+        for (si, g) in got.iter_mut().enumerate() {
+            *g = scratch.logits_row(si).to_vec();
+        }
+    }
+    assert_eq!(got, want, "batch-of-1 vs batch-of-4 logits diverge");
+}
+
+#[test]
+fn kv_failure_of_one_row_does_not_poison_the_batch() {
+    let cfg = nano_cfg(Variant::PQuant);
+    let mut reference = PackedModel::random(&cfg, 13);
+    let mut batched = PackedModel::random(&cfg, 13);
+    let seqs: Vec<Vec<u32>> = vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]];
+    let want = reference_logits(&mut reference, &seqs);
+
+    // Sequence 0 gets a cache that overflows at pos 2; sequence 1 is fine.
+    let mut tiny = batched.new_caches(2);
+    let mut fine = batched.new_caches(8);
+    let mut scratch = Scratch::new();
+    let mut last1 = Vec::new();
+    let mut seq0_err_at = None;
+    for pos in 0..4 {
+        let toks = [seqs[0][pos], seqs[1][pos]];
+        let mut steps = vec![
+            SeqStep::new(&toks[0..1], pos, BatchKv::Contig(&mut tiny[..]), true),
+            SeqStep::new(&toks[1..2], pos, BatchKv::Contig(&mut fine[..]), true),
+        ];
+        batched.decode_step_batch(&mut steps, &mut scratch);
+        if steps[0].err.is_some() && seq0_err_at.is_none() {
+            seq0_err_at = Some(pos);
+        }
+        assert!(steps[1].err.is_none(), "healthy row must not fail");
+        drop(steps);
+        last1 = scratch.logits_row(1).to_vec();
+    }
+    assert_eq!(seq0_err_at, Some(2), "overflow must surface at capacity");
+    assert_eq!(last1, want[1], "survivor's logits must stay bit-exact");
+}
+
+// ---------------------------------------------------------------- engine
+
+#[test]
+fn concurrent_greedy_requests_are_bitexact_regardless_of_batching() {
+    let model = PackedModel::random(&nano_cfg(Variant::PQuant), 41);
+    let mut reference = model.clone();
+
+    let prompts: Vec<Vec<u32>> = (0..6)
+        .map(|s| (0..3 + s % 3).map(|t| ((s * 17 + t * 5) % 64) as u32).collect())
+        .collect();
+    let n_new = 8;
+    let want: Vec<Vec<u32>> =
+        prompts.iter().map(|p| reference.generate(p, n_new)).collect();
+
+    for max_batch in [1usize, 6] {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register("m", model.clone(), None);
+        let engine = Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), max_batch, ..EngineOptions::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = prompts
+            .iter()
+            .map(|p| engine.submit_blocking(GenRequest::greedy(p.clone(), n_new)).unwrap())
+            .collect();
+        let got: Vec<Vec<u32>> = tickets.into_iter().map(|t| t.wait().tokens).collect();
+        assert_eq!(
+            got, want,
+            "engine (max_batch={max_batch}) must match unbatched generate()"
+        );
+        let metrics = engine.shutdown();
+        assert!(
+            metrics.batch_steps.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "fused batch steps must be recorded"
+        );
+        if max_batch > 1 {
+            assert!(
+                metrics.mean_batch_rows() > 0.0,
+                "occupancy stats must be populated"
+            );
+        }
+    }
+}

@@ -81,6 +81,8 @@ fn prop_paged_block_attention_bit_identical_to_contiguous() {
         |&(d, heads, seq_len, block_size, variant, seed)| {
             let mut block_a = PackedBlock::random(variant, d, heads, 2 * d, 8, 2, seed);
             let mut block_b = block_a.clone();
+            let mut rope = pquant::infer::RopeTable::default();
+            rope.ensure(d / heads / 2, seq_len);
             let mut cache = KvCache::new(seq_len, d);
             let pool = Arc::new(BlockPool::new(
                 KvPoolOptions { n_blocks: 64, block_size },
@@ -94,11 +96,11 @@ fn prop_paged_block_attention_bit_identical_to_contiguous() {
             for pos in 0..seq_len {
                 let x = Rng::new(seed ^ (pos as u64 + 1)).normal_vec(d);
                 let ya = block_a
-                    .try_forward(&x, pos, &mut cache)
+                    .try_forward(&x, pos, &mut cache, &rope)
                     .map_err(|e| format!("contig: {e}"))?;
                 let mut layer = seq.layer(0);
                 let yb = block_b
-                    .try_forward(&x, pos, &mut layer)
+                    .try_forward(&x, pos, &mut layer, &rope)
                     .map_err(|e| format!("paged: {e}"))?;
                 if ya != yb {
                     return Err(format!("outputs diverge at pos {pos}"));
