@@ -1,0 +1,93 @@
+//! Speculative decode throughput: spec-vs-plain tokens/sec on a small
+//! packed target with (a) a half-depth/half-width draft and (b) a perfect
+//! self-draft (the acceptance upper bound). Records acceptance rate, mean
+//! accepted tokens per verify step, and the spec/plain throughput ratio
+//! into `results/bench/spec_decode.json`. Run with
+//! `cargo bench --bench spec_decode`.
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::serve::SpecDecoder;
+use pquant::util::bench::Bencher;
+use pquant::util::json::{num, obj};
+
+fn cfg(name: &str, d_model: usize, n_layers: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 2048,
+        d_model,
+        n_layers,
+        n_heads: 4,
+        d_ff: 2 * d_model + d_model / 2,
+        r: d_model / 8,
+        n_experts: 2,
+        seq_len: 256,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn main() {
+    let target_cfg = cfg("spec-bench-target", 256, 2);
+    let mut target = PackedModel::random(&target_cfg, 7);
+    let mut b = Bencher::quick();
+    let prompt: Vec<u32> = (0..16).map(|i| (i * 37) % 2048).collect();
+    let n_new = 48usize;
+    let k = 4usize;
+
+    // Plain greedy baseline.
+    let plain_stats = b.bench("generate (plain greedy)", || {
+        target.generate(&prompt, n_new).len()
+    });
+    let plain_tps = n_new as f64 / plain_stats.median();
+
+    // Half-size draft: the realistic deployment shape (cheap proposals,
+    // imperfect acceptance).
+    let mut small_draft = PackedModel::random(&cfg("spec-bench-draft", 128, 1), 9);
+    let mut dec_small = SpecDecoder::new(k);
+    let small_stats = b.bench("spec decode (half-size draft)", || {
+        dec_small.generate(&mut target, &mut small_draft, &prompt, n_new, None).len()
+    });
+    let small_tps = n_new as f64 / small_stats.median();
+
+    // Self-draft: acceptance = 100%, the amortization ceiling.
+    let mut self_draft = target.clone();
+    let mut dec_self = SpecDecoder::new(k);
+    let self_stats = b.bench("spec decode (self draft)  ", || {
+        dec_self.generate(&mut target, &mut self_draft, &prompt, n_new, None).len()
+    });
+    let self_tps = n_new as f64 / self_stats.median();
+
+    println!(
+        "plain: {plain_tps:.1} tok/s | half-size draft: {small_tps:.1} tok/s \
+         ({:.0}% accept, {:.2} accepted/verify) | self draft: {self_tps:.1} tok/s \
+         ({:.0}% accept, {:.2} tokens/verify)",
+        dec_small.stats.acceptance_rate() * 100.0,
+        dec_small.stats.accepted_per_verify(),
+        dec_self.stats.acceptance_rate() * 100.0,
+        dec_self.stats.tokens_per_verify(),
+    );
+    println!(
+        "spec-vs-plain tokens/sec ratio: half-size {:.2}x, self {:.2}x",
+        small_tps / plain_tps,
+        self_tps / plain_tps
+    );
+
+    let payload = obj(vec![
+        ("plain_tokens_per_sec", num(plain_tps)),
+        ("spec_tokens_per_sec", num(small_tps)),
+        ("spec_self_tokens_per_sec", num(self_tps)),
+        ("acceptance_rate", num(dec_small.stats.acceptance_rate())),
+        ("acceptance_rate_self", num(dec_self.stats.acceptance_rate())),
+        ("accepted_per_verify", num(dec_small.stats.accepted_per_verify())),
+        ("tokens_per_verify", num(dec_small.stats.tokens_per_verify())),
+        ("tokens_per_verify_self", num(dec_self.stats.tokens_per_verify())),
+        ("spec_vs_plain_ratio", num(small_tps / plain_tps)),
+        ("spec_self_vs_plain_ratio", num(self_tps / plain_tps)),
+    ]);
+    std::fs::create_dir_all("results/bench").ok();
+    std::fs::write("results/bench/spec_decode.json", payload.to_string_pretty()).ok();
+    println!("[bench] wrote results/bench/spec_decode.json");
+    b.write_json("spec_decode_raw");
+}

@@ -258,9 +258,10 @@ impl KvStore for KvLayerRef<'_> {
 }
 
 /// One sequence's contribution to a fused batch step: its next tokens
-/// (one for decode, a prompt chunk for prefill), the position of the
-/// first, and its KV state. `err` is set by the step if this sequence's
-/// cache failed — the other sequences in the batch are unaffected.
+/// (one for decode, a prompt chunk for prefill, a speculative verify run),
+/// the position of the first, and its KV state. `err` is set by the step
+/// if this sequence's cache failed — the other sequences in the batch are
+/// unaffected.
 pub struct SeqStep<'a> {
     pub tokens: &'a [u32],
     pub pos: usize,
@@ -268,12 +269,33 @@ pub struct SeqStep<'a> {
     /// Compute logits for the last row (decode rows and prompt-completing
     /// prefill chunks want them; interior prefill chunks skip the lm_head).
     pub want_logits: bool,
+    /// Compute logits for *every* row — the speculative verify path, where
+    /// each of the K+1 run rows is checked against the draft's proposal.
+    pub all_logits: bool,
     pub err: Option<KvError>,
 }
 
 impl<'a> SeqStep<'a> {
     pub fn new(tokens: &'a [u32], pos: usize, kv: BatchKv<'a>, want_logits: bool) -> SeqStep<'a> {
-        SeqStep { tokens, pos, kv, want_logits, err: None }
+        SeqStep { tokens, pos, kv, want_logits, all_logits: false, err: None }
+    }
+
+    /// A step whose every row wants logits (speculative verification).
+    pub fn with_all_logits(tokens: &'a [u32], pos: usize, kv: BatchKv<'a>) -> SeqStep<'a> {
+        SeqStep { tokens, pos, kv, want_logits: true, all_logits: true, err: None }
+    }
+
+    /// Logits rows this step asks the lm_head for.
+    pub(crate) fn wanted_rows(&self) -> usize {
+        if self.err.is_some() || self.tokens.is_empty() {
+            0
+        } else if self.all_logits {
+            self.tokens.len()
+        } else if self.want_logits {
+            1
+        } else {
+            0
+        }
     }
 }
 
@@ -308,12 +330,15 @@ pub struct Scratch {
     /// Per-sequence attention score buffers (pow2 growth), so sequences'
     /// attention can run on separate threads within one batch step.
     pub(crate) scores_pool: Vec<Vec<f32>>,
-    /// Gathered final-norm rows for the batched lm_head, and which step
-    /// each came from.
+    /// Gathered final-norm rows for the batched lm_head.
     pub(crate) head_rows: Vec<f32>,
-    pub(crate) head_idx: Vec<usize>,
-    /// Logits rows [n_steps, vocab]; rows of steps with `want_logits`.
+    /// Logits rows [wanted, vocab], packed in step order; per-step slot
+    /// table below. A `want_logits` step owns one row (its last), an
+    /// `all_logits` step owns one per token row.
     pub(crate) logits: Vec<f32>,
+    /// First logits slot of each step, and how many it owns.
+    pub(crate) step_logit0: Vec<usize>,
+    pub(crate) step_logit_n: Vec<usize>,
     pub(crate) acts: QuantActsBatch,
     pub(crate) acts_ctx: QuantActsBatch,
     pub(crate) acts_h: QuantActsBatch,
@@ -365,16 +390,32 @@ impl Scratch {
             *g = true;
             self.scores_pool.resize_with(n_steps, Vec::new);
         }
-        grow(&mut self.head_rows, n_steps * d, g);
-        grow(&mut self.head_idx, n_steps, g);
-        grow(&mut self.logits, n_steps * cfg.vocab, g);
+        // Worst case every row of every step wants logits (speculative
+        // verify runs), so the head buffers are sized by rows, not steps.
+        grow(&mut self.head_rows, b * d, g);
+        grow(&mut self.logits, b * cfg.vocab, g);
+        grow(&mut self.step_logit0, n_steps, g);
+        grow(&mut self.step_logit_n, n_steps, g);
         self.vocab = cfg.vocab;
     }
 
-    /// Logits row of step `si` from the last batch step (valid only for
-    /// steps that wanted logits and did not error).
+    /// Logits row of step `si` from the last batch step — the *last*
+    /// wanted row (the only one for decode/prefill steps; the final run
+    /// row for an `all_logits` verify step). Valid only for steps that
+    /// wanted logits and did not error.
     pub fn logits_row(&self, si: usize) -> &[f32] {
-        &self.logits[si * self.vocab..(si + 1) * self.vocab]
+        let n = self.step_logit_n[si];
+        debug_assert!(n > 0, "step {si} computed no logits");
+        let slot = self.step_logit0[si] + n - 1;
+        &self.logits[slot * self.vocab..(slot + 1) * self.vocab]
+    }
+
+    /// Logits of row `j` of step `si` (speculative verification reads all
+    /// K+1 rows of its run).
+    pub fn logits_row_at(&self, si: usize, j: usize) -> &[f32] {
+        debug_assert!(j < self.step_logit_n[si], "row {j} of step {si} has no logits");
+        let slot = self.step_logit0[si] + j;
+        &self.logits[slot * self.vocab..(slot + 1) * self.vocab]
     }
 
     /// Did any buffer reallocate since the last call? Steady-state decode

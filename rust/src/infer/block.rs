@@ -52,6 +52,13 @@ impl KvCache {
     pub fn reset(&mut self) {
         self.len = 0;
     }
+
+    /// Roll back to `len` tokens (speculative decode rejected a drafted
+    /// suffix); rows beyond it are overwritten by later pushes. Growing is
+    /// a no-op.
+    pub fn truncate(&mut self, len: usize) {
+        self.len = self.len.min(len);
+    }
 }
 
 impl KvStore for KvCache {

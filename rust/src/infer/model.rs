@@ -245,20 +245,27 @@ impl PackedModel {
             block.try_forward_batch(l, &mut xs[..b * d], steps, rope, scratch);
         }
 
-        // Final norm + batched lm_head for the rows that want logits.
+        // Final norm + batched lm_head for the rows that want logits: one
+        // row per decode/prefill-completing step, every run row for a
+        // speculative verify step (`all_logits`). Slots are packed in step
+        // order; the per-step table lets callers read them back by
+        // (step, row).
         let mut logits = std::mem::take(&mut scratch.logits);
         let mut w = 0usize;
         let mut r0 = 0usize;
         for (si, step) in steps.iter().enumerate() {
             let rows = step.tokens.len();
-            if step.want_logits && step.err.is_none() && rows > 0 {
-                let r = r0 + rows - 1;
+            let wanted = step.wanted_rows();
+            scratch.step_logit0[si] = w;
+            scratch.step_logit_n[si] = wanted;
+            for j in 0..wanted {
+                // `Last` wants the single final row; `All` wants each row.
+                let r = r0 + rows - wanted + j;
                 rmsnorm_into(
                     &xs[r * d..(r + 1) * d],
                     &self.final_norm,
                     &mut scratch.head_rows[w * d..(w + 1) * d],
                 );
-                scratch.head_idx[w] = si;
                 w += 1;
             }
             r0 += rows;
@@ -275,8 +282,7 @@ impl PackedModel {
                 yf,
             );
             for wi in 0..w {
-                let si = scratch.head_idx[wi];
-                let row = &mut logits[si * vocab..(si + 1) * vocab];
+                let row = &mut logits[wi * vocab..(wi + 1) * vocab];
                 for (j, out) in row.iter_mut().enumerate() {
                     *out = yf[j * w + wi];
                 }

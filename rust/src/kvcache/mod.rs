@@ -15,7 +15,11 @@
 //! * [`PagedSeq`] — one sequence's per-layer page tables mapping token
 //!   positions to blocks.  Blocks are either owned (writable) or shared
 //!   (frozen [`SharedBlock`]s behind `Arc`); writing into a shared block
-//!   copies it first (copy-on-write on divergence).
+//!   copies it first (copy-on-write on divergence).  Sequence length is
+//!   **non-monotonic** under speculative decoding: [`PagedSeq::truncate`]
+//!   rolls a rejected suffix back, returning whole blocks to the
+//!   sequence's allowance with their buffers recycled through the pool
+//!   (allocation-free in steady state).
 //! * **Prefix sharing** — completed prefills register their block-aligned
 //!   prompt prefixes in a hash over prompt tokens
 //!   ([`BlockPool::register_prefix`]); later admissions with a matching

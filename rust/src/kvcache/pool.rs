@@ -577,6 +577,16 @@ impl BlockPool {
         }
     }
 
+    /// Evict every share-map entry whose blocks no live sequence holds,
+    /// returning their budget charges to `available`. Admission already
+    /// does this under pressure; this is the explicit housekeeping hook
+    /// (and the leak probe tests use: after a full drain plus eviction,
+    /// `in_use` must be zero — anything left is a leaked request block).
+    pub fn evict_unused(&self) {
+        let mut st = self.state.lock().unwrap();
+        self.evict_unused_locked(&mut st);
+    }
+
     /// Evict every entry whose blocks have no users outside the map.
     fn evict_unused_locked(&self, st: &mut PoolState) {
         let keys: Vec<Vec<u32>> = {
@@ -634,6 +644,14 @@ impl BlockPool {
         for b in bufs {
             Self::push_recycle(&mut st, self.n_blocks, b);
         }
+    }
+
+    /// Recycle a single buffer without building a `Vec` — the speculative
+    /// rollback path truncates a few blocks per round and must not
+    /// allocate to return them.
+    pub(crate) fn recycle_one(&self, buf: KvBuf) {
+        let mut st = self.state.lock().unwrap();
+        Self::push_recycle(&mut st, self.n_blocks, buf);
     }
 
     fn push_recycle(st: &mut PoolState, cap: usize, mut b: KvBuf) {

@@ -163,6 +163,46 @@ impl PagedSeq {
         debug_assert!(self.reservation.charged > 0, "charge transfer without charge");
         self.reservation.charged = self.reservation.charged.saturating_sub(1);
     }
+
+    /// Roll the sequence back to `new_len` tokens (speculative decode
+    /// rejected a drafted suffix). Whole owned blocks beyond the boundary
+    /// return to the sequence's allowance (their buffers recycle into the
+    /// pool, so a later re-push reuses them without allocating); a partial
+    /// boundary block keeps its buffer with `filled` reduced. Shared pages
+    /// only shrink their per-sequence `filled` view — the frozen block
+    /// itself is immutable. Growing is not supported (no-op).
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len >= self.len() {
+            return;
+        }
+        let bs = self.block_size;
+        let keep = new_len.div_ceil(bs);
+        let rem = new_len % bs;
+        let (pool, layers, allow) = (&self.pool, &mut self.layers, &mut self.allow);
+        for layer in layers.iter_mut() {
+            while layer.blocks.len() > keep {
+                match layer.blocks.pop() {
+                    Some(Page::Owned(buf)) => {
+                        *allow += 1;
+                        pool.recycle_one(buf);
+                    }
+                    // Shared pages were never drawn from the allowance;
+                    // dropping the handle is enough (the map or other
+                    // sequences keep the block alive).
+                    Some(Page::Shared { .. }) | None => {}
+                }
+            }
+            if rem > 0 {
+                if let Some(p) = layer.blocks.last_mut() {
+                    match p {
+                        Page::Owned(b) => b.filled = b.filled.min(rem),
+                        Page::Shared { filled, .. } => *filled = (*filled).min(rem),
+                    }
+                }
+            }
+            layer.len = new_len;
+        }
+    }
 }
 
 impl Drop for PagedSeq {
@@ -312,6 +352,47 @@ mod tests {
             seq.layer(0).push(&row, &row),
             Err(KvError::OutOfBlocks { .. })
         ));
+    }
+
+    #[test]
+    fn truncate_rolls_back_and_repush_reuses_blocks() {
+        let pool = tiny_pool();
+        let adm = pool.admit(&[], 12, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&pool, adm);
+        let row = |i: usize| [i as f32, -(i as f32)];
+        for i in 0..11 {
+            let r = row(i);
+            seq.layer(0).push(&r, &r).unwrap();
+        }
+        assert_eq!(seq.blocks_in_use(), 3);
+        // Roll back into the middle of block 1: block 2 returns whole, the
+        // boundary block keeps its buffer with filled reduced.
+        seq.truncate(6);
+        assert_eq!(seq.len(), 6);
+        assert_eq!(seq.blocks_in_use(), 2);
+        let layer = seq.layer(0);
+        let rows: usize = layer.segments().iter().map(|(k, _)| k.len() / 2).sum();
+        assert_eq!(rows, 6);
+        drop(layer);
+        // Re-pushing resumes at the truncation boundary and can refill the
+        // whole original reservation (the allowance got the blocks back).
+        for i in 6..12 {
+            let r = row(i);
+            seq.layer(0).push(&r, &r).unwrap();
+        }
+        assert_eq!(seq.len(), 12);
+        let layer = seq.layer(0);
+        let flat: Vec<f32> = layer
+            .segments()
+            .iter()
+            .flat_map(|(k, _)| k.iter().copied())
+            .collect();
+        let want: Vec<f32> = (0..12).flat_map(|i| [i as f32, -(i as f32)]).collect();
+        assert_eq!(flat, want, "rows after rollback must be position-ordered");
+        // Growing via truncate is a no-op.
+        drop(layer);
+        seq.truncate(40);
+        assert_eq!(seq.len(), 12);
     }
 
     #[test]

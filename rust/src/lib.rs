@@ -38,7 +38,12 @@
 //!   [`serve::ModelRegistry`] (lease-counted replicas, warm hot-swap);
 //!   workers advance the whole active set with one fused
 //!   weight-stationary batch step per round (decode rows + prefill-chunk
-//!   rows), bit-exact with unbatched decoding
+//!   rows + speculative verify runs), bit-exact with unbatched decoding;
+//!   [`serve::spec`] adds end-to-end speculative decoding — a
+//!   registry-leased draft proposes K tokens, the target verifies all
+//!   K+1 positions as rows of the same fused step, rejected suffixes
+//!   roll their KV pages back, and greedy output stays bit-identical to
+//!   [`infer::PackedModel::generate`]
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics

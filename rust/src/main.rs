@@ -88,12 +88,17 @@ USAGE:
   repro train --config C [--steps N] [--lr F] [--checkpoint P] [--export P.pqm] [--eval-every N] [--single-phase]
   repro eval --config C --checkpoint P [--items N]
   repro eval --model P.pqm [--tokens N]
+              [--draft-model D.pqm] [--spec-k K]    speculative agreement + acceptance report
   repro export <config> <out.pqm> [--checkpoint P] [--tokenizer] [--random SEED]
   repro inspect <path.pqm>
   repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N]
               [--batch N] [--workers N] [--queue N] [--prefill-chunk N]
               [--temperature F] [--top-k N] [--seed N]
               [--kv-blocks N] [--kv-block-size N]   (0 kv-blocks: unmetered legacy caches)
+              [--draft-model D.pqm] [--spec-k K]    speculative decode: the draft proposes K
+                                                    tokens per round (same vocab required);
+                                                    the target verifies them in one fused
+                                                    batch step — greedy output is unchanged
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -179,6 +184,49 @@ fn cmd_eval(args: &Args) -> Result<()> {
             "packed perplexity ({}, {} tokens max): {ppl:.3}",
             model.cfg.name, max_tokens
         );
+        // Speculative report: greedy agreement with plain decode (must be
+        // 100% — speculation is an optimization, not an approximation),
+        // acceptance rate, and the wall-clock ratio on real prompts.
+        if let Some(dpath) = args.flags.get("draft-model") {
+            use std::time::Instant;
+            let mut draft = pquant::artifact::load_pqm(dpath)?.model;
+            if draft.cfg.vocab != model.cfg.vocab {
+                bail!(
+                    "draft vocab {} incompatible with target vocab {}",
+                    draft.cfg.vocab,
+                    model.cfg.vocab
+                );
+            }
+            let k = args.flag("spec-k", 4usize)?;
+            let (prompt_len, n_new, n_prompts) = (16usize, 32usize, 8usize);
+            let mut dec = pquant::serve::SpecDecoder::new(k);
+            let mut agree = 0usize;
+            let (mut spec_wall, mut plain_wall) = (0f64, 0f64);
+            for w in 0..n_prompts {
+                let start = w * prompt_len;
+                if start + prompt_len > dataset.valid.len() {
+                    break;
+                }
+                let prompt = &dataset.valid[start..start + prompt_len];
+                let t0 = Instant::now();
+                let spec_out = dec.generate(&mut model, &mut draft, prompt, n_new, None);
+                spec_wall += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let plain = model.generate(prompt, n_new);
+                plain_wall += t0.elapsed().as_secs_f64();
+                if spec_out == plain {
+                    agree += 1;
+                }
+            }
+            println!(
+                "speculative (draft {}, k={k}): agreement {agree}/{n_prompts} | acceptance \
+                 {:.0}% | {:.2} tokens/verify | speedup (plain wall / spec wall) {:.2}x",
+                draft.cfg.name,
+                dec.stats.acceptance_rate() * 100.0,
+                dec.stats.tokens_per_verify(),
+                plain_wall / spec_wall.max(1e-9),
+            );
+        }
         println!("(zero-shot task suite needs the PJRT fwd entry: use --config/--checkpoint)");
         return Ok(());
     }
@@ -237,7 +285,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.flag("queue", 64usize)?,
         prefill_chunk: args.flag("prefill-chunk", 16usize)?,
         kv,
+        draft_kv: None, // draft pools mirror the target pool geometry
     };
+    let spec_k = args.flag("spec-k", 4usize)?;
     let temperature = args.flag("temperature", 0.0f32)?;
     let top_k = args.flag("top-k", 0usize)?;
     let seed = args.flag("seed", 0u64)?;
@@ -258,6 +308,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         registry.register("serve", pquant::infer::PackedModel::from_state(&art, &state)?, None);
     }
+    // Speculative decoding: register the draft beside the target; every
+    // request then carries the spec config (vocab compatibility is
+    // enforced at submit time with a typed error).
+    let speculative = if let Some(path) = args.flags.get("draft-model") {
+        registry.load_pqm("draft", path)?;
+        true
+    } else {
+        false
+    };
     for m in registry.info() {
         println!(
             "serving {:12} gen {} {:10} {:.2}M params, {:.1} MiB packed",
@@ -280,7 +339,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: seed.wrapping_add(id as u64),
             stop_tokens: vec![],
         };
-        let req = GenRequest::sampled(prompt, new_tokens, sampling);
+        let mut req = GenRequest::sampled(prompt, new_tokens, sampling);
+        if speculative {
+            req = req.with_spec("draft", spec_k);
+        }
         // submit_blocking absorbs QueueFull/KvExhausted backpressure (the
         // load generator outpacing the queue or the KV budget is expected;
         // both drain as in-flight requests finish); terminal errors stop
@@ -289,6 +351,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(t) => tickets.push(t),
             Err(e @ SubmitError::KvTooLarge(_)) => {
                 bail!("{e}: raise --kv-blocks or lower --new-tokens")
+            }
+            Err(e @ SubmitError::DraftRejected(..)) => {
+                bail!("{e}: --draft-model must share the target's vocabulary")
             }
             Err(e) => bail!("submit failed: {e}"),
         }
@@ -344,6 +409,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             metrics.preempted.load(std::sync::atomic::Ordering::Relaxed),
             kv.unused_tail_returned,
         );
+    }
+    if speculative {
+        println!(
+            "speculative: acceptance {:.0}% | {:.2} tokens/verify ({:.2} accepted) | {} verify \
+             steps, {} draft steps | degraded {}",
+            metrics.acceptance_rate() * 100.0,
+            metrics.spec_tokens_per_verify(),
+            metrics.accepted_per_verify(),
+            metrics.verify_steps.load(std::sync::atomic::Ordering::Relaxed),
+            metrics.draft_steps.load(std::sync::atomic::Ordering::Relaxed),
+            metrics.spec_degraded.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        for kv in metrics.draft_kv() {
+            println!(
+                "draft kv pool: {} x {}-token blocks, peak utilization {:.0}%",
+                kv.n_blocks,
+                kv.block_size,
+                kv.peak_utilization * 100.0
+            );
+        }
     }
     Ok(())
 }

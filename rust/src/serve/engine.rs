@@ -57,6 +57,7 @@ use crate::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
 use crate::kvcache::{Admitted, BlockPool, KvError, KvPoolOptions, KvPoolStats, PagedSeq, PrefixTag};
 use crate::util::rng::Rng;
 
+use super::spec::{self, SpecParams};
 use super::{Lease, ModelRegistry};
 
 /// Per-request sampling policy. The default is greedy argmax, which
@@ -100,20 +101,38 @@ pub struct GenRequest {
     /// submission may preempt an in-flight request of *strictly lower*
     /// priority; equal-priority requests never preempt each other.
     pub priority: i32,
+    /// Speculative decoding: draft-propose `k` tokens per round, verify
+    /// them against the target in one fused batch step. `None` (the
+    /// default) decodes one token per round. Greedy output is identical
+    /// either way — speculation only changes throughput.
+    pub spec: Option<SpecParams>,
 }
 
 impl GenRequest {
     /// Greedy request — today's default serving behavior.
     pub fn greedy(prompt: Vec<u32>, n_new: usize) -> GenRequest {
-        GenRequest { prompt, n_new, sampling: SamplingParams::greedy(), priority: 0 }
+        GenRequest {
+            prompt,
+            n_new,
+            sampling: SamplingParams::greedy(),
+            priority: 0,
+            spec: None,
+        }
     }
 
     pub fn sampled(prompt: Vec<u32>, n_new: usize, sampling: SamplingParams) -> GenRequest {
-        GenRequest { prompt, n_new, sampling, priority: 0 }
+        GenRequest { prompt, n_new, sampling, priority: 0, spec: None }
     }
 
     pub fn with_priority(mut self, priority: i32) -> GenRequest {
         self.priority = priority;
+        self
+    }
+
+    /// Decode speculatively against the registered draft model `draft`,
+    /// proposing up to `k` tokens per verify round.
+    pub fn with_spec(mut self, draft: impl Into<String>, k: usize) -> GenRequest {
+        self.spec = Some(SpecParams::new(draft, k));
         self
     }
 }
@@ -159,6 +178,31 @@ pub enum Event {
     Done(GenStats),
 }
 
+/// Why a speculative request's draft model cannot be used — a typed
+/// submit-time rejection, never a worker panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DraftError {
+    /// No model registered under the requested draft name.
+    UnknownModel(String),
+    /// The draft's vocabulary differs from the target's; verify logits
+    /// would index the wrong rows. (Depth and width are free to differ —
+    /// drafts page KV from their own per-geometry pool.)
+    VocabMismatch { draft: usize, target: usize },
+}
+
+impl std::fmt::Display for DraftError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DraftError::UnknownModel(name) => {
+                write!(f, "no draft model registered under {name:?}")
+            }
+            DraftError::VocabMismatch { draft, target } => {
+                write!(f, "draft vocab {draft} incompatible with target vocab {target}")
+            }
+        }
+    }
+}
+
 /// Why [`Engine::submit`] rejected a request. The request rides back in
 /// the error so backpressured callers can retry without cloning.
 #[derive(Debug, Clone)]
@@ -174,6 +218,10 @@ pub enum SubmitError {
     /// amount of draining (or retrying) can ever admit it. Shrink the
     /// prompt/budget or grow the pool (`--kv-blocks`).
     KvTooLarge(GenRequest),
+    /// The requested draft model is missing or vocab-incompatible with
+    /// the target — terminal for this request as submitted (drop the
+    /// [`GenRequest::spec`] or register a compatible draft).
+    DraftRejected(GenRequest, DraftError),
     /// The engine is shutting down; no new work is accepted.
     ShuttingDown(GenRequest),
 }
@@ -192,6 +240,7 @@ impl SubmitError {
             SubmitError::QueueFull(r)
             | SubmitError::KvExhausted(r)
             | SubmitError::KvTooLarge(r)
+            | SubmitError::DraftRejected(r, _)
             | SubmitError::ShuttingDown(r) => r,
         }
     }
@@ -205,6 +254,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::KvTooLarge(_) => {
                 write!(f, "request exceeds the whole KV block pool")
             }
+            SubmitError::DraftRejected(_, e) => write!(f, "speculative draft rejected: {e}"),
             SubmitError::ShuttingDown(_) => write!(f, "engine shutting down"),
         }
     }
@@ -320,15 +370,34 @@ pub struct ServeMetrics {
     pub peak_active: AtomicUsize,
     /// Fused batch steps executed (one per replica slot per round).
     pub batch_steps: AtomicUsize,
-    /// Total rows (decode tokens + prefill-chunk tokens) over batch steps.
+    /// Total rows (decode tokens + prefill-chunk tokens + verify-run
+    /// tokens) over batch steps.
     pub batch_rows: AtomicUsize,
     /// Total sequences over batch steps.
     pub batch_seqs: AtomicUsize,
+    /// Requests that ran at least one speculative round.
+    pub spec_requests: AtomicUsize,
+    /// Draft-model fused decode steps executed.
+    pub draft_steps: AtomicUsize,
+    /// Speculative verify runs executed (one per spec request per round).
+    pub verify_steps: AtomicUsize,
+    /// Draft tokens proposed across verify runs.
+    pub draft_tokens: AtomicUsize,
+    /// Proposed draft tokens the target accepted.
+    pub accepted_tokens: AtomicUsize,
+    /// Tokens emitted out of verify runs (accepted + correction/bonus).
+    pub spec_tokens: AtomicUsize,
+    /// Speculative requests degraded to plain decode (draft removed,
+    /// vocab-incompatible after a hot-swap, or draft KV exhausted).
+    pub spec_degraded: AtomicUsize,
     queue_wait_ms: Mutex<SampleRing>,
     ttft_ms: Mutex<SampleRing>,
     batch_occ: Mutex<SampleRing>,
     /// The workers' KV pool (None on the legacy contiguous path).
     pool: Option<Arc<BlockPool>>,
+    /// Draft-model KV pools, created lazily per draft geometry
+    /// (layers × width) — a draft never shares the target's page tables.
+    draft_pools: Mutex<HashMap<(usize, usize), Arc<BlockPool>>>,
 }
 
 impl ServeMetrics {
@@ -387,6 +456,55 @@ impl ServeMetrics {
     pub fn kv(&self) -> Option<KvPoolStats> {
         self.pool.as_ref().map(|p| p.stats())
     }
+
+    /// Stats of every draft-model KV pool (one per draft geometry that
+    /// has served a speculative request).
+    pub fn draft_kv(&self) -> Vec<KvPoolStats> {
+        self.draft_pools.lock().unwrap().values().map(|p| p.stats()).collect()
+    }
+
+    /// The per-geometry draft pool, created on first use.
+    pub(crate) fn draft_pool(
+        &self,
+        n_layers: usize,
+        d: usize,
+        opts: KvPoolOptions,
+    ) -> Arc<BlockPool> {
+        self.draft_pools
+            .lock()
+            .unwrap()
+            .entry((n_layers, d))
+            .or_insert_with(|| Arc::new(BlockPool::new(opts, n_layers, d)))
+            .clone()
+    }
+
+    /// Draft-token acceptance rate across verify runs (0 before any ran).
+    pub fn acceptance_rate(&self) -> f64 {
+        let proposed = self.draft_tokens.load(Ordering::Relaxed);
+        if proposed == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens.load(Ordering::Relaxed) as f64 / proposed as f64
+    }
+
+    /// Mean accepted draft tokens per verify step.
+    pub fn accepted_per_verify(&self) -> f64 {
+        let steps = self.verify_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// Mean tokens emitted per verify step (accepted + the free
+    /// correction/bonus token — a plain decode step emits exactly 1).
+    pub fn spec_tokens_per_verify(&self) -> f64 {
+        let steps = self.verify_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.spec_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+    }
 }
 
 /// Engine tuning knobs.
@@ -409,6 +527,12 @@ pub struct EngineOptions {
     /// in under pressure. `None` falls back to per-request contiguous
     /// caches with no budget (the seed behavior).
     pub kv: Option<KvPoolOptions>,
+    /// KV geometry for *draft* pools (speculative decoding); pools are
+    /// created lazily per draft (layers × width). `None` (the default)
+    /// reuses the target pool geometry from [`EngineOptions::kv`]. Only
+    /// consulted in pool mode — without a target pool, drafts use
+    /// contiguous caches.
+    pub draft_kv: Option<KvPoolOptions>,
 }
 
 impl Default for EngineOptions {
@@ -420,6 +544,7 @@ impl Default for EngineOptions {
             queue_depth: 64,
             prefill_chunk: 16,
             kv: Some(KvPoolOptions::default()),
+            draft_kv: None,
         }
     }
 }
@@ -458,6 +583,13 @@ struct Preempted {
     n_new: usize,
     sampling: SamplingParams,
     priority: i32,
+    /// Speculative config; the draft state itself is rebuilt on resume
+    /// (its KV blocks were freed with the target's at preemption).
+    spec: Option<SpecParams>,
+    /// Whether the request was already counted in
+    /// [`ServeMetrics::spec_requests`] — a preempt/resume cycle must not
+    /// count it twice.
+    spec_counted: bool,
     rng: Rng,
     /// Weight identity the emitted tokens were decoded under; resume on a
     /// different generation would silently splice two models' outputs.
@@ -539,9 +671,30 @@ impl Engine {
     /// sibling of [`SubmitError::QueueFull`]) and enters the bounded
     /// queue.
     pub fn submit(&self, req: GenRequest) -> std::result::Result<Ticket, SubmitError> {
+        let mut req = req;
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::ShuttingDown(req));
         };
+        // Speculative requests validate their draft at submit time: a
+        // missing or vocab-incompatible draft is a typed rejection here,
+        // never a worker panic. (`k == 0` proposes nothing — normalize to
+        // plain decode.)
+        if req.spec.as_ref().is_some_and(|s| s.k == 0) {
+            req.spec = None;
+        }
+        if let Some(sp) = req.spec.as_ref() {
+            let Some(draft) = self.registry.acquire(&sp.draft) else {
+                let e = DraftError::UnknownModel(sp.draft.clone());
+                return Err(SubmitError::DraftRejected(req, e));
+            };
+            if let Some(target) = self.registry.acquire(&self.model) {
+                let (dv, tv) = (draft.model.cfg.vocab, target.model.cfg.vocab);
+                if dv != tv {
+                    let e = DraftError::VocabMismatch { draft: dv, target: tv };
+                    return Err(SubmitError::DraftRejected(req, e));
+                }
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (etx, erx) = channel();
         let cancelled = Arc::new(AtomicBool::new(false));
@@ -818,6 +971,89 @@ enum RequestKv {
     Paged(PagedSeq),
 }
 
+impl RequestKv {
+    /// Roll back to `len` positions — the speculative-rejection path.
+    /// Paged sequences return whole freed blocks to their allowance.
+    fn truncate(&mut self, len: usize) {
+        match self {
+            RequestKv::Contig(c) => {
+                for layer in c.iter_mut() {
+                    layer.truncate(len);
+                }
+            }
+            RequestKv::Paged(s) => s.truncate(len),
+        }
+    }
+}
+
+/// Worker-side state of one speculative request: the pinned draft replica
+/// slot, the draft's own KV, and the reusable round buffers.
+struct SpecState {
+    params: SpecParams,
+    /// Pinned slot in the worker's per-name draft [`ReplicaPool`]
+    /// (`None` until the first speculative round).
+    slot: Option<usize>,
+    /// Draft KV (paged from the per-geometry draft pool, or contiguous
+    /// in pool-less mode). `None` until initialized.
+    kv: Option<RequestKv>,
+    /// Positions fed into the draft.
+    fed: usize,
+    /// Draft tokens proposed this round (clamped to the remaining
+    /// budget).
+    k_eff: usize,
+    /// This round's verify run `[pending, d_1..d_k_eff]` (reused).
+    run: Vec<u32>,
+    /// Draft catch-up staging (reused).
+    ctx: Vec<u32>,
+    /// Sampled mode: densified proposal rows `q_1..q_k` ([k, vocab]) and
+    /// the target-distribution scratch row.
+    q_rows: Vec<f32>,
+    p_row: Vec<f32>,
+    /// Counted once in [`ServeMetrics::spec_requests`].
+    counted: bool,
+}
+
+impl SpecState {
+    fn new(params: SpecParams) -> SpecState {
+        SpecState {
+            params,
+            slot: None,
+            kv: None,
+            fed: 0,
+            k_eff: 0,
+            run: Vec::new(),
+            ctx: Vec::new(),
+            q_rows: Vec::new(),
+            p_row: Vec::new(),
+            counted: false,
+        }
+    }
+}
+
+/// Release the draft replica slot a departing request pinned (finish,
+/// cancel, preemption, failure, degrade — every exit from the active set).
+fn release_spec(draft_pools: &mut HashMap<String, ReplicaPool>, spec: &Option<SpecState>) {
+    if let Some(sp) = spec {
+        if let Some(slot) = sp.slot {
+            if let Some(p) = draft_pools.get_mut(&sp.params.draft) {
+                p.release(slot);
+            }
+        }
+    }
+}
+
+/// What one batch row-set means to its owning request (recorded at
+/// step-build time so fan-out never re-derives the plan).
+#[derive(Clone, Copy)]
+enum RowPlan {
+    /// Prompt chunk ending at `end`; `completes` marks the prompt done.
+    Prefill { end: usize, completes: bool },
+    /// Single sampled-token decode row.
+    Decode,
+    /// Speculative verify run (`[pending, drafts…]`, logits on every row).
+    Spec,
+}
+
 /// Worst-case KV positions a request can occupy: every prompt token plus
 /// every decoded token except the last sampled one, which is emitted but
 /// never fed back through the model.
@@ -844,6 +1080,11 @@ struct ActiveRequest {
     prefill_pos: usize,
     pos: usize,
     kv: RequestKv,
+    /// `tokens.last()` has been emitted but not yet fed to the target
+    /// (sampled in phase 1, or left pending by a verify fan-out).
+    pending: bool,
+    /// Speculative state (None for plain requests, and after a degrade).
+    spec: Option<SpecState>,
     /// Prompt prefix registered for sharing (or not applicable).
     registered: bool,
     prefilled_sent: bool,
@@ -954,31 +1195,40 @@ fn worker_loop(
 ) {
     let max_batch = opts.max_batch.max(1);
     let prefill_chunk = opts.prefill_chunk.max(1);
+    // Draft pools page KV with their own geometry; default to the target
+    // pool's knobs when the engine is in pool mode.
+    let draft_kv_opts = opts.draft_kv.or(opts.kv);
     let mut pool = ReplicaPool {
-        registry,
+        registry: registry.clone(),
         name: opts.model.clone(),
         slots: Vec::new(),
         newest: None,
     };
+    // Per draft-model name, a worker-local replica pool — speculative
+    // requests pin the draft slot they initialized on, so a draft
+    // hot-swap is picked up by *new* speculation while in-flight streams
+    // drain losslessly on the old lease.
+    let mut draft_pools: HashMap<String, ReplicaPool> = HashMap::new();
     let mut active: Vec<ActiveRequest> = Vec::new();
     // Per-worker scratch arena: every batch step's intermediates live
     // here, so the steady-state decode loop allocates nothing per token.
     let mut scratch = Scratch::new();
     // Round-bookkeeping buffers, reused across rounds for the same reason
     // (the borrow-holding `steps` list itself is necessarily per-round).
-    // Each owner records (active index, prefill chunk end if prefilling,
-    // want_logits) at step-build time, so fan-out never re-derives the
-    // chunking decision.
+    // Each owner records (active index, row plan) at step-build time, so
+    // fan-out never re-derives the chunking/speculation decision.
     let mut slots_in_play: Vec<usize> = Vec::new();
-    let mut owners: Vec<(usize, Option<usize>, bool)> = Vec::new();
+    let mut owners: Vec<(usize, RowPlan)> = Vec::new();
+    let mut draft_owners: Vec<usize> = Vec::new();
+    let mut spec_groups: Vec<(String, usize)> = Vec::new();
     let mut errs: Vec<Option<KvError>> = Vec::new();
-    let mut failed: Vec<usize> = Vec::new();
+    let mut done: Vec<(usize, FinishReason)> = Vec::new();
     let mut closed = false;
     loop {
         // ---- resume preempted requests into free batch slots ----
         while active.len() < max_batch {
             let Some(kvp) = kv_pool.as_ref() else { break };
-            let Some(p) = shared.requeue.lock().unwrap().pop_front() else { break };
+            let Some(mut p) = shared.requeue.lock().unwrap().pop_front() else { break };
             if p.cancelled.load(Ordering::Relaxed) {
                 finish_preempted(p, FinishReason::Cancelled, &metrics);
                 continue;
@@ -1022,6 +1272,13 @@ fn worker_loop(
             };
             let seq = PagedSeq::new(kvp, admitted);
             let prefill_pos = seq.len();
+            // Fresh draft state on resume (the old one's KV was freed at
+            // preemption), but the spec_requests count carries over.
+            let spec_state = p.spec.take().map(|params| {
+                let mut s = SpecState::new(params);
+                s.counted = p.spec_counted;
+                s
+            });
             let preempt = Arc::new(AtomicBool::new(false));
             shared
                 .active
@@ -1041,6 +1298,8 @@ fn worker_loop(
                 prefill_pos,
                 pos: 0,
                 kv: RequestKv::Paged(seq),
+                pending: false, // resume re-feeds every emitted token
+                spec: spec_state,
                 registered: true, // resume never re-registers prefixes
                 prefilled_sent: p.prefilled_sent,
                 preempt,
@@ -1148,6 +1407,8 @@ fn worker_loop(
                 prefill_pos,
                 pos: 0,
                 kv,
+                pending: false,
+                spec: req.spec.map(SpecState::new),
                 registered: false,
                 prefilled_sent,
                 preempt,
@@ -1167,6 +1428,9 @@ fn worker_loop(
         }
         if active.is_empty() {
             pool.drop_idle_stale();
+            for dp in draft_pools.values_mut() {
+                dp.drop_idle_stale();
+            }
             if closed && shared.requeue.lock().unwrap().is_empty() {
                 return;
             }
@@ -1186,7 +1450,11 @@ fn worker_loop(
             if active[i].cancelled.load(Ordering::Relaxed) {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
+                release_spec(&mut draft_pools, &a.spec);
                 shared.active.lock().unwrap().remove(&a.id);
+                // Dropping `a` frees its target KV *and* any draft KV the
+                // speculative state held — a cancel mid-verify leaks
+                // nothing.
                 finish(a, FinishReason::Cancelled, &metrics);
                 continue;
             }
@@ -1195,12 +1463,15 @@ fn worker_loop(
             {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
+                release_spec(&mut draft_pools, &a.spec);
                 shared.active.lock().unwrap().remove(&a.id);
                 metrics.preempted.fetch_add(1, Ordering::Relaxed);
                 let tag = match &a.kv {
                     RequestKv::Paged(seq) => seq.tag(),
                     RequestKv::Contig(_) => PrefixTag::default(),
                 };
+                let spec_params = a.spec.as_ref().map(|s| s.params.clone());
+                let spec_counted = a.spec.as_ref().is_some_and(|s| s.counted);
                 shared.requeue.lock().unwrap().push_back(Preempted {
                     id: a.id,
                     prompt: a.fed[..a.prompt_len].to_vec(),
@@ -1208,6 +1479,8 @@ fn worker_loop(
                     n_new: a.n_new,
                     sampling: a.sampling,
                     priority: a.priority,
+                    spec: spec_params,
+                    spec_counted,
                     rng: a.rng,
                     tag,
                     prefilled_sent: a.prefilled_sent,
@@ -1217,15 +1490,23 @@ fn worker_loop(
                     events: a.events,
                     cancelled: a.cancelled,
                 });
-                continue; // a.kv drops here — its blocks return to the pool
+                continue; // a.kv (and any draft KV) drops here — its
+                          // blocks return to the pools
             }
             let a = &mut active[i];
             if a.prefill_pos < a.fed.len() {
                 i += 1; // prefilling: contributes a prompt chunk below
                 continue;
             }
+            if a.pending {
+                // A speculative verify emitted this token last round; it
+                // is still waiting to be fed — nothing to sample.
+                i += 1;
+                continue;
+            }
             let next = sample_token(&a.last_logits, &a.sampling, &mut a.rng);
             a.tokens.push(next);
+            a.pending = true;
             if a.first_token.is_none() {
                 a.first_token = Some(a.enqueued.elapsed());
             }
@@ -1235,6 +1516,7 @@ fn worker_loop(
             if stopped || a.tokens.len() >= a.n_new {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
+                release_spec(&mut draft_pools, &a.spec);
                 shared.active.lock().unwrap().remove(&a.id);
                 // Dropping the request's PagedSeq returns every block it
                 // held — including the reserved-but-unused tail a stop
@@ -1245,10 +1527,185 @@ fn worker_loop(
             }
         }
 
+        // Phase 1.5: speculative draft proposals. Each spec-configured
+        // decode-ready request lazily initializes its draft state (pin a
+        // draft replica slot, admit draft KV from the per-geometry pool),
+        // then the draft models run one fused step at a time: a catch-up
+        // step whose last row yields q_1, then single-row steps for the
+        // remaining proposals. Every failure mode degrades the one
+        // request to plain decode — never the worker.
+        spec_groups.clear();
+        for a in active.iter_mut() {
+            if a.spec.is_none() || a.prefill_pos < a.fed.len() || !a.pending {
+                continue;
+            }
+            let vocab = a.last_logits.len();
+            let ActiveRequest { spec, fed, tokens, pos, n_new, prompt_len, sampling, .. } = a;
+            let sp = spec.as_mut().unwrap();
+            let mut degrade = false;
+            if sp.slot.is_none() {
+                let dpool =
+                    draft_pools.entry(sp.params.draft.clone()).or_insert_with(|| ReplicaPool {
+                        registry: registry.clone(),
+                        name: sp.params.draft.clone(),
+                        slots: Vec::new(),
+                        newest: None,
+                    });
+                match dpool.current_slot() {
+                    Some(slot) => {
+                        // A draft hot-swap may have changed the vocabulary
+                        // since submit-time validation; degrade rather
+                        // than index the wrong logits rows.
+                        let s = dpool.slots[slot].as_mut().unwrap();
+                        if s.model.cfg.vocab == vocab {
+                            s.inflight += 1;
+                            sp.slot = Some(slot);
+                        } else {
+                            degrade = true;
+                        }
+                    }
+                    None => degrade = true, // draft removed from registry
+                }
+            }
+            if !degrade && sp.kv.is_none() {
+                let dpool = draft_pools.get_mut(&sp.params.draft).unwrap();
+                let dmodel = &dpool.slots[sp.slot.unwrap()].as_ref().unwrap().model;
+                // Worst case the draft ever feeds: the whole context plus
+                // one full run of proposals.
+                let total = fed.len() + *n_new + sp.params.k;
+                match (kv_pool.as_ref(), draft_kv_opts) {
+                    (Some(_), Some(kvo)) => {
+                        let dp =
+                            metrics.draft_pool(dmodel.cfg.n_layers, dmodel.cfg.d_model, kvo);
+                        match dp.admit(&[], total, PrefixTag::default()) {
+                            Ok(adm) => {
+                                sp.kv = Some(RequestKv::Paged(PagedSeq::new(&dp, adm)));
+                            }
+                            // KvExhausted during draft expansion: the
+                            // request keeps decoding plain.
+                            Err(KvError::OutOfBlocks { .. })
+                            | Err(KvError::CacheOverflow { .. }) => degrade = true,
+                        }
+                    }
+                    _ => sp.kv = Some(RequestKv::Contig(dmodel.new_caches(total))),
+                }
+                if !degrade {
+                    sp.fed = 0;
+                    if !sp.counted {
+                        sp.counted = true;
+                        metrics.spec_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            if degrade {
+                release_spec(&mut draft_pools, spec);
+                *spec = None;
+                metrics.spec_degraded.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // Plan this round's run: catch the draft up through the
+            // pending token, propose up to k (clamped so the run never
+            // overruns the budget or the target's KV reservation).
+            let sp = spec.as_mut().unwrap();
+            let remaining = *n_new - tokens.len(); // >= 1, else finished
+            sp.k_eff = sp.params.k.min(remaining - 1);
+            if sampling.temperature > 0.0 && sp.q_rows.len() < sp.params.k * vocab {
+                sp.q_rows.resize(sp.params.k * vocab, 0.0);
+            }
+            sp.run.clear();
+            sp.run.push(*tokens.last().unwrap());
+            sp.ctx.clear();
+            for i in sp.fed..*pos + 1 {
+                sp.ctx.push(if i < fed.len() { fed[i] } else { tokens[i - *prompt_len] });
+            }
+            if sp.k_eff > 0 {
+                let slot = sp.slot.unwrap();
+                if !spec_groups.iter().any(|(n, s)| *s == slot && *n == sp.params.draft) {
+                    spec_groups.push((sp.params.draft.clone(), slot));
+                }
+            }
+        }
+        for gi in 0..spec_groups.len() {
+            let (name, slot) = spec_groups[gi].clone();
+            let max_k = active
+                .iter()
+                .filter_map(|a| a.spec.as_ref())
+                .filter(|sp| sp.slot == Some(slot) && sp.params.draft == name)
+                .map(|sp| sp.k_eff)
+                .max()
+                .unwrap_or(0);
+            for j in 0..max_k {
+                draft_owners.clear();
+                let mut dsteps: Vec<SeqStep<'_>> = Vec::new();
+                for (ai, a) in active.iter_mut().enumerate() {
+                    if a.prefill_pos < a.fed.len() || !a.pending {
+                        continue;
+                    }
+                    let Some(sp) = a.spec.as_mut() else { continue };
+                    if sp.slot != Some(slot)
+                        || sp.params.draft != name
+                        || sp.k_eff <= j
+                        || sp.kv.is_none()
+                    {
+                        continue;
+                    }
+                    let SpecState { ctx, run, kv, fed: sfed, .. } = sp;
+                    let toks: &[u32] = if j == 0 { &ctx[..] } else { &run[j..j + 1] };
+                    let bkv = match kv.as_mut().unwrap() {
+                        RequestKv::Contig(c) => BatchKv::Contig(&mut c[..]),
+                        RequestKv::Paged(s) => BatchKv::Paged(s),
+                    };
+                    draft_owners.push(ai);
+                    dsteps.push(SeqStep::new(toks, *sfed, bkv, true));
+                }
+                if dsteps.is_empty() {
+                    break;
+                }
+                let dmodel = &mut draft_pools.get_mut(&name).unwrap().slots[slot]
+                    .as_mut()
+                    .unwrap()
+                    .model;
+                dmodel.decode_step_batch(&mut dsteps, &mut scratch);
+                metrics.draft_steps.fetch_add(1, Ordering::Relaxed);
+                errs.clear();
+                errs.extend(dsteps.iter().map(|s| s.err.clone()));
+                drop(dsteps);
+                for (si, &ai) in draft_owners.iter().enumerate() {
+                    let a = &mut active[ai];
+                    if errs[si].is_some() {
+                        // Draft KV dried up mid-expansion: this request
+                        // degrades to plain decode (its pending token
+                        // still feeds through a normal row below) and the
+                        // draft's blocks return to their pool right here.
+                        release_spec(&mut draft_pools, &a.spec);
+                        a.spec = None;
+                        metrics.spec_degraded.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    let vocab = a.last_logits.len();
+                    let ActiveRequest { spec, sampling, rng, .. } = a;
+                    let sp = spec.as_mut().unwrap();
+                    sp.fed += if j == 0 { sp.ctx.len() } else { 1 };
+                    let next = if sampling.temperature <= 0.0 {
+                        argmax(scratch.logits_row(si)) as u32
+                    } else {
+                        spec::propose_sampled(
+                            scratch.logits_row(si),
+                            sampling,
+                            &mut sp.q_rows[j * vocab..(j + 1) * vocab],
+                            rng,
+                        )
+                    };
+                    sp.run.push(next);
+                }
+            }
+        }
+
         // Phase 2: one fused batch step per replica slot. Prefill chunks
-        // are rows too — a chunk of M prompt tokens is an M-row GEMM
-        // instead of M GEMVs — so the whole active set advances with each
-        // packed weight column read once.
+        // and speculative verify runs are rows too — a chunk of M prompt
+        // tokens is an M-row GEMM instead of M GEMVs, and a K-token draft
+        // run verifies as K+1 rows with per-row logits — so the whole
+        // active set advances with each packed weight column read once.
         slots_in_play.clear();
         slots_in_play.extend(active.iter().map(|a| a.slot));
         slots_in_play.sort_unstable();
@@ -1261,21 +1718,31 @@ fn worker_loop(
                 if a.slot != slot_id {
                     continue;
                 }
-                let ActiveRequest { fed, prefill_pos, pos, tokens, kv, .. } = a;
-                let (toks, start, chunk_end, want): (&[u32], usize, Option<usize>, bool) =
-                    if *prefill_pos < fed.len() {
-                        let end = (*prefill_pos + prefill_chunk).min(fed.len());
-                        (&fed[*prefill_pos..end], *prefill_pos, Some(end), end == fed.len())
-                    } else {
-                        // Decode row: the token sampled in phase 1.
-                        (&tokens[tokens.len() - 1..], *pos, None, true)
-                    };
+                let ActiveRequest { fed, prefill_pos, pos, tokens, kv, spec, .. } = a;
                 let bkv = match kv {
                     RequestKv::Contig(c) => BatchKv::Contig(&mut c[..]),
                     RequestKv::Paged(s) => BatchKv::Paged(s),
                 };
-                owners.push((ai, chunk_end, want));
-                steps.push(SeqStep::new(toks, start, bkv, want));
+                if *prefill_pos < fed.len() {
+                    let end = (*prefill_pos + prefill_chunk).min(fed.len());
+                    owners.push((ai, RowPlan::Prefill { end, completes: end == fed.len() }));
+                    steps.push(SeqStep::new(
+                        &fed[*prefill_pos..end],
+                        *prefill_pos,
+                        bkv,
+                        end == fed.len(),
+                    ));
+                } else if let Some(sp) = spec.as_ref() {
+                    // Verify run: pending token + proposals, logits on
+                    // every row.
+                    owners.push((ai, RowPlan::Spec));
+                    steps.push(SeqStep::with_all_logits(&sp.run[..], *pos, bkv));
+                } else {
+                    // Decode row: the token sampled in phase 1 (or left
+                    // pending by the last verify fan-out).
+                    owners.push((ai, RowPlan::Decode));
+                    steps.push(SeqStep::new(&tokens[tokens.len() - 1..], *pos, bkv, true));
+                }
             }
             if steps.is_empty() {
                 continue;
@@ -1288,18 +1755,20 @@ fn worker_loop(
             errs.extend(steps.iter().map(|s| s.err.clone()));
             drop(steps);
             // Fan results back out to the tickets, driven by what was
-            // recorded at step-build time (never re-derived).
-            failed.clear();
-            for (k, &(ai, chunk_end, want)) in owners.iter().enumerate() {
+            // recorded at step-build time (never re-derived). Requests
+            // that finish here are collected and removed after the loop —
+            // `owners` indexes `active`, so no mid-loop swap_remove.
+            done.clear();
+            for (k, &(ai, plan)) in owners.iter().enumerate() {
                 if errs[k].is_some() {
-                    failed.push(ai);
+                    done.push((ai, FinishReason::Failed));
                     continue;
                 }
-                let a = &mut active[ai];
-                match chunk_end {
-                    Some(end) => {
+                match plan {
+                    RowPlan::Prefill { end, completes } => {
+                        let a = &mut active[ai];
                         a.prefill_pos = end;
-                        if want {
+                        if completes {
                             // This chunk completed the prompt.
                             a.pos = end;
                             if !a.prefilled_sent {
@@ -1318,18 +1787,109 @@ fn worker_loop(
                             a.last_logits.copy_from_slice(scratch.logits_row(k));
                         }
                     }
-                    None => {
+                    RowPlan::Decode => {
+                        let a = &mut active[ai];
                         a.last_logits.copy_from_slice(scratch.logits_row(k));
                         a.pos += 1;
+                        a.pending = false;
+                    }
+                    RowPlan::Spec => {
+                        // Acceptance scan over the run's per-row logits:
+                        // greedy accepts a draft iff it equals the target
+                        // argmax (so output is bit-identical to plain
+                        // decode); sampled mode runs accept/resample off
+                        // the request's seeded RNG. The first divergence
+                        // (or the bonus position) emits the target's own
+                        // token and ends the round.
+                        let ActiveRequest {
+                            spec,
+                            sampling,
+                            rng,
+                            tokens,
+                            events,
+                            n_new,
+                            pos,
+                            kv,
+                            pending,
+                            last_logits,
+                            ..
+                        } = &mut active[ai];
+                        let vocab = last_logits.len();
+                        let greedy = sampling.temperature <= 0.0;
+                        let sp = spec.as_mut().unwrap();
+                        let m = sp.run.len() - 1;
+                        let mut accepted = 0usize;
+                        let mut finished: Option<FinishReason> = None;
+                        for i in 0..sp.run.len() {
+                            let row = scratch.logits_row_at(k, i);
+                            let (tok, acc) = if greedy {
+                                let t = argmax(row) as u32;
+                                (t, i < m && t == sp.run[i + 1])
+                            } else if i < m {
+                                let q = &sp.q_rows[i * vocab..(i + 1) * vocab];
+                                match spec::accept_draft(
+                                    row,
+                                    sampling,
+                                    q,
+                                    sp.run[i + 1],
+                                    &mut sp.p_row,
+                                    rng,
+                                ) {
+                                    spec::DraftDraw::Accepted => (sp.run[i + 1], true),
+                                    spec::DraftDraw::Rejected(t) => (t, false),
+                                }
+                            } else {
+                                (spec::sample_dense(row, sampling, &mut sp.p_row, rng), false)
+                            };
+                            tokens.push(tok);
+                            metrics.tokens_out.fetch_add(1, Ordering::Relaxed);
+                            metrics.spec_tokens.fetch_add(1, Ordering::Relaxed);
+                            let _ = events.send(Event::Token(tok));
+                            if acc {
+                                accepted += 1;
+                            }
+                            if sampling.stop_tokens.contains(&tok) {
+                                finished = Some(FinishReason::Stop);
+                                break;
+                            }
+                            if tokens.len() >= *n_new {
+                                finished = Some(FinishReason::Length);
+                                break;
+                            }
+                            if !acc {
+                                break;
+                            }
+                        }
+                        metrics.verify_steps.fetch_add(1, Ordering::Relaxed);
+                        metrics.draft_tokens.fetch_add(m, Ordering::Relaxed);
+                        metrics.accepted_tokens.fetch_add(accepted, Ordering::Relaxed);
+                        match finished {
+                            Some(reason) => done.push((ai, reason)),
+                            None => {
+                                // Rollback: rejected-suffix positions
+                                // leave both KVs; the final emitted token
+                                // is pending for the next run.
+                                let new_pos = *pos + 1 + accepted;
+                                kv.truncate(new_pos);
+                                *pos = new_pos;
+                                let dlen = sp.fed.min(new_pos);
+                                if let Some(dkv) = sp.kv.as_mut() {
+                                    dkv.truncate(dlen);
+                                }
+                                sp.fed = dlen;
+                                *pending = true;
+                            }
+                        }
                     }
                 }
             }
-            failed.sort_unstable_by(|x, y| y.cmp(x));
-            for ai in failed.drain(..) {
+            done.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+            for (ai, reason) in done.drain(..) {
                 let a = active.swap_remove(ai);
                 pool.release(a.slot);
+                release_spec(&mut draft_pools, &a.spec);
                 shared.active.lock().unwrap().remove(&a.id);
-                finish(a, FinishReason::Failed, &metrics);
+                finish(a, reason, &metrics);
             }
         }
     }

@@ -18,6 +18,13 @@
 //!   * requests carry [`SamplingParams`] — greedy by default (bit-exact
 //!     with [`PackedModel::generate`]), or seeded temperature / top-k —
 //!     plus stop tokens
+//!   * requests may decode **speculatively** ([`GenRequest::spec`]): a
+//!     registry-leased draft replica proposes K tokens per round and the
+//!     target verifies all K+1 positions as rows of the same fused batch
+//!     step ([`spec`]) — greedy output stays bit-identical, rejected
+//!     suffixes roll back their KV pages, and [`ServeMetrics`] reports
+//!     acceptance rate / draft + verify step counts / net tokens per
+//!     verify
 //!   * workers interleave chunked prefill with decode slices, so a long
 //!     prompt never stalls the active set; [`ServeMetrics`] records
 //!     per-request queue-wait and time-to-first-token percentiles
@@ -27,12 +34,14 @@
 
 pub mod engine;
 pub mod registry;
+pub mod spec;
 
 pub use engine::{
-    Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, Percentiles,
+    DraftError, Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, Percentiles,
     SamplingParams, ServeMetrics, SubmitError, Ticket,
 };
 pub use registry::{Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
+pub use spec::{SpecDecoder, SpecParams, SpecStats};
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;

@@ -1,0 +1,589 @@
+//! Speculative decoding: a cheap draft model proposes K tokens, the
+//! target verifies all K+1 positions in **one** weight-stationary fused
+//! batch step.
+//!
+//! With 1-bit packed weights decode is memory-bound on packed-plane reads
+//! (the Appendix A regime), which is exactly the cost speculation
+//! amortizes: the verify run is K+1 rows of a single
+//! [`SeqStep`] through
+//! [`PackedModel::decode_step_batch`], so the target reads each weight
+//! column once for the whole run instead of once per token.
+//!
+//! Semantics:
+//! * **Greedy** (`temperature <= 0`): a draft token is accepted iff it
+//!   equals the target argmax at its position, and the first divergent
+//!   position emits the target argmax instead.  Emitted tokens are
+//!   therefore *bit-identical* to [`PackedModel::generate`] — speculation
+//!   changes throughput, never output (property-tested in
+//!   `tests/integration_spec.rs`).
+//! * **Seeded sampling**: standard accept/resample — draft token `d ~ q`
+//!   is accepted with probability `min(1, p(d)/q(d))`; a rejection draws
+//!   the replacement from `norm(max(p - q, 0))`.  The emitted stream is
+//!   distributed exactly as target-only sampling, and all randomness comes
+//!   from the request's seeded [`Rng`], so runs are deterministic per
+//!   (prompt, params, seed) regardless of batching.
+//! * **Rollback**: the target feeds the whole run before acceptance is
+//!   known, so rejected-suffix KV positions are truncated afterwards
+//!   ([`PagedSeq::truncate`] returns whole blocks to the sequence's
+//!   allowance; [`KvCache::truncate`] rewinds the write cursor).  Sequence
+//!   length is non-monotonic under speculation — the KV layer, not the
+//!   caller, owns making that safe.
+//!
+//! The serving engine integrates all of this into its fused round (see
+//! `serve/engine.rs`: draft replicas are registry-leased per request,
+//! draft KV pages from per-geometry pools, and verify runs share the batch
+//! plan with plain decode rows and prefill chunks).  [`SpecDecoder`] is
+//! the direct single-sequence driver — the reference implementation used
+//! by `benches/spec_decode.rs`, `tests/alloc_free.rs`, and `repro eval
+//! --draft-model`.
+
+use std::sync::Arc;
+
+use crate::infer::model::argmax;
+use crate::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
+use crate::kvcache::{BlockPool, KvError, PagedSeq, PrefixTag};
+use crate::util::rng::Rng;
+
+use super::engine::SamplingParams;
+
+/// Per-request speculative-decoding configuration, carried by
+/// [`GenRequest`](super::GenRequest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecParams {
+    /// Registry name of the draft model. Validated at submit time: the
+    /// draft must exist and share the target's vocabulary (its depth and
+    /// width are free — drafts page KV from their own per-geometry pool).
+    pub draft: String,
+    /// Max draft tokens proposed per verify round (the run is `k + 1`
+    /// rows). Clamped to the remaining budget each round.
+    pub k: usize,
+}
+
+impl SpecParams {
+    pub fn new(draft: impl Into<String>, k: usize) -> SpecParams {
+        SpecParams { draft: draft.into(), k }
+    }
+}
+
+/// Cumulative speculative-decoding counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecStats {
+    /// Draft tokens proposed across all verify runs.
+    pub proposed: usize,
+    /// Proposed tokens the target accepted.
+    pub accepted: usize,
+    /// Verify runs executed.
+    pub verify_steps: usize,
+    /// Draft-model fused decode steps executed.
+    pub draft_steps: usize,
+    /// Tokens emitted out of verify runs (accepted + correction/bonus).
+    pub emitted: usize,
+}
+
+impl SpecStats {
+    /// `accepted / proposed` (0 when nothing was proposed).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Mean emitted tokens per verify step — the net speedup knob (a
+    /// plain decode step emits exactly 1).
+    pub fn tokens_per_verify(&self) -> f64 {
+        if self.verify_steps == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.verify_steps as f64
+        }
+    }
+
+    /// Mean *accepted* draft tokens per verify step.
+    pub fn accepted_per_verify(&self) -> f64 {
+        if self.verify_steps == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.verify_steps as f64
+        }
+    }
+}
+
+// ------------------------------------------------------- sampled acceptance
+
+/// Outcome of checking one drafted token against the target distribution.
+pub(crate) enum DraftDraw {
+    Accepted,
+    /// Rejected; the replacement token drawn from `norm(max(p - q, 0))`.
+    Rejected(u32),
+}
+
+/// Dense truncated-softmax distribution of `logits` under `p`
+/// (temperature + top-k), written into `out` (`[vocab]`, zero outside the
+/// candidate set). Candidate selection and the f64 softmax mirror the
+/// engine's plain sampler, so speculation truncates exactly the
+/// distribution plain sampling draws from.
+pub(crate) fn dist_into(logits: &[f32], p: &SamplingParams, out: &mut [f32]) {
+    debug_assert!(p.temperature > 0.0, "dense distributions are for sampled mode");
+    debug_assert_eq!(logits.len(), out.len());
+    let k = if p.top_k == 0 { logits.len() } else { p.top_k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    out.fill(0.0);
+    let mut total = 0f64;
+    for &i in &idx {
+        total += (((logits[i] - m) / p.temperature) as f64).exp();
+    }
+    for &i in &idx {
+        out[i] = ((((logits[i] - m) / p.temperature) as f64).exp() / total) as f32;
+    }
+}
+
+/// One draw from a dense probability row (exactly one RNG consumption).
+pub(crate) fn sample_from(probs: &[f32], rng: &mut Rng) -> u32 {
+    let total: f64 = probs.iter().map(|&x| x as f64).sum();
+    let mut t = rng.f64() * total;
+    let mut last = 0usize;
+    for (i, &w) in probs.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        last = i;
+        t -= w as f64;
+        if t <= 0.0 {
+            return i as u32;
+        }
+    }
+    last as u32
+}
+
+/// Draft-side proposal: densify `q` from the draft logits and draw one
+/// token from it (the `q` row is kept for the verify-time accept test).
+pub(crate) fn propose_sampled(
+    logits: &[f32],
+    p: &SamplingParams,
+    q_out: &mut [f32],
+    rng: &mut Rng,
+) -> u32 {
+    dist_into(logits, p, q_out);
+    sample_from(q_out, rng)
+}
+
+/// Target-side check of drafted token `d ~ q`: accept with probability
+/// `min(1, p(d)/q(d))`, else draw the replacement from
+/// `norm(max(p - q, 0))` — the residual construction that makes the
+/// emitted stream distributed exactly as target-only sampling.
+/// `p_scratch` holds the densified target distribution (reused per
+/// request across rounds).
+pub(crate) fn accept_draft(
+    p_logits: &[f32],
+    params: &SamplingParams,
+    q: &[f32],
+    d: u32,
+    p_scratch: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> DraftDraw {
+    p_scratch.resize(p_logits.len(), 0.0);
+    dist_into(p_logits, params, p_scratch);
+    let pd = p_scratch[d as usize] as f64;
+    let qd = q[d as usize] as f64;
+    if qd > 0.0 && rng.f64() < (pd / qd).min(1.0) {
+        return DraftDraw::Accepted;
+    }
+    let mut total = 0f64;
+    for (pi, &qi) in p_scratch.iter_mut().zip(q) {
+        *pi = (*pi - qi).max(0.0);
+        total += *pi as f64;
+    }
+    if total <= 0.0 {
+        // p == q (or numerically indistinguishable): the residual is
+        // empty, so the replacement is a fresh draw from p itself.
+        dist_into(p_logits, params, p_scratch);
+    }
+    DraftDraw::Rejected(sample_from(p_scratch, rng))
+}
+
+/// Bonus/correction draw straight from the target distribution (used
+/// after the whole run was accepted, and by degenerate runs with no
+/// proposals).
+pub(crate) fn sample_dense(
+    p_logits: &[f32],
+    params: &SamplingParams,
+    p_scratch: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> u32 {
+    p_scratch.resize(p_logits.len(), 0.0);
+    dist_into(p_logits, params, p_scratch);
+    sample_from(p_scratch, rng)
+}
+
+// ------------------------------------------------------------- SpecDecoder
+
+/// Direct single-sequence greedy speculative decoder over two packed
+/// models — the reference implementation of the draft → verify → rollback
+/// round. The serving engine has its own batched integration; this driver
+/// backs the bench, the allocation-freedom test, and `repro eval
+/// --draft-model`.
+///
+/// All working state (scratch arena, run/catch-up buffers, KV) is owned
+/// and reused, so once warm the steady-state round loop performs zero
+/// heap allocations (verified in `tests/alloc_free.rs`).
+pub struct SpecDecoder {
+    k: usize,
+    scratch: Scratch,
+    /// Verify run `[pending, d_1..d_k_eff]`.
+    run: Vec<u32>,
+    /// Draft catch-up staging.
+    ctx: Vec<u32>,
+    out: Vec<u32>,
+    target_contig: Vec<KvCache>,
+    target_paged: Option<PagedSeq>,
+    draft_kv: Vec<KvCache>,
+    /// Positions fed into the target / the draft.
+    pos: usize,
+    dfed: usize,
+    prompt_len: usize,
+    n_new: usize,
+    done: bool,
+    pub stats: SpecStats,
+}
+
+impl SpecDecoder {
+    /// A decoder proposing up to `k` draft tokens per round.
+    pub fn new(k: usize) -> SpecDecoder {
+        SpecDecoder {
+            k: k.max(1),
+            scratch: Scratch::new(),
+            run: Vec::new(),
+            ctx: Vec::new(),
+            out: Vec::new(),
+            target_contig: Vec::new(),
+            target_paged: None,
+            draft_kv: Vec::new(),
+            pos: 0,
+            dfed: 0,
+            prompt_len: 0,
+            n_new: 0,
+            done: false,
+            stats: SpecStats::default(),
+        }
+    }
+
+    /// Prefill both models on `prompt` and emit the first token. With a
+    /// pool the target's KV is paged (rollback returns whole blocks);
+    /// contiguous otherwise. Stats accumulate across sessions — reset
+    /// `self.stats` if you want per-session numbers.
+    pub fn begin(
+        &mut self,
+        target: &mut PackedModel,
+        draft: &mut PackedModel,
+        prompt: &[u32],
+        n_new: usize,
+        pool: Option<&Arc<BlockPool>>,
+    ) -> Result<(), KvError> {
+        assert_eq!(
+            target.cfg.vocab, draft.cfg.vocab,
+            "draft and target must share a vocabulary"
+        );
+        self.out.clear();
+        self.out.reserve(n_new);
+        self.run.clear();
+        self.ctx.clear();
+        self.prompt_len = prompt.len();
+        self.n_new = n_new;
+        self.pos = 0;
+        self.dfed = 0;
+        self.done = n_new == 0;
+        if self.done {
+            return Ok(());
+        }
+        let worst = (prompt.len() + n_new.saturating_sub(1)).max(1);
+        self.target_paged = None;
+        match pool {
+            Some(p) => {
+                let adm = p.admit(&[], worst, PrefixTag::default())?;
+                self.target_paged = Some(PagedSeq::new(p, adm));
+            }
+            None => self.ensure_contig_target(target, worst),
+        }
+        let dworst = prompt.len() + n_new + self.k;
+        Self::ensure_caches(&mut self.draft_kv, draft, dworst);
+
+        // Prefill: all prompt rows as one fused step per model.
+        let mut first = 0u32; // empty prompt: argmax of zeroed logits
+        if !prompt.is_empty() {
+            {
+                let kv = match self.target_paged.as_mut() {
+                    Some(seq) => BatchKv::Paged(seq),
+                    None => BatchKv::Contig(&mut self.target_contig[..]),
+                };
+                let mut steps = [SeqStep::new(prompt, 0, kv, true)];
+                target.decode_step_batch(&mut steps, &mut self.scratch);
+                assert!(steps[0].err.is_none(), "target prefill overflow");
+            }
+            first = argmax(self.scratch.logits_row(0)) as u32;
+            let mut dsteps =
+                [SeqStep::new(prompt, 0, BatchKv::Contig(&mut self.draft_kv[..]), false)];
+            draft.decode_step_batch(&mut dsteps, &mut self.scratch);
+            assert!(dsteps[0].err.is_none(), "draft prefill overflow");
+            self.pos = prompt.len();
+            self.dfed = prompt.len();
+        }
+        self.out.push(first);
+        self.done = self.out.len() >= n_new;
+        Ok(())
+    }
+
+    /// One draft → verify → rollback round; `false` once the budget is
+    /// emitted.
+    pub fn round(&mut self, target: &mut PackedModel, draft: &mut PackedModel) -> bool {
+        if self.done {
+            return false;
+        }
+        let remaining = self.n_new - self.out.len(); // >= 1
+        let k_eff = self.k.min(remaining - 1);
+
+        // Draft: catch up through the pending token (yields q_1), then
+        // one single-row step per further proposal.
+        self.ctx.clear();
+        for i in self.dfed..self.pos + 1 {
+            self.ctx.push(self.out[i - self.prompt_len]);
+        }
+        self.run.clear();
+        self.run.push(*self.out.last().unwrap());
+        for j in 0..k_eff {
+            let tok = [if j == 0 { 0 } else { self.run[j] }];
+            let next;
+            {
+                let toks: &[u32] = if j == 0 { &self.ctx } else { &tok };
+                let start = self.dfed;
+                let mut steps =
+                    [SeqStep::new(toks, start, BatchKv::Contig(&mut self.draft_kv[..]), true)];
+                draft.decode_step_batch(&mut steps, &mut self.scratch);
+                assert!(steps[0].err.is_none(), "draft KV overflow");
+                self.dfed += steps[0].tokens.len();
+                next = argmax(self.scratch.logits_row(0)) as u32;
+            }
+            self.run.push(next);
+            self.stats.draft_steps += 1;
+        }
+        // k_eff == 0 (one budget slot left) proposes nothing: the verify
+        // run below is just the pending token, and the session ends on
+        // its emission — no draft catch-up needed.
+        self.stats.proposed += k_eff;
+
+        // Verify: the whole run as K+1 rows of one fused step, logits for
+        // every row.
+        {
+            let run = std::mem::take(&mut self.run);
+            let kv = match self.target_paged.as_mut() {
+                Some(seq) => BatchKv::Paged(seq),
+                None => BatchKv::Contig(&mut self.target_contig[..]),
+            };
+            let mut steps = [SeqStep::with_all_logits(&run, self.pos, kv)];
+            target.decode_step_batch(&mut steps, &mut self.scratch);
+            assert!(steps[0].err.is_none(), "target verify overflow");
+            drop(steps);
+            self.run = run;
+        }
+        self.stats.verify_steps += 1;
+
+        // Greedy acceptance scan: each accepted draft equals the target
+        // argmax; the first divergence (or the bonus position) emits the
+        // target argmax and ends the round.
+        let mut accepted = 0usize;
+        for i in 0..self.run.len() {
+            let t = argmax(self.scratch.logits_row_at(0, i)) as u32;
+            let acc = i + 1 < self.run.len() && t == self.run[i + 1];
+            self.out.push(t);
+            self.stats.emitted += 1;
+            if acc {
+                accepted += 1;
+            }
+            if self.out.len() >= self.n_new {
+                self.done = true;
+                break;
+            }
+            if !acc {
+                break;
+            }
+        }
+        self.stats.accepted += accepted;
+
+        // Rollback: rejected-suffix positions leave both KVs.
+        let new_pos = self.pos + 1 + accepted;
+        match self.target_paged.as_mut() {
+            Some(seq) => seq.truncate(new_pos),
+            None => {
+                for c in self.target_contig.iter_mut() {
+                    c.truncate(new_pos);
+                }
+            }
+        }
+        self.pos = new_pos;
+        let dlen = self.dfed.min(new_pos);
+        for c in self.draft_kv.iter_mut() {
+            c.truncate(dlen);
+        }
+        self.dfed = dlen;
+        !self.done
+    }
+
+    /// Tokens emitted so far this session.
+    pub fn tokens(&self) -> &[u32] {
+        &self.out
+    }
+
+    /// Full greedy generation — bit-identical to
+    /// [`PackedModel::generate`] on the target, whatever the draft.
+    pub fn generate(
+        &mut self,
+        target: &mut PackedModel,
+        draft: &mut PackedModel,
+        prompt: &[u32],
+        n_new: usize,
+        pool: Option<&Arc<BlockPool>>,
+    ) -> Vec<u32> {
+        self.begin(target, draft, prompt, n_new, pool)
+            .expect("KV admission for speculative session");
+        while self.round(target, draft) {}
+        self.out.clone()
+    }
+
+    fn ensure_contig_target(&mut self, model: &PackedModel, tokens: usize) {
+        Self::ensure_caches(&mut self.target_contig, model, tokens);
+    }
+
+    /// Reuse per-layer caches across sessions, rebuilding only when the
+    /// geometry or capacity no longer fits.
+    fn ensure_caches(caches: &mut Vec<KvCache>, model: &PackedModel, tokens: usize) {
+        let d = model.cfg.d_model;
+        let fits = caches.len() == model.cfg.n_layers
+            && caches.iter().all(|c| c.k.len() >= tokens * d);
+        if fits {
+            for c in caches.iter_mut() {
+                c.reset();
+            }
+        } else {
+            *caches = model.new_caches(tokens);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+    use crate::kvcache::KvPoolOptions;
+
+    fn cfg(seed_name: &str) -> ModelConfig {
+        ModelConfig {
+            name: seed_name.into(),
+            variant: Variant::PQuant,
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 96,
+            r: 16,
+            n_experts: 2,
+            seq_len: 64,
+            alpha_init: 2.0,
+            beta_init: 0.2,
+        }
+    }
+
+    #[test]
+    fn greedy_spec_decoder_matches_generate() {
+        let mut target = PackedModel::random(&cfg("spec-t"), 7);
+        let mut reference = target.clone();
+        let mut draft = PackedModel::random(&cfg("spec-d"), 8);
+        let want = reference.generate(&[3, 1, 4], 12);
+        let mut dec = SpecDecoder::new(3);
+        let got = dec.generate(&mut target, &mut draft, &[3, 1, 4], 12, None);
+        assert_eq!(got, want, "speculation must never change greedy output");
+        assert_eq!(dec.stats.emitted, 12);
+        assert!(dec.stats.verify_steps > 0);
+    }
+
+    #[test]
+    fn self_draft_accepts_every_proposal() {
+        let mut target = PackedModel::random(&cfg("spec-self"), 9);
+        let mut draft = target.clone();
+        let mut reference = target.clone();
+        let mut dec = SpecDecoder::new(4);
+        let got = dec.generate(&mut target, &mut draft, &[5, 2], 16, None);
+        assert_eq!(got, reference.generate(&[5, 2], 16));
+        assert_eq!(dec.stats.accepted, dec.stats.proposed, "identical models must agree");
+        assert!(dec.stats.acceptance_rate() == 1.0);
+        // All-accepted rounds emit k+1 tokens per verify.
+        assert!(dec.stats.tokens_per_verify() > 4.0);
+    }
+
+    #[test]
+    fn paged_target_matches_contiguous() {
+        let c = cfg("spec-paged");
+        let mut target = PackedModel::random(&c, 11);
+        let mut draft = PackedModel::random(&c, 12);
+        let pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 64, block_size: 4 },
+            c.n_layers,
+            c.d_model,
+        ));
+        let mut dec = SpecDecoder::new(3);
+        let contig = dec.generate(&mut target, &mut draft, &[9, 9, 1], 10, None);
+        let paged = dec.generate(&mut target, &mut draft, &[9, 9, 1], 10, Some(&pool));
+        assert_eq!(contig, paged, "paged rollback must be bit-identical");
+        drop(dec);
+        assert_eq!(pool.available(), 64, "session end returns every block");
+    }
+
+    #[test]
+    fn sampled_helpers_are_deterministic_and_normalized() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.61).sin()).collect();
+        let p = SamplingParams { temperature: 0.7, top_k: 6, seed: 0, stop_tokens: vec![] };
+        let mut q = vec![0.0f32; 32];
+        dist_into(&logits, &p, &mut q);
+        let total: f64 = q.iter().map(|&x| x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-5, "q must be a distribution, got {total}");
+        assert_eq!(q.iter().filter(|&&x| x > 0.0).count(), 6, "top-k support");
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..40).map(|_| sample_from(&q, &mut rng)).collect::<Vec<u32>>()
+        };
+        assert_eq!(draw(5), draw(5));
+        assert!(draw(5).iter().all(|&t| q[t as usize] > 0.0));
+    }
+
+    #[test]
+    fn rejection_resamples_from_the_residual() {
+        // q concentrated where p is light: the accept test must sometimes
+        // reject, and every replacement must come from p's support.
+        let mut rng = Rng::new(3);
+        let p_logits: Vec<f32> = (0..16).map(|i| if i < 4 { 3.0 } else { -3.0 }).collect();
+        let q_logits: Vec<f32> = (0..16).map(|i| if i >= 12 { 3.0 } else { -3.0 }).collect();
+        let params = SamplingParams { temperature: 1.0, top_k: 0, seed: 0, stop_tokens: vec![] };
+        let mut q = vec![0.0f32; 16];
+        dist_into(&q_logits, &params, &mut q);
+        let mut scratch = Vec::new();
+        let mut rejections = 0;
+        for _ in 0..50 {
+            let d = sample_from(&q, &mut rng);
+            match accept_draft(&p_logits, &params, &q, d, &mut scratch, &mut rng) {
+                DraftDraw::Accepted => {}
+                DraftDraw::Rejected(t) => {
+                    rejections += 1;
+                    assert!(t < 4, "replacement {t} must come from p-heavy support");
+                }
+            }
+        }
+        assert!(rejections > 30, "mismatched q must mostly reject, got {rejections}");
+    }
+}

@@ -1,18 +1,25 @@
 //! Allocation-freedom of the steady-state fused decode loop: once the
 //! per-worker [`Scratch`] is warm, `decode_step_batch` must perform zero
-//! heap allocations in the linear layers (ISSUE 4 acceptance). Verified
-//! with a counting global allocator; the kernel thread pool is capped at
-//! one thread so scoped-thread spawning (a property of the threading
-//! substrate, not of the decode path) doesn't obscure the measurement.
+//! heap allocations in the linear layers (ISSUE 4 acceptance), and the
+//! speculative draft → verify → rollback round must stay allocation-free
+//! too (ISSUE 5): proposals reuse the run/catch-up buffers, and rollback
+//! recycles truncated KV blocks through the pool instead of freeing them.
+//! Verified with a counting global allocator; the kernel thread pool is
+//! capped at one thread so scoped-thread spawning (a property of the
+//! threading substrate, not of the decode path) doesn't obscure the
+//! measurement.
 //!
 //! This file holds exactly one test: the counter is process-global, and a
 //! sibling test allocating concurrently would make the window noisy.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
+use pquant::kvcache::{BlockPool, KvPoolOptions};
+use pquant::serve::SpecDecoder;
 
 struct Counting;
 
@@ -111,5 +118,47 @@ fn steady_state_batched_decode_is_allocation_free() {
         after - before
     );
     assert!(!scratch.take_grew(), "scratch must not have grown in the window");
+
+    // ---- speculative draft → verify → rollback loop (ISSUE 5) ----
+    // A mismatched draft makes rejection (and therefore KV rollback) the
+    // common case; the target pages KV so truncation exercises the
+    // block-recycle path, not just a length rewind. The prompt is sized
+    // past the 64-entry pow2 boundaries of the RoPE table and score
+    // buffers, so the measured window sits strictly inside warm capacity.
+    let mut draft = PackedModel::random(&cfg, 4);
+    let pool = Arc::new(BlockPool::new(
+        KvPoolOptions { n_blocks: 256, block_size: 16 },
+        cfg.n_layers,
+        cfg.d_model,
+    ));
+    let prompt: Vec<u32> = (0..70).map(|i| ((i * 5) % 64) as u32).collect();
+    let mut dec = SpecDecoder::new(3);
+    // Throwaway session: warms the decoder's buffers and — by dropping its
+    // paged sequence at the next begin — stocks the pool's recycle list,
+    // so block materialization in the measured window pops instead of
+    // allocating.
+    dec.begin(&mut model, &mut draft, &prompt, 60, Some(&pool)).unwrap();
+    for _ in 0..30 {
+        if !dec.round(&mut model, &mut draft) {
+            break;
+        }
+    }
+    // Measured session: warm rounds, then the window.
+    dec.begin(&mut model, &mut draft, &prompt, 200, Some(&pool)).unwrap();
+    for _ in 0..6 {
+        assert!(dec.round(&mut model, &mut draft), "budget must outlast the warmup");
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..6 {
+        assert!(dec.round(&mut model, &mut draft), "budget must outlast the window");
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state speculative rounds allocated {} times in 6 rounds",
+        after - before
+    );
+    assert!(dec.stats.verify_steps > 0 && dec.stats.proposed > 0);
     pquant::util::threads::set_thread_cap(0);
 }

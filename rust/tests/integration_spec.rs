@@ -1,0 +1,551 @@
+//! Speculative decoding end to end: greedy bit-exactness properties,
+//! seeded-sampling determinism across batch sizes, fault injection
+//! (cancel mid-verify, stop token inside an accepted run, draft-KV
+//! exhaustion, preemption — each must return every draft *and* target
+//! block to its pool and emit a correct terminal event), and
+//! registry-side draft validation / hot-swap.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::kvcache::{BlockPool, KvPoolOptions};
+use pquant::serve::{
+    DraftError, Engine, EngineOptions, Event, FinishReason, GenRequest, ModelRegistry,
+    SamplingParams, SpecDecoder, SubmitError,
+};
+use pquant::util::prop::check;
+
+fn nano_cfg(name: &str, vocab: usize, n_layers: usize, d_model: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab,
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ff: 3 * d_model,
+        r: d_model / 2,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn registry_with(name: &str, model: PackedModel) -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(name, model, None);
+    registry
+}
+
+/// Every pool the engine draws KV from must be fully free after a drain.
+/// Frozen prompt prefixes retained by the target pool's share map are
+/// cache, not leaks — evicting the (now unused) entries must return the
+/// pool to `free == total`; anything left is a leaked request block.
+/// Draft pools never register prefixes, so they must already be free.
+fn assert_pools_drained(pool: Option<Arc<BlockPool>>, metrics: &pquant::serve::ServeMetrics) {
+    if let Some(p) = pool {
+        p.evict_unused();
+        let kv = p.stats();
+        assert_eq!(kv.in_use, 0, "target pool holds {} blocks after drain", kv.in_use);
+    }
+    for kv in metrics.draft_kv() {
+        assert_eq!(kv.in_use, 0, "a draft pool holds {} blocks after drain", kv.in_use);
+    }
+}
+
+// ------------------------------------------------- greedy bit-exactness
+
+/// One generated property case: seeds, geometry, and request shape.
+#[derive(Debug)]
+struct Case {
+    target_seed: u64,
+    draft_seed: u64,
+    self_draft: bool,
+    vocab: usize,
+    k: usize,
+    prompt: Vec<u32>,
+    n_new: usize,
+}
+
+#[test]
+fn spec_greedy_is_bit_identical_to_generate_property() {
+    // Random (target, draft, prompt, K) combinations — including
+    // draft == target — through a live engine: speculative greedy output
+    // must equal the unbatched reference decode exactly.
+    check(
+        0x5bec,
+        6,
+        |rng| {
+            let vocab = 48 + rng.below(32); // 48..80
+            Case {
+                target_seed: rng.next_u64(),
+                draft_seed: rng.next_u64(),
+                self_draft: rng.below(3) == 0,
+                vocab,
+                k: 1 + rng.below(5),
+                prompt: (0..2 + rng.below(10)).map(|_| rng.below(vocab) as u32).collect(),
+                n_new: 1 + rng.below(24),
+            }
+        },
+        |case| {
+            let cfg = nano_cfg("spec-prop-t", case.vocab, 2, 32);
+            let target = PackedModel::random(&cfg, case.target_seed);
+            let mut reference = target.clone();
+            let draft = if case.self_draft {
+                target.clone()
+            } else {
+                // Different weights, depth and width — only vocab matters.
+                PackedModel::random(
+                    &nano_cfg("spec-prop-d", case.vocab, 1, 16),
+                    case.draft_seed,
+                )
+            };
+            let want = reference.generate(&case.prompt, case.n_new);
+
+            let registry = registry_with("m", target);
+            registry.register("d", draft, None);
+            let engine = Engine::start(
+                &registry,
+                EngineOptions { model: "m".into(), max_batch: 3, ..EngineOptions::default() },
+            )
+            .unwrap();
+            // Mixed speculative and plain requests in one fused round.
+            let spec_t = engine
+                .submit(GenRequest::greedy(case.prompt.clone(), case.n_new).with_spec("d", case.k))
+                .unwrap();
+            let plain_t =
+                engine.submit(GenRequest::greedy(case.prompt.clone(), case.n_new)).unwrap();
+            let spec2_t = engine
+                .submit(GenRequest::greedy(case.prompt.clone(), case.n_new).with_spec("d", case.k))
+                .unwrap();
+            let (spec, plain, spec2) = (spec_t.wait(), plain_t.wait(), spec2_t.wait());
+            if spec.tokens != want {
+                return Err(format!("speculative greedy diverged (k={})", case.k));
+            }
+            if plain.tokens != want {
+                return Err("plain greedy diverged next to speculation".into());
+            }
+            if spec2.tokens != want {
+                return Err("second speculative stream diverged".into());
+            }
+            if spec.finish != FinishReason::Length {
+                return Err(format!("wrong finish {:?}", spec.finish));
+            }
+            let pool = engine.kv_pool().cloned();
+            let metrics = engine.shutdown();
+            assert_pools_drained(pool, &metrics);
+            if case.self_draft
+                && metrics.accepted_tokens.load(Ordering::Relaxed)
+                    != metrics.draft_tokens.load(Ordering::Relaxed)
+            {
+                return Err("draft == target must accept every proposal".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn self_draft_acceptance_is_total_and_multiplies_tokens_per_verify() {
+    let cfg = nano_cfg("spec-self", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 17);
+    let mut reference = target.clone();
+    let registry = registry_with("m", target.clone());
+    registry.register("d", target, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let stats = engine
+        .submit(GenRequest::greedy(vec![7, 3, 1], 40).with_spec("d", 4))
+        .unwrap()
+        .wait();
+    assert_eq!(stats.tokens, reference.generate(&[7, 3, 1], 40));
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert!(metrics.draft_tokens.load(Ordering::Relaxed) > 0);
+    assert_eq!(
+        metrics.acceptance_rate(),
+        1.0,
+        "identical draft and target must agree on every token"
+    );
+    // All-accepted verify runs emit k+1 tokens each (modulo the clamped
+    // final round), so the mean must sit well above plain decode's 1.
+    assert!(
+        metrics.spec_tokens_per_verify() > 3.0,
+        "tokens/verify {} too low for a perfect draft",
+        metrics.spec_tokens_per_verify()
+    );
+    assert_eq!(metrics.spec_requests.load(Ordering::Relaxed), 1);
+    assert_pools_drained(pool, &metrics);
+}
+
+// ------------------------------------------- seeded-sampling determinism
+
+#[test]
+fn seeded_spec_sampling_is_deterministic_across_max_batch_1_vs_6() {
+    let cfg = nano_cfg("spec-seeded", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 23);
+    let draft = PackedModel::random(&nano_cfg("spec-seeded-d", 64, 1, 16), 24);
+    let registry = registry_with("m", target);
+    registry.register("d", draft, None);
+    let run = |max_batch: usize| -> Vec<Vec<u32>> {
+        let engine = Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), max_batch, ..EngineOptions::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..4)
+            .map(|i| {
+                let sampling = SamplingParams {
+                    temperature: 0.8,
+                    top_k: 8,
+                    seed: 1000 + i,
+                    stop_tokens: vec![],
+                };
+                engine
+                    .submit(
+                        GenRequest::sampled(vec![5, 9, 2], 12, sampling).with_spec("d", 3),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        let out: Vec<Vec<u32>> = tickets.into_iter().map(|t| t.wait().tokens).collect();
+        let pool = engine.kv_pool().cloned();
+        let metrics = engine.shutdown();
+        assert_pools_drained(pool, &metrics);
+        out
+    };
+    let solo = run(1);
+    let batched = run(6);
+    assert_eq!(solo, batched, "seeded speculative streams must not depend on batching");
+    for s in &solo {
+        assert_eq!(s.len(), 12);
+        assert!(s.iter().all(|&t| t < 64));
+    }
+}
+
+// ------------------------------------------------------- fault injection
+
+#[test]
+fn cancel_mid_verify_returns_all_draft_and_target_blocks() {
+    let cfg = nano_cfg("spec-cancel", 64, 2, 32);
+    let registry = registry_with("m", PackedModel::random(&cfg, 31));
+    registry.register("d", PackedModel::random(&nano_cfg("spec-cancel-d", 64, 1, 16), 32), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let ticket = engine
+        .submit(GenRequest::greedy(vec![1, 2], 4000).with_spec("d", 4))
+        .unwrap();
+    // Let several verify rounds land so cancellation hits a live
+    // draft+target speculative state, not the prefill.
+    let mut seen = 0;
+    while seen < 6 {
+        if let Event::Token(_) = ticket.recv().unwrap() {
+            seen += 1;
+        }
+    }
+    ticket.cancel();
+    let stats = ticket.wait();
+    assert_eq!(stats.finish, FinishReason::Cancelled, "cancel must end the stream");
+    assert!(stats.tokens.len() >= 6 && stats.tokens.len() < 4000);
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert!(metrics.verify_steps.load(Ordering::Relaxed) > 0, "speculation must have run");
+    assert_pools_drained(pool, &metrics);
+}
+
+#[test]
+fn stop_token_inside_an_accepted_draft_run_finishes_with_stop() {
+    let cfg = nano_cfg("spec-stop", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 41);
+    let mut reference = target.clone();
+    // A perfect draft guarantees the stop token arrives *inside* an
+    // accepted run (k=6 covers the cut position), not as a phase-1
+    // sample.
+    let full = reference.generate(&[3, 1], 24);
+    let stop = full[4];
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+    let registry = registry_with("m", target.clone());
+    registry.register("d", target, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    let req = GenRequest::sampled(
+        vec![3, 1],
+        24,
+        SamplingParams { stop_tokens: vec![stop], ..SamplingParams::greedy() },
+    )
+    .with_spec("d", 6);
+    let stats = engine.submit(req).unwrap().wait();
+    assert_eq!(stats.finish, FinishReason::Stop);
+    assert_eq!(stats.tokens, full[..=cut].to_vec(), "stop token included, later drafts dropped");
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert!(metrics.verify_steps.load(Ordering::Relaxed) > 0);
+    assert_pools_drained(pool, &metrics);
+}
+
+#[test]
+fn draft_kv_exhaustion_degrades_to_plain_and_stays_bit_exact() {
+    let cfg = nano_cfg("spec-dry", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 51);
+    let mut reference = target.clone();
+    let registry = registry_with("m", target);
+    registry.register("d", PackedModel::random(&nano_cfg("spec-dry-d", 64, 1, 16), 52), None);
+    // A one-block draft pool can never cover a draft reservation, so the
+    // draft cannot expand — the request must degrade to plain decode and
+    // still finish correctly.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 2,
+            draft_kv: Some(KvPoolOptions { n_blocks: 1, block_size: 4 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let stats = engine
+        .submit(GenRequest::greedy(vec![9, 8, 7], 16).with_spec("d", 4))
+        .unwrap()
+        .wait();
+    assert_eq!(stats.finish, FinishReason::Length, "degrade must not fail the request");
+    assert_eq!(stats.tokens, reference.generate(&[9, 8, 7], 16));
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert!(
+        metrics.spec_degraded.load(Ordering::Relaxed) >= 1,
+        "the dry draft pool must be observed"
+    );
+    assert_eq!(metrics.verify_steps.load(Ordering::Relaxed), 0, "no verify without a draft");
+    assert_pools_drained(pool, &metrics);
+}
+
+#[test]
+fn draft_pool_contention_degrades_the_loser_only() {
+    let cfg = nano_cfg("spec-contend", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 61);
+    let mut reference = target.clone();
+    let registry = registry_with("m", target);
+    let draft_cfg = nano_cfg("spec-contend-d", 64, 1, 16);
+    registry.register("d", PackedModel::random(&draft_cfg, 62), None);
+    // The draft pool fits exactly one request's draft reservation:
+    // 3 + 24 + 4 = 31 tokens over 16-token blocks -> 2 x 1 layer = 2.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 2,
+            draft_kv: Some(KvPoolOptions { n_blocks: 2, block_size: 16 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let a = engine.submit(GenRequest::greedy(vec![1, 2, 3], 24).with_spec("d", 4)).unwrap();
+    let b = engine.submit(GenRequest::greedy(vec![1, 2, 3], 24).with_spec("d", 4)).unwrap();
+    let want = reference.generate(&[1, 2, 3], 24);
+    assert_eq!(a.wait().tokens, want);
+    assert_eq!(b.wait().tokens, want, "the degraded loser still decodes correctly");
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert_pools_drained(pool, &metrics);
+}
+
+#[test]
+fn preempted_speculative_request_resumes_and_finishes_bit_exact() {
+    let cfg = nano_cfg("spec-preempt", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 71);
+    let mut reference = target.clone();
+    let registry = registry_with("m", target.clone());
+    registry.register("d", target, None);
+    // Target pool fits exactly one long request: 4 + 200 tokens over
+    // 8-token blocks -> 26 logical x 2 layers = 52 blocks.
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            kv: Some(KvPoolOptions { n_blocks: 52, block_size: 8 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let low = engine
+        .submit(GenRequest::greedy(vec![1, 2, 3, 4], 200).with_spec("d", 4))
+        .unwrap();
+    loop {
+        match low.recv().expect("stream open") {
+            Event::Token(_) => break,
+            _ => {}
+        }
+    }
+    let high_req = GenRequest::greedy(vec![9, 8, 7, 6], 200).with_priority(5);
+    let high = match engine.submit(high_req) {
+        // The flagged preemption frees the low request's blocks; the
+        // blocking retry claims them.
+        Err(SubmitError::KvExhausted(req)) => engine.submit_blocking(req).unwrap(),
+        Ok(t) => t, // only possible if low finished first; asserts below catch it
+        Err(e) => panic!("unexpected submit error: {e}"),
+    };
+    assert_eq!(high.wait().tokens, reference.generate(&[9, 8, 7, 6], 200));
+    // The preempted speculative request resumes (draft state rebuilt from
+    // scratch) and continues the identical greedy stream.
+    let low_stats = low.wait();
+    assert_eq!(low_stats.finish, FinishReason::Length);
+    assert_eq!(low_stats.tokens, reference.generate(&[1, 2, 3, 4], 200));
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.preempted.load(Ordering::Relaxed), 1, "exactly one preemption");
+    assert!(
+        metrics.spec_requests.load(Ordering::Relaxed) <= 1,
+        "a preempt/resume cycle must not double-count the speculative request"
+    );
+    assert_pools_drained(pool, &metrics);
+}
+
+// ------------------------------------------- registry / artifact negatives
+
+#[test]
+fn vocab_incompatible_draft_is_rejected_at_submit_with_typed_error() {
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("t", 64, 2, 32), 81));
+    // Same width and depth, different vocab — the one thing that matters.
+    registry.register("d", PackedModel::random(&nano_cfg("d", 48, 2, 32), 82), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), ..EngineOptions::default() },
+    )
+    .unwrap();
+    match engine.submit(GenRequest::greedy(vec![1, 2], 8).with_spec("d", 4)) {
+        Err(SubmitError::DraftRejected(req, e)) => {
+            assert_eq!(req.n_new, 8, "request rides back in the error");
+            assert_eq!(e, DraftError::VocabMismatch { draft: 48, target: 64 });
+        }
+        other => panic!(
+            "expected DraftRejected, got {:?}",
+            other.map(|_| ()).map_err(|e| e.to_string())
+        ),
+    }
+    match engine.submit(GenRequest::greedy(vec![1, 2], 8).with_spec("missing", 4)) {
+        Err(SubmitError::DraftRejected(_, DraftError::UnknownModel(name))) => {
+            assert_eq!(name, "missing");
+        }
+        other => panic!(
+            "expected UnknownModel, got {:?}",
+            other.map(|_| ()).map_err(|e| e.to_string())
+        ),
+    }
+    // The engine keeps serving plain requests after the rejections.
+    assert_eq!(engine.submit(GenRequest::greedy(vec![1, 2], 4)).unwrap().wait().tokens.len(), 4);
+    engine.shutdown();
+}
+
+#[test]
+fn pqm_round_tripped_draft_with_wrong_vocab_is_rejected_not_panicked() {
+    // The draft arrives the way production drafts do — through the `.pqm`
+    // artifact codec — and its header-declared vocab disagrees with the
+    // target's: submit must reject with the typed error, and the worker
+    // must never see it.
+    let target = PackedModel::random(&nano_cfg("t", 64, 2, 32), 91);
+    let bad_draft = PackedModel::random(&nano_cfg("bad-draft", 32, 1, 16), 92);
+    let bytes = pquant::artifact::save_pqm_bytes(&bad_draft, None);
+    let loaded = pquant::artifact::load_pqm_bytes(&bytes).expect("valid artifact");
+    let registry = registry_with("m", target);
+    registry.register("d", loaded.model, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), ..EngineOptions::default() },
+    )
+    .unwrap();
+    match engine.submit(GenRequest::greedy(vec![1], 6).with_spec("d", 3)) {
+        Err(SubmitError::DraftRejected(_, DraftError::VocabMismatch { draft, target })) => {
+            assert_eq!((draft, target), (32, 64));
+        }
+        other => panic!(
+            "expected VocabMismatch, got {:?}",
+            other.map(|_| ()).map_err(|e| e.to_string())
+        ),
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn hot_swapping_the_draft_under_load_keeps_streams_lossless() {
+    let cfg = nano_cfg("spec-swap", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 101);
+    let mut reference = target.clone();
+    let registry = registry_with("m", target);
+    registry.register("d", PackedModel::random(&nano_cfg("swap-d1", 64, 1, 16), 102), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), max_batch: 2, ..EngineOptions::default() },
+    )
+    .unwrap();
+    // Get a speculative request mid-stream on draft generation 1.
+    let inflight = engine
+        .submit(GenRequest::greedy(vec![2, 4], 60).with_spec("d", 3))
+        .unwrap();
+    let mut seen = 0;
+    while seen < 4 {
+        if let Event::Token(_) = inflight.recv().unwrap() {
+            seen += 1;
+        }
+    }
+    // Swap the draft to different weights *and* different geometry (same
+    // vocab); in-flight speculation drains on its pinned lease, new
+    // requests pick up generation 2.
+    let report = registry.hot_swap(
+        "d",
+        PackedModel::random(&nano_cfg("swap-d2", 64, 2, 24), 103),
+        None,
+        Duration::ZERO,
+    );
+    assert_eq!(report.generation, 2);
+    let post = engine.submit(GenRequest::greedy(vec![2, 4], 20).with_spec("d", 3)).unwrap();
+    // Both streams are bit-exact with plain decode: the draft choice (and
+    // the swap) can change throughput only, never output.
+    assert_eq!(inflight.wait().tokens, reference.generate(&[2, 4], 60), "in-flight stream");
+    assert_eq!(post.wait().tokens, reference.generate(&[2, 4], 20), "post-swap stream");
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+    assert_pools_drained(pool, &metrics);
+}
+
+// -------------------------------------------------- decoder cross-check
+
+#[test]
+fn direct_decoder_and_engine_agree_on_speculative_greedy() {
+    let cfg = nano_cfg("spec-cross", 64, 2, 32);
+    let target = PackedModel::random(&cfg, 111);
+    let draft = PackedModel::random(&nano_cfg("spec-cross-d", 64, 1, 16), 112);
+    let mut t1 = target.clone();
+    let mut d1 = draft.clone();
+    let mut dec = SpecDecoder::new(3);
+    let direct = dec.generate(&mut t1, &mut d1, &[6, 6, 6], 15, None);
+
+    let registry = registry_with("m", target);
+    registry.register("d", draft, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), ..EngineOptions::default() },
+    )
+    .unwrap();
+    let served = engine
+        .submit(GenRequest::greedy(vec![6, 6, 6], 15).with_spec("d", 3))
+        .unwrap()
+        .wait();
+    assert_eq!(served.tokens, direct, "engine and direct decoder must agree");
+    engine.shutdown();
+}

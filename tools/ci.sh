@@ -24,10 +24,10 @@ fi
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
-echo "==> tier-1: cargo test -q   (includes tests/integration_batch.rs + alloc_free.rs)"
+echo "==> tier-1: cargo test -q   (includes tests/integration_spec.rs + integration_batch.rs + alloc_free.rs)"
 cargo test -q
 
-echo "==> tier-1: cargo bench --no-run (benches must keep compiling, incl. benches/decode_batch.rs)"
+echo "==> tier-1: cargo bench --no-run (benches must keep compiling, incl. benches/spec_decode.rs + decode_batch.rs)"
 cargo bench --no-run
 
 if [[ "${1:-}" == "--tier1" ]]; then
