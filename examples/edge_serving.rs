@@ -16,7 +16,9 @@ use pquant::artifact;
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::PackedModel;
 use pquant::report::Table;
-use pquant::serve::{Engine, EngineOptions, Event, GenRequest, ModelRegistry, Ticket};
+use pquant::serve::{
+    Engine, EngineOptions, Event, GenRequest, HttpServer, ModelRegistry, Router, Ticket,
+};
 
 fn geometry(variant: Variant, n_experts: usize) -> ModelConfig {
     ModelConfig {
@@ -192,6 +194,55 @@ fn main() -> Result<()> {
         kv.cow_copies,
         metrics.preempted.load(std::sync::atomic::Ordering::Relaxed),
     );
+
+    // The network front door: the same engine behind the HTTP/SSE server
+    // (`repro serve --http ADDR` is this, minus the in-process client).
+    // The wire protocol is plain HTTP + SSE, so from a shell it is just:
+    //
+    //   curl -N http://ADDR/v1/generate -d '{"prompt": [5, 9, 2], "n_new": 12}'
+    //   curl http://ADDR/v1/metrics
+    //
+    // Here we speak it over a raw TcpStream (offline containers have no
+    // curl guarantee) and check the streamed tokens against the reference.
+    let engine = Arc::new(Engine::start(
+        &registry,
+        EngineOptions { model: "pquant n1".into(), max_batch: 4, ..EngineOptions::default() },
+    )?);
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        Router::new(registry.clone()).route("pquant n1", engine.clone()),
+    )?;
+    let addr = server.local_addr();
+    println!("\nHTTP front end on http://{addr}");
+    let body = r#"{"prompt": [5, 9, 2], "n_new": 12}"#;
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    use std::io::{Read, Write};
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: edge\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut response = String::new();
+    conn.read_to_string(&mut response)?;
+    let streamed: Vec<u32> = response
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .filter_map(|d| pquant::util::json::Json::parse(d).ok())
+        .filter_map(|j| j.opt("token").and_then(|t| t.as_usize().ok()).map(|t| t as u32))
+        .collect();
+    let (lease, mut reps) = registry.replicas("pquant n1", 1).expect("registered");
+    ensure!(
+        streamed == reps.pop().unwrap().generate(&[5, 9, 2], 12),
+        "SSE stream diverged from the reference decode"
+    );
+    drop(lease);
+    println!(
+        "  streamed {} tokens over SSE, bit-identical to PackedModel::generate",
+        streamed.len()
+    );
+    server.shutdown(); // drains in-flight streams, then joins every handler
+    drop(engine);
 
     println!("\npaper claims: >2x tokens/s vs FP16 (§1), traffic constant in N (§4.5)");
     Ok(())

@@ -1,0 +1,95 @@
+//! Trace-driven serving bench: replay a short fixed-seed bursty trace
+//! against a persistent engine and publish the SLO report (goodput,
+//! per-tier TTFT/TPOT p50/p95/p99, 429/503 rates) to
+//! `results/bench/loadgen.json`. The schedule is seeded — identical
+//! across runs and commits — so the report is comparable history.
+
+use std::sync::Arc;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::serve::loadgen::{self, Target, TraceConfig};
+use pquant::serve::{Engine, EngineOptions, ModelRegistry};
+
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "bench-loadgen".into(),
+        variant: Variant::PQuant,
+        vocab: 512,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 704,
+        r: 32,
+        n_experts: 1,
+        seq_len: 64,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn main() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("bench", PackedModel::random(&bench_cfg(), 3), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "bench".into(),
+            max_batch: 4,
+            workers: 1,
+            queue_depth: 64,
+            ..EngineOptions::default()
+        },
+    )
+    .expect("model registered above");
+
+    // Fixed seed, bursty mix, ~2 simulated seconds of arrivals: small
+    // enough for CI's bench lane, bursty enough to exercise backpressure.
+    let cfg = TraceConfig {
+        seed: 0xBEEF,
+        n_requests: 48,
+        rate: 60.0,
+        burst_factor: 5.0,
+        prompt_lens: vec![(4, 0.5), (12, 0.3), (24, 0.2)],
+        output_lens: vec![(8, 0.6), (16, 0.3), (32, 0.1)],
+        shared_prefix_len: 16,
+        vocab: 512,
+        ..TraceConfig::default()
+    };
+    let report = loadgen::run(Target::Engine(&engine), &cfg).expect("in-process replay");
+    let metrics = engine.shutdown();
+
+    println!(
+        "loadgen: {} req in {:.2}s | {:.1} tokens/s | goodput {:.0}% | {} x429 {} x503",
+        report.submitted,
+        report.wall.as_secs_f64(),
+        report.throughput(),
+        report.goodput() * 100.0,
+        report.retries_429,
+        report.retries_503,
+    );
+    for t in &report.tiers {
+        println!(
+            "  {:12} n {:>3}  goodput {:>3.0}%  ttft p50/p95/p99 {:.1}/{:.1}/{:.1} ms  \
+             tpot p50/p95/p99 {:.1}/{:.1}/{:.1} ms",
+            t.name,
+            t.n,
+            t.goodput * 100.0,
+            t.ttft.p50,
+            t.ttft.p95,
+            t.ttft.p99,
+            t.tpot.p50,
+            t.tpot.p95,
+            t.tpot.p99,
+        );
+    }
+    let server_tpot = metrics.tpot_percentiles();
+    println!(
+        "server-side tpot p50 {:.2} ms over {} samples",
+        server_tpot.p50, server_tpot.n
+    );
+    report
+        .write(std::path::Path::new("results/bench/loadgen.json"))
+        .expect("writing results/bench/loadgen.json");
+    println!("wrote results/bench/loadgen.json");
+}

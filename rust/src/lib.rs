@@ -43,7 +43,12 @@
 //!   registry-leased draft proposes K tokens, the target verifies all
 //!   K+1 positions as rows of the same fused step, rejected suffixes
 //!   roll their KV pages back, and greedy output stays bit-identical to
-//!   [`infer::PackedModel::generate`]
+//!   [`infer::PackedModel::generate`]; [`serve::http`] opens the network
+//!   front door — a dependency-free HTTP/1.1 + SSE server (`POST
+//!   /v1/generate` streams ticket events, disconnect cancels, queue/KV
+//!   backpressure maps to 429/503 with typed retry hints) — and
+//!   [`serve::loadgen`] replays seeded bursty traces against it (or the
+//!   in-process engine) and reports per-tier SLO attainment
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics

@@ -99,6 +99,16 @@ USAGE:
                                                     tokens per round (same vocab required);
                                                     the target verifies them in one fused
                                                     batch step — greedy output is unchanged
+              [--http ADDR [--duration SECS]]       HTTP/SSE front end instead of the batch
+                                                    load test: POST /v1/generate (SSE stream),
+                                                    GET /v1/metrics, GET /v1/models
+                                                    (0 duration: serve until killed)
+  repro loadtest (--config C | --model P.pqm | --http ADDR) [--seed N] [--requests N]
+              [--rate R] [--burst-factor F] [--burst-on S] [--burst-off S]
+              [--prompt-lens L:W,..] [--output-lens L:W,..]
+              [--shared-frac F] [--shared-prefix N] [--draft-frac F] [--spec-k K]
+              [--max-retries N] [--out P.json]      trace-driven SLO report
+              (engine flags as for serve; --http drives a live endpoint instead)
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -117,6 +127,7 @@ fn main() -> Result<()> {
         "export" => cmd_export(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "list-configs" => cmd_list(),
         "help" | "--help" | "-h" => {
@@ -266,12 +277,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    use pquant::serve::{Engine, EngineOptions, GenRequest, SamplingParams, SubmitError};
-    use std::time::Instant;
+/// Registry + engine + workload facts shared by `serve` and `loadtest`:
+/// load the target (and optional draft) model, register, start the engine.
+struct ServeStack {
+    registry: std::sync::Arc<pquant::serve::ModelRegistry>,
+    engine: pquant::serve::Engine,
+    speculative: bool,
+    vocab: u32,
+}
 
-    let requests = args.flag("requests", 16usize)?;
-    let new_tokens = args.flag("new-tokens", 32usize)?;
+fn build_serve_stack(args: &Args) -> Result<ServeStack> {
+    use pquant::serve::{Engine, EngineOptions};
     let kv_defaults = pquant::kvcache::KvPoolOptions::default();
     let kv_blocks = args.flag("kv-blocks", kv_defaults.n_blocks)?;
     let kv = (kv_blocks > 0).then_some(pquant::kvcache::KvPoolOptions {
@@ -287,10 +303,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv,
         draft_kv: None, // draft pools mirror the target pool geometry
     };
-    let spec_k = args.flag("spec-k", 4usize)?;
-    let temperature = args.flag("temperature", 0.0f32)?;
-    let top_k = args.flag("top-k", 0usize)?;
-    let seed = args.flag("seed", 0u64)?;
     // All serving flows through the registry: load (from .pqm or a live
     // TrainState), register under a name, start the engine against it.
     let registry = std::sync::Arc::new(pquant::serve::ModelRegistry::new());
@@ -329,6 +341,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let vocab = registry.acquire("serve").expect("registered above").model.cfg.vocab as u32;
     let engine = Engine::start(&registry, opts)?;
+    Ok(ServeStack { registry, engine, speculative, vocab })
+}
+
+/// `repro serve --http ADDR`: front the engine with the HTTP/SSE server
+/// instead of running the batch load test.
+fn serve_http(args: &Args, stack: ServeStack, addr: &str) -> Result<()> {
+    use pquant::serve::{HttpServer, Router};
+    let engine = std::sync::Arc::new(stack.engine);
+    let router = Router::new(stack.registry.clone()).route("serve", engine.clone());
+    let server = HttpServer::bind(addr, router)?;
+    let local = server.local_addr();
+    println!("listening on http://{local}");
+    println!("  POST /v1/generate   (SSE stream; body: {{\"prompt\": [..], \"n_new\": N, ...}})");
+    println!("  GET  /v1/metrics    GET  /v1/models");
+    let duration = args.flag("duration", 0u64)?;
+    if duration > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+    } else {
+        loop {
+            // No signal handling offline: serve until the process is killed.
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    server.shutdown();
+    let metrics = engine.metrics().clone();
+    let tp = metrics.tpot_percentiles();
+    println!(
+        "served: {} completed, {} cancelled, {} tokens out | tpot ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.cancelled.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.tokens_out.load(std::sync::atomic::Ordering::Relaxed),
+        tp.p50,
+        tp.p95,
+        tp.p99
+    );
+    drop(engine); // Engine::drop joins the workers
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pquant::serve::{GenRequest, SamplingParams, SubmitError};
+    use std::time::Instant;
+
+    let stack = build_serve_stack(args)?;
+    if let Some(addr) = args.flags.get("http").cloned() {
+        return serve_http(args, stack, &addr);
+    }
+    let requests = args.flag("requests", 16usize)?;
+    let new_tokens = args.flag("new-tokens", 32usize)?;
+    let spec_k = args.flag("spec-k", 4usize)?;
+    let temperature = args.flag("temperature", 0.0f32)?;
+    let top_k = args.flag("top-k", 0usize)?;
+    let seed = args.flag("seed", 0u64)?;
+    let ServeStack { engine, speculative, vocab, .. } = stack;
     let t0 = Instant::now();
     let mut tickets = Vec::with_capacity(requests);
     for id in 0..requests {
@@ -382,9 +448,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let qw = metrics.queue_wait_percentiles();
     let tt = metrics.ttft_percentiles();
+    let tp = metrics.tpot_percentiles();
     println!(
-        "queue wait ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   ttft ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
-        qw.p50, qw.p95, qw.p99, tt.p50, tt.p95, tt.p99
+        "queue wait ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   ttft ms: p50 {:.1}  p95 {:.1}  p99 {:.1}   \
+         tpot ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        qw.p50, qw.p95, qw.p99, tt.p50, tt.p95, tt.p99, tp.p50, tp.p95, tp.p99
     );
     let occ = metrics.batch_occupancy_percentiles();
     println!(
@@ -430,6 +498,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    use pquant::serve::loadgen::{self, Target, TraceConfig};
+
+    // Trace shape: defaults form a sane bursty mix; every knob is a flag.
+    let mut cfg = TraceConfig {
+        seed: args.flag("seed", 0u64)?,
+        n_requests: args.flag("requests", 64usize)?,
+        rate: args.flag("rate", 200.0f64)?,
+        burst_factor: args.flag("burst-factor", 4.0f64)?,
+        burst_on_s: args.flag("burst-on", 0.15f64)?,
+        burst_off_s: args.flag("burst-off", 0.35f64)?,
+        shared_frac: args.flag("shared-frac", 0.4f64)?,
+        shared_prefix_len: args.flag("shared-prefix", 16usize)?,
+        draft_frac: args.flag("draft-frac", 0.0f64)?,
+        spec_k: args.flag("spec-k", 4usize)?,
+        max_retries: args.flag("max-retries", 8usize)?,
+        ..TraceConfig::default()
+    };
+    if let Some(spec) = args.flags.get("prompt-lens") {
+        cfg.prompt_lens = loadgen::parse_mixture(spec)?;
+    }
+    if let Some(spec) = args.flags.get("output-lens") {
+        cfg.output_lens = loadgen::parse_mixture(spec)?;
+    }
+    let out_path = std::path::PathBuf::from(
+        args.flag("out", "results/bench/loadgen.json".to_string())?,
+    );
+
+    // Target: a live HTTP endpoint, or an in-process engine stack built
+    // with the same flags as `serve`.
+    let report = if let Some(addr) = args.flags.get("http") {
+        cfg.vocab = args.flag("vocab", cfg.vocab)?;
+        if cfg.draft_frac > 0.0 {
+            cfg.draft_model = Some(args.flag("draft-name", "draft".to_string())?);
+        }
+        loadgen::run(Target::Http(addr.clone()), &cfg)?
+    } else {
+        let stack = build_serve_stack(args)?;
+        cfg.vocab = stack.vocab;
+        if stack.speculative && cfg.draft_frac > 0.0 {
+            cfg.draft_model = Some("draft".into());
+        }
+        let report = loadgen::run(Target::Engine(&stack.engine), &cfg)?;
+        let metrics = stack.engine.shutdown();
+        println!(
+            "engine: {} completed, {} preempted | server-side tpot ms p50 {:.1} p95 {:.1}",
+            metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+            metrics.preempted.load(std::sync::atomic::Ordering::Relaxed),
+            metrics.tpot_percentiles().p50,
+            metrics.tpot_percentiles().p95,
+        );
+        report
+    };
+
+    println!(
+        "loadtest: {} submitted, {} completed, {} rejected | {} x429 {} x503 | \
+         {:.1} tokens/s | goodput {:.0}%",
+        report.submitted,
+        report.completed,
+        report.rejected,
+        report.retries_429,
+        report.retries_503,
+        report.throughput(),
+        report.goodput() * 100.0
+    );
+    for t in &report.tiers {
+        println!(
+            "  {:12} prio {:>2}  n {:>4}  slo-met {:>4} ({:>3.0}%)  \
+             ttft ms p50 {:.1} p95 {:.1} p99 {:.1} (target {:.0})  \
+             tpot ms p50 {:.1} p95 {:.1} p99 {:.1} (target {:.0})",
+            t.name,
+            t.priority,
+            t.n,
+            t.slo_met,
+            t.goodput * 100.0,
+            t.ttft.p50,
+            t.ttft.p95,
+            t.ttft.p99,
+            t.targets.ttft_ms,
+            t.tpot.p50,
+            t.tpot.p95,
+            t.tpot.p99,
+            t.targets.tpot_ms
+        );
+    }
+    report.write(&out_path)?;
+    println!("wrote {}", out_path.display());
     Ok(())
 }
 

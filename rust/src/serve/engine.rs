@@ -203,17 +203,29 @@ impl std::fmt::Display for DraftError {
     }
 }
 
+/// Suggested client back-off attached to transient backpressure
+/// rejections, derived from the engine's recent mean service time and the
+/// occupancy of the resource that rejected the request (admission-queue
+/// depth or KV pool utilization). It is guidance, not a guarantee:
+/// retrying sooner only burns submit attempts, because slots and blocks
+/// cannot free faster than in-flight work completes. Consumed by the HTTP
+/// front end (`Retry-After` on 429/503) and the load generator's
+/// client-side retry loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryAfter(pub Duration);
+
 /// Why [`Engine::submit`] rejected a request. The request rides back in
 /// the error so backpressured callers can retry without cloning.
 #[derive(Debug, Clone)]
 pub enum SubmitError {
-    /// The bounded admission queue is full — retry later (backpressure).
-    QueueFull(GenRequest),
+    /// The bounded admission queue is full — retry after the suggested
+    /// back-off (backpressure).
+    QueueFull(GenRequest, RetryAfter),
     /// The KV block pool cannot cover the request's worst case — retry as
     /// in-flight requests finish and free blocks (backpressure). If the
     /// request outranked an in-flight one, a preemption has been flagged
     /// and a retry will find the blocks freed.
-    KvExhausted(GenRequest),
+    KvExhausted(GenRequest, RetryAfter),
     /// The request's worst-case KV need exceeds the entire pool — no
     /// amount of draining (or retrying) can ever admit it. Shrink the
     /// prompt/budget or grow the pool (`--kv-blocks`).
@@ -231,14 +243,23 @@ impl SubmitError {
     /// [`SubmitError::KvExhausted`]): a retry can succeed once in-flight
     /// work drains. The other variants are terminal for this request.
     pub fn is_backpressure(&self) -> bool {
-        matches!(self, SubmitError::QueueFull(_) | SubmitError::KvExhausted(_))
+        matches!(self, SubmitError::QueueFull(..) | SubmitError::KvExhausted(..))
+    }
+
+    /// Suggested wait before retrying — `Some` only on the transient
+    /// backpressure variants.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            SubmitError::QueueFull(_, ra) | SubmitError::KvExhausted(_, ra) => Some(ra.0),
+            _ => None,
+        }
     }
 
     /// Take the request back out of the error for a retry.
     pub fn into_request(self) -> GenRequest {
         match self {
-            SubmitError::QueueFull(r)
-            | SubmitError::KvExhausted(r)
+            SubmitError::QueueFull(r, _)
+            | SubmitError::KvExhausted(r, _)
             | SubmitError::KvTooLarge(r)
             | SubmitError::DraftRejected(r, _)
             | SubmitError::ShuttingDown(r) => r,
@@ -249,8 +270,12 @@ impl SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::QueueFull(_) => write!(f, "admission queue full"),
-            SubmitError::KvExhausted(_) => write!(f, "KV block pool exhausted"),
+            SubmitError::QueueFull(_, ra) => {
+                write!(f, "admission queue full (retry in ~{} ms)", ra.0.as_millis())
+            }
+            SubmitError::KvExhausted(_, ra) => {
+                write!(f, "KV block pool exhausted (retry in ~{} ms)", ra.0.as_millis())
+            }
             SubmitError::KvTooLarge(_) => {
                 write!(f, "request exceeds the whole KV block pool")
             }
@@ -285,6 +310,15 @@ impl Ticket {
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<Event> {
         self.events.try_recv().ok()
+    }
+
+    /// Bounded-wait receive; lets a streaming front end interleave event
+    /// delivery with client-liveness probes (disconnect detection).
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Event, std::sync::mpsc::RecvTimeoutError> {
+        self.events.recv_timeout(timeout)
     }
 
     /// Drain the stream to completion and return the final stats.
@@ -323,7 +357,21 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
-    fn of(samples: &[f64]) -> Percentiles {
+    /// `{n, p50, p95, p99}` — the wire form used by `/v1/metrics` and the
+    /// load generator's SLO report.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("p50", num(self.p50)),
+            ("p95", num(self.p95)),
+            ("p99", num(self.p99)),
+        ])
+    }
+
+    /// Compute from a raw sample set (also used by the load generator's
+    /// client-side latency series).
+    pub fn of(samples: &[f64]) -> Percentiles {
         if samples.is_empty() {
             return Percentiles::default();
         }
@@ -390,8 +438,15 @@ pub struct ServeMetrics {
     /// Speculative requests degraded to plain decode (draft removed,
     /// vocab-incompatible after a hot-swap, or draft KV exhausted).
     pub spec_degraded: AtomicUsize,
+    /// Service time (admission → completion) of finished requests, kept as
+    /// a running mean (µs sum + count) for retry-after derivation.
+    service_us: AtomicU64,
+    service_n: AtomicUsize,
     queue_wait_ms: Mutex<SampleRing>,
     ttft_ms: Mutex<SampleRing>,
+    /// Per-request mean inter-token latency (time from first to last
+    /// token over tokens−1), recorded for requests that emitted ≥ 2.
+    tpot_ms: Mutex<SampleRing>,
     batch_occ: Mutex<SampleRing>,
     /// The workers' KV pool (None on the legacy contiguous path).
     pool: Option<Arc<BlockPool>>,
@@ -401,11 +456,29 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
-    fn record_latency(&self, queue_wait: Duration, ttft: Option<Duration>) {
+    fn record_latency(&self, queue_wait: Duration, ttft: Option<Duration>, tpot: Option<f64>) {
         self.queue_wait_ms.lock().unwrap().push(queue_wait.as_secs_f64() * 1e3);
         if let Some(t) = ttft {
             self.ttft_ms.lock().unwrap().push(t.as_secs_f64() * 1e3);
         }
+        if let Some(t) = tpot {
+            self.tpot_ms.lock().unwrap().push(t);
+        }
+    }
+
+    fn record_service(&self, service: Duration) {
+        self.service_us.fetch_add(service.as_micros() as u64, Ordering::Relaxed);
+        self.service_n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean service time (admission → completion) over finished requests;
+    /// `None` before any finished. The retry-after hints scale off this.
+    pub fn mean_service(&self) -> Option<Duration> {
+        let n = self.service_n.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        Some(Duration::from_micros(self.service_us.load(Ordering::Relaxed) / n as u64))
     }
 
     /// One fused batch step of `seqs` sequences covering `rows` rows.
@@ -449,6 +522,13 @@ impl ServeMetrics {
     /// p50/p95/p99 of submission → first token, in ms (most recent window).
     pub fn ttft_percentiles(&self) -> Percentiles {
         Percentiles::of(&self.ttft_ms.lock().unwrap().samples)
+    }
+
+    /// p50/p95/p99 of per-request mean inter-token latency (TPOT), in ms
+    /// (most recent window; requests that emitted ≥ 2 tokens). With TTFT
+    /// this is the SLO pair the load generator scores against.
+    pub fn tpot_percentiles(&self) -> Percentiles {
+        Percentiles::of(&self.tpot_ms.lock().unwrap().samples)
     }
 
     /// KV pool utilization, shared-block hit rate, CoW/eviction counters —
@@ -505,6 +585,68 @@ impl ServeMetrics {
         }
         self.spec_tokens.load(Ordering::Relaxed) as f64 / steps as f64
     }
+
+    /// Full snapshot as JSON — the `GET /v1/metrics` payload and the load
+    /// generator's server-side reconciliation source.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, Json};
+        let c = |a: &AtomicUsize| num(a.load(Ordering::Relaxed) as f64);
+        let mut pairs = vec![
+            ("completed", c(&self.completed)),
+            ("cancelled", c(&self.cancelled)),
+            ("failed", c(&self.failed)),
+            ("preempted", c(&self.preempted)),
+            ("tokens_out", c(&self.tokens_out)),
+            ("peak_active", c(&self.peak_active)),
+            ("batch_steps", c(&self.batch_steps)),
+            ("mean_batch_rows", num(self.mean_batch_rows())),
+            ("mean_batch_seqs", num(self.mean_batch_seqs())),
+            ("mean_service_ms", match self.mean_service() {
+                Some(d) => num(d.as_secs_f64() * 1e3),
+                None => Json::Null,
+            }),
+            ("queue_wait_ms", self.queue_wait_percentiles().to_json()),
+            ("ttft_ms", self.ttft_percentiles().to_json()),
+            ("tpot_ms", self.tpot_percentiles().to_json()),
+            ("batch_occupancy_rows", self.batch_occupancy_percentiles().to_json()),
+            (
+                "spec",
+                obj(vec![
+                    ("requests", c(&self.spec_requests)),
+                    ("draft_steps", c(&self.draft_steps)),
+                    ("verify_steps", c(&self.verify_steps)),
+                    ("draft_tokens", c(&self.draft_tokens)),
+                    ("accepted_tokens", c(&self.accepted_tokens)),
+                    ("degraded", c(&self.spec_degraded)),
+                    ("acceptance_rate", num(self.acceptance_rate())),
+                    ("tokens_per_verify", num(self.spec_tokens_per_verify())),
+                ]),
+            ),
+        ];
+        if let Some(kv) = self.kv() {
+            pairs.push(("kv", kv_stats_json(&kv)));
+        }
+        obj(pairs)
+    }
+}
+
+/// [`KvPoolStats`] as JSON (shared by `/v1/metrics` and the SLO report).
+pub fn kv_stats_json(kv: &KvPoolStats) -> crate::util::json::Json {
+    use crate::util::json::{num, obj};
+    obj(vec![
+        ("n_blocks", num(kv.n_blocks as f64)),
+        ("block_size", num(kv.block_size as f64)),
+        ("in_use", num(kv.in_use as f64)),
+        ("utilization", num(kv.utilization)),
+        ("peak_utilization", num(kv.peak_utilization)),
+        ("shared_attached", num(kv.shared_attached as f64)),
+        ("prompt_blocks", num(kv.prompt_blocks as f64)),
+        ("shared_hit_rate", num(kv.shared_hit_rate)),
+        ("cow_copies", num(kv.cow_copies as f64)),
+        ("evicted_blocks", num(kv.evicted_blocks as f64)),
+        ("unused_tail_returned", num(kv.unused_tail_returned as f64)),
+        ("registered_prefixes", num(kv.registered_prefixes as f64)),
+    ])
 }
 
 /// Engine tuning knobs.
@@ -625,7 +767,17 @@ pub struct Engine {
     model: String,
     pool: Option<Arc<BlockPool>>,
     shared: Arc<EngineShared>,
+    /// Admission-queue depth and total batch slots (workers × max_batch),
+    /// kept for retry-after derivation.
+    queue_depth: usize,
+    slots: usize,
 }
+
+/// Retry-after clamp bounds and the cold-start fallback (no completed
+/// request yet to estimate service time from).
+const RETRY_FLOOR: Duration = Duration::from_millis(1);
+const RETRY_CEIL: Duration = Duration::from_secs(2);
+const RETRY_DEFAULT: Duration = Duration::from_millis(25);
 
 impl Engine {
     /// Spawn the decode workers against `opts.model` in `registry`. Fails
@@ -662,7 +814,26 @@ impl Engine {
             model: opts.model,
             pool,
             shared,
+            queue_depth: opts.queue_depth.max(1),
+            slots: opts.workers.max(1) * opts.max_batch.max(1),
         })
+    }
+
+    /// Back-off for a full admission queue: the backlog drains in roughly
+    /// `queue_depth / slots` service times.
+    fn queue_retry_after(&self) -> RetryAfter {
+        let mean = self.metrics.mean_service().unwrap_or(RETRY_DEFAULT);
+        let rounds = ((self.queue_depth + self.slots - 1) / self.slots).max(1) as u32;
+        RetryAfter((mean * rounds).clamp(RETRY_FLOOR, RETRY_CEIL))
+    }
+
+    /// Back-off for a dry KV pool: scaled by pool occupancy — a pool that
+    /// is mostly map-held (low live utilization) frees on the next evict,
+    /// a fully live pool frees only as requests complete.
+    fn kv_retry_after(&self) -> RetryAfter {
+        let mean = self.metrics.mean_service().unwrap_or(RETRY_DEFAULT);
+        let util = self.pool.as_ref().map_or(1.0, |p| p.stats().utilization).max(0.25);
+        RetryAfter(mean.mul_f64(util).clamp(RETRY_FLOOR, RETRY_CEIL))
     }
 
     /// Submit a request. Zero-budget requests complete immediately with
@@ -729,7 +900,7 @@ impl Engine {
                     }
                     Err(KvError::OutOfBlocks { .. } | KvError::CacheOverflow { .. }) => {
                         self.flag_preemption(req.priority);
-                        return Err(SubmitError::KvExhausted(req));
+                        return Err(SubmitError::KvExhausted(req, self.kv_retry_after()));
                     }
                 }
             }
@@ -739,7 +910,9 @@ impl Engine {
         match tx.try_send(adm) {
             // A dropped rejection releases its KV reservation on the way out.
             Ok(()) => Ok(ticket),
-            Err(TrySendError::Full(adm)) => Err(SubmitError::QueueFull(adm.req)),
+            Err(TrySendError::Full(adm)) => {
+                Err(SubmitError::QueueFull(adm.req, self.queue_retry_after()))
+            }
             Err(TrySendError::Disconnected(adm)) => Err(SubmitError::ShuttingDown(adm.req)),
         }
     }
@@ -753,8 +926,14 @@ impl Engine {
             match self.submit(req) {
                 Ok(t) => return Ok(t),
                 Err(e) if e.is_backpressure() => {
+                    // Honor the engine's own guidance, capped so a caller
+                    // polling a nearly-drained queue is not oversleeping.
+                    let wait = e
+                        .retry_after()
+                        .unwrap_or(Duration::from_millis(1))
+                        .min(Duration::from_millis(20));
                     req = e.into_request();
-                    std::thread::sleep(Duration::from_millis(1));
+                    std::thread::sleep(wait);
                 }
                 Err(e) => return Err(e),
             }
@@ -1100,12 +1279,24 @@ struct ActiveRequest {
 
 fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     let queue_wait = a.started - a.enqueued;
+    let service = a.started.elapsed();
     match reason {
         FinishReason::Cancelled => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
         _ => metrics.completed.fetch_add(1, Ordering::Relaxed),
     };
-    metrics.record_latency(queue_wait, a.first_token);
+    // TPOT: mean inter-token gap from the first to the last emitted token
+    // (finish runs right after the last emission, so "now" is the last
+    // token's timestamp to within a send).
+    let tpot = match a.first_token {
+        Some(first) if a.tokens.len() >= 2 => Some(
+            a.enqueued.elapsed().saturating_sub(first).as_secs_f64() * 1e3
+                / (a.tokens.len() - 1) as f64,
+        ),
+        _ => None,
+    };
+    metrics.record_latency(queue_wait, a.first_token, tpot);
+    metrics.record_service(service);
     let _ = a.events.send(Event::Done(GenStats {
         id: a.id,
         tokens: a.tokens,
@@ -1113,7 +1304,7 @@ fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
         generation: a.generation,
         queue_wait,
         ttft: a.first_token,
-        service_time: a.started.elapsed(),
+        service_time: service,
     }));
 }
 
@@ -1159,7 +1350,8 @@ fn finish_preempted(p: Preempted, reason: FinishReason, metrics: &ServeMetrics) 
         _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
     };
     let queue_wait = p.started - p.enqueued;
-    metrics.record_latency(queue_wait, p.first_token);
+    // No TPOT sample: the parked interval would inflate the gap.
+    metrics.record_latency(queue_wait, p.first_token, None);
     let _ = p.events.send(Event::Done(GenStats {
         id: p.id,
         tokens: p.emitted,

@@ -1,0 +1,574 @@
+//! HTTP/1.1 + SSE serving front end — the engine's network surface.
+//!
+//! A dependency-free threaded server over [`std::net::TcpListener`] (the
+//! offline crate set has no tokio/hyper): one accept thread, one handler
+//! thread per connection, JSON via [`crate::util::json`]. Routes:
+//!
+//!   * `POST /v1/generate` — JSON body → [`GenRequest`], response streamed
+//!     as Server-Sent Events (`prefilled` / `token` / `done` frames). A
+//!     client disconnect mid-stream cancels the request via
+//!     [`Ticket::cancel`] and drains it, so its worker slot and KV blocks
+//!     are freed. Backpressure maps to HTTP: `QueueFull` → 429 and
+//!     `KvExhausted` → 503, both with a `Retry-After` header (and a
+//!     `retry_after_ms` body field) carrying the engine's typed
+//!     [`RetryAfter`] guidance; `KvTooLarge` → 413, draft rejections and
+//!     malformed bodies → 400.
+//!   * `GET /v1/metrics` — [`ServeMetrics::to_json`] snapshot per routed
+//!     engine.
+//!   * `GET /v1/models` — the [`ModelRegistry`] listing.
+//!
+//! Requests route to an engine by the optional `"model"` body key (the
+//! [`Router`] maps model names to engines; the first added is the
+//! default), and may request speculative decoding with
+//! `"draft_model"`/`"spec_k"`, resolved against the registry at submit
+//! time. [`HttpServer::shutdown`] stops accepting, 503s new generate
+//! requests, and joins every in-flight handler — live streams drain to
+//! their `done` frame. See `docs/serving.md` for the wire format.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{
+    Engine, Event, FinishReason, GenRequest, ModelRegistry, SamplingParams, SubmitError, Ticket,
+};
+
+/// How long the SSE loop waits for the next engine event before probing
+/// the socket for a client disconnect.
+const EVENT_POLL: Duration = Duration::from_millis(20);
+/// Header-read timeout: a connection that never finishes its request line
+/// must not pin a handler thread forever.
+const HEADER_TIMEOUT: Duration = Duration::from_secs(5);
+/// Caps on untrusted input.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Maps request `"model"` keys to engines. One engine serves one registry
+/// name, so a multi-model server runs one engine per served name; the
+/// first route added is the default for bodies without a `"model"` key.
+pub struct Router {
+    registry: Arc<ModelRegistry>,
+    routes: Vec<(String, Arc<Engine>)>,
+}
+
+impl Router {
+    pub fn new(registry: Arc<ModelRegistry>) -> Router {
+        Router { registry, routes: Vec::new() }
+    }
+
+    /// Route `name` to `engine`; the first route added becomes the
+    /// default. Builder-style so tests read as one expression.
+    pub fn route(mut self, name: impl Into<String>, engine: Arc<Engine>) -> Router {
+        self.routes.push((name.into(), engine));
+        self
+    }
+
+    /// Resolve a request's `model` key; `None` key means the default.
+    fn engine(&self, name: Option<&str>) -> Option<&Arc<Engine>> {
+        match name {
+            None => self.routes.first().map(|(_, e)| e),
+            Some(n) => self.routes.iter().find(|(name, _)| name == n).map(|(_, e)| e),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+}
+
+struct ServerState {
+    router: Router,
+    stopping: AtomicBool,
+}
+
+/// The serving front end: accept loop + per-connection handler threads.
+/// Dropping (or [`HttpServer::shutdown`]) stops accepting and joins every
+/// in-flight handler, draining live SSE streams.
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port 0 for an ephemeral
+    /// test port) and start serving `router`'s engines.
+    pub fn bind(addr: &str, router: Router) -> Result<HttpServer> {
+        if router.routes.is_empty() {
+            return Err(anyhow!("router has no engines"));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(ServerState { router, stopping: AtomicBool::new(false) });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = state.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if state.stopping.load(Ordering::Acquire) {
+                        break; // the shutdown self-connect lands here too
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let state = state.clone();
+                    let handle = std::thread::spawn(move || handle_connection(stream, &state));
+                    let mut conns = conns.lock().unwrap();
+                    // Reap finished handlers so a long-lived server does
+                    // not accumulate one JoinHandle per past request.
+                    conns.retain(|h| !h.is_finished());
+                    conns.push(handle);
+                }
+            })
+        };
+        Ok(HttpServer { addr: local, state, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, reject new generate requests
+    /// with 503, and block until every in-flight stream has drained.
+    pub fn shutdown(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        if self
+            .state
+            .stopping
+            .swap(true, Ordering::AcqRel)
+        {
+            return;
+        }
+        // Unblock the accept loop (it re-checks `stopping` per connection).
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+// ------------------------------------------------------------ HTTP plumbing
+
+struct Request {
+    method: String,
+    path: String,
+    headers: HashMap<String, String>,
+    body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request (request line, headers, Content-Length body).
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Request> {
+    stream.set_read_timeout(Some(HEADER_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "bad request line"));
+    }
+    let mut headers = HashMap::new();
+    let mut header_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        header_bytes += h.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(std::io::Error::new(ErrorKind::InvalidData, "headers too large"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "body too large"));
+    }
+    // curl sends Expect: 100-continue before large bodies and waits for
+    // the interim response.
+    if headers.get("expect").is_some_and(|v| v.eq_ignore_ascii_case("100-continue")) {
+        reader.get_ref().try_clone()?.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// One-shot JSON response (everything except the SSE stream).
+fn respond_json(stream: &mut TcpStream, code: u16, extra: &[(&str, String)], body: &Json) {
+    let payload = body.to_string();
+    let mut head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_text(code),
+        payload.len()
+    );
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(payload.as_bytes());
+    let _ = stream.flush();
+}
+
+fn respond_error(stream: &mut TcpStream, code: u16, msg: &str) {
+    respond_json(stream, code, &[], &obj(vec![("error", s(msg))]));
+}
+
+/// 429/503 with the engine's typed retry guidance: a `Retry-After` header
+/// (integer seconds, floored at 1 as HTTP requires) plus the precise
+/// `retry_after_ms` in the body for clients that can sleep sub-second.
+fn respond_backpressure(stream: &mut TcpStream, code: u16, msg: &str, retry_after: Duration) {
+    let secs = retry_after.as_secs_f64().ceil().max(1.0) as u64;
+    respond_json(
+        stream,
+        code,
+        &[("Retry-After", secs.to_string())],
+        &obj(vec![
+            ("error", s(msg)),
+            ("retry_after_ms", num(retry_after.as_secs_f64() * 1e3)),
+        ]),
+    );
+}
+
+// ------------------------------------------------------------------ routes
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => {
+            respond_error(&mut stream, 400, "malformed HTTP request");
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(stream, state, &req),
+        ("GET", "/v1/models") => {
+            let models: Vec<Json> = state
+                .router
+                .registry
+                .info()
+                .into_iter()
+                .map(|m| {
+                    obj(vec![
+                        ("name", s(&m.name)),
+                        ("generation", num(m.generation as f64)),
+                        ("variant", s(m.variant.name())),
+                        ("params", num(m.params as f64)),
+                        ("storage_bytes", num(m.storage_bytes as f64)),
+                        ("has_tokenizer", Json::Bool(m.has_tokenizer)),
+                        (
+                            "routed",
+                            Json::Bool(state.router.routes.iter().any(|(n, _)| *n == m.name)),
+                        ),
+                    ])
+                })
+                .collect();
+            respond_json(&mut stream, 200, &[], &obj(vec![("models", arr(models))]));
+        }
+        ("GET", "/v1/metrics") => {
+            let per_engine: Vec<(&str, Json)> = state
+                .router
+                .routes
+                .iter()
+                .map(|(name, engine)| (name.as_str(), engine.metrics().to_json()))
+                .collect();
+            respond_json(&mut stream, 200, &[], &obj(per_engine));
+        }
+        ("GET", "/v1/generate") => respond_error(&mut stream, 405, "use POST /v1/generate"),
+        _ => respond_error(&mut stream, 404, "unknown route"),
+    }
+}
+
+/// Parsed `POST /v1/generate` body.
+struct GenerateBody {
+    model: Option<String>,
+    req: GenRequest,
+}
+
+fn parse_generate(state: &ServerState, body: &[u8]) -> std::result::Result<GenerateBody, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let model = j.opt("model").map(|m| m.as_str().map(str::to_string)).transpose()
+        .map_err(|_| "\"model\" must be a string".to_string())?;
+    // Prompt: either explicit token ids, or text encoded with the routed
+    // model's embedded tokenizer.
+    let prompt: Vec<u32> = match (j.opt("prompt"), j.opt("text")) {
+        (Some(p), _) => p
+            .as_arr()
+            .map_err(|_| "\"prompt\" must be an array of token ids".to_string())?
+            .iter()
+            .map(|t| t.as_usize().map(|v| v as u32))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|_| "\"prompt\" must be non-negative integers".to_string())?,
+        (None, Some(t)) => {
+            let text = t.as_str().map_err(|_| "\"text\" must be a string".to_string())?;
+            let name = model.as_deref().unwrap_or_else(|| {
+                state.router.routes.first().map(|(n, _)| n.as_str()).unwrap_or("")
+            });
+            let lease = state
+                .router
+                .registry
+                .acquire(name)
+                .ok_or_else(|| format!("unknown model {name:?}"))?;
+            match lease.tokenizer.as_ref() {
+                Some(bpe) => bpe.encode(text),
+                None => return Err(format!("model {name:?} has no embedded tokenizer")),
+            }
+        }
+        (None, None) => return Err("body needs \"prompt\" (token ids) or \"text\"".to_string()),
+    };
+    let n_new = match j.opt("n_new").or_else(|| j.opt("max_tokens")) {
+        Some(v) => v.as_usize().map_err(|_| "\"n_new\" must be a non-negative integer".to_string())?,
+        None => 16,
+    };
+    let f64_key = |key: &str, default: f64| -> std::result::Result<f64, String> {
+        match j.opt(key) {
+            Some(v) => v.as_f64().map_err(|_| format!("{key:?} must be a number")),
+            None => Ok(default),
+        }
+    };
+    let usize_key = |key: &str, default: usize| -> std::result::Result<usize, String> {
+        match j.opt(key) {
+            Some(v) => v.as_usize().map_err(|_| format!("{key:?} must be a non-negative integer")),
+            None => Ok(default),
+        }
+    };
+    let stop_tokens: Vec<u32> = match j.opt("stop_tokens") {
+        Some(v) => v
+            .as_arr()
+            .map_err(|_| "\"stop_tokens\" must be an array".to_string())?
+            .iter()
+            .map(|t| t.as_usize().map(|v| v as u32))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|_| "\"stop_tokens\" must be non-negative integers".to_string())?,
+        None => Vec::new(),
+    };
+    let sampling = SamplingParams {
+        temperature: f64_key("temperature", 0.0)? as f32,
+        top_k: usize_key("top_k", 0)?,
+        seed: usize_key("seed", 0)? as u64,
+        stop_tokens,
+    };
+    let priority = match j.opt("priority") {
+        Some(v) => v.as_f64().map_err(|_| "\"priority\" must be a number".to_string())? as i32,
+        None => 0,
+    };
+    let mut req = GenRequest::sampled(prompt, n_new, sampling).with_priority(priority);
+    if let Some(d) = j.opt("draft_model") {
+        let draft = d.as_str().map_err(|_| "\"draft_model\" must be a string".to_string())?;
+        req = req.with_spec(draft, usize_key("spec_k", 4)?);
+    }
+    Ok(GenerateBody { model, req })
+}
+
+fn handle_generate(mut stream: TcpStream, state: &ServerState, req: &Request) {
+    if state.stopping.load(Ordering::Acquire) {
+        respond_error(&mut stream, 503, "server shutting down");
+        return;
+    }
+    if !req
+        .headers
+        .get("content-type")
+        .map_or(true, |t| t.starts_with("application/json"))
+    {
+        respond_error(&mut stream, 400, "Content-Type must be application/json");
+        return;
+    }
+    let parsed = match parse_generate(state, &req.body) {
+        Ok(p) => p,
+        Err(msg) => {
+            respond_error(&mut stream, 400, &msg);
+            return;
+        }
+    };
+    let Some(engine) = state.router.engine(parsed.model.as_deref()) else {
+        respond_error(
+            &mut stream,
+            404,
+            &format!("no engine routed for model {:?}", parsed.model.as_deref().unwrap_or("?")),
+        );
+        return;
+    };
+    let ticket = match engine.submit(parsed.req) {
+        Ok(t) => t,
+        Err(e @ SubmitError::QueueFull(..)) => {
+            let ra = e.retry_after().unwrap_or(Duration::from_millis(25));
+            respond_backpressure(&mut stream, 429, &e.to_string(), ra);
+            return;
+        }
+        Err(e @ SubmitError::KvExhausted(..)) => {
+            let ra = e.retry_after().unwrap_or(Duration::from_millis(25));
+            respond_backpressure(&mut stream, 503, &e.to_string(), ra);
+            return;
+        }
+        Err(e @ SubmitError::KvTooLarge(_)) => {
+            respond_error(&mut stream, 413, &e.to_string());
+            return;
+        }
+        Err(e @ SubmitError::DraftRejected(..)) => {
+            respond_error(&mut stream, 400, &e.to_string());
+            return;
+        }
+        Err(e @ SubmitError::ShuttingDown(_)) => {
+            respond_error(&mut stream, 503, &e.to_string());
+            return;
+        }
+    };
+    stream_sse(stream, ticket);
+}
+
+// ----------------------------------------------------------------- the SSE
+
+fn sse_frame(event: &str, data: &Json) -> String {
+    format!("event: {event}\ndata: {}\n\n", data.to_string())
+}
+
+fn finish_name(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Failed => "failed",
+    }
+}
+
+/// Has the peer closed its end? Probed between engine events with a tiny
+/// read timeout: `Ok(0)` is EOF (client gone), `WouldBlock`/`TimedOut`
+/// means it is still there. Request bytes the client pipelines after the
+/// body are ignored.
+fn client_gone(stream: &mut TcpStream) -> bool {
+    let mut buf = [0u8; 64];
+    if stream.set_read_timeout(Some(Duration::from_millis(1))).is_err() {
+        return true;
+    }
+    match stream.read(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut),
+    }
+}
+
+/// Stream one ticket as SSE. On client disconnect (probe or failed write)
+/// the request is cancelled *and drained to its terminal event*, so the
+/// engine has already released its worker slot and KV blocks by the time
+/// this handler returns.
+fn stream_sse(mut stream: TcpStream, ticket: Ticket) {
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        cancel_and_drain(&ticket);
+        return;
+    }
+    let mut index = 0usize;
+    loop {
+        let event = match ticket.recv_timeout(EVENT_POLL) {
+            Ok(ev) => ev,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(&mut stream) {
+                    cancel_and_drain(&ticket);
+                    return;
+                }
+                continue;
+            }
+            // Engine torn down without a Done; nothing more will arrive.
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let frame = match &event {
+            Event::Prefilled { prompt_len } => sse_frame(
+                "prefilled",
+                &obj(vec![("prompt_len", num(*prompt_len as f64))]),
+            ),
+            Event::Token(t) => {
+                let f = sse_frame(
+                    "token",
+                    &obj(vec![("token", num(*t as f64)), ("index", num(index as f64))]),
+                );
+                index += 1;
+                f
+            }
+            Event::Done(stats) => sse_frame(
+                "done",
+                &obj(vec![
+                    ("finish", s(finish_name(stats.finish))),
+                    ("n_tokens", num(stats.tokens.len() as f64)),
+                    ("tokens", arr(stats.tokens.iter().map(|&t| num(t as f64)))),
+                    ("generation", num(stats.generation as f64)),
+                    ("queue_wait_ms", num(stats.queue_wait.as_secs_f64() * 1e3)),
+                    (
+                        "ttft_ms",
+                        match stats.ttft {
+                            Some(t) => num(t.as_secs_f64() * 1e3),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("service_ms", num(stats.service_time.as_secs_f64() * 1e3)),
+                ]),
+            ),
+        };
+        if stream.write_all(frame.as_bytes()).is_err() || stream.flush().is_err() {
+            cancel_and_drain(&ticket);
+            return;
+        }
+        if matches!(event, Event::Done(_)) {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+/// Cancel a ticket and block until the engine finishes it: the returned
+/// `Done` (or channel close) is the proof that the worker slot and every
+/// KV block the request held are back in their pools.
+fn cancel_and_drain(ticket: &Ticket) {
+    ticket.cancel();
+    loop {
+        match ticket.recv() {
+            Some(Event::Done(_)) | None => return,
+            Some(_) => {}
+        }
+    }
+}

@@ -1,0 +1,602 @@
+//! Trace-driven workload harness with SLO reporting.
+//!
+//! Serving numbers measured "in a loop" say little about behaviour under
+//! traffic shaped like real users, so this module replays a **seeded
+//! trace** — bursty arrivals (Poisson modulated by an on/off burst
+//! process), mixed prompt/output length distributions, a shared
+//! system-prompt fraction (exercising the KV prefix-share map), priority
+//! tiers with per-tier SLO targets, and a draft-enabled fraction — against
+//! either the in-process [`Engine`] or a live HTTP endpoint
+//! ([`Target::Http`], speaking the `serve::http` wire format over a raw
+//! `TcpStream`).
+//!
+//! The trace is built entirely up front by [`build_trace`] from a
+//! [`TraceConfig`] and a seed: same seed + config ⇒ byte-identical
+//! schedule, so runs are comparable across commits. Execution measures
+//! **client-observed** latencies (submit → first token, mean inter-token
+//! gap) and applies the engine's typed [`RetryAfter`] guidance in its
+//! retry loop when a submission bounces with 429/503-class backpressure.
+//!
+//! The result is a [`LoadReport`]: per-tier TTFT/TPOT percentiles vs.
+//! targets, **goodput** (fraction of a tier's requests that completed
+//! within SLO), and overall 429/503 retry/reject rates — serialized to
+//! `results/bench/loadgen.json` by the `repro loadtest` subcommand and
+//! `benches/loadgen.rs`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+
+use super::{Engine, Event, FinishReason, GenRequest, Percentiles, SamplingParams};
+
+/// Per-tier latency targets. A completed request "meets SLO" when its
+/// client-observed TTFT and TPOT both land under these.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+/// One priority tier in the workload mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    pub name: String,
+    /// Engine priority (higher preempts lower).
+    pub priority: i32,
+    /// Unnormalized share of requests landing in this tier.
+    pub weight: f64,
+    pub slo: SloTargets,
+}
+
+/// Everything that shapes the trace. Deterministic given `seed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Mean arrival rate (req/s) in the quiet state.
+    pub rate: f64,
+    /// Rate multiplier while a burst is on (Markov-modulated Poisson).
+    pub burst_factor: f64,
+    /// Mean burst / quiet-gap durations (seconds, exponential holding).
+    pub burst_on_s: f64,
+    pub burst_off_s: f64,
+    /// (length, weight) mixtures for prompt and output lengths.
+    pub prompt_lens: Vec<(usize, f64)>,
+    pub output_lens: Vec<(usize, f64)>,
+    /// Fraction of requests opening with the shared system prompt.
+    pub shared_frac: f64,
+    pub shared_prefix_len: usize,
+    pub tiers: Vec<Tier>,
+    /// Fraction of requests decoding speculatively (needs `draft_model`).
+    pub draft_frac: f64,
+    pub draft_model: Option<String>,
+    pub spec_k: usize,
+    /// Client-side retry budget per request on 429/503 backpressure.
+    pub max_retries: usize,
+    /// Token id space for synthetic prompts.
+    pub vocab: u32,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0,
+            n_requests: 64,
+            rate: 200.0,
+            burst_factor: 4.0,
+            burst_on_s: 0.15,
+            burst_off_s: 0.35,
+            prompt_lens: vec![(4, 0.5), (8, 0.3), (16, 0.2)],
+            output_lens: vec![(8, 0.6), (16, 0.3), (24, 0.1)],
+            shared_frac: 0.4,
+            shared_prefix_len: 16,
+            tiers: vec![
+                Tier {
+                    name: "interactive".into(),
+                    priority: 1,
+                    weight: 0.3,
+                    slo: SloTargets { ttft_ms: 250.0, tpot_ms: 50.0 },
+                },
+                Tier {
+                    name: "standard".into(),
+                    priority: 0,
+                    weight: 0.5,
+                    slo: SloTargets { ttft_ms: 500.0, tpot_ms: 100.0 },
+                },
+                Tier {
+                    name: "batch".into(),
+                    priority: -1,
+                    weight: 0.2,
+                    slo: SloTargets { ttft_ms: 2000.0, tpot_ms: 400.0 },
+                },
+            ],
+            draft_frac: 0.0,
+            draft_model: None,
+            spec_k: 4,
+            max_retries: 8,
+            vocab: 64,
+        }
+    }
+}
+
+/// One scheduled request: arrival offset + fully materialized payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at: Duration,
+    pub prompt: Vec<u32>,
+    pub n_new: usize,
+    pub tier: usize,
+    pub shared: bool,
+    pub draft: bool,
+}
+
+/// Materialize the whole schedule up front. A single RNG stream drawn in
+/// a fixed order makes the trace a pure function of (config, seed).
+pub fn build_trace(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    assert!(!cfg.tiers.is_empty(), "trace needs at least one tier");
+    assert!(!cfg.prompt_lens.is_empty() && !cfg.output_lens.is_empty());
+    let mut rng = Rng::new(cfg.seed ^ 0x6c6f6164); // "load"
+    let shared_prefix: Vec<u32> =
+        (0..cfg.shared_prefix_len).map(|_| rng.below(cfg.vocab as usize) as u32).collect();
+    let tier_weights: Vec<f64> = cfg.tiers.iter().map(|t| t.weight).collect();
+    let prompt_w: Vec<f64> = cfg.prompt_lens.iter().map(|&(_, w)| w).collect();
+    let output_w: Vec<f64> = cfg.output_lens.iter().map(|&(_, w)| w).collect();
+    // Exponential holding times drive the burst state machine; each
+    // arrival's interarrival gap is exponential at the state's rate.
+    let exp = |rng: &mut Rng, mean: f64| -> f64 { -mean * (1.0 - rng.f64()).max(1e-12).ln() };
+    let mut bursting = false;
+    let mut state_left = exp(&mut rng, cfg.burst_off_s);
+    let mut clock = 0.0f64;
+    let mut trace = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        let rate = if bursting { cfg.rate * cfg.burst_factor } else { cfg.rate };
+        let mut gap = exp(&mut rng, 1.0 / rate.max(1e-9));
+        // Burst state flips mid-gap: spend the remaining wait at the new
+        // state's rate (memorylessness makes the re-draw exact).
+        while gap > state_left {
+            gap -= state_left;
+            bursting = !bursting;
+            state_left = exp(&mut rng, if bursting { cfg.burst_on_s } else { cfg.burst_off_s });
+            let new_rate = if bursting { cfg.rate * cfg.burst_factor } else { cfg.rate };
+            gap = gap * rate / new_rate.max(1e-9);
+        }
+        state_left -= gap;
+        clock += gap;
+        let tier = rng.weighted(&tier_weights);
+        let prompt_len = cfg.prompt_lens[rng.weighted(&prompt_w)].0.max(1);
+        let n_new = cfg.output_lens[rng.weighted(&output_w)].0;
+        let shared = rng.f64() < cfg.shared_frac && cfg.shared_prefix_len > 0;
+        let draft = cfg.draft_model.is_some() && rng.f64() < cfg.draft_frac;
+        let mut prompt = Vec::with_capacity(prompt_len.max(cfg.shared_prefix_len + 1));
+        if shared {
+            prompt.extend_from_slice(&shared_prefix);
+        }
+        let tail = if shared { prompt_len.max(1) } else { prompt_len };
+        prompt.extend((0..tail).map(|_| rng.below(cfg.vocab as usize) as u32));
+        trace.push(TraceEvent { at: Duration::from_secs_f64(clock), prompt, n_new, tier, shared, draft });
+    }
+    trace
+}
+
+/// What the generator drives: the in-process engine, or a live HTTP
+/// endpoint speaking the `serve::http` wire format.
+pub enum Target<'a> {
+    Engine(&'a Engine),
+    Http(String),
+}
+
+/// Client-observed outcome of one request (after retries).
+#[derive(Debug, Clone)]
+struct Outcome {
+    tier: usize,
+    completed: bool,
+    ttft_ms: Option<f64>,
+    tpot_ms: Option<f64>,
+    tokens: usize,
+    retries_429: usize,
+    retries_503: usize,
+    rejected: bool,
+}
+
+/// Per-tier slice of the SLO report.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    pub name: String,
+    pub priority: i32,
+    pub targets: SloTargets,
+    pub n: usize,
+    pub completed: usize,
+    pub slo_met: usize,
+    /// Fraction of the tier's requests that completed within SLO.
+    pub goodput: f64,
+    pub ttft: Percentiles,
+    pub tpot: Percentiles,
+}
+
+/// The SLO attainment report for one trace replay.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub wall: Duration,
+    pub submitted: usize,
+    pub completed: usize,
+    /// Requests that exhausted their retry budget on backpressure.
+    pub rejected: usize,
+    pub retries_429: usize,
+    pub retries_503: usize,
+    pub tokens_out: usize,
+    pub tiers: Vec<TierReport>,
+}
+
+impl LoadReport {
+    pub fn throughput(&self) -> f64 {
+        self.tokens_out as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Overall goodput: SLO-met requests over all submitted.
+    pub fn goodput(&self) -> f64 {
+        let met: usize = self.tiers.iter().map(|t| t.slo_met).sum();
+        met as f64 / self.submitted.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("wall_s", num(self.wall.as_secs_f64())),
+            ("submitted", num(self.submitted as f64)),
+            ("completed", num(self.completed as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("retries_429", num(self.retries_429 as f64)),
+            ("retries_503", num(self.retries_503 as f64)),
+            ("tokens_out", num(self.tokens_out as f64)),
+            ("tokens_per_s", num(self.throughput())),
+            ("goodput", num(self.goodput())),
+            (
+                "tiers",
+                arr(self.tiers.iter().map(|t| {
+                    obj(vec![
+                        ("name", s(&t.name)),
+                        ("priority", num(t.priority as f64)),
+                        ("ttft_target_ms", num(t.targets.ttft_ms)),
+                        ("tpot_target_ms", num(t.targets.tpot_ms)),
+                        ("n", num(t.n as f64)),
+                        ("completed", num(t.completed as f64)),
+                        ("slo_met", num(t.slo_met as f64)),
+                        ("goodput", num(t.goodput)),
+                        ("ttft_ms", t.ttft.to_json()),
+                        ("tpot_ms", t.tpot.to_json()),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write the pretty JSON report, creating parent directories.
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Replay `cfg`'s trace against `target` and report SLO attainment.
+/// One driver thread paces arrivals on the trace clock; each request runs
+/// on its own thread (retry loop + stream consumption), mirroring
+/// independent clients.
+pub fn run(target: Target<'_>, cfg: &TraceConfig) -> Result<LoadReport> {
+    let trace = build_trace(cfg);
+    let outcomes: Mutex<Vec<Outcome>> = Mutex::new(Vec::with_capacity(trace.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for ev in &trace {
+            let wait = (t0 + ev.at).saturating_duration_since(Instant::now());
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            let target = &target;
+            let outcomes = &outcomes;
+            scope.spawn(move || {
+                let outcome = match target {
+                    Target::Engine(engine) => run_one_engine(engine, ev, cfg),
+                    Target::Http(addr) => run_one_http(addr, ev, cfg),
+                };
+                outcomes.lock().unwrap().push(outcome);
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let outcomes = outcomes.into_inner().unwrap();
+    Ok(summarize(cfg, &outcomes, wall))
+}
+
+fn summarize(cfg: &TraceConfig, outcomes: &[Outcome], wall: Duration) -> LoadReport {
+    let mut tiers = Vec::with_capacity(cfg.tiers.len());
+    for (i, tier) in cfg.tiers.iter().enumerate() {
+        let of_tier: Vec<&Outcome> = outcomes.iter().filter(|o| o.tier == i).collect();
+        let ttft: Vec<f64> = of_tier.iter().filter_map(|o| o.ttft_ms).collect();
+        let tpot: Vec<f64> = of_tier.iter().filter_map(|o| o.tpot_ms).collect();
+        let slo_met = of_tier
+            .iter()
+            .filter(|o| {
+                // Single-token outputs have no inter-token gap; TTFT alone
+                // decides their SLO.
+                o.completed
+                    && o.ttft_ms.is_some_and(|t| t <= tier.slo.ttft_ms)
+                    && o.tpot_ms.map_or(true, |t| t <= tier.slo.tpot_ms)
+            })
+            .count();
+        let completed = of_tier.iter().filter(|o| o.completed).count();
+        tiers.push(TierReport {
+            name: tier.name.clone(),
+            priority: tier.priority,
+            targets: tier.slo,
+            n: of_tier.len(),
+            completed,
+            slo_met,
+            goodput: slo_met as f64 / of_tier.len().max(1) as f64,
+            ttft: Percentiles::of(&ttft),
+            tpot: Percentiles::of(&tpot),
+        });
+    }
+    LoadReport {
+        wall,
+        submitted: outcomes.len(),
+        completed: outcomes.iter().filter(|o| o.completed).count(),
+        rejected: outcomes.iter().filter(|o| o.rejected).count(),
+        retries_429: outcomes.iter().map(|o| o.retries_429).sum(),
+        retries_503: outcomes.iter().map(|o| o.retries_503).sum(),
+        tokens_out: outcomes.iter().map(|o| o.tokens).sum(),
+        tiers,
+    }
+}
+
+fn request_for(ev: &TraceEvent, cfg: &TraceConfig) -> GenRequest {
+    let mut req = GenRequest::sampled(ev.prompt.clone(), ev.n_new, SamplingParams::default())
+        .with_priority(cfg.tiers[ev.tier].priority);
+    if ev.draft {
+        if let Some(draft) = &cfg.draft_model {
+            req = req.with_spec(draft.clone(), cfg.spec_k);
+        }
+    }
+    req
+}
+
+/// Cap on one retry sleep so a load test against a tiny engine finishes
+/// promptly even when the engine suggests a long back-off.
+const RETRY_SLEEP_CAP: Duration = Duration::from_millis(100);
+
+fn run_one_engine(engine: &Engine, ev: &TraceEvent, cfg: &TraceConfig) -> Outcome {
+    let mut out = Outcome {
+        tier: ev.tier,
+        completed: false,
+        ttft_ms: None,
+        tpot_ms: None,
+        tokens: 0,
+        retries_429: 0,
+        retries_503: 0,
+        rejected: false,
+    };
+    let submit_t0 = Instant::now();
+    let mut req = request_for(ev, cfg);
+    let ticket = loop {
+        match engine.submit(req) {
+            Ok(t) => break t,
+            Err(e) if e.is_backpressure() => {
+                let total = out.retries_429 + out.retries_503;
+                let ra = e.retry_after().unwrap_or(Duration::from_millis(5));
+                match &e {
+                    super::SubmitError::QueueFull(..) => out.retries_429 += 1,
+                    _ => out.retries_503 += 1,
+                }
+                if total >= cfg.max_retries {
+                    out.rejected = true;
+                    return out;
+                }
+                req = e.into_request();
+                std::thread::sleep(ra.min(RETRY_SLEEP_CAP));
+            }
+            Err(_) => {
+                out.rejected = true;
+                return out;
+            }
+        }
+    };
+    let mut first_tok: Option<Instant> = None;
+    let mut last_tok: Option<Instant> = None;
+    loop {
+        match ticket.recv() {
+            Some(Event::Prefilled { .. }) => {}
+            Some(Event::Token(_)) => {
+                let now = Instant::now();
+                if first_tok.is_none() {
+                    first_tok = Some(now);
+                }
+                last_tok = Some(now);
+                out.tokens += 1;
+            }
+            Some(Event::Done(stats)) => {
+                out.completed = matches!(stats.finish, FinishReason::Length | FinishReason::Stop);
+                break;
+            }
+            None => break,
+        }
+    }
+    finish_timing(&mut out, submit_t0, first_tok, last_tok);
+    out
+}
+
+fn finish_timing(
+    out: &mut Outcome,
+    submit_t0: Instant,
+    first_tok: Option<Instant>,
+    last_tok: Option<Instant>,
+) {
+    if let Some(first) = first_tok {
+        out.ttft_ms = Some(first.duration_since(submit_t0).as_secs_f64() * 1e3);
+        if out.tokens >= 2 {
+            let span = last_tok.unwrap().duration_since(first).as_secs_f64() * 1e3;
+            out.tpot_ms = Some(span / (out.tokens - 1) as f64);
+        }
+    }
+}
+
+// ------------------------------------------------- the HTTP client path
+
+fn body_for(ev: &TraceEvent, cfg: &TraceConfig) -> String {
+    let mut pairs = vec![
+        ("prompt", arr(ev.prompt.iter().map(|&t| num(t as f64)))),
+        ("n_new", num(ev.n_new as f64)),
+        ("priority", num(cfg.tiers[ev.tier].priority as f64)),
+    ];
+    if ev.draft {
+        if let Some(draft) = &cfg.draft_model {
+            pairs.push(("draft_model", s(draft)));
+            pairs.push(("spec_k", num(cfg.spec_k as f64)));
+        }
+    }
+    obj(pairs).to_string()
+}
+
+/// One POST /v1/generate round: returns the HTTP status plus, on 200, the
+/// streamed outcome fields, or on backpressure the parsed retry hint.
+fn http_attempt(
+    addr: &str,
+    body: &str,
+    submit_t0: Instant,
+    out: &mut Outcome,
+) -> Result<(u16, Option<Duration>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
+    // Headers (keep Retry-After for the backpressure path).
+    let mut retry_after = None;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("retry-after") {
+                retry_after = v.trim().parse::<u64>().ok().map(Duration::from_secs);
+            }
+        }
+    }
+    if status != 200 {
+        // Prefer the precise millisecond hint from the JSON body.
+        let mut rest = String::new();
+        reader.read_to_string(&mut rest).ok();
+        if let Ok(j) = Json::parse(rest.trim()) {
+            if let Some(ms) = j.opt("retry_after_ms").and_then(|v| v.as_f64().ok()) {
+                retry_after = Some(Duration::from_secs_f64(ms.max(0.0) / 1e3));
+            }
+        }
+        return Ok((status, retry_after));
+    }
+    // SSE stream: `event: <kind>` then `data: {...}`, blank-line separated.
+    let mut first_tok: Option<Instant> = None;
+    let mut last_tok: Option<Instant> = None;
+    let mut event_kind = String::new();
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            break;
+        }
+        let l = l.trim_end();
+        if let Some(kind) = l.strip_prefix("event: ") {
+            event_kind = kind.to_string();
+        } else if let Some(data) = l.strip_prefix("data: ") {
+            match event_kind.as_str() {
+                "token" => {
+                    let now = Instant::now();
+                    if first_tok.is_none() {
+                        first_tok = Some(now);
+                    }
+                    last_tok = Some(now);
+                    out.tokens += 1;
+                }
+                "done" => {
+                    let j = Json::parse(data)?;
+                    let finish = j.get("finish")?.as_str()?.to_string();
+                    out.completed = finish == "length" || finish == "stop";
+                }
+                _ => {}
+            }
+        }
+    }
+    finish_timing(out, submit_t0, first_tok, last_tok);
+    Ok((200, None))
+}
+
+fn run_one_http(addr: &str, ev: &TraceEvent, cfg: &TraceConfig) -> Outcome {
+    let mut out = Outcome {
+        tier: ev.tier,
+        completed: false,
+        ttft_ms: None,
+        tpot_ms: None,
+        tokens: 0,
+        retries_429: 0,
+        retries_503: 0,
+        rejected: false,
+    };
+    let body = body_for(ev, cfg);
+    let submit_t0 = Instant::now();
+    loop {
+        match http_attempt(addr, &body, submit_t0, &mut out) {
+            Ok((200, _)) => return out,
+            Ok((code @ (429 | 503), hint)) => {
+                let total = out.retries_429 + out.retries_503;
+                if code == 429 {
+                    out.retries_429 += 1;
+                } else {
+                    out.retries_503 += 1;
+                }
+                if total >= cfg.max_retries {
+                    out.rejected = true;
+                    return out;
+                }
+                std::thread::sleep(hint.unwrap_or(Duration::from_millis(5)).min(RETRY_SLEEP_CAP));
+            }
+            Ok(_) | Err(_) => {
+                out.rejected = true;
+                return out;
+            }
+        }
+    }
+}
+
+/// Parse a `"len:weight,len:weight"` CLI mixture spec.
+pub fn parse_mixture(spec: &str) -> Result<Vec<(usize, f64)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',') {
+        let (len, w) = match part.split_once(':') {
+            Some((l, w)) => (l.trim().parse()?, w.trim().parse()?),
+            None => (part.trim().parse()?, 1.0),
+        };
+        mix.push((len, w));
+    }
+    if mix.is_empty() {
+        bail!("empty length mixture {spec:?}");
+    }
+    Ok(mix)
+}

@@ -29,16 +29,32 @@
 //!     prompt never stalls the active set; [`ServeMetrics`] records
 //!     per-request queue-wait and time-to-first-token percentiles
 //!
+//! The network surface and its measurement harness live here too:
+//!   * [`http`] fronts one or more engines with a dependency-free
+//!     HTTP/1.1 + SSE server (`POST /v1/generate` streams ticket events;
+//!     backpressure maps to 429/503 with [`engine::RetryAfter`] guidance)
+//!   * [`loadgen`] replays a seeded bursty trace — mixed lengths, shared
+//!     system prompts, priority tiers, a draft-enabled fraction — against
+//!     the in-process engine or the HTTP endpoint and reports SLO
+//!     attainment (TTFT/TPOT percentiles vs. per-tier targets, goodput,
+//!     429/503 rates)
+//!
 //! [`load_test`] survives as a thin convenience shim over an ephemeral
 //! `Engine` for the throughput experiments.
 
 pub mod engine;
+pub mod http;
+pub mod loadgen;
 pub mod registry;
 pub mod spec;
 
 pub use engine::{
     DraftError, Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, Percentiles,
-    SamplingParams, ServeMetrics, SubmitError, Ticket,
+    RetryAfter, SamplingParams, ServeMetrics, SubmitError, Ticket,
+};
+pub use http::{HttpServer, Router};
+pub use loadgen::{
+    build_trace, LoadReport, SloTargets, Target, Tier, TierReport, TraceConfig, TraceEvent,
 };
 pub use registry::{Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
 pub use spec::{SpecDecoder, SpecParams, SpecStats};

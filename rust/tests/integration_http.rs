@@ -1,0 +1,472 @@
+//! End-to-end tests for the HTTP/SSE front end over a real socket:
+//! bit-exact streaming vs. the reference decode, disconnect-cancel with
+//! KV-pool drain, 429/503 backpressure round-trips, malformed-body 400s,
+//! multi-model routing, and graceful-shutdown drain.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::kvcache::KvPoolOptions;
+use pquant::serve::{Engine, EngineOptions, HttpServer, ModelRegistry, Router};
+use pquant::util::json::Json;
+
+fn nano_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: 16,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn registry_with(name: &str, model: PackedModel) -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(name, model, None);
+    registry
+}
+
+fn engine_on(registry: &Arc<ModelRegistry>, name: &str) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(
+            registry,
+            EngineOptions { model: name.into(), ..EngineOptions::default() },
+        )
+        .unwrap(),
+    )
+}
+
+fn serve_one(model: PackedModel) -> (HttpServer, Arc<Engine>) {
+    let registry = registry_with("m", model);
+    let engine = engine_on(&registry, "m");
+    let server =
+        HttpServer::bind("127.0.0.1:0", Router::new(registry).route("m", engine.clone())).unwrap();
+    (server, engine)
+}
+
+/// One-shot request: returns (status, headers, body-to-EOF).
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, HashMap<String, String>, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let (head, payload) = raw.split_once("\r\n\r\n").expect("response has a header block");
+    let mut lines = head.lines();
+    let status: u16 =
+        lines.next().unwrap().split_whitespace().nth(1).unwrap().parse().unwrap();
+    let headers: HashMap<String, String> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    (status, headers, payload.to_string())
+}
+
+fn post_generate(addr: SocketAddr, body: &str) -> (u16, HashMap<String, String>, String) {
+    http(addr, "POST", "/v1/generate", body)
+}
+
+/// Parse an SSE payload into (event-kind, data-json) frames.
+fn sse_events(payload: &str) -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    for frame in payload.split("\n\n").filter(|f| !f.trim().is_empty()) {
+        let mut kind = String::new();
+        let mut data = None;
+        for line in frame.lines() {
+            if let Some(k) = line.strip_prefix("event: ") {
+                kind = k.to_string();
+            } else if let Some(d) = line.strip_prefix("data: ") {
+                data = Some(Json::parse(d).expect("SSE data frames are JSON"));
+            }
+        }
+        out.push((kind, data.expect("every frame carries data")));
+    }
+    out
+}
+
+fn streamed_tokens(events: &[(String, Json)]) -> Vec<u32> {
+    events
+        .iter()
+        .filter(|(k, _)| k == "token")
+        .map(|(_, d)| d.get("token").unwrap().as_usize().unwrap() as u32)
+        .collect()
+}
+
+// --------------------------------------------------------------- streaming
+
+#[test]
+fn concurrent_sse_streams_are_bit_identical_to_reference_decode() {
+    let model = PackedModel::random(&nano_cfg("http-stream"), 17);
+    let mut reference = model.clone();
+    let want = reference.generate(&[5, 9, 2], 10);
+    let (server, engine) = serve_one(model);
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(move || {
+                post_generate(addr, r#"{"prompt": [5, 9, 2], "n_new": 10}"#)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (status, headers, payload) = h.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(headers.get("content-type").unwrap(), "text/event-stream");
+        let events = sse_events(&payload);
+        // Frame order: prefilled, then tokens, then exactly one done.
+        assert_eq!(events[0].0, "prefilled");
+        assert_eq!(events[0].1.get("prompt_len").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(events.last().unwrap().0, "done");
+        assert_eq!(streamed_tokens(&events), want);
+        let done = &events.last().unwrap().1;
+        assert_eq!(done.get("finish").unwrap().as_str().unwrap(), "length");
+        assert_eq!(done.get("n_tokens").unwrap().as_usize().unwrap(), want.len());
+        let done_tokens: Vec<u32> = done
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_usize().unwrap() as u32)
+            .collect();
+        assert_eq!(done_tokens, want, "done recap matches the streamed tokens");
+    }
+    server.shutdown();
+    let metrics = engine.metrics();
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 3);
+}
+
+#[test]
+fn sampling_and_stop_fields_round_trip() {
+    let model = PackedModel::random(&nano_cfg("http-stop"), 23);
+    let mut reference = model.clone();
+    let full = reference.generate(&[3, 1], 12);
+    let stop = full[2];
+    let cut = full.iter().position(|&t| t == stop).unwrap();
+    let (server, _engine) = serve_one(model);
+
+    let body = format!(r#"{{"prompt": [3, 1], "n_new": 12, "stop_tokens": [{stop}]}}"#);
+    let (status, _, payload) = post_generate(server.local_addr(), &body);
+    assert_eq!(status, 200);
+    let events = sse_events(&payload);
+    assert_eq!(streamed_tokens(&events), full[..=cut].to_vec());
+    assert_eq!(
+        events.last().unwrap().1.get("finish").unwrap().as_str().unwrap(),
+        "stop"
+    );
+    server.shutdown();
+}
+
+// ------------------------------------------------------- disconnect-cancel
+
+#[test]
+fn mid_stream_disconnect_cancels_request_and_drains_kv_pool() {
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("http-cancel"), 29));
+    // A pool sized so the long request fits (prompt 8 + 2000 new → 126
+    // blocks of 16) but is clearly occupied while it runs. The 8-token
+    // prompt stays under block_size, so completion registers no shared
+    // prefix and the pool must drain all the way back to empty.
+    let engine = Arc::new(
+        Engine::start(
+            &registry,
+            EngineOptions {
+                model: "m".into(),
+                kv: Some(KvPoolOptions { n_blocks: 256, block_size: 16 }),
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        Router::new(registry).route("m", engine.clone()),
+    )
+    .unwrap();
+
+    // Stream by hand: read a few token frames, then drop the socket.
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    let body = r#"{"prompt": [1, 2, 3, 4, 5, 6, 7, 8], "n_new": 2000}"#;
+    write!(
+        s,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(s);
+    let mut tokens_seen = 0;
+    let mut line = String::new();
+    while tokens_seen < 3 {
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stream ended early: {line:?}");
+        if line.starts_with("event: token") {
+            tokens_seen += 1;
+        }
+    }
+    drop(reader); // client vanishes mid-stream
+
+    // The server must notice, cancel the ticket, and the engine must hand
+    // every KV block back (no shared prefix pins any — prompt < block).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let cancelled = engine.metrics().cancelled.load(Ordering::Relaxed);
+        let in_use = engine.metrics().kv().map(|kv| kv.in_use).unwrap_or(0);
+        if cancelled == 1 && in_use == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect not reaped: cancelled={cancelled} kv_in_use={in_use}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+// ------------------------------------------------------------ backpressure
+
+#[test]
+fn queue_full_maps_to_429_with_retry_after() {
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("http-429"), 31));
+    let engine = Arc::new(
+        Engine::start(
+            &registry,
+            EngineOptions {
+                model: "m".into(),
+                max_batch: 1,
+                workers: 1,
+                queue_depth: 1,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        Router::new(registry).route("m", engine.clone()),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // Park one long request on the single slot (read until its first
+    // token so it is demonstrably decoding, keep the socket open).
+    let mut held = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt": [1, 2], "n_new": 2000}"#;
+    write!(
+        held,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut held_reader = BufReader::new(&mut held);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        assert!(held_reader.read_line(&mut line).unwrap() > 0);
+        if line.starts_with("event: token") {
+            break;
+        }
+    }
+
+    // Burst more: with the slot busy and a depth-1 queue, at most one can
+    // be absorbed — a 429 with retry guidance must appear.
+    let mut saw_429 = false;
+    let mut absorbed = Vec::new();
+    for _ in 0..8 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let b = r#"{"prompt": [4, 5], "n_new": 500}"#;
+        write!(
+            s,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{b}",
+            b.len()
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let mut status_line = String::new();
+        r.read_line(&mut status_line).unwrap();
+        let status: u16 =
+            status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        if status == 429 {
+            let mut headers = HashMap::new();
+            loop {
+                let mut h = String::new();
+                r.read_line(&mut h).unwrap();
+                if h.trim_end().is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.trim_end().split_once(':') {
+                    headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+                }
+            }
+            let retry: u64 = headers
+                .get("retry-after")
+                .expect("429 carries Retry-After")
+                .parse()
+                .expect("Retry-After is integer seconds");
+            assert!(retry >= 1, "HTTP floor is one second");
+            let mut rest = String::new();
+            r.read_to_string(&mut rest).unwrap();
+            let j = Json::parse(rest.trim()).unwrap();
+            assert!(
+                j.get("retry_after_ms").unwrap().as_f64().unwrap() > 0.0,
+                "body carries the precise millisecond hint"
+            );
+            saw_429 = true;
+            break;
+        }
+        // Absorbed into the queue: keep the stream open so the slot stays
+        // contended for the next attempt.
+        absorbed.push(r);
+    }
+    assert!(saw_429, "burst against a depth-1 queue never overflowed");
+
+    // Dropping every client lets the handlers cancel and the server drain.
+    drop(held_reader);
+    drop(held);
+    drop(absorbed);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------- malformed input
+
+#[test]
+fn malformed_bodies_and_bad_routes_are_rejected() {
+    let (server, _engine) = serve_one(PackedModel::random(&nano_cfg("http-400"), 37));
+    let addr = server.local_addr();
+
+    for bad in [
+        "{not json",
+        r#"{"n_new": 4}"#,                       // neither prompt nor text
+        r#"{"prompt": "five"}"#,                // prompt not an array
+        r#"{"prompt": [1.5]}"#,                 // non-integer token id
+        r#"{"prompt": [1], "n_new": -3}"#,      // negative budget
+        r#"{"text": "hi"}"#,                    // no tokenizer embedded
+    ] {
+        let (status, _, payload) = post_generate(addr, bad);
+        assert_eq!(status, 400, "body {bad:?} must 400, got {status}: {payload}");
+        assert!(Json::parse(&payload).unwrap().get("error").is_ok());
+    }
+    // Unknown model names are a routing miss, not a parse failure.
+    let (status, _, _) = post_generate(addr, r#"{"prompt": [1], "model": "nope"}"#);
+    assert_eq!(status, 404);
+    let (status, _, _) = http(addr, "GET", "/v1/generate", "");
+    assert_eq!(status, 405);
+    let (status, _, _) = http(addr, "GET", "/v1/nope", "");
+    assert_eq!(status, 404);
+    server.shutdown();
+}
+
+// ----------------------------------------------------------- multi-model
+
+#[test]
+fn model_key_routes_between_engines() {
+    let a = PackedModel::random(&nano_cfg("route-a"), 41);
+    let b = PackedModel::random(&nano_cfg("route-b"), 43);
+    let mut ref_a = a.clone();
+    let mut ref_b = b.clone();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("a", a, None);
+    registry.register("b", b, None);
+    let ea = engine_on(&registry, "a");
+    let eb = engine_on(&registry, "b");
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        Router::new(registry).route("a", ea.clone()).route("b", eb.clone()),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // Explicit routing, plus the first route as default.
+    let (_, _, payload) = post_generate(addr, r#"{"prompt": [9, 9], "n_new": 6, "model": "b"}"#);
+    assert_eq!(streamed_tokens(&sse_events(&payload)), ref_b.generate(&[9, 9], 6));
+    let (_, _, payload) = post_generate(addr, r#"{"prompt": [9, 9], "n_new": 6}"#);
+    assert_eq!(streamed_tokens(&sse_events(&payload)), ref_a.generate(&[9, 9], 6));
+
+    // The registry listing marks both as routed.
+    let (status, _, payload) = http(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    let models = Json::parse(&payload).unwrap();
+    let listed = models.get("models").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(listed.len(), 2);
+    assert!(listed
+        .iter()
+        .all(|m| m.get("routed").unwrap().as_bool().unwrap()));
+
+    // Metrics are keyed per routed engine and reflect the traffic split.
+    let (status, _, payload) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(status, 200);
+    let metrics = Json::parse(&payload).unwrap();
+    assert_eq!(metrics.get("a").unwrap().get("completed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(metrics.get("b").unwrap().get("completed").unwrap().as_usize().unwrap(), 1);
+    assert!(metrics.get("a").unwrap().get("tpot_ms").is_ok());
+    server.shutdown();
+}
+
+// ------------------------------------------------------- graceful shutdown
+
+#[test]
+fn graceful_shutdown_drains_inflight_streams() {
+    let model = PackedModel::random(&nano_cfg("http-drain"), 47);
+    let mut reference = model.clone();
+    let want = reference.generate(&[2, 4], 150);
+    let (server, engine) = serve_one(model);
+    let addr = server.local_addr();
+
+    // A client mid-stream when shutdown begins...
+    let client = std::thread::spawn(move || {
+        post_generate(addr, r#"{"prompt": [2, 4], "n_new": 150}"#)
+    });
+    // ...wait until its request is demonstrably in flight (tokens_out
+    // ticks per emitted token, not at completion).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while engine.metrics().tokens_out.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "request never reached first token");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // shutdown() blocks until the handler finishes — the stream must have
+    // run to its done frame, not been chopped.
+    server.shutdown();
+    let (status, _, payload) = client.join().unwrap();
+    assert_eq!(status, 200);
+    let events = sse_events(&payload);
+    assert_eq!(events.last().unwrap().0, "done");
+    assert_eq!(streamed_tokens(&events), want);
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 1);
+
+    // The listener is gone: a new connection is refused, or at best
+    // accepted by a dying socket that serves nothing.
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = s.write_all(b"GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let mut buf = [0u8; 1];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "post-shutdown connections must get nothing");
+    }
+}

@@ -51,7 +51,7 @@ fn submit_blocking(engine: &Engine, mut req: GenRequest) -> pquant::serve::Ticke
     loop {
         match engine.submit(req) {
             Ok(t) => return t,
-            Err(SubmitError::KvExhausted(r)) | Err(SubmitError::QueueFull(r)) => {
+            Err(SubmitError::KvExhausted(r, _)) | Err(SubmitError::QueueFull(r, _)) => {
                 assert!(Instant::now() < deadline, "admission never drained");
                 req = r;
                 std::thread::sleep(Duration::from_millis(1));
@@ -249,7 +249,7 @@ fn kv_exhausted_blocks_admission_then_drains_as_blocks_free() {
     let first = engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 12)).unwrap();
     // The pool is now fully reserved: the next submission must bounce.
     let second = match engine.submit(GenRequest::greedy(vec![5, 6, 7, 8], 12)) {
-        Err(SubmitError::KvExhausted(req)) => {
+        Err(SubmitError::KvExhausted(req, _)) => {
             assert_eq!(req.n_new, 12, "request rides back in the error");
             req
         }
@@ -324,7 +324,7 @@ fn preemption_frees_blocks_and_recompute_is_deterministic() {
     }
     let high_req = GenRequest::greedy(vec![9, 8, 7, 6], 400).with_priority(5);
     let high = match engine.submit(high_req) {
-        Err(SubmitError::KvExhausted(req)) => submit_blocking(&engine, req),
+        Err(SubmitError::KvExhausted(req, _)) => submit_blocking(&engine, req),
         Ok(t) => t, // only possible if low finished first — the asserts below catch it
         Err(e) => panic!("unexpected submit error: {e}"),
     };

@@ -1,0 +1,154 @@
+//! Tests for the trace-driven load generator: seeded determinism of the
+//! schedule, and smoke runs (in-process and over HTTP) whose SLO report
+//! must reconcile with the engine's own metrics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::serve::loadgen::{self, Target, TraceConfig};
+use pquant::serve::{build_trace, Engine, EngineOptions, HttpServer, ModelRegistry, Router};
+
+fn nano_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: 16,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn engine_for(model: PackedModel) -> Engine {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", model, None);
+    Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), queue_depth: 256, ..EngineOptions::default() },
+    )
+    .unwrap()
+}
+
+/// A trace small and fast enough for CI: high arrival rate so the whole
+/// schedule spans well under a second of wall clock.
+fn smoke_cfg(seed: u64, n: usize) -> TraceConfig {
+    TraceConfig {
+        seed,
+        n_requests: n,
+        rate: 400.0,
+        prompt_lens: vec![(4, 0.6), (8, 0.4)],
+        output_lens: vec![(4, 0.5), (8, 0.5)],
+        shared_prefix_len: 8,
+        ..TraceConfig::default()
+    }
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn same_seed_and_config_yield_identical_schedules() {
+    let cfg = smoke_cfg(42, 200);
+    let a = build_trace(&cfg);
+    let b = build_trace(&cfg);
+    assert_eq!(a, b, "trace must be a pure function of (config, seed)");
+    assert_eq!(a.len(), 200);
+    // Arrivals are sorted by construction and lengths come from the mix.
+    assert!(a.windows(2).all(|w| w[0].at <= w[1].at));
+    assert!(a.iter().all(|e| e.n_new == 4 || e.n_new == 8));
+    assert!(a.iter().all(|e| e.tier < cfg.tiers.len()));
+    assert!(a.iter().all(|e| e.prompt.iter().all(|&t| t < 64)));
+}
+
+#[test]
+fn different_seeds_yield_different_schedules() {
+    let a = build_trace(&smoke_cfg(1, 64));
+    let b = build_trace(&smoke_cfg(2, 64));
+    assert_ne!(a, b);
+}
+
+#[test]
+fn shared_fraction_reuses_one_prefix() {
+    let cfg = TraceConfig { shared_frac: 1.0, ..smoke_cfg(7, 32) };
+    let trace = build_trace(&cfg);
+    assert!(trace.iter().all(|e| e.shared));
+    let prefix = &trace[0].prompt[..cfg.shared_prefix_len];
+    assert!(
+        trace.iter().all(|e| &e.prompt[..cfg.shared_prefix_len] == prefix),
+        "every shared request opens with the same system prompt"
+    );
+    // Tails still differ (they carry the per-request payload).
+    assert_ne!(trace[0].prompt, trace[1].prompt);
+}
+
+#[test]
+fn mixture_spec_parses() {
+    assert_eq!(loadgen::parse_mixture("4:0.5,8:0.5").unwrap(), vec![(4, 0.5), (8, 0.5)]);
+    assert_eq!(loadgen::parse_mixture("16").unwrap(), vec![(16, 1.0)]);
+    assert!(loadgen::parse_mixture("a:b").is_err());
+}
+
+// -------------------------------------------------------------- smoke runs
+
+#[test]
+fn engine_smoke_run_reconciles_with_serve_metrics() {
+    let engine = engine_for(PackedModel::random(&nano_cfg("lg-engine"), 51));
+    let cfg = smoke_cfg(3, 24);
+    let report = loadgen::run(Target::Engine(&engine), &cfg).unwrap();
+
+    assert_eq!(report.submitted, 24);
+    assert_eq!(
+        report.tiers.iter().map(|t| t.n).sum::<usize>(),
+        24,
+        "every request lands in exactly one tier"
+    );
+    let metrics = engine.shutdown();
+    // Client-side and server-side accounting must agree: the generator
+    // saw every completion the engine recorded, and every token.
+    assert_eq!(report.completed, metrics.completed.load(Ordering::Relaxed));
+    assert_eq!(report.tokens_out, metrics.tokens_out.load(Ordering::Relaxed));
+    assert_eq!(report.completed + report.rejected, 24);
+    for t in &report.tiers {
+        assert!(t.slo_met <= t.completed);
+        assert!(t.goodput >= 0.0 && t.goodput <= 1.0);
+        assert_eq!(t.ttft.n, t.completed, "every completed request has a TTFT sample");
+    }
+    // The report serializes with the percentile fields the bench publishes.
+    let j = report.to_json();
+    assert!(j.get("goodput").is_ok());
+    let tier0 = &j.get("tiers").unwrap().as_arr().unwrap()[0];
+    assert!(tier0.get("ttft_ms").unwrap().get("p99").is_ok());
+    assert!(tier0.get("tpot_ms").unwrap().get("p50").is_ok());
+}
+
+#[test]
+fn http_smoke_run_reconciles_with_serve_metrics() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", PackedModel::random(&nano_cfg("lg-http"), 53), None);
+    let engine = Arc::new(
+        Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), queue_depth: 256, ..EngineOptions::default() },
+        )
+        .unwrap(),
+    );
+    let server =
+        HttpServer::bind("127.0.0.1:0", Router::new(registry).route("m", engine.clone()))
+            .unwrap();
+    let cfg = smoke_cfg(5, 12);
+    let report =
+        loadgen::run(Target::Http(server.local_addr().to_string()), &cfg).unwrap();
+    server.shutdown();
+
+    assert_eq!(report.submitted, 12);
+    assert_eq!(report.completed, engine.metrics().completed.load(Ordering::Relaxed));
+    assert_eq!(report.tokens_out, engine.metrics().tokens_out.load(Ordering::Relaxed));
+    assert!(report.completed > 0, "an uncontended engine must complete requests");
+}

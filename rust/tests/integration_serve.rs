@@ -128,7 +128,7 @@ fn tiny_queue_rejects_with_queue_full() {
     for _ in 0..8 {
         match engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 64)) {
             Ok(t) => accepted.push(t),
-            Err(SubmitError::QueueFull(req)) => {
+            Err(SubmitError::QueueFull(req, _)) => {
                 assert_eq!(req.n_new, 64, "rejected request rides back intact");
                 rejected += 1;
             }

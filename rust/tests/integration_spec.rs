@@ -395,7 +395,7 @@ fn preempted_speculative_request_resumes_and_finishes_bit_exact() {
     let high = match engine.submit(high_req) {
         // The flagged preemption frees the low request's blocks; the
         // blocking retry claims them.
-        Err(SubmitError::KvExhausted(req)) => engine.submit_blocking(req).unwrap(),
+        Err(SubmitError::KvExhausted(req, _)) => engine.submit_blocking(req).unwrap(),
         Ok(t) => t, // only possible if low finished first; asserts below catch it
         Err(e) => panic!("unexpected submit error: {e}"),
     };

@@ -24,16 +24,19 @@ fi
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
-echo "==> tier-1: cargo test -q   (includes tests/integration_spec.rs + integration_batch.rs + alloc_free.rs)"
+echo "==> tier-1: cargo test -q   (includes tests/integration_spec.rs + integration_http.rs + integration_loadgen.rs)"
 cargo test -q
 
-echo "==> tier-1: cargo bench --no-run (benches must keep compiling, incl. benches/spec_decode.rs + decode_batch.rs)"
+echo "==> tier-1: cargo bench --no-run (benches must keep compiling, incl. benches/spec_decode.rs + loadgen.rs)"
 cargo bench --no-run
 
 if [[ "${1:-}" == "--tier1" ]]; then
     echo "ci.sh: tier-1 gate passed"
     exit 0
 fi
+
+echo "==> bench lane: seeded loadgen trace → results/bench/loadgen.json"
+cargo bench --bench loadgen
 
 echo "==> style: cargo fmt --check"
 cargo fmt --check
