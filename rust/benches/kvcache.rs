@@ -1,12 +1,14 @@
 //! Paged KV-cache bench: block alloc/free cycles, append throughput of
-//! paged vs contiguous layouts, and shared- vs unshared-prefix prefill
-//! through the packed model (the compute the prefix map saves).
+//! paged vs contiguous layouts, shared- vs unshared-prefix prefill
+//! through the packed model (the compute the prefix map saves), and the
+//! storage-mode capacity comparison (sequences admitted per MB, f32 vs
+//! int8 under the same block budget).
 
 use std::sync::Arc;
 
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::{KvCache, PackedModel};
-use pquant::kvcache::{BlockPool, KvPoolOptions, KvStore, PagedSeq, PrefixTag};
+use pquant::kvcache::{BlockPool, KvPoolOptions, KvStorageMode, KvStore, PagedSeq, PrefixTag};
 use pquant::util::bench::Bencher;
 
 fn cfg() -> ModelConfig {
@@ -30,7 +32,7 @@ fn main() {
     let mut b = Bencher::quick();
     let cfg = cfg();
     let pool = Arc::new(BlockPool::new(
-        KvPoolOptions { n_blocks: 4096, block_size: 16 },
+        KvPoolOptions { n_blocks: 4096, block_size: 16, ..Default::default() },
         cfg.n_layers,
         cfg.d_model,
     ));
@@ -105,5 +107,34 @@ fn main() {
         "  pool after bench: hit rate {:.2}, cow {}, evicted {}, prefixes {}",
         s.shared_hit_rate, s.cow_copies, s.evicted_blocks, s.registered_prefixes
     );
+
+    // Storage-mode capacity: same block budget (same bytes), admit
+    // 128-token sequences until the pool refuses. Int8 packs 4x the rows
+    // per block, so it must admit >= 4x the sequences of f32 — that ratio
+    // is the whole point of the quantized tier, so the bench asserts it.
+    let seq_tokens = 128;
+    let mut admitted = Vec::new();
+    for mode in [KvStorageMode::F32, KvStorageMode::Int8] {
+        let opts = KvPoolOptions { n_blocks: 1024, block_size: 16, mode };
+        let cap_pool = Arc::new(BlockPool::new(opts, cfg.n_layers, cfg.d_model));
+        let mb = cap_pool.stats().capacity_bytes as f64 / (1024.0 * 1024.0);
+        let mut live = Vec::new();
+        while let Ok(adm) = cap_pool.admit(&[], seq_tokens, PrefixTag::default()) {
+            live.push(PagedSeq::new(&cap_pool, adm));
+        }
+        let n = live.len();
+        b.metric(&format!("admit capacity {mode} seqs@{seq_tokens}tok"), n as f64);
+        b.metric(&format!("admit capacity {mode} seqs/MB"), n as f64 / mb);
+        admitted.push(n);
+    }
+    let ratio = admitted[1] as f64 / admitted[0] as f64;
+    b.metric("admit capacity int8/f32 ratio", ratio);
+    assert!(
+        ratio >= 4.0,
+        "int8 must admit >= 4x the sequences of f32 on the same budget, got {}/{}",
+        admitted[1],
+        admitted[0]
+    );
+
     b.write_json("kvcache");
 }

@@ -51,6 +51,10 @@ pub mod kind {
     pub const FINAL_NORM: u16 = 4;
     pub const BLOCK: u16 = 5;
     pub const TOKENIZER: u16 = 6;
+    /// KV spill-file metadata (geometry + prefix identity), one per file.
+    pub const KV_META: u16 = 7;
+    /// One spilled KV block; `index` is the flattened (layer, block) id.
+    pub const KV_BLOCK: u16 = 8;
 }
 
 /// Human name of a section kind (inspect output).
@@ -62,6 +66,8 @@ pub fn kind_name(kind: u16) -> &'static str {
         kind::FINAL_NORM => "final_norm",
         kind::BLOCK => "block",
         kind::TOKENIZER => "tokenizer",
+        kind::KV_META => "kv_meta",
+        kind::KV_BLOCK => "kv_block",
         _ => "unknown",
     }
 }
@@ -113,6 +119,46 @@ pub struct PqmModel {
     pub tokenizer: Option<Bpe>,
 }
 
+/// Assemble a `.pqm` section container from `(kind, index, payload)`
+/// triples: magic + version header, CRC'd section table, concatenated
+/// payloads. The model artifact and the KV spill tier both serialize
+/// through this one writer, so every on-disk byte the repo produces gets
+/// the same corruption/truncation detection.
+pub fn save_container(payloads: &[(u16, u16, Vec<u8>)]) -> Vec<u8> {
+    let table_end = HEADER_BYTES + TABLE_ENTRY_BYTES * payloads.len();
+    let body: usize = payloads.iter().map(|(_, _, p)| p.len()).sum();
+    let mut out = Vec::with_capacity(table_end + body);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    let mut offset = table_end as u64;
+    for (sec_kind, index, payload) in payloads {
+        out.extend_from_slice(&sec_kind.to_le_bytes());
+        out.extend_from_slice(&index.to_le_bytes());
+        out.extend_from_slice(&offset.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+        offset += payload.len() as u64;
+    }
+    for (_, _, payload) in payloads {
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Parse a `.pqm` section container and CRC-verify every payload.
+/// The read-side twin of [`save_container`].
+pub fn read_container(bytes: &[u8]) -> Result<Vec<Section>> {
+    let sections = parse_table(bytes)?;
+    verify_crcs(bytes, &sections)?;
+    Ok(sections)
+}
+
+/// The payload bytes of one parsed section.
+pub fn section_payload<'a>(bytes: &'a [u8], s: &Section) -> &'a [u8] {
+    payload(bytes, s)
+}
+
 /// Serialize a packed model (and optional tokenizer) to `.pqm` bytes.
 pub fn save_pqm_bytes(model: &PackedModel, tokenizer: Option<&Bpe>) -> Vec<u8> {
     let mut payloads: Vec<(u16, u16, Vec<u8>)> = Vec::with_capacity(5 + model.blocks.len());
@@ -126,26 +172,7 @@ pub fn save_pqm_bytes(model: &PackedModel, tokenizer: Option<&Bpe>) -> Vec<u8> {
     if let Some(bpe) = tokenizer {
         payloads.push((kind::TOKENIZER, 0, bpe.to_json().to_string().into_bytes()));
     }
-
-    let table_end = HEADER_BYTES + TABLE_ENTRY_BYTES * payloads.len();
-    let body: usize = payloads.iter().map(|(_, _, p)| p.len()).sum();
-    let mut out = Vec::with_capacity(table_end + body);
-    out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
-    let mut offset = table_end as u64;
-    for (sec_kind, index, payload) in &payloads {
-        out.extend_from_slice(&sec_kind.to_le_bytes());
-        out.extend_from_slice(&index.to_le_bytes());
-        out.extend_from_slice(&offset.to_le_bytes());
-        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        out.extend_from_slice(&crc32(payload).to_le_bytes());
-        offset += payload.len() as u64;
-    }
-    for (_, _, payload) in &payloads {
-        out.extend_from_slice(payload);
-    }
-    out
+    save_container(&payloads)
 }
 
 /// Write a `.pqm` artifact to disk; returns the file size in bytes.

@@ -249,10 +249,10 @@ impl KvStore for KvLayerRef<'_> {
         }
     }
 
-    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+    fn for_each_seg<'a>(&'a self, f: &mut dyn FnMut(crate::kvcache::KvSegment<'a>)) {
         match self {
-            KvLayerRef::Contig(c) => c.for_each_segment(f),
-            KvLayerRef::Paged(p) => p.for_each_segment(f),
+            KvLayerRef::Contig(c) => c.for_each_seg(f),
+            KvLayerRef::Paged(p) => p.for_each_seg(f),
         }
     }
 }

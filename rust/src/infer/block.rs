@@ -13,7 +13,7 @@
 use std::time::{Duration, Instant};
 
 use crate::config::Variant;
-use crate::kvcache::{KvError, KvStore};
+use crate::kvcache::{KvError, KvSegment, KvStore};
 
 use super::batch::{grow_pow2, Scratch, SeqStep};
 use super::{rmsnorm_into, rmsnorm_vec, silu, softmax, QLinear, QuantActs};
@@ -70,8 +70,11 @@ impl KvStore for KvCache {
         KvCache::push(self, k, v)
     }
 
-    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
-        f(&self.k[..self.len * self.d], &self.v[..self.len * self.d]);
+    fn for_each_seg<'a>(&'a self, f: &mut dyn FnMut(KvSegment<'a>)) {
+        f(KvSegment::F32 {
+            k: &self.k[..self.len * self.d],
+            v: &self.v[..self.len * self.d],
+        });
     }
 }
 
@@ -250,7 +253,10 @@ pub fn rope_rotate(x: &mut [f32], pos: usize, n_heads: usize, rope: &RopeTable) 
 /// therefore their output bits — are identical by construction. The cache
 /// is walked as ordered contiguous segments (one for the contiguous
 /// layout, one per page when paged) — same rows, same order, same float
-/// ops, so the layouts are bit-identical too.
+/// ops, so in F32 storage the layouts are bit-identical too. Quantized
+/// segments dequantize per element inside the same walk (`x = q / γ`,
+/// the [`dequant_i8_row_into`](crate::quant::dequant_i8_row_into)
+/// expression) — no staging buffers, no allocation on the hot path.
 fn attend_into<C: KvStore + ?Sized>(
     q: &[f32],
     cache: &C,
@@ -264,24 +270,52 @@ fn attend_into<C: KvStore + ?Sized>(
     for h in 0..n_heads {
         let qh = &q[h * hd..(h + 1) * hd];
         let mut t = 0;
-        cache.for_each_segment(&mut |ks, _| {
-            for kr in ks.chunks_exact(d) {
-                let kh = &kr[h * hd..(h + 1) * hd];
-                scores[t] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                t += 1;
+        cache.for_each_seg(&mut |seg| match seg {
+            KvSegment::F32 { k: ks, .. } => {
+                for kr in ks.chunks_exact(d) {
+                    let kh = &kr[h * hd..(h + 1) * hd];
+                    scores[t] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    t += 1;
+                }
+            }
+            KvSegment::Int8 { k: ks, k_scale, .. } => {
+                for (r, kr) in ks.chunks_exact(d).enumerate() {
+                    let g = k_scale[r];
+                    let kh = &kr[h * hd..(h + 1) * hd];
+                    scores[t] = qh
+                        .iter()
+                        .zip(kh)
+                        .map(|(a, &b)| a * (b as f32 / g))
+                        .sum::<f32>()
+                        * scale;
+                    t += 1;
+                }
             }
         });
         softmax(scores);
         let ch = &mut ctx[h * hd..(h + 1) * hd];
         let mut t = 0;
-        cache.for_each_segment(&mut |_, vs| {
-            for vr in vs.chunks_exact(d) {
-                let p = scores[t];
-                let vh = &vr[h * hd..(h + 1) * hd];
-                for (c, &vv) in ch.iter_mut().zip(vh) {
-                    *c += p * vv;
+        cache.for_each_seg(&mut |seg| match seg {
+            KvSegment::F32 { v: vs, .. } => {
+                for vr in vs.chunks_exact(d) {
+                    let p = scores[t];
+                    let vh = &vr[h * hd..(h + 1) * hd];
+                    for (c, &vv) in ch.iter_mut().zip(vh) {
+                        *c += p * vv;
+                    }
+                    t += 1;
                 }
-                t += 1;
+            }
+            KvSegment::Int8 { v: vs, v_scale, .. } => {
+                for (r, vr) in vs.chunks_exact(d).enumerate() {
+                    let p = scores[t];
+                    let g = v_scale[r];
+                    let vh = &vr[h * hd..(h + 1) * hd];
+                    for (c, &qv) in ch.iter_mut().zip(vh) {
+                        *c += p * (qv as f32 / g);
+                    }
+                    t += 1;
+                }
             }
         });
     }

@@ -398,7 +398,7 @@ mod tests {
         let mut a = PackedModel::random(&cfg, 9);
         let mut b = PackedModel::random(&cfg, 9);
         let pool = Arc::new(BlockPool::new(
-            KvPoolOptions { n_blocks: 64, block_size: 4 },
+            KvPoolOptions { n_blocks: 64, block_size: 4, ..Default::default() },
             cfg.n_layers,
             cfg.d_model,
         ));

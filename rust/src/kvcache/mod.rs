@@ -1,5 +1,5 @@
 //! Paged KV-cache subsystem: a fixed block budget under the whole serving
-//! stack.
+//! stack, with selectable storage precision and a disk spill tier.
 //!
 //! With 1-bit weights the KV cache — not the model — dominates serving
 //! memory (the BitNet-style regime in PAPERS.md), so KV memory must be a
@@ -12,6 +12,14 @@
 //!   ([`BlockPool::admit`]), so a sequence that was admitted can always
 //!   finish — exhaustion surfaces as a recoverable
 //!   [`KvError::OutOfBlocks`] at admission, never a worker panic.
+//! * [`KvStorageMode`] — per-pool storage precision.  A block is a fixed
+//!   byte slab: in [`KvStorageMode::F32`] it holds `block_size` f32 rows;
+//!   in [`KvStorageMode::Int8`] the same slab holds `4 × block_size`
+//!   per-row-absmax INT8 rows (γ from
+//!   [`quantize_i8_row_into`](crate::quant::quantize_i8_row_into), one
+//!   scale per row for K and V), so the same block budget admits ~4× the
+//!   sequences.  Attention reads quantized rows through [`KvSegment`]
+//!   without any staging copies.
 //! * [`PagedSeq`] — one sequence's per-layer page tables mapping token
 //!   positions to blocks.  Blocks are either owned (writable) or shared
 //!   (frozen [`SharedBlock`]s behind `Arc`); writing into a shared block
@@ -20,24 +28,33 @@
 //!   rolls a rejected suffix back, returning whole blocks to the
 //!   sequence's allowance with their buffers recycled through the pool
 //!   (allocation-free in steady state).
-//! * **Prefix sharing** — completed prefills register their block-aligned
-//!   prompt prefixes in a hash over prompt tokens
+//! * **Prefix sharing + tiering** — completed prefills register their
+//!   block-aligned prompt prefixes in a hash over prompt tokens
 //!   ([`BlockPool::register_prefix`]); later admissions with a matching
 //!   prompt attach the frozen blocks and skip the covered prefill compute
 //!   ([`Admitted::shared_len`]).  Entries are tagged with a
 //!   [`PrefixTag`] (model generation identity) so a hot-swap can never
-//!   leak stale KV into a new generation.
+//!   leak stale KV into a new generation.  Under budget pressure the pool
+//!   sheds entries by a deterministic usage-weighted LRU (logical clock,
+//!   not wall time) rather than dropping everything unused; with a spill
+//!   directory configured ([`BlockPool::enable_spill`]) shed entries are
+//!   written to disk in the `.pqm` section-container format and faulted
+//!   back (CRC-verified) when the prompt recurs — a warm tier between
+//!   "resident" and "recompute".
 //! * [`KvStore`] — the per-layer cache abstraction attention decodes
 //!   against.  The contiguous [`KvCache`](crate::infer::KvCache) fast
 //!   path and the paged [`PagedLayer`] both implement it, and both expose
-//!   the cache as ordered contiguous segments, so the attention arithmetic
-//!   (and therefore greedy output) is bit-identical across the two.
+//!   the cache as ordered contiguous [`KvSegment`]s, so in F32 mode the
+//!   attention arithmetic (and therefore greedy output) is bit-identical
+//!   across the two; Int8 mode dequantizes per element inside the same
+//!   walk, with the divergence bounded by test.
 //!
 //! The serving [`Engine`](crate::serve::Engine) layers budgeted admission,
 //! preemption and pool metrics on top; see `serve/engine.rs`.
 
 pub mod pool;
 pub mod seq;
+pub mod spill;
 
 pub use pool::{Admitted, BlockPool, KvPoolStats, PrefixTag, Reservation};
 pub use seq::{PagedLayer, PagedSeq};
@@ -67,30 +84,128 @@ impl std::fmt::Display for KvError {
 
 impl std::error::Error for KvError {}
 
+/// Storage precision of one pool's KV blocks.
+///
+/// A block is a fixed byte slab sized for `block_size` f32 rows; quantized
+/// modes pack [`KvStorageMode::pack_factor`] × as many rows into the same
+/// slab, so the *byte* budget of the pool is mode-independent while its
+/// *token* capacity scales with the mode.  The packing is deliberately
+/// row-granular (one scale per row, rows addressed by offset) so a
+/// ternary/1-bit experiment mode can slot in as another arm later.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvStorageMode {
+    /// Full-precision rows: `d` f32s per row for each of K and V.
+    #[default]
+    F32,
+    /// Per-row absmax INT8: `d` i8s + one f32 scale γ per row for each of
+    /// K and V (dequantize with `x = q / γ`).  4× the rows per block.
+    Int8,
+}
+
+impl KvStorageMode {
+    /// Token rows a quantized block holds per f32 row of the same bytes.
+    pub fn pack_factor(self) -> usize {
+        match self {
+            KvStorageMode::F32 => 1,
+            KvStorageMode::Int8 => 4,
+        }
+    }
+
+    /// Bytes one K row (or one V row) of width `d` occupies, including
+    /// its per-row scale.
+    pub fn row_bytes(self, d: usize) -> usize {
+        match self {
+            KvStorageMode::F32 => 4 * d,
+            KvStorageMode::Int8 => d + 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvStorageMode::F32 => "f32",
+            KvStorageMode::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `--kv-mode` CLI value.
+    pub fn parse(s: &str) -> Option<KvStorageMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "full" => Some(KvStorageMode::F32),
+            "int8" | "i8" | "q8" => Some(KvStorageMode::Int8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for KvStorageMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Pool geometry knobs (engine-facing; layer count and width come from the
 /// model config at [`BlockPool::new`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvPoolOptions {
     /// Total physical blocks in the budget (per-layer granularity: one
-    /// sequence of `t` tokens uses `ceil(t / block_size)` blocks per layer).
+    /// sequence of `t` tokens uses `ceil(t / tokens_per_block)` blocks per
+    /// layer).
     pub n_blocks: usize,
-    /// Tokens per block.
+    /// Tokens per block *at f32 width*; quantized modes pack
+    /// `mode.pack_factor() × block_size` tokens into the same block bytes.
     pub block_size: usize,
+    /// Storage precision of every block in the pool.
+    pub mode: KvStorageMode,
 }
 
 impl Default for KvPoolOptions {
     fn default() -> Self {
-        KvPoolOptions { n_blocks: 4096, block_size: 16 }
+        KvPoolOptions { n_blocks: 4096, block_size: 16, mode: KvStorageMode::F32 }
+    }
+}
+
+impl KvPoolOptions {
+    /// Token rows one block holds under this geometry's mode.
+    pub fn tokens_per_block(&self) -> usize {
+        self.block_size * self.mode.pack_factor()
+    }
+
+    /// Bytes one block occupies (K + V rows, scales included).
+    pub fn block_bytes(&self, d: usize) -> usize {
+        2 * self.tokens_per_block() * self.mode.row_bytes(d)
+    }
+}
+
+/// One ordered slab of cached rows, in the pool's storage precision.
+/// Quantized arms expose the raw codes plus per-row scales so consumers
+/// dequantize in place (no staging buffers on the decode hot path).
+#[derive(Clone, Copy)]
+pub enum KvSegment<'a> {
+    /// `rows × d` f32s for each of K and V.
+    F32 { k: &'a [f32], v: &'a [f32] },
+    /// `rows × d` i8 codes and `rows` scales γ for each of K and V;
+    /// element `i` of row `r` dequantizes as `k[r*d + i] as f32 / k_scale[r]`.
+    Int8 { k: &'a [i8], v: &'a [i8], k_scale: &'a [f32], v_scale: &'a [f32] },
+}
+
+impl KvSegment<'_> {
+    /// Token rows this segment covers.
+    pub fn rows(&self, d: usize) -> usize {
+        match self {
+            KvSegment::F32 { k, .. } => k.len() / d,
+            KvSegment::Int8 { k, .. } => k.len() / d,
+        }
     }
 }
 
 /// One layer's KV cache as attention sees it: append one row per decoded
 /// token, read back the whole history as ordered contiguous segments.
 ///
-/// Both implementations expose whole rows (multiples of `d` floats) in
+/// Both implementations expose whole rows (multiples of `d` elements) in
 /// position order, so a consumer that walks segments row-by-row performs
-/// exactly the same float ops in the same order regardless of layout —
-/// the paged path is bit-identical to the contiguous one by construction.
+/// exactly the same arithmetic in the same order regardless of layout —
+/// in F32 mode the paged path is bit-identical to the contiguous one by
+/// construction; quantized modes perform the same walk over codes.
 pub trait KvStore {
     /// Tokens currently cached.
     fn len(&self) -> usize;
@@ -100,13 +215,26 @@ pub trait KvStore {
     }
 
     /// Append one token's K and V rows (`d` floats each). Recoverable:
-    /// a full cache returns [`KvError`], it does not panic.
+    /// a full cache returns [`KvError`], it does not panic. Quantized
+    /// stores quantize the row on the way in.
     fn push(&mut self, k: &[f32], v: &[f32]) -> Result<(), KvError>;
 
-    /// Visit the ordered contiguous `(k, v)` slabs covering positions
-    /// `[0, len)` without allocating — the decode hot path. Each slab
+    /// Visit the ordered contiguous [`KvSegment`]s covering positions
+    /// `[0, len)` without allocating — the decode hot path. Each segment
     /// holds a whole number of rows.
-    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32]));
+    fn for_each_seg<'a>(&'a self, f: &mut dyn FnMut(KvSegment<'a>));
+
+    /// F32-only convenience walk kept for the bit-exactness tests and
+    /// existing consumers; quantized segments are skipped (debug-asserted
+    /// against, since mixing would silently drop rows).
+    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+        self.for_each_seg(&mut |seg| match seg {
+            KvSegment::F32 { k, v } => f(k, v),
+            KvSegment::Int8 { .. } => {
+                debug_assert!(false, "for_each_segment on a quantized store");
+            }
+        });
+    }
 
     /// Allocating convenience view of the same walk (tests, inspection).
     fn segments(&self) -> Vec<(&[f32], &[f32])> {
@@ -132,5 +260,29 @@ mod tests {
     fn default_options_are_sane() {
         let o = KvPoolOptions::default();
         assert!(o.n_blocks > 0 && o.block_size > 0);
+        assert_eq!(o.mode, KvStorageMode::F32);
+    }
+
+    #[test]
+    fn mode_geometry_packs_4x_in_the_same_bytes() {
+        let f32_opts = KvPoolOptions { n_blocks: 8, block_size: 16, mode: KvStorageMode::F32 };
+        let i8_opts = KvPoolOptions { mode: KvStorageMode::Int8, ..f32_opts };
+        assert_eq!(f32_opts.tokens_per_block(), 16);
+        assert_eq!(i8_opts.tokens_per_block(), 64);
+        let d = 128;
+        // Same order of block bytes: int8 packs 4x the rows at ~1/4 the
+        // row width (the per-row scale is the only overhead).
+        assert_eq!(f32_opts.block_bytes(d), 2 * 16 * 4 * d);
+        assert_eq!(i8_opts.block_bytes(d), 2 * 64 * (d + 4));
+        let overhead = i8_opts.block_bytes(d) as f64 / f32_opts.block_bytes(d) as f64;
+        assert!(overhead < 1.04, "scale overhead must stay small, got {overhead}");
+    }
+
+    #[test]
+    fn mode_parse_round_trips() {
+        for m in [KvStorageMode::F32, KvStorageMode::Int8] {
+            assert_eq!(KvStorageMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KvStorageMode::parse("ternary"), None);
     }
 }

@@ -1,5 +1,5 @@
 //! The block pool: a fixed budget of KV blocks, reservation-based
-//! admission, and the prefix-share map.
+//! admission, the prefix-share map, and the storage/eviction policy.
 //!
 //! Accounting model: every resident block carries exactly one charge
 //! against the budget.  A sequence's [`Reservation`] charges its
@@ -9,13 +9,25 @@
 //! ([`BlockPool::register_prefix`]) and return it on eviction.  Buffers
 //! themselves are allocated lazily and recycled on release, so the budget
 //! is a ceiling, not a preallocation.
+//!
+//! Storage precision is a per-pool [`KvStorageMode`]: a block is a fixed
+//! byte slab holding `block_size` f32 rows or `pack_factor ×` as many
+//! quantized rows (see [`KvData`]).  Under budget pressure the pool sheds
+//! share-map entries by a deterministic usage-weighted LRU (logical clock)
+//! instead of dropping everything unused, optionally spilling shed entries
+//! to disk ([`BlockPool::enable_spill`]) so a recurring prompt faults its
+//! prefix back instead of recomputing it.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use super::seq::PagedSeq;
-use super::{KvError, KvPoolOptions};
+use super::spill::SpillTier;
+use super::{KvError, KvPoolOptions, KvSegment, KvStorageMode};
+use crate::quant::quantize_i8_row_into;
 
 /// Identity of the model weights a shared prefix was computed under:
 /// (process-unique registry-entry id, generation).  Two prompts may only
@@ -27,24 +39,110 @@ use super::{KvError, KvPoolOptions};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub struct PrefixTag(pub usize, pub u64);
 
-/// One frozen KV block: `filled` rows of K and V, immutable once built.
+/// One block's row storage in the pool's precision. Rows are written
+/// whole (`write_row`) and read back as one [`KvSegment`]; quantized arms
+/// carry one scale per row so copies (CoW, snapshots, spill round-trips)
+/// are lossless moves of codes, never re-quantization.
+pub(crate) enum KvData {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Int8 { k: Vec<i8>, v: Vec<i8>, ks: Vec<f32>, vs: Vec<f32> },
+}
+
+impl KvData {
+    pub(crate) fn alloc(mode: KvStorageMode, rows: usize, d: usize) -> KvData {
+        match mode {
+            KvStorageMode::F32 => {
+                KvData::F32 { k: vec![0.0; rows * d], v: vec![0.0; rows * d] }
+            }
+            KvStorageMode::Int8 => KvData::Int8 {
+                k: vec![0; rows * d],
+                v: vec![0; rows * d],
+                ks: vec![0.0; rows],
+                vs: vec![0.0; rows],
+            },
+        }
+    }
+
+    /// An unallocated placeholder (used when moving data out of a page).
+    pub(crate) fn empty(mode: KvStorageMode) -> KvData {
+        KvData::alloc(mode, 0, 1)
+    }
+
+    pub(crate) fn is_allocated(&self) -> bool {
+        match self {
+            KvData::F32 { k, .. } => !k.is_empty(),
+            KvData::Int8 { k, .. } => !k.is_empty(),
+        }
+    }
+
+    /// Write one token row at row offset `off`, quantizing as needed.
+    pub(crate) fn write_row(&mut self, off: usize, d: usize, krow: &[f32], vrow: &[f32]) {
+        match self {
+            KvData::F32 { k, v } => {
+                k[off * d..(off + 1) * d].copy_from_slice(krow);
+                v[off * d..(off + 1) * d].copy_from_slice(vrow);
+            }
+            KvData::Int8 { k, v, ks, vs } => {
+                ks[off] = quantize_i8_row_into(krow, &mut k[off * d..(off + 1) * d]);
+                vs[off] = quantize_i8_row_into(vrow, &mut v[off * d..(off + 1) * d]);
+            }
+        }
+    }
+
+    /// Copy the first `rows` rows of `src` losslessly (codes and scales
+    /// move verbatim; no re-quantization). Modes must match.
+    pub(crate) fn copy_rows(&mut self, src: &KvData, rows: usize, d: usize) {
+        let n = rows * d;
+        match (self, src) {
+            (KvData::F32 { k, v }, KvData::F32 { k: sk, v: sv }) => {
+                k[..n].copy_from_slice(&sk[..n]);
+                v[..n].copy_from_slice(&sv[..n]);
+            }
+            (
+                KvData::Int8 { k, v, ks, vs },
+                KvData::Int8 { k: sk, v: sv, ks: sks, vs: svs },
+            ) => {
+                k[..n].copy_from_slice(&sk[..n]);
+                v[..n].copy_from_slice(&sv[..n]);
+                ks[..rows].copy_from_slice(&sks[..rows]);
+                vs[..rows].copy_from_slice(&svs[..rows]);
+            }
+            _ => unreachable!("mixed storage modes inside one pool"),
+        }
+    }
+
+    /// The first `filled` rows as one segment.
+    pub(crate) fn seg(&self, filled: usize, d: usize) -> KvSegment<'_> {
+        match self {
+            KvData::F32 { k, v } => {
+                KvSegment::F32 { k: &k[..filled * d], v: &v[..filled * d] }
+            }
+            KvData::Int8 { k, v, ks, vs } => KvSegment::Int8 {
+                k: &k[..filled * d],
+                v: &v[..filled * d],
+                k_scale: &ks[..filled],
+                v_scale: &vs[..filled],
+            },
+        }
+    }
+}
+
+/// One frozen KV block: `filled` rows, immutable once built.
 /// Shared across sequences behind `Arc`; writers copy first (CoW).
 pub struct SharedBlock {
-    pub(crate) k: Vec<f32>,
-    pub(crate) v: Vec<f32>,
+    pub(crate) data: KvData,
     pub(crate) filled: usize,
 }
 
-/// One writable block buffer (`block_size * d` floats for each of K, V).
+/// One writable block buffer.
 pub(crate) struct KvBuf {
-    pub(crate) k: Vec<f32>,
-    pub(crate) v: Vec<f32>,
+    pub(crate) data: KvData,
     pub(crate) filled: usize,
 }
 
 impl KvBuf {
-    pub(crate) fn empty() -> KvBuf {
-        KvBuf { k: Vec::new(), v: Vec::new(), filled: 0 }
+    pub(crate) fn empty(mode: KvStorageMode) -> KvBuf {
+        KvBuf { data: KvData::empty(mode), filled: 0 }
     }
 }
 
@@ -139,6 +237,15 @@ struct ShareEntry {
     len: usize,
     /// Per layer, blocks covering `[0, len)`.
     layers: Vec<Vec<Arc<SharedBlock>>>,
+    /// Logical-clock tick of the last admission that attached this entry
+    /// (or its registration). Drives the deterministic LRU.
+    last_used: u64,
+    /// Admissions that attached this entry (usage weight).
+    uses: u64,
+    /// Monotone insertion id — the deterministic tie-break.
+    seq_no: u64,
+    /// Optional expiry: entries past their deadline shed first.
+    deadline: Option<Instant>,
 }
 
 /// Map-side bookkeeping for one physical shared block: the map's own
@@ -147,6 +254,21 @@ struct ShareEntry {
 struct MapBlock {
     arc: Arc<SharedBlock>,
     refs: usize,
+}
+
+/// A prefix entry shed to the disk tier: everything needed to fault it
+/// back (or to report it) without touching the file.
+struct SpilledEntry {
+    tag: PrefixTag,
+    len: usize,
+    path: PathBuf,
+    /// Physical blocks the entry restores to (across layers).
+    blocks: usize,
+    /// On-disk payload bytes (spilled-bytes gauge).
+    bytes: u64,
+    /// Usage carried across the tier boundary so a faulted-back entry
+    /// keeps its LRU weight.
+    uses: u64,
 }
 
 struct PoolState {
@@ -160,11 +282,24 @@ struct PoolState {
     share: HashMap<Vec<u32>, ShareEntry>,
     /// Unique physical blocks held by the map, keyed by `Arc` pointer.
     map_blocks: HashMap<usize, MapBlock>,
+    /// Prefix entries resident on disk only (the warm tier).
+    spilled: HashMap<Vec<u32>, SpilledEntry>,
+    /// Disk tier, when configured.
+    spill: Option<SpillTier>,
+    /// Logical admission clock (LRU recency source — deterministic, no
+    /// wall time).
+    clock: u64,
+    /// Monotone entry counter (LRU tie-break).
+    entry_seq: u64,
 }
 
-/// Entries above this are reclaimed opportunistically even without budget
+/// Entries above this are shed opportunistically even without budget
 /// pressure, bounding share-map growth on long-running engines.
 const SHARE_ENTRY_SOFT_CAP: usize = 1024;
+
+/// Max on-disk spill stubs retained; beyond it the lowest-weight stubs
+/// are dropped (files deleted) so the warm tier cannot grow unboundedly.
+const SPILL_ENTRY_CAP: usize = 4096;
 
 /// Max block-boundary entries registered per prompt. Long prompts get
 /// evenly-spaced boundaries (always including the last) instead of one
@@ -177,13 +312,27 @@ const MAX_BOUNDARY_ENTRIES: usize = 8;
 /// tiny prefixes of itself, which save little anyway.
 const MAX_LOOKUP_CANDIDATES: usize = 32;
 
+/// LRU usage weight: each attachment is worth this many clock ticks of
+/// recency, capped so one hot entry cannot become unevictable forever.
+const USAGE_WEIGHT: u64 = 16;
+const USAGE_CAP: u64 = 64;
+
 /// Snapshot of the pool's counters (all monotone except the gauges).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct KvPoolStats {
     pub n_blocks: usize,
+    /// Token rows per block under the pool's storage mode.
     pub block_size: usize,
+    /// Storage precision of every block.
+    pub mode: KvStorageMode,
+    /// Bytes one block occupies (K + V rows, scales included).
+    pub block_bytes: usize,
+    /// `n_blocks * block_bytes` — the pool's RAM ceiling.
+    pub capacity_bytes: usize,
     /// Blocks currently charged (sequence reservations + map-held).
     pub in_use: usize,
+    /// `in_use * block_bytes`.
+    pub resident_bytes: usize,
     /// `in_use / n_blocks`.
     pub utilization: f64,
     /// Most blocks ever charged at once (pressure high-water mark).
@@ -198,28 +347,49 @@ pub struct KvPoolStats {
     pub shared_hit_rate: f64,
     /// Copy-on-write block copies (shared prefix diverged into new tokens).
     pub cow_copies: usize,
-    /// Map-held blocks reclaimed under pressure.
+    /// Map-held blocks reclaimed (evicted or spilled) under pressure.
     pub evicted_blocks: usize,
     /// Reserved blocks returned without ever being materialized (early
     /// stop-token finishes, cancellations).
     pub unused_tail_returned: usize,
     /// Live prefix entries in the share map.
     pub registered_prefixes: usize,
+    /// Prefix entries resident on disk only (warm tier).
+    pub spilled_entries: usize,
+    /// Blocks those entries restore to.
+    pub spilled_blocks: usize,
+    /// On-disk bytes of the warm tier.
+    pub spilled_bytes: u64,
+    /// Entries written to the disk tier (monotone).
+    pub spill_writes: usize,
+    /// Entries faulted back from disk (monotone).
+    pub spill_faults: usize,
+    /// Fault attempts that failed (I/O error, CRC mismatch, or no budget
+    /// to restore) and fell back to recompute.
+    pub spill_fault_fails: usize,
 }
 
 /// Fixed budget of fixed-size KV blocks shared by every sequence of one
 /// serving engine. See the module docs for the accounting model.
 pub struct BlockPool {
     pub(crate) n_blocks: usize,
+    /// Effective token rows per block (geometry `block_size` × the
+    /// mode's pack factor).
     pub(crate) block_size: usize,
     pub(crate) n_layers: usize,
     pub(crate) d: usize,
+    pub(crate) mode: KvStorageMode,
+    /// Bytes one block occupies.
+    block_bytes: usize,
     state: Mutex<PoolState>,
     shared_attached: AtomicUsize,
     prompt_blocks: AtomicUsize,
     cow_copies: AtomicUsize,
     evicted_blocks: AtomicUsize,
     unused_tail: AtomicUsize,
+    spill_writes: AtomicUsize,
+    spill_faults: AtomicUsize,
+    spill_fault_fails: AtomicUsize,
 }
 
 impl std::fmt::Debug for BlockPool {
@@ -228,6 +398,7 @@ impl std::fmt::Debug for BlockPool {
         f.debug_struct("BlockPool")
             .field("n_blocks", &s.n_blocks)
             .field("block_size", &s.block_size)
+            .field("mode", &s.mode)
             .field("in_use", &s.in_use)
             .field("registered_prefixes", &s.registered_prefixes)
             .finish()
@@ -240,28 +411,47 @@ impl BlockPool {
         assert!(opts.n_blocks > 0 && opts.block_size > 0 && n_layers > 0 && d > 0);
         BlockPool {
             n_blocks: opts.n_blocks,
-            block_size: opts.block_size,
+            block_size: opts.tokens_per_block(),
             n_layers,
             d,
+            mode: opts.mode,
+            block_bytes: opts.block_bytes(d),
             state: Mutex::new(PoolState {
                 available: opts.n_blocks,
                 min_available: opts.n_blocks,
                 recycle: Vec::new(),
                 share: HashMap::new(),
                 map_blocks: HashMap::new(),
+                spilled: HashMap::new(),
+                spill: None,
+                clock: 0,
+                entry_seq: 0,
             }),
             shared_attached: AtomicUsize::new(0),
             prompt_blocks: AtomicUsize::new(0),
             cow_copies: AtomicUsize::new(0),
             evicted_blocks: AtomicUsize::new(0),
             unused_tail: AtomicUsize::new(0),
+            spill_writes: AtomicUsize::new(0),
+            spill_faults: AtomicUsize::new(0),
+            spill_fault_fails: AtomicUsize::new(0),
         }
+    }
+
+    /// Configure the disk spill tier: entries shed under pressure are
+    /// written to `.pqm` section-container files under `dir` and faulted
+    /// back when their prompt recurs. Idempotent; creates `dir`.
+    pub fn enable_spill(&self, dir: impl AsRef<Path>) -> std::io::Result<()> {
+        let tier = SpillTier::new(dir.as_ref())?;
+        self.state.lock().unwrap().spill = Some(tier);
+        Ok(())
     }
 
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
     }
 
+    /// Token rows per block (mode-effective).
     pub fn block_size(&self) -> usize {
         self.block_size
     }
@@ -273,6 +463,11 @@ impl BlockPool {
     /// Model width (`d_model`) each block row holds.
     pub fn width(&self) -> usize {
         self.d
+    }
+
+    /// Storage precision of every block in this pool.
+    pub fn mode(&self) -> KvStorageMode {
+        self.mode
     }
 
     /// Unreserved blocks right now.
@@ -288,9 +483,10 @@ impl BlockPool {
 
     /// Admit a sequence that will hold at most `total_tokens` positions
     /// (prompt + generation budget): look up the longest registered prefix
-    /// of `prompt` under `tag`, attach its blocks, and reserve the rest of
-    /// the worst case. Fails with [`KvError::OutOfBlocks`] — after
-    /// evicting unused shared prefixes — when the budget cannot cover it.
+    /// of `prompt` under `tag` (faulting it back from the disk tier if it
+    /// was spilled), attach its blocks, and reserve the rest of the worst
+    /// case. Fails with [`KvError::OutOfBlocks`] — after shedding cold
+    /// shared prefixes — when the budget cannot cover it.
     pub fn admit(
         self: &Arc<Self>,
         prompt: &[u32],
@@ -325,6 +521,8 @@ impl BlockPool {
         debug_assert!(total_tokens >= l);
         let logical = total_tokens.div_ceil(bs).max(1);
         let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let now = st.clock;
 
         // Longest matching prefix: the exact prompt (partial-tail entry),
         // then block-aligned lengths descending. The match is capped at
@@ -343,7 +541,12 @@ impl BlockPool {
                 j -= 1;
             }
             for cand in cands {
-                let Some(entry) = st.share.get(&prompt[..cand]) else { continue };
+                if !st.share.contains_key(&prompt[..cand]) {
+                    // Warm tier: fault a spilled entry back before giving
+                    // up on this candidate.
+                    self.try_fault_locked(&mut st, &prompt[..cand], tag);
+                }
+                let Some(entry) = st.share.get_mut(&prompt[..cand]) else { continue };
                 if entry.tag != tag || entry.len != cand {
                     continue;
                 }
@@ -351,6 +554,8 @@ impl BlockPool {
                 if e == 0 {
                     break;
                 }
+                entry.last_used = now;
+                entry.uses += 1;
                 let nb = e.div_ceil(bs);
                 shared_layers = entry
                     .layers
@@ -409,12 +614,25 @@ impl BlockPool {
     }
 
     /// Register `prompt`'s prefixes from a sequence whose prefill just
+    /// completed; see [`BlockPool::register_prefix_deadline`].
+    pub fn register_prefix(&self, prompt: &[u32], seq: &mut PagedSeq) {
+        self.register_prefix_deadline(prompt, seq, None);
+    }
+
+    /// Register `prompt`'s prefixes from a sequence whose prefill just
     /// completed: freeze the fully-covered prompt blocks in place
     /// (transferring their budget charge to the map), insert one entry per
     /// block boundary, and — budget permitting — snapshot the partial tail
     /// under the full-prompt key. Idempotent per key; entries under a
-    /// stale tag are replaced.
-    pub fn register_prefix(&self, prompt: &[u32], seq: &mut PagedSeq) {
+    /// stale tag are replaced. An optional `deadline` marks the entry
+    /// first-in-line for shedding once it passes (per-request control over
+    /// how long a prefix is worth caching).
+    pub fn register_prefix_deadline(
+        &self,
+        prompt: &[u32],
+        seq: &mut PagedSeq,
+        deadline: Option<Instant>,
+    ) {
         let bs = self.block_size;
         let l = prompt.len();
         if l == 0 || seq.len() < l {
@@ -424,7 +642,8 @@ impl BlockPool {
         let tag = seq.tag;
         let mut st = self.state.lock().unwrap();
         if st.share.len() > SHARE_ENTRY_SOFT_CAP {
-            self.evict_unused_locked(&mut st);
+            let excess = st.share.len() - SHARE_ENTRY_SOFT_CAP;
+            self.shed_entries_locked(&mut st, usize::MAX, Some(excess));
         }
         seq.freeze_blocks(full);
         let seq_ptrs = seq.shared_ptrs();
@@ -465,7 +684,15 @@ impl BlockPool {
                 }
                 layers.push(blocks);
             }
-            self.insert_entry_locked(&mut st, key.to_vec(), tag, j * bs, layers, seq, &seq_ptrs);
+            self.insert_entry_locked(
+                &mut st,
+                key.to_vec(),
+                tag,
+                j * bs,
+                layers,
+                deadline,
+                Some((seq, &seq_ptrs)),
+            );
         }
 
         // Partial tail: snapshot rows [full*bs, l) under the full-prompt
@@ -486,7 +713,6 @@ impl BlockPool {
             if st.available < self.n_layers {
                 return; // don't starve admissions to cache a tail
             }
-            let floats = bs * self.d;
             let mut layers: Vec<Vec<Arc<SharedBlock>>> = Vec::with_capacity(self.n_layers);
             for layer in 0..self.n_layers {
                 let mut blocks = Vec::with_capacity(full + 1);
@@ -496,19 +722,26 @@ impl BlockPool {
                         None => return,
                     }
                 }
-                let Some((src_k, src_v, filled)) = seq.block_rows(layer, full) else { return };
+                let Some((src, filled)) = seq.block_data(layer, full) else { return };
                 if filled < rem {
                     return;
                 }
-                let mut buf = Self::take_buf_locked(&mut st, floats);
-                buf.k[..rem * self.d].copy_from_slice(&src_k[..rem * self.d]);
-                buf.v[..rem * self.d].copy_from_slice(&src_v[..rem * self.d]);
-                blocks.push(Arc::new(SharedBlock { k: buf.k, v: buf.v, filled: rem }));
+                let mut buf = self.take_buf_locked(&mut st);
+                buf.data.copy_rows(src, rem, self.d);
+                blocks.push(Arc::new(SharedBlock { data: buf.data, filled: rem }));
                 layers.push(blocks);
             }
             st.available -= self.n_layers; // the map's charge for the snapshots
             st.min_available = st.min_available.min(st.available);
-            self.insert_entry_locked(&mut st, key, tag, l, layers, seq, &seq_ptrs);
+            self.insert_entry_locked(
+                &mut st,
+                key,
+                tag,
+                l,
+                layers,
+                deadline,
+                Some((seq, &seq_ptrs)),
+            );
         }
     }
 
@@ -524,7 +757,9 @@ impl BlockPool {
 
     /// Insert one entry, updating per-block map refs. A block entering the
     /// map for the first time from the sequence's frozen pages transfers
-    /// one budget charge from the sequence's reservation to the map.
+    /// one budget charge from the sequence's reservation to the map;
+    /// blocks with no originating sequence (tail snapshots, faulted-back
+    /// entries) were charged from `available` by the caller.
     #[allow(clippy::too_many_arguments)]
     fn insert_entry_locked(
         &self,
@@ -533,29 +768,43 @@ impl BlockPool {
         tag: PrefixTag,
         len: usize,
         layers: Vec<Vec<Arc<SharedBlock>>>,
-        seq: &mut PagedSeq,
-        seq_ptrs: &std::collections::HashSet<usize>,
+        deadline: Option<Instant>,
+        seq: Option<(&mut PagedSeq, &std::collections::HashSet<usize>)>,
     ) {
+        let mut seq = seq;
         for arc in layers.iter().flatten() {
             let ptr = Arc::as_ptr(arc) as usize;
             match st.map_blocks.get_mut(&ptr) {
                 Some(mb) => mb.refs += 1,
                 None => {
                     st.map_blocks.insert(ptr, MapBlock { arc: arc.clone(), refs: 1 });
-                    // Transfer the charge for a block the sequence froze;
-                    // snapshot blocks were charged from `available` above
-                    // and are recognized by not belonging to the sequence.
-                    if seq_ptrs.contains(&ptr) {
-                        seq.transfer_charge();
+                    if let Some((seq, seq_ptrs)) = seq.as_mut() {
+                        if seq_ptrs.contains(&ptr) {
+                            seq.transfer_charge();
+                        }
                     }
                 }
             }
         }
-        st.share.insert(key, ShareEntry { tag, len, layers });
+        // A fresh registration supersedes any stale disk copy.
+        self.drop_spill_stub_locked(st, &key);
+        st.entry_seq += 1;
+        let entry = ShareEntry {
+            tag,
+            len,
+            layers,
+            last_used: st.clock,
+            uses: 0,
+            seq_no: st.entry_seq,
+            deadline,
+        };
+        st.share.insert(key, entry);
     }
 
-    fn remove_entry_locked(&self, st: &mut PoolState, key: Vec<u32>) {
-        let Some(entry) = st.share.remove(&key) else { return };
+    /// Remove one entry and return how many physical blocks it freed.
+    fn remove_entry_locked(&self, st: &mut PoolState, key: Vec<u32>) -> usize {
+        let Some(entry) = st.share.remove(&key) else { return 0 };
+        let mut freed = 0;
         for arc in entry.layers.into_iter().flatten() {
             let ptr = Arc::as_ptr(&arc) as usize;
             let gone = match st.map_blocks.get_mut(&ptr) {
@@ -569,26 +818,28 @@ impl BlockPool {
             if gone {
                 let mb = st.map_blocks.remove(&ptr).unwrap();
                 st.available += 1;
+                freed += 1;
                 self.evicted_blocks.fetch_add(1, Ordering::Relaxed);
                 if let Ok(sb) = Arc::try_unwrap(mb.arc) {
-                    Self::push_recycle(st, self.n_blocks, KvBuf { k: sb.k, v: sb.v, filled: 0 });
+                    Self::push_recycle(
+                        st,
+                        self.n_blocks,
+                        KvBuf { data: sb.data, filled: 0 },
+                    );
                 }
             }
         }
+        freed
     }
 
     /// Evict every share-map entry whose blocks no live sequence holds,
-    /// returning their budget charges to `available`. Admission already
-    /// does this under pressure; this is the explicit housekeeping hook
-    /// (and the leak probe tests use: after a full drain plus eviction,
-    /// `in_use` must be zero — anything left is a leaked request block).
+    /// returning their budget charges to `available`. Shedding under
+    /// pressure is selective (usage-weighted LRU); this is the explicit
+    /// drop-everything housekeeping hook (and the leak probe tests use:
+    /// after a full drain plus eviction, `in_use` must be zero — anything
+    /// left is a leaked request block). Does not touch the disk tier.
     pub fn evict_unused(&self) {
         let mut st = self.state.lock().unwrap();
-        self.evict_unused_locked(&mut st);
-    }
-
-    /// Evict every entry whose blocks have no users outside the map.
-    fn evict_unused_locked(&self, st: &mut PoolState) {
         let keys: Vec<Vec<u32>> = {
             let share = &st.share;
             let map_blocks = &st.map_blocks;
@@ -599,13 +850,174 @@ impl BlockPool {
                 .collect()
         };
         for key in keys {
-            self.remove_entry_locked(st, key);
+            self.remove_entry_locked(&mut st, key);
+        }
+    }
+
+    /// Spill every currently-unused share-map entry to the disk tier
+    /// (no-op without [`BlockPool::enable_spill`]). Explicit housekeeping
+    /// hook — e.g. ahead of an anticipated burst of fresh prompts — and
+    /// the test seam for the fault-back path.
+    pub fn spill_unused(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.spill.is_none() {
+            return;
+        }
+        let keys = self.unused_in_shed_order(&st);
+        for key in keys {
+            self.shed_one_locked(&mut st, key);
+        }
+    }
+
+    /// Unused entries in deterministic shed order: expired deadlines
+    /// first (oldest deadline first), then ascending usage-weighted
+    /// recency score, insertion id as the tie-break.
+    fn unused_in_shed_order(&self, st: &PoolState) -> Vec<Vec<u32>> {
+        let now = Instant::now();
+        let mut scored: Vec<(bool, u64, u64, Vec<u32>)> = st
+            .share
+            .iter()
+            .filter(|(_, e)| Self::entry_unused(&st.map_blocks, e))
+            .map(|(k, e)| {
+                let expired = e.deadline.is_some_and(|d| d <= now);
+                let score = e.last_used.saturating_add(USAGE_WEIGHT * e.uses.min(USAGE_CAP));
+                (!expired, score, e.seq_no, k.clone())
+            })
+            .collect();
+        scored.sort();
+        scored.into_iter().map(|(_, _, _, k)| k).collect()
+    }
+
+    /// Shed one entry: spill it to disk when a tier is configured (and
+    /// the write succeeds), plain-evict otherwise. Returns blocks freed.
+    fn shed_one_locked(&self, st: &mut PoolState, key: Vec<u32>) -> usize {
+        if st.spill.is_some() {
+            let written = {
+                let Some(entry) = st.share.get(&key) else { return 0 };
+                let tier = st.spill.as_ref().unwrap();
+                tier.write_entry(
+                    &key,
+                    entry.tag,
+                    entry.len,
+                    self.mode,
+                    self.block_size,
+                    self.d,
+                    &entry.layers,
+                )
+            };
+            if let Ok((path, bytes)) = written {
+                let entry = st.share.get(&key).unwrap();
+                let blocks: usize = entry.layers.iter().map(|l| l.len()).sum();
+                let stub = SpilledEntry {
+                    tag: entry.tag,
+                    len: entry.len,
+                    path,
+                    blocks,
+                    bytes,
+                    uses: entry.uses,
+                };
+                self.spill_writes.fetch_add(1, Ordering::Relaxed);
+                self.insert_spill_stub_locked(st, key.clone(), stub);
+                return self.remove_entry_locked(st, key);
+            }
+            // Fall through to plain eviction on a failed write.
+        }
+        self.remove_entry_locked(st, key)
+    }
+
+    fn insert_spill_stub_locked(&self, st: &mut PoolState, key: Vec<u32>, stub: SpilledEntry) {
+        if st.spilled.len() >= SPILL_ENTRY_CAP {
+            // Drop the least-used stub (tie-break: shorter key first, then
+            // lexicographic — fully deterministic).
+            if let Some(victim) = st
+                .spilled
+                .iter()
+                .min_by_key(|(k, s)| (s.uses, k.len(), (*k).clone()))
+                .map(|(k, _)| k.clone())
+            {
+                self.drop_spill_stub_locked(st, &victim);
+            }
+        }
+        st.spilled.insert(key, stub);
+    }
+
+    fn drop_spill_stub_locked(&self, st: &mut PoolState, key: &[u32]) {
+        if let Some(stub) = st.spilled.remove(key) {
+            std::fs::remove_file(&stub.path).ok();
+        }
+    }
+
+    /// Shed unused entries until `need_blocks` are free (or
+    /// `max_entries` entries were shed). The under-pressure path.
+    fn shed_entries_locked(
+        &self,
+        st: &mut PoolState,
+        need_blocks: usize,
+        max_entries: Option<usize>,
+    ) {
+        let keys = self.unused_in_shed_order(st);
+        let mut shed = 0usize;
+        for key in keys {
+            if st.available >= need_blocks {
+                break;
+            }
+            if max_entries.is_some_and(|m| shed >= m) {
+                break;
+            }
+            self.shed_one_locked(st, key);
+            shed += 1;
+        }
+    }
+
+    /// Fault one spilled entry back into the share map if `key` matches a
+    /// stub under `tag`. On any failure (I/O, CRC, geometry, or no budget
+    /// for the restored blocks) the attempt degrades to a miss.
+    fn try_fault_locked(&self, st: &mut PoolState, key: &[u32], tag: PrefixTag) {
+        let matches = st
+            .spilled
+            .get(key)
+            .is_some_and(|s| s.tag == tag && s.len == key.len());
+        if !matches {
+            return;
+        }
+        let stub = st.spilled.remove(key).unwrap();
+        // Budget first: restoring must not overdraw the pool. Shedding
+        // colder entries to make room is allowed (tier rotation).
+        if self.reserve_locked(st, stub.blocks).is_err() {
+            // Leave it on disk for a calmer moment.
+            st.spilled.insert(key.to_vec(), stub);
+            self.spill_fault_fails.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let read = {
+            let tier = st.spill.as_ref().expect("stub implies a tier");
+            tier.read_entry(&stub.path, stub.tag, self.mode, self.block_size, self.d)
+        };
+        match read {
+            Ok(layers) if layers.len() == self.n_layers => {
+                let restored: usize = layers.iter().map(|l| l.len()).sum();
+                debug_assert_eq!(restored, stub.blocks, "stub block count out of sync");
+                std::fs::remove_file(&stub.path).ok();
+                self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                let uses = stub.uses;
+                self.insert_entry_locked(st, key.to_vec(), tag, stub.len, layers, None, None);
+                if let Some(e) = st.share.get_mut(key) {
+                    e.uses = uses;
+                }
+            }
+            _ => {
+                // Corrupted or unreadable: release the charge, drop the
+                // stub and file — recompute is the backstop tier.
+                st.available += stub.blocks;
+                std::fs::remove_file(&stub.path).ok();
+                self.spill_fault_fails.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
     fn reserve_locked(&self, st: &mut PoolState, need: usize) -> Result<(), KvError> {
         if st.available < need {
-            self.evict_unused_locked(st);
+            self.shed_entries_locked(st, need, None);
         }
         if st.available < need {
             return Err(KvError::OutOfBlocks { needed: need, available: st.available });
@@ -623,16 +1035,19 @@ impl BlockPool {
 
     pub(crate) fn take_buf(&self) -> KvBuf {
         let mut st = self.state.lock().unwrap();
-        Self::take_buf_locked(&mut st, self.block_size * self.d)
+        self.take_buf_locked(&mut st)
     }
 
-    fn take_buf_locked(st: &mut PoolState, floats: usize) -> KvBuf {
+    fn take_buf_locked(&self, st: &mut PoolState) -> KvBuf {
         match st.recycle.pop() {
             Some(mut b) => {
                 b.filled = 0;
                 b
             }
-            None => KvBuf { k: vec![0.0; floats], v: vec![0.0; floats], filled: 0 },
+            None => KvBuf {
+                data: KvData::alloc(self.mode, self.block_size, self.d),
+                filled: 0,
+            },
         }
     }
 
@@ -655,7 +1070,7 @@ impl BlockPool {
     }
 
     fn push_recycle(st: &mut PoolState, cap: usize, mut b: KvBuf) {
-        if st.recycle.len() < cap && !b.k.is_empty() {
+        if st.recycle.len() < cap && b.data.is_allocated() {
             b.filled = 0;
             st.recycle.push(b);
         }
@@ -670,9 +1085,16 @@ impl BlockPool {
     }
 
     pub fn stats(&self) -> KvPoolStats {
-        let (available, min_available, registered) = {
+        let (available, min_available, registered, spilled_entries, spilled_blocks, spilled_bytes) = {
             let st = self.state.lock().unwrap();
-            (st.available, st.min_available, st.share.len())
+            (
+                st.available,
+                st.min_available,
+                st.share.len(),
+                st.spilled.len(),
+                st.spilled.values().map(|s| s.blocks).sum::<usize>(),
+                st.spilled.values().map(|s| s.bytes).sum::<u64>(),
+            )
         };
         let in_use = self.n_blocks - available;
         let peak_in_use = self.n_blocks - min_available;
@@ -681,7 +1103,11 @@ impl BlockPool {
         KvPoolStats {
             n_blocks: self.n_blocks,
             block_size: self.block_size,
+            mode: self.mode,
+            block_bytes: self.block_bytes,
+            capacity_bytes: self.n_blocks * self.block_bytes,
             in_use,
+            resident_bytes: in_use * self.block_bytes,
             utilization: in_use as f64 / self.n_blocks as f64,
             peak_in_use,
             peak_utilization: peak_in_use as f64 / self.n_blocks as f64,
@@ -692,6 +1118,12 @@ impl BlockPool {
             evicted_blocks: self.evicted_blocks.load(Ordering::Relaxed),
             unused_tail_returned: self.unused_tail.load(Ordering::Relaxed),
             registered_prefixes: registered,
+            spilled_entries,
+            spilled_blocks,
+            spilled_bytes,
+            spill_writes: self.spill_writes.load(Ordering::Relaxed),
+            spill_faults: self.spill_faults.load(Ordering::Relaxed),
+            spill_fault_fails: self.spill_fault_fails.load(Ordering::Relaxed),
         }
     }
 }
@@ -699,10 +1131,11 @@ impl BlockPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::KvStore;
 
     fn pool(n_blocks: usize, bs: usize) -> Arc<BlockPool> {
         Arc::new(BlockPool::new(
-            KvPoolOptions { n_blocks, block_size: bs },
+            KvPoolOptions { n_blocks, block_size: bs, mode: KvStorageMode::F32 },
             2, // layers
             4, // d
         ))
@@ -750,5 +1183,130 @@ mod tests {
         assert_eq!(s.in_use, 2);
         assert!((s.utilization - 0.25).abs() < 1e-9);
         assert_eq!(s.registered_prefixes, 0);
+        assert_eq!(s.resident_bytes, 2 * s.block_bytes);
+        assert_eq!(s.capacity_bytes, 8 * s.block_bytes);
+    }
+
+    #[test]
+    fn int8_blocks_pack_4x_the_tokens_of_f32() {
+        let f32_pool = pool(16, 4);
+        let i8_pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 16, block_size: 4, mode: KvStorageMode::Int8 },
+            2,
+            4,
+        ));
+        // 16 tokens: f32 needs 4 blocks/layer, int8 packs them into 1.
+        assert_eq!(f32_pool.blocks_for(16), 8);
+        assert_eq!(i8_pool.blocks_for(16), 2);
+        // Under the same block budget, int8 admits 4x the sequences.
+        let mut held = Vec::new();
+        let count = |p: &Arc<BlockPool>, held: &mut Vec<Reservation>| {
+            let mut n = 0;
+            while let Ok(r) = p.try_reserve(p.blocks_for(16)) {
+                held.push(r);
+                n += 1;
+            }
+            n
+        };
+        let f = count(&f32_pool, &mut held);
+        let i = count(&i8_pool, &mut held);
+        assert_eq!(f, 2);
+        assert_eq!(i, 8);
+        assert!(i >= 4 * f);
+    }
+
+    #[test]
+    fn int8_rows_round_trip_within_quant_error() {
+        let p = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 8, block_size: 4, mode: KvStorageMode::Int8 },
+            1,
+            4,
+        ));
+        let adm = p.admit(&[], 4, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&p, adm);
+        let krow = [1.0f32, -0.5, 0.25, 0.9];
+        let vrow = [0.1f32, 0.2, -0.3, 0.4];
+        seq.layer(0).push(&krow, &vrow).unwrap();
+        let mut got = Vec::new();
+        seq.layer(0).for_each_seg(&mut |seg| {
+            if let KvSegment::Int8 { k, k_scale, .. } = seg {
+                for (i, &q) in k.iter().enumerate() {
+                    got.push((q as f32 / k_scale[0], krow[i]));
+                }
+            } else {
+                panic!("int8 pool must yield int8 segments");
+            }
+        });
+        assert_eq!(got.len(), 4);
+        for (deq, orig) in got {
+            assert!((deq - orig).abs() <= 1.0 / 127.0 + 1e-6, "{deq} vs {orig}");
+        }
+    }
+
+    #[test]
+    fn shed_order_is_usage_weighted_lru() {
+        // Three registered prefixes; B is touched more often than A and C,
+        // so under pressure A and C go first, in recency order.
+        let p = pool(64, 4);
+        let row = [0.5f32; 4];
+        let mut register = |toks: &[u32]| {
+            let adm = p.admit(toks, toks.len(), PrefixTag::default()).unwrap();
+            let mut seq = PagedSeq::new(&p, adm);
+            for _ in 0..toks.len() {
+                for l in 0..2 {
+                    seq.layer(l).push(&row, &row).unwrap();
+                }
+            }
+            p.register_prefix(toks, &mut seq);
+        };
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (10..14).collect();
+        let c: Vec<u32> = (20..24).collect();
+        register(&a);
+        register(&b);
+        register(&c);
+        // Touch B twice (usage weight) and A once (recency).
+        for _ in 0..2 {
+            drop(p.admit(&[10, 11, 12, 13, 99], 6, PrefixTag::default()).unwrap());
+        }
+        drop(p.admit(&[0, 1, 2, 3, 99], 6, PrefixTag::default()).unwrap());
+        let st = p.state.lock().unwrap();
+        let order = p.unused_in_shed_order(&st);
+        drop(st);
+        assert_eq!(order.len(), 3);
+        assert_eq!(order[0], c, "least-recent, least-used entry sheds first");
+        assert_eq!(order[2], b, "most-used entry sheds last");
+    }
+
+    #[test]
+    fn expired_deadline_sheds_first_despite_recent_use() {
+        let p = pool(64, 4);
+        let row = [0.5f32; 4];
+        let mut register = |toks: &[u32], deadline: Option<Instant>| {
+            let adm = p.admit(toks, toks.len(), PrefixTag::default()).unwrap();
+            let mut seq = PagedSeq::new(&p, adm);
+            for _ in 0..toks.len() {
+                for l in 0..2 {
+                    seq.layer(l).push(&row, &row).unwrap();
+                }
+            }
+            p.register_prefix_deadline(toks, &mut seq, deadline);
+        };
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (10..14).collect();
+        register(&a, None);
+        // B expired in the past but is used constantly. (checked_sub:
+        // Instant can't represent times before boot on a fresh machine.)
+        let past = Instant::now()
+            .checked_sub(std::time::Duration::from_secs(3600))
+            .unwrap_or_else(Instant::now);
+        register(&b, Some(past));
+        for _ in 0..3 {
+            drop(p.admit(&[10, 11, 12, 13, 99], 6, PrefixTag::default()).unwrap());
+        }
+        let st = p.state.lock().unwrap();
+        let order = p.unused_in_shed_order(&st);
+        drop(st);
+        assert_eq!(order[0], b, "expired entries shed before live ones");
     }
 }

@@ -5,11 +5,17 @@
 //! frozen [`SharedBlock`]s attached from the prefix map; writing into a
 //! shared page copies it first (copy-on-write), which is how two requests
 //! with the same prompt diverge into their own generations.
+//!
+//! Pages store rows in the pool's [`KvStorageMode`](super::KvStorageMode):
+//! `push` quantizes on the way in, reads go out as [`KvSegment`]s in the
+//! stored precision, and block-to-block copies (CoW, snapshots) move codes
+//! and scales verbatim — a copied row is bit-identical to its source, so
+//! sharing never compounds quantization error.
 
 use std::sync::Arc;
 
 use super::pool::{Admitted, BlockPool, KvBuf, Reservation, SharedBlock};
-use super::{KvError, KvStore};
+use super::{KvError, KvSegment, KvStore};
 
 pub(crate) enum Page {
     Owned(KvBuf),
@@ -112,16 +118,17 @@ impl PagedSeq {
     /// prefix map can hold them. Idempotent; partial blocks are skipped.
     pub(crate) fn freeze_blocks(&mut self, n: usize) {
         let bs = self.block_size;
+        let mode = self.pool.mode();
         for layer in &mut self.layers {
             for page in layer.blocks.iter_mut().take(n) {
                 if page.filled() < bs {
                     continue;
                 }
-                let old = std::mem::replace(page, Page::Owned(KvBuf::empty()));
+                let old = std::mem::replace(page, Page::Owned(KvBuf::empty(mode)));
                 *page = match old {
                     Page::Owned(buf) => Page::Shared {
                         filled: buf.filled,
-                        blk: Arc::new(SharedBlock { k: buf.k, v: buf.v, filled: buf.filled }),
+                        blk: Arc::new(SharedBlock { data: buf.data, filled: buf.filled }),
                     },
                     shared => shared,
                 };
@@ -136,11 +143,16 @@ impl PagedSeq {
         }
     }
 
-    /// Raw `(k, v, filled)` rows of one block (snapshot source).
-    pub(crate) fn block_rows(&self, layer: usize, block: usize) -> Option<(&[f32], &[f32], usize)> {
+    /// One block's raw storage and filled-row count (snapshot source for
+    /// the partial-tail registration copy — lossless, mode-preserving).
+    pub(crate) fn block_data(
+        &self,
+        layer: usize,
+        block: usize,
+    ) -> Option<(&super::pool::KvData, usize)> {
         match self.layers.get(layer)?.blocks.get(block)? {
-            Page::Owned(b) => Some((&b.k, &b.v, b.filled)),
-            Page::Shared { blk, filled } => Some((&blk.k, &blk.v, *filled)),
+            Page::Owned(b) => Some((&b.data, b.filled)),
+            Page::Shared { blk, filled } => Some((&blk.data, *filled)),
         }
     }
 
@@ -220,7 +232,7 @@ impl Drop for PagedSeq {
                         // Frozen blocks the map never took (or already
                         // evicted) are ours alone — recycle the buffer.
                         if let Ok(sb) = Arc::try_unwrap(blk) {
-                            bufs.push(KvBuf { k: sb.k, v: sb.v, filled: 0 });
+                            bufs.push(KvBuf { data: sb.data, filled: 0 });
                         }
                     }
                 }
@@ -251,13 +263,12 @@ impl PagedLayer<'_> {
         Ok(self.pool.take_buf())
     }
 
-    /// Replace a shared page with an owned copy of its filled rows.
+    /// Replace a shared page with an owned copy of its filled rows. The
+    /// copy moves stored codes/scales verbatim (no re-quantization).
     fn cow(&mut self, bi: usize) -> Result<(), KvError> {
         let mut buf = self.alloc_owned()?;
         if let Page::Shared { blk, filled } = &self.pages.blocks[bi] {
-            let n = *filled * self.d;
-            buf.k[..n].copy_from_slice(&blk.k[..n]);
-            buf.v[..n].copy_from_slice(&blk.v[..n]);
+            buf.data.copy_rows(&blk.data, *filled, self.d);
             buf.filled = *filled;
         }
         self.pages.blocks[bi] = Page::Owned(buf);
@@ -291,19 +302,18 @@ impl KvStore for PagedLayer<'_> {
         if buf.filled != off {
             return Err(KvError::CacheOverflow { cap: pos });
         }
-        buf.k[off * d..(off + 1) * d].copy_from_slice(k);
-        buf.v[off * d..(off + 1) * d].copy_from_slice(v);
+        buf.data.write_row(off, d, k, v);
         buf.filled = off + 1;
         self.pages.len = pos + 1;
         Ok(())
     }
 
-    fn for_each_segment<'a>(&'a self, f: &mut dyn FnMut(&'a [f32], &'a [f32])) {
+    fn for_each_seg<'a>(&'a self, f: &mut dyn FnMut(KvSegment<'a>)) {
         let d = self.d;
         for p in self.pages.blocks.iter().filter(|p| p.filled() > 0) {
             match p {
-                Page::Owned(b) => f(&b.k[..b.filled * d], &b.v[..b.filled * d]),
-                Page::Shared { blk, filled } => f(&blk.k[..filled * d], &blk.v[..filled * d]),
+                Page::Owned(b) => f(b.data.seg(b.filled, d)),
+                Page::Shared { blk, filled } => f(blk.data.seg(*filled, d)),
             }
         }
     }
@@ -311,11 +321,15 @@ impl KvStore for PagedLayer<'_> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{KvPoolOptions, PrefixTag};
+    use super::super::{KvPoolOptions, KvStorageMode, PrefixTag};
     use super::*;
 
     fn tiny_pool() -> Arc<BlockPool> {
-        Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 16, block_size: 4 }, 1, 2))
+        Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 16, block_size: 4, mode: KvStorageMode::F32 },
+            1,
+            2,
+        ))
     }
 
     #[test]
@@ -409,5 +423,43 @@ mod tests {
         assert_eq!(pool.available(), 16);
         // One block reserved for tokens 5..12 was never materialized.
         assert!(pool.stats().unused_tail_returned >= 1);
+    }
+
+    #[test]
+    fn int8_cow_copy_is_bit_identical_to_its_source() {
+        let pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 16, block_size: 1, mode: KvStorageMode::Int8 },
+            1,
+            2,
+        ));
+        // block_size 1 packs to 4 tokens/block in int8.
+        assert_eq!(pool.block_size(), 4);
+        let adm = pool.admit(&[], 8, PrefixTag::default()).unwrap();
+        let mut seq = PagedSeq::new(&pool, adm);
+        for i in 0..4 {
+            let row = [0.9 - i as f32 * 0.3, -0.2 + i as f32 * 0.1];
+            seq.layer(0).push(&row, &row).unwrap();
+        }
+        // Freeze the full block, snapshot its raw codes, then trigger CoW
+        // by pushing past it via a second sequence sharing the block.
+        seq.freeze_blocks(1);
+        let snap: Vec<i8> = match seq.block_data(0, 0).unwrap().0 {
+            super::super::pool::KvData::Int8 { k, .. } => k.clone(),
+            _ => panic!("int8 pool must store int8"),
+        };
+        pool.register_prefix(&[10, 11, 12, 13], &mut seq);
+        drop(seq);
+        let adm2 = pool.admit(&[10, 11, 12, 13, 14], 8, PrefixTag::default()).unwrap();
+        assert_eq!(adm2.shared_len(), 4);
+        let mut seq2 = PagedSeq::new(&pool, adm2);
+        // Overwrite position 3 (inside the shared block) — forces a CoW
+        // whose first 3 rows must be byte-for-byte the frozen codes.
+        seq2.truncate(3);
+        seq2.layer(0).push(&[0.5, 0.5], &[0.5, 0.5]).unwrap();
+        let copied: Vec<i8> = match seq2.block_data(0, 0).unwrap().0 {
+            super::super::pool::KvData::Int8 { k, .. } => k.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(&copied[..3 * 2], &snap[..3 * 2], "CoW must move codes verbatim");
     }
 }

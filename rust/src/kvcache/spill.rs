@@ -1,0 +1,332 @@
+//! The KV disk tier: frozen shared-prefix entries serialized to `.pqm`
+//! section-container files and faulted back on demand.
+//!
+//! One file per spilled entry: a `KV_META` section carrying the prefix
+//! identity ([`PrefixTag`]) and pool geometry (storage mode, rows per
+//! block, width), then one `KV_BLOCK` section per physical block in
+//! (layer, block) order.  Blocks serialize losslessly — f32 rows as raw
+//! bits, quantized rows as their i8 codes plus f32 scale bits — so a
+//! faulted-back block is bit-identical to what was evicted: re-attaching
+//! it produces exactly the KV a resident hit would have.  Every section is
+//! CRC-checked by the shared `.pqm` reader on the way back in; any
+//! mismatch fails the fault, and the pool degrades to recompute.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::pool::{KvData, PrefixTag, SharedBlock};
+use super::KvStorageMode;
+use crate::artifact::{kind, read_container, save_container, section_payload};
+
+/// Spill-file metadata payload size: tag (8+8) + len (8) + n_layers (4) +
+/// blocks_per_layer (4) + mode (1) + block_size (4) + d (4).
+const META_BYTES: usize = 41;
+
+fn mode_code(mode: KvStorageMode) -> u8 {
+    match mode {
+        KvStorageMode::F32 => 0,
+        KvStorageMode::Int8 => 1,
+    }
+}
+
+/// A directory of spilled prefix entries plus a filename counter. Owned by
+/// the pool's state (one tier per pool); all bookkeeping about *which*
+/// entries are on disk lives in the pool — the tier only moves bytes.
+pub(crate) struct SpillTier {
+    dir: PathBuf,
+    counter: AtomicU64,
+}
+
+impl SpillTier {
+    pub(crate) fn new(dir: &Path) -> std::io::Result<SpillTier> {
+        std::fs::create_dir_all(dir)?;
+        Ok(SpillTier { dir: dir.to_path_buf(), counter: AtomicU64::new(0) })
+    }
+
+    /// Serialize one entry's blocks to a fresh file under the tier
+    /// directory. Returns the path and the file size in bytes.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn write_entry(
+        &self,
+        _key: &[u32],
+        tag: PrefixTag,
+        len: usize,
+        mode: KvStorageMode,
+        block_size: usize,
+        d: usize,
+        layers: &[Vec<Arc<SharedBlock>>],
+    ) -> Result<(PathBuf, u64)> {
+        let n_layers = layers.len();
+        let blocks_per_layer = layers.first().map_or(0, |l| l.len());
+        let total = n_layers * blocks_per_layer;
+        if total == 0 || total > u16::MAX as usize {
+            bail!("entry has {total} blocks, spill files index blocks as u16");
+        }
+        let mut meta = Vec::with_capacity(META_BYTES);
+        meta.extend_from_slice(&(tag.0 as u64).to_le_bytes());
+        meta.extend_from_slice(&tag.1.to_le_bytes());
+        meta.extend_from_slice(&(len as u64).to_le_bytes());
+        meta.extend_from_slice(&(n_layers as u32).to_le_bytes());
+        meta.extend_from_slice(&(blocks_per_layer as u32).to_le_bytes());
+        meta.push(mode_code(mode));
+        meta.extend_from_slice(&(block_size as u32).to_le_bytes());
+        meta.extend_from_slice(&(d as u32).to_le_bytes());
+
+        let mut payloads: Vec<(u16, u16, Vec<u8>)> = Vec::with_capacity(1 + total);
+        payloads.push((kind::KV_META, 0, meta));
+        for (l, blocks) in layers.iter().enumerate() {
+            if blocks.len() != blocks_per_layer {
+                bail!("ragged entry: layer {l} has {} blocks, layer 0 has {blocks_per_layer}", blocks.len());
+            }
+            for (b, blk) in blocks.iter().enumerate() {
+                let flat = (l * blocks_per_layer + b) as u16;
+                payloads.push((kind::KV_BLOCK, flat, encode_block(blk, d)));
+            }
+        }
+        let bytes = save_container(&payloads);
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        let path = self.dir.join(format!("kv-{:x}-{:x}-{n}.pqm", tag.0, tag.1));
+        std::fs::write(&path, &bytes).with_context(|| format!("writing spill file {path:?}"))?;
+        Ok((path, bytes.len() as u64))
+    }
+
+    /// Read one spill file back into shared blocks, verifying every
+    /// section CRC and that the file's identity/geometry match the pool's.
+    pub(crate) fn read_entry(
+        &self,
+        path: &Path,
+        tag: PrefixTag,
+        mode: KvStorageMode,
+        block_size: usize,
+        d: usize,
+    ) -> Result<Vec<Vec<Arc<SharedBlock>>>> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading spill file {path:?}"))?;
+        let sections = read_container(&bytes)?;
+        let meta_sec = sections
+            .iter()
+            .find(|s| s.kind == kind::KV_META)
+            .context("spill file has no kv_meta section")?;
+        let m = section_payload(&bytes, meta_sec);
+        if m.len() != META_BYTES {
+            bail!("kv_meta is {} bytes, expected {META_BYTES}", m.len());
+        }
+        let file_tag = PrefixTag(
+            u64::from_le_bytes(m[0..8].try_into().unwrap()) as usize,
+            u64::from_le_bytes(m[8..16].try_into().unwrap()),
+        );
+        let n_layers = u32::from_le_bytes(m[24..28].try_into().unwrap()) as usize;
+        let blocks_per_layer = u32::from_le_bytes(m[28..32].try_into().unwrap()) as usize;
+        let file_mode = m[32];
+        let file_bs = u32::from_le_bytes(m[33..37].try_into().unwrap()) as usize;
+        let file_d = u32::from_le_bytes(m[37..41].try_into().unwrap()) as usize;
+        if file_tag != tag {
+            bail!("spill file tag {file_tag:?} does not match expected {tag:?}");
+        }
+        if file_mode != mode_code(mode) || file_bs != block_size || file_d != d {
+            bail!(
+                "spill file geometry (mode {file_mode}, bs {file_bs}, d {file_d}) does not match pool (mode {}, bs {block_size}, d {d})",
+                mode_code(mode)
+            );
+        }
+        let total = n_layers * blocks_per_layer;
+        let mut slots: Vec<Option<Arc<SharedBlock>>> = (0..total).map(|_| None).collect();
+        for s in &sections {
+            if s.kind != kind::KV_BLOCK {
+                continue;
+            }
+            let flat = s.index as usize;
+            if flat >= total {
+                bail!("kv_block index {flat} out of range ({total} blocks)");
+            }
+            if slots[flat].is_some() {
+                bail!("duplicate kv_block index {flat}");
+            }
+            slots[flat] = Some(Arc::new(decode_block(
+                section_payload(&bytes, s),
+                mode,
+                block_size,
+                d,
+            )?));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut it = slots.into_iter();
+        for l in 0..n_layers {
+            let mut blocks = Vec::with_capacity(blocks_per_layer);
+            for b in 0..blocks_per_layer {
+                blocks.push(
+                    it.next()
+                        .flatten()
+                        .with_context(|| format!("missing kv_block for layer {l} block {b}"))?,
+                );
+            }
+            layers.push(blocks);
+        }
+        Ok(layers)
+    }
+}
+
+/// Serialize one block losslessly: `filled` as u32, then the filled rows'
+/// raw storage (f32 bit patterns, or i8 codes followed by scale bits).
+fn encode_block(blk: &SharedBlock, d: usize) -> Vec<u8> {
+    let filled = blk.filled;
+    let mut out = Vec::with_capacity(4 + 2 * filled * (d * 4 + 4));
+    out.extend_from_slice(&(filled as u32).to_le_bytes());
+    match &blk.data {
+        KvData::F32 { k, v } => {
+            for x in &k[..filled * d] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in &v[..filled * d] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        KvData::Int8 { k, v, ks, vs } => {
+            out.extend(k[..filled * d].iter().map(|&q| q as u8));
+            out.extend(v[..filled * d].iter().map(|&q| q as u8));
+            for x in &ks[..filled] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in &vs[..filled] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn decode_block(
+    payload: &[u8],
+    mode: KvStorageMode,
+    block_size: usize,
+    d: usize,
+) -> Result<SharedBlock> {
+    if payload.len() < 4 {
+        bail!("kv_block payload truncated");
+    }
+    let filled = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    if filled > block_size {
+        bail!("kv_block filled {filled} exceeds block size {block_size}");
+    }
+    let body = &payload[4..];
+    let mut data = KvData::alloc(mode, block_size, d);
+    match &mut data {
+        KvData::F32 { k, v } => {
+            let want = 2 * filled * d * 4;
+            if body.len() != want {
+                bail!("f32 kv_block body is {} bytes, expected {want}", body.len());
+            }
+            for (i, chunk) in body.chunks_exact(4).enumerate() {
+                let x = f32::from_le_bytes(chunk.try_into().unwrap());
+                if i < filled * d {
+                    k[i] = x;
+                } else {
+                    v[i - filled * d] = x;
+                }
+            }
+        }
+        KvData::Int8 { k, v, ks, vs } => {
+            let want = 2 * filled * d + 2 * filled * 4;
+            if body.len() != want {
+                bail!("int8 kv_block body is {} bytes, expected {want}", body.len());
+            }
+            let (codes, scales) = body.split_at(2 * filled * d);
+            for (dst, &b) in k[..filled * d].iter_mut().zip(&codes[..filled * d]) {
+                *dst = b as i8;
+            }
+            for (dst, &b) in v[..filled * d].iter_mut().zip(&codes[filled * d..]) {
+                *dst = b as i8;
+            }
+            for (i, chunk) in scales.chunks_exact(4).enumerate() {
+                let x = f32::from_le_bytes(chunk.try_into().unwrap());
+                if i < filled {
+                    ks[i] = x;
+                } else {
+                    vs[i - filled] = x;
+                }
+            }
+        }
+    }
+    Ok(SharedBlock { data, filled })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(mode: KvStorageMode, bs: usize, d: usize, filled: usize, seed: f32) -> SharedBlock {
+        let mut data = KvData::alloc(mode, bs, d);
+        for r in 0..filled {
+            let krow: Vec<f32> = (0..d).map(|i| seed + (r * d + i) as f32 * 0.37 - 3.0).collect();
+            let vrow: Vec<f32> = (0..d).map(|i| -seed + (r * d + i) as f32 * 0.11).collect();
+            data.write_row(r, d, &krow, &vrow);
+        }
+        SharedBlock { data, filled }
+    }
+
+    fn raw(data: &KvData) -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
+        match data {
+            KvData::F32 { k, v } => (
+                k.iter().map(|x| x.to_bits()).collect(),
+                v.iter().map(|x| x.to_bits()).collect(),
+                vec![],
+                vec![],
+            ),
+            KvData::Int8 { k, v, ks, vs } => (
+                k.iter().map(|&q| q as u8 as u32).collect(),
+                v.iter().map(|&q| q as u8 as u32).collect(),
+                ks.iter().map(|x| x.to_bits()).collect(),
+                vs.iter().map(|x| x.to_bits()).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn spill_round_trip_is_bit_identical_per_mode() {
+        let dir = std::env::temp_dir().join(format!("pquant-spill-test-{}", std::process::id()));
+        for mode in [KvStorageMode::F32, KvStorageMode::Int8] {
+            let tier = SpillTier::new(&dir).unwrap();
+            let (bs, d) = (8, 4);
+            let tag = PrefixTag(3, 7);
+            let layers: Vec<Vec<Arc<SharedBlock>>> = (0..2)
+                .map(|l| {
+                    (0..2)
+                        .map(|b| Arc::new(block(mode, bs, d, if b == 1 { 5 } else { bs }, (l * 2 + b) as f32)))
+                        .collect()
+                })
+                .collect();
+            let (path, bytes) = tier
+                .write_entry(&[1, 2, 3], tag, 13, mode, bs, d, &layers)
+                .unwrap();
+            assert!(bytes > 0 && path.exists());
+            let back = tier.read_entry(&path, tag, mode, bs, d).unwrap();
+            assert_eq!(back.len(), 2);
+            for (orig_l, back_l) in layers.iter().zip(&back) {
+                for (orig, restored) in orig_l.iter().zip(back_l) {
+                    assert_eq!(orig.filled, restored.filled);
+                    let (ok, ov, oks, ovs) = raw(&orig.data);
+                    let (bk, bv, bks, bvs) = raw(&restored.data);
+                    // Only filled rows must round-trip; the tail is
+                    // zero-initialized on both sides, so whole-buffer
+                    // equality holds.
+                    assert_eq!(ok, bk, "{mode} K codes");
+                    assert_eq!(ov, bv, "{mode} V codes");
+                    assert_eq!(oks, bks, "{mode} K scales");
+                    assert_eq!(ovs, bvs, "{mode} V scales");
+                }
+            }
+            // Wrong tag is refused.
+            assert!(tier.read_entry(&path, PrefixTag(9, 9), mode, bs, d).is_err());
+            // Corruption is caught by the section CRC.
+            let mut corrupt = std::fs::read(&path).unwrap();
+            let last = corrupt.len() - 1;
+            corrupt[last] ^= 0x10;
+            std::fs::write(&path, &corrupt).unwrap();
+            assert!(tier.read_entry(&path, tag, mode, bs, d).is_err());
+            std::fs::remove_file(&path).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

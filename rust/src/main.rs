@@ -95,6 +95,10 @@ USAGE:
               [--batch N] [--workers N] [--queue N] [--prefill-chunk N]
               [--temperature F] [--top-k N] [--seed N]
               [--kv-blocks N] [--kv-block-size N]   (0 kv-blocks: unmetered legacy caches)
+              [--kv-mode f32|int8]                  KV block storage precision: int8 packs 4x
+                                                    the tokens into the same block bytes
+              [--kv-spill-dir P]                    cold tier: shed shared prefixes spill to
+                                                    .pqm files here and fault back on reuse
               [--draft-model D.pqm] [--spec-k K]    speculative decode: the draft proposes K
                                                     tokens per round (same vocab required);
                                                     the target verifies them in one fused
@@ -290,9 +294,15 @@ fn build_serve_stack(args: &Args) -> Result<ServeStack> {
     use pquant::serve::{Engine, EngineOptions};
     let kv_defaults = pquant::kvcache::KvPoolOptions::default();
     let kv_blocks = args.flag("kv-blocks", kv_defaults.n_blocks)?;
+    let kv_mode = match args.flags.get("kv-mode") {
+        Some(v) => pquant::kvcache::KvStorageMode::parse(v)
+            .ok_or_else(|| anyhow!("bad --kv-mode {v:?} (expected f32 or int8)"))?,
+        None => kv_defaults.mode,
+    };
     let kv = (kv_blocks > 0).then_some(pquant::kvcache::KvPoolOptions {
         n_blocks: kv_blocks,
         block_size: args.flag("kv-block-size", kv_defaults.block_size)?.max(1),
+        mode: kv_mode,
     });
     let opts = EngineOptions {
         model: "serve".into(),
@@ -302,6 +312,7 @@ fn build_serve_stack(args: &Args) -> Result<ServeStack> {
         prefill_chunk: args.flag("prefill-chunk", 16usize)?,
         kv,
         draft_kv: None, // draft pools mirror the target pool geometry
+        kv_spill_dir: args.flags.get("kv-spill-dir").map(std::path::PathBuf::from),
     };
     // All serving flows through the registry: load (from .pqm or a live
     // TrainState), register under a name, start the engine against it.
@@ -465,10 +476,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(kv) = metrics.kv() {
         println!(
-            "kv pool: {} x {}-token blocks, peak utilization {:.0}% | shared-block hit rate \
-             {:.0}% ({} of {} prompt blocks) | cow {} | preempted {} | unused tail returned {}",
+            "kv pool: {} x {}-token blocks ({}, {:.1} MiB cap, peak {:.1} MiB resident), peak \
+             utilization {:.0}% | shared-block hit rate {:.0}% ({} of {} prompt blocks) | cow {} \
+             | preempted {} | unused tail returned {}",
             kv.n_blocks,
             kv.block_size,
+            kv.mode,
+            kv.capacity_bytes as f64 / (1024.0 * 1024.0),
+            (kv.peak_in_use * kv.block_bytes) as f64 / (1024.0 * 1024.0),
             kv.peak_utilization * 100.0,
             kv.shared_hit_rate * 100.0,
             kv.shared_attached,
@@ -477,6 +492,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             metrics.preempted.load(std::sync::atomic::Ordering::Relaxed),
             kv.unused_tail_returned,
         );
+        if kv.spill_writes > 0 || kv.spilled_entries > 0 || kv.spill_faults > 0 {
+            println!(
+                "kv spill: {} entries / {} blocks / {:.1} MiB on disk | {} writes, {} faults, \
+                 {} fault failures | {} evicted blocks",
+                kv.spilled_entries,
+                kv.spilled_blocks,
+                kv.spilled_bytes as f64 / (1024.0 * 1024.0),
+                kv.spill_writes,
+                kv.spill_faults,
+                kv.spill_fault_fails,
+                kv.evicted_blocks,
+            );
+        }
     }
     if speculative {
         println!(
@@ -552,6 +580,31 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             metrics.tpot_percentiles().p50,
             metrics.tpot_percentiles().p95,
         );
+        // Reconcile the report's KV snapshot (taken when the replay ended)
+        // against the engine's own final counters: the run is drained, so
+        // any drift means the two metering paths disagree.
+        if let (Some(rkv), Some(skv)) = (&report.kv, metrics.kv()) {
+            let ok = rkv.peak_in_use == skv.peak_in_use
+                && rkv.evicted_blocks == skv.evicted_blocks
+                && rkv.spill_writes == skv.spill_writes
+                && rkv.spill_faults == skv.spill_faults;
+            if ok {
+                println!("kv reconcile: report matches server-side metrics");
+            } else {
+                println!(
+                    "kv reconcile: MISMATCH (report peak {} evicted {} writes {} faults {} vs \
+                     server {} {} {} {})",
+                    rkv.peak_in_use,
+                    rkv.evicted_blocks,
+                    rkv.spill_writes,
+                    rkv.spill_faults,
+                    skv.peak_in_use,
+                    skv.evicted_blocks,
+                    skv.spill_writes,
+                    skv.spill_faults,
+                );
+            }
+        }
         report
     };
 
@@ -584,6 +637,23 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             t.tpot.p95,
             t.tpot.p99,
             t.targets.tpot_ms
+        );
+    }
+    if let Some(kv) = &report.kv {
+        println!(
+            "kv: {} pool, {} blocks, high-water {} blocks ({:.0}%, {:.1} MiB of {:.1} MiB) | \
+             shared hit rate {:.0}% | evicted {} | spill writes {} faults {} ({} blocks on disk)",
+            kv.mode,
+            kv.n_blocks,
+            kv.peak_in_use,
+            kv.peak_utilization * 100.0,
+            kv.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+            kv.capacity_bytes as f64 / (1024.0 * 1024.0),
+            kv.shared_hit_rate * 100.0,
+            kv.evicted_blocks,
+            kv.spill_writes,
+            kv.spill_faults,
+            kv.spilled_blocks,
         );
     }
     report.write(&out_path)?;

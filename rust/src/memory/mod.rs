@@ -18,13 +18,15 @@
 //! KV-cache term: once weights are 1-bit, the KV cache dominates serving
 //! memory, so [`Footprint`] carries an explicit `kv_bytes` term sized by
 //! [`kv_seq_bytes`] (one sequence) or [`kv_pool_bytes`] (a whole
-//! [`BlockPool`](crate::kvcache::BlockPool) budget: `n_blocks` blocks of
-//! `block_size` tokens × `d_model` f32 K and V rows, per layer).
+//! [`BlockPool`](crate::kvcache::BlockPool) budget: `n_blocks` fixed-byte
+//! block slabs of K and V rows, per layer). Both are storage-mode aware:
+//! f32 rows cost `4·d_model` bytes, int8 rows `d_model + 4` (codes plus a
+//! per-row absmax scale), so quantizing the cache shrinks the term ~4×.
 //! `storage()` includes it; `traffic()` keeps the paper's Fig-6 semantics
 //! (weight bytes moved per forward pass) and does not.
 
 use crate::config::{ModelConfig, Variant};
-use crate::kvcache::KvPoolOptions;
+use crate::kvcache::{KvPoolOptions, KvStorageMode};
 
 /// Byte counts for one model; `traffic` = bytes moved per forward pass
 /// (activated weights), `storage` = resident bytes (all weights).
@@ -79,20 +81,19 @@ impl Footprint {
 }
 
 const FP16: usize = 2;
-/// KV rows are f32 in the packed engine (activations are requantized per
-/// token; the cache itself stays full precision).
-const KV_F32: usize = 4;
 
 /// Resident KV bytes for one sequence of `tokens` positions: K and V rows
-/// of `d_model` floats per layer.
-pub fn kv_seq_bytes(cfg: &ModelConfig, tokens: usize) -> usize {
-    2 * tokens * cfg.d_model * cfg.n_layers * KV_F32
+/// per layer, priced by the pool's storage mode
+/// ([`KvStorageMode::row_bytes`]).
+pub fn kv_seq_bytes(cfg: &ModelConfig, tokens: usize, mode: KvStorageMode) -> usize {
+    2 * tokens * cfg.n_layers * mode.row_bytes(cfg.d_model)
 }
 
 /// Worst-case resident bytes of a whole paged KV pool budget
-/// (blocks are per-layer, so `n_blocks` already counts layers).
+/// (blocks are per-layer, so `n_blocks` already counts layers). Matches
+/// [`KvPoolStats::capacity_bytes`](crate::kvcache::KvPoolStats) exactly.
 pub fn kv_pool_bytes(cfg: &ModelConfig, opts: &KvPoolOptions) -> usize {
-    2 * opts.n_blocks * opts.block_size * cfg.d_model * KV_F32
+    opts.n_blocks * opts.block_bytes(cfg.d_model)
 }
 
 /// Compute the footprint model for a config.
@@ -220,7 +221,7 @@ mod tests {
     fn kv_term_adds_to_storage_not_traffic() {
         let cfg = by_name("paper-1.3B-pquant");
         let base = footprint(&cfg);
-        let kv = kv_seq_bytes(&cfg, 2048);
+        let kv = kv_seq_bytes(&cfg, 2048, KvStorageMode::F32);
         assert_eq!(kv, 2 * 2048 * cfg.d_model * cfg.n_layers * 4);
         let with = footprint(&cfg).with_kv(kv);
         assert_eq!(with.storage(), base.storage() + kv);
@@ -234,14 +235,43 @@ mod tests {
         let cfg = by_name("paper-1.3B-pquant");
         let weights = footprint(&cfg);
         let block_weights = weights.storage() - weights.embed_bytes;
-        assert!(kv_seq_bytes(&cfg, 4096) * 8 > block_weights);
+        assert!(kv_seq_bytes(&cfg, 4096, KvStorageMode::F32) * 8 > block_weights);
+    }
+
+    #[test]
+    fn int8_kv_term_is_near_4x_smaller() {
+        let cfg = by_name("paper-1.3B-pquant");
+        let f = kv_seq_bytes(&cfg, 2048, KvStorageMode::F32) as f64;
+        let i = kv_seq_bytes(&cfg, 2048, KvStorageMode::Int8) as f64;
+        let ratio = f / i;
+        assert!(ratio > 3.9 && ratio <= 4.0, "f32/int8 ratio {ratio:.3}");
     }
 
     #[test]
     fn pool_bytes_scale_with_budget() {
         let cfg = by_name("paper-300M-pquant");
-        let small = crate::kvcache::KvPoolOptions { n_blocks: 64, block_size: 16 };
-        let big = crate::kvcache::KvPoolOptions { n_blocks: 128, block_size: 16 };
+        let small =
+            crate::kvcache::KvPoolOptions { n_blocks: 64, block_size: 16, ..Default::default() };
+        let big =
+            crate::kvcache::KvPoolOptions { n_blocks: 128, block_size: 16, ..Default::default() };
         assert_eq!(kv_pool_bytes(&cfg, &big), 2 * kv_pool_bytes(&cfg, &small));
+    }
+
+    #[test]
+    fn pool_bytes_match_pool_stats_capacity_in_both_modes() {
+        // The analytic model and the live pool must agree byte-for-byte,
+        // whatever the storage mode — this is the accounting contract the
+        // serving metrics rely on.
+        let cfg = by_name("paper-300M-pquant");
+        for mode in [KvStorageMode::F32, KvStorageMode::Int8] {
+            let opts = crate::kvcache::KvPoolOptions { n_blocks: 32, block_size: 8, mode };
+            let pool = crate::kvcache::BlockPool::new(opts, cfg.n_layers, cfg.d_model);
+            let stats = pool.stats();
+            assert_eq!(
+                kv_pool_bytes(&cfg, &opts),
+                stats.capacity_bytes,
+                "{mode}: analytic model disagrees with pool capacity"
+            );
+        }
     }
 }

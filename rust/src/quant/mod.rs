@@ -94,6 +94,18 @@ pub fn quantize_i8_row_into(row: &[f32], out: &mut [i8]) -> f32 {
     gamma
 }
 
+/// Dequantize one INT8 row quantized by [`quantize_i8_row_into`] into a
+/// caller-owned buffer: `x = q / γ`. The KV-cache's quantized storage
+/// mode uses exactly this expression (spill round-trips and in-place
+/// attention dequant must agree bit-for-bit), so it lives beside the
+/// quantizer rather than being re-derived per call site.
+pub fn dequant_i8_row_into(q: &[i8], gamma: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (dst, &v) in out.iter_mut().zip(q) {
+        *dst = v as f32 / gamma;
+    }
+}
+
 /// Per-row (token) INT8 absmax over a [rows, cols] row-major buffer;
 /// mirrors `absmax_quantize(axis=-1)`. Returns per-row γ.
 pub fn quantize_i8_rows(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {

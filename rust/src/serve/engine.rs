@@ -106,6 +106,13 @@ pub struct GenRequest {
     /// default) decodes one token per round. Greedy output is identical
     /// either way — speculation only changes throughput.
     pub spec: Option<SpecParams>,
+    /// How long this request's shared KV prefix stays worth keeping after
+    /// prefill. An expired deadline moves the entry to the front of the
+    /// pool's shed order (evicted or spilled before any live entry) —
+    /// useful for one-shot prompts that would otherwise squat in the
+    /// share map on recency alone. `None` (the default) sheds purely by
+    /// usage-weighted LRU.
+    pub kv_deadline: Option<Duration>,
 }
 
 impl GenRequest {
@@ -117,11 +124,12 @@ impl GenRequest {
             sampling: SamplingParams::greedy(),
             priority: 0,
             spec: None,
+            kv_deadline: None,
         }
     }
 
     pub fn sampled(prompt: Vec<u32>, n_new: usize, sampling: SamplingParams) -> GenRequest {
-        GenRequest { prompt, n_new, sampling, priority: 0, spec: None }
+        GenRequest { prompt, n_new, sampling, priority: 0, spec: None, kv_deadline: None }
     }
 
     pub fn with_priority(mut self, priority: i32) -> GenRequest {
@@ -133,6 +141,13 @@ impl GenRequest {
     /// proposing up to `k` tokens per verify round.
     pub fn with_spec(mut self, draft: impl Into<String>, k: usize) -> GenRequest {
         self.spec = Some(SpecParams::new(draft, k));
+        self
+    }
+
+    /// Cap how long this prompt's shared KV prefix outlives the request
+    /// (see [`GenRequest::kv_deadline`]).
+    pub fn with_kv_deadline(mut self, ttl: Duration) -> GenRequest {
+        self.kv_deadline = Some(ttl);
         self
     }
 }
@@ -636,8 +651,13 @@ pub fn kv_stats_json(kv: &KvPoolStats) -> crate::util::json::Json {
     obj(vec![
         ("n_blocks", num(kv.n_blocks as f64)),
         ("block_size", num(kv.block_size as f64)),
+        ("mode", crate::util::json::s(kv.mode.name())),
+        ("block_bytes", num(kv.block_bytes as f64)),
+        ("capacity_bytes", num(kv.capacity_bytes as f64)),
+        ("resident_bytes", num(kv.resident_bytes as f64)),
         ("in_use", num(kv.in_use as f64)),
         ("utilization", num(kv.utilization)),
+        ("peak_in_use", num(kv.peak_in_use as f64)),
         ("peak_utilization", num(kv.peak_utilization)),
         ("shared_attached", num(kv.shared_attached as f64)),
         ("prompt_blocks", num(kv.prompt_blocks as f64)),
@@ -646,6 +666,12 @@ pub fn kv_stats_json(kv: &KvPoolStats) -> crate::util::json::Json {
         ("evicted_blocks", num(kv.evicted_blocks as f64)),
         ("unused_tail_returned", num(kv.unused_tail_returned as f64)),
         ("registered_prefixes", num(kv.registered_prefixes as f64)),
+        ("spilled_entries", num(kv.spilled_entries as f64)),
+        ("spilled_blocks", num(kv.spilled_blocks as f64)),
+        ("spilled_bytes", num(kv.spilled_bytes as f64)),
+        ("spill_writes", num(kv.spill_writes as f64)),
+        ("spill_faults", num(kv.spill_faults as f64)),
+        ("spill_fault_fails", num(kv.spill_fault_fails as f64)),
     ])
 }
 
@@ -675,6 +701,11 @@ pub struct EngineOptions {
     /// consulted in pool mode — without a target pool, drafts use
     /// contiguous caches.
     pub draft_kv: Option<KvPoolOptions>,
+    /// Directory for the KV cold tier. `Some` enables disk spill on the
+    /// target pool: frozen shared prefixes shed under budget pressure are
+    /// written there as CRC-checked `.pqm` files and faulted back when
+    /// the prompt recurs. `None` (the default) sheds by dropping.
+    pub kv_spill_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineOptions {
@@ -687,6 +718,7 @@ impl Default for EngineOptions {
             prefill_chunk: 16,
             kv: Some(KvPoolOptions::default()),
             draft_kv: None,
+            kv_spill_dir: None,
         }
     }
 }
@@ -790,6 +822,10 @@ impl Engine {
             .kv
             .map(|kv| Arc::new(BlockPool::new(kv, probe.model.cfg.n_layers, probe.model.cfg.d_model)));
         drop(probe);
+        if let (Some(p), Some(dir)) = (pool.as_ref(), opts.kv_spill_dir.as_ref()) {
+            p.enable_spill(dir)
+                .map_err(|e| anyhow!("cannot enable KV spill tier at {}: {e}", dir.display()))?;
+        }
         let (tx, rx) = sync_channel(opts.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(ServeMetrics { pool: pool.clone(), ..Default::default() });
@@ -1266,6 +1302,9 @@ struct ActiveRequest {
     spec: Option<SpecState>,
     /// Prompt prefix registered for sharing (or not applicable).
     registered: bool,
+    /// Share-map retention cap carried from [`GenRequest::kv_deadline`];
+    /// applied (relative to registration time) when the prefix registers.
+    kv_deadline: Option<Duration>,
     prefilled_sent: bool,
     preempt: Arc<AtomicBool>,
     slot: usize,
@@ -1493,6 +1532,7 @@ fn worker_loop(
                 pending: false, // resume re-feeds every emitted token
                 spec: spec_state,
                 registered: true, // resume never re-registers prefixes
+                kv_deadline: None,
                 prefilled_sent: p.prefilled_sent,
                 preempt,
                 slot,
@@ -1602,6 +1642,7 @@ fn worker_loop(
                 pending: false,
                 spec: req.spec.map(SpecState::new),
                 registered: false,
+                kv_deadline: req.kv_deadline,
                 prefilled_sent,
                 preempt,
                 slot,
@@ -1973,7 +2014,12 @@ fn worker_loop(
                                 if let (Some(kvp), RequestKv::Paged(seq)) =
                                     (kv_pool.as_ref(), &mut a.kv)
                                 {
-                                    kvp.register_prefix(&a.fed[..a.prompt_len], seq);
+                                    let deadline = a.kv_deadline.map(|ttl| Instant::now() + ttl);
+                                    kvp.register_prefix_deadline(
+                                        &a.fed[..a.prompt_len],
+                                        seq,
+                                        deadline,
+                                    );
                                 }
                             }
                             a.last_logits.copy_from_slice(scratch.logits_row(k));

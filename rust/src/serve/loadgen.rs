@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kvcache::KvPoolStats;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 
@@ -219,6 +220,83 @@ pub struct TierReport {
     pub tpot: Percentiles,
 }
 
+/// Server-side KV-pool accounting captured when the replay ends, so the
+/// client-observed SLO numbers can be reconciled against the memory
+/// pressure that produced them. Sourced from the engine's
+/// [`KvPoolStats`] directly (in-process target) or from the `kv` object
+/// in `GET /v1/metrics` (HTTP target) — the same counters either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvReport {
+    /// Storage precision of the pool ("f32" / "int8").
+    pub mode: String,
+    pub n_blocks: usize,
+    pub capacity_bytes: usize,
+    /// Block high-water mark over the run (peak concurrent charge).
+    pub peak_in_use: usize,
+    pub peak_utilization: f64,
+    /// Byte high-water mark (`peak_in_use × block_bytes`).
+    pub peak_resident_bytes: usize,
+    pub shared_hit_rate: f64,
+    pub evicted_blocks: usize,
+    pub spilled_blocks: usize,
+    pub spill_writes: usize,
+    pub spill_faults: usize,
+}
+
+impl KvReport {
+    pub fn from_stats(st: &KvPoolStats) -> KvReport {
+        KvReport {
+            mode: st.mode.name().to_string(),
+            n_blocks: st.n_blocks,
+            capacity_bytes: st.capacity_bytes,
+            peak_in_use: st.peak_in_use,
+            peak_utilization: st.peak_utilization,
+            peak_resident_bytes: st.peak_in_use * st.block_bytes,
+            shared_hit_rate: st.shared_hit_rate,
+            evicted_blocks: st.evicted_blocks,
+            spilled_blocks: st.spilled_blocks,
+            spill_writes: st.spill_writes,
+            spill_faults: st.spill_faults,
+        }
+    }
+
+    /// Rebuild from the `kv` object of a `/v1/metrics` response.
+    fn from_json(j: &Json) -> Option<KvReport> {
+        let f = |k: &str| j.opt(k).and_then(|v| v.as_f64().ok());
+        let block_bytes = f("block_bytes")? as usize;
+        let peak_in_use = f("peak_in_use")? as usize;
+        Some(KvReport {
+            mode: j.opt("mode")?.as_str().ok()?.to_string(),
+            n_blocks: f("n_blocks")? as usize,
+            capacity_bytes: f("capacity_bytes")? as usize,
+            peak_in_use,
+            peak_utilization: f("peak_utilization")?,
+            peak_resident_bytes: peak_in_use * block_bytes,
+            shared_hit_rate: f("shared_hit_rate")?,
+            evicted_blocks: f("evicted_blocks")? as usize,
+            spilled_blocks: f("spilled_blocks")? as usize,
+            spill_writes: f("spill_writes")? as usize,
+            spill_faults: f("spill_faults")? as usize,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("mode", s(&self.mode)),
+            ("n_blocks", num(self.n_blocks as f64)),
+            ("capacity_bytes", num(self.capacity_bytes as f64)),
+            ("peak_in_use", num(self.peak_in_use as f64)),
+            ("peak_utilization", num(self.peak_utilization)),
+            ("peak_resident_bytes", num(self.peak_resident_bytes as f64)),
+            ("shared_hit_rate", num(self.shared_hit_rate)),
+            ("evicted_blocks", num(self.evicted_blocks as f64)),
+            ("spilled_blocks", num(self.spilled_blocks as f64)),
+            ("spill_writes", num(self.spill_writes as f64)),
+            ("spill_faults", num(self.spill_faults as f64)),
+        ])
+    }
+}
+
 /// The SLO attainment report for one trace replay.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
@@ -231,6 +309,9 @@ pub struct LoadReport {
     pub retries_503: usize,
     pub tokens_out: usize,
     pub tiers: Vec<TierReport>,
+    /// Server-side KV pressure snapshot (None when the engine runs
+    /// without a pool, or the HTTP target exposes no `kv` metrics).
+    pub kv: Option<KvReport>,
 }
 
 impl LoadReport {
@@ -245,7 +326,7 @@ impl LoadReport {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("wall_s", num(self.wall.as_secs_f64())),
             ("submitted", num(self.submitted as f64)),
             ("completed", num(self.completed as f64)),
@@ -272,7 +353,11 @@ impl LoadReport {
                     ])
                 })),
             ),
-        ])
+        ];
+        if let Some(kv) = &self.kv {
+            pairs.push(("kv", kv.to_json()));
+        }
+        obj(pairs)
     }
 
     /// Write the pretty JSON report, creating parent directories.
@@ -312,7 +397,47 @@ pub fn run(target: Target<'_>, cfg: &TraceConfig) -> Result<LoadReport> {
     });
     let wall = t0.elapsed();
     let outcomes = outcomes.into_inner().unwrap();
-    Ok(summarize(cfg, &outcomes, wall))
+    let mut report = summarize(cfg, &outcomes, wall);
+    // Snapshot server-side KV pressure after the last request drains, so
+    // peaks cover the whole replay.
+    report.kv = match &target {
+        Target::Engine(engine) => engine.kv_pool().map(|p| KvReport::from_stats(&p.stats())),
+        Target::Http(addr) => fetch_http_kv(addr),
+    };
+    Ok(report)
+}
+
+/// GET /v1/metrics from the serving endpoint and lift out the `kv`
+/// object. Best-effort: a target without KV metrics yields `None`.
+fn fetch_http_kv(addr: &str) -> Option<KvReport> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_nodelay(true).ok();
+    write!(stream, "GET /v1/metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").ok()?;
+    stream.flush().ok()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    if line.split_whitespace().nth(1) != Some("200") {
+        return None;
+    }
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).ok()?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body).ok()?;
+    let j = Json::parse(body.trim()).ok()?;
+    // The response is keyed by model name, one metrics object per routed
+    // engine; take the first engine that exposes a pool.
+    match &j {
+        Json::Obj(per_model) => {
+            per_model.values().find_map(|m| KvReport::from_json(m.opt("kv")?))
+        }
+        _ => None,
+    }
 }
 
 fn summarize(cfg: &TraceConfig, outcomes: &[Outcome], wall: Duration) -> LoadReport {
@@ -353,6 +478,7 @@ fn summarize(cfg: &TraceConfig, outcomes: &[Outcome], wall: Duration) -> LoadRep
         retries_503: outcomes.iter().map(|o| o.retries_503).sum(),
         tokens_out: outcomes.iter().map(|o| o.tokens).sum(),
         tiers,
+        kv: None,
     }
 }
 

@@ -54,7 +54,8 @@ pub use engine::{
 };
 pub use http::{HttpServer, Router};
 pub use loadgen::{
-    build_trace, LoadReport, SloTargets, Target, Tier, TierReport, TraceConfig, TraceEvent,
+    build_trace, KvReport, LoadReport, SloTargets, Target, Tier, TierReport, TraceConfig,
+    TraceEvent,
 };
 pub use registry::{Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
 pub use spec::{SpecDecoder, SpecParams, SpecStats};

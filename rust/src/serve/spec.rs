@@ -533,7 +533,7 @@ mod tests {
         let mut target = PackedModel::random(&c, 11);
         let mut draft = PackedModel::random(&c, 12);
         let pool = Arc::new(BlockPool::new(
-            KvPoolOptions { n_blocks: 64, block_size: 4 },
+            KvPoolOptions { n_blocks: 64, block_size: 4, ..Default::default() },
             c.n_layers,
             c.d_model,
         ));

@@ -62,6 +62,9 @@ pub struct Bencher {
     pub n_samples: usize,
     pub target_sample: Duration,
     pub results: Vec<Stats>,
+    /// Scalar capacity/throughput metrics recorded alongside the timings
+    /// (e.g. sequences-per-MB); serialized into the same JSON file.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bencher {
@@ -70,6 +73,7 @@ impl Default for Bencher {
             n_samples: 15,
             target_sample: Duration::from_millis(120),
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 }
@@ -80,7 +84,15 @@ impl Bencher {
             n_samples: 7,
             target_sample: Duration::from_millis(40),
             results: Vec::new(),
+            metrics: Vec::new(),
         }
+    }
+
+    /// Record a scalar metric (not a timing) to report and serialize with
+    /// the run — capacity counts, ratios, bytes.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("{name:48} {value:>12.3}");
+        self.metrics.push((name.to_string(), value));
     }
 
     /// Time `f`, which should perform one unit of work and return a value
@@ -120,7 +132,7 @@ impl Bencher {
     pub fn write_json(&self, file: &str) {
         use super::json::{arr, num, obj, s, Json};
         std::fs::create_dir_all("results/bench").ok();
-        let entries: Vec<Json> = self
+        let mut entries: Vec<Json> = self
             .results
             .iter()
             .map(|st| {
@@ -133,6 +145,9 @@ impl Bencher {
                 ])
             })
             .collect();
+        entries.extend(
+            self.metrics.iter().map(|(name, v)| obj(vec![("name", s(name)), ("value", num(*v))])),
+        );
         let path = format!("results/bench/{file}.json");
         std::fs::write(&path, arr(entries).to_string_pretty()).ok();
         println!("[bench] wrote {path}");

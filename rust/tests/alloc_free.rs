@@ -127,7 +127,7 @@ fn steady_state_batched_decode_is_allocation_free() {
     // buffers, so the measured window sits strictly inside warm capacity.
     let mut draft = PackedModel::random(&cfg, 4);
     let pool = Arc::new(BlockPool::new(
-        KvPoolOptions { n_blocks: 256, block_size: 16 },
+        KvPoolOptions { n_blocks: 256, block_size: 16, ..Default::default() },
         cfg.n_layers,
         cfg.d_model,
     ));

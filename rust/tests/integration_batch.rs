@@ -126,7 +126,7 @@ fn mixed_contiguous_and_paged_rows_decode_bitexactly() {
         let want = reference_logits(&mut reference, seqs);
 
         let pool = Arc::new(BlockPool::new(
-            KvPoolOptions { n_blocks: 128, block_size: 4 },
+            KvPoolOptions { n_blocks: 128, block_size: 4, ..Default::default() },
             cfg.n_layers,
             cfg.d_model,
         ));

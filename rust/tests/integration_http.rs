@@ -196,7 +196,7 @@ fn mid_stream_disconnect_cancels_request_and_drains_kv_pool() {
             &registry,
             EngineOptions {
                 model: "m".into(),
-                kv: Some(KvPoolOptions { n_blocks: 256, block_size: 16 }),
+                kv: Some(KvPoolOptions { n_blocks: 256, block_size: 16, ..Default::default() }),
                 ..EngineOptions::default()
             },
         )

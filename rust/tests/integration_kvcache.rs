@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::{KvCache, PackedBlock, PackedModel};
 use pquant::kvcache::{
-    BlockPool, KvError, KvPoolOptions, KvStore, PagedSeq, PrefixTag,
+    BlockPool, KvError, KvPoolOptions, KvSegment, KvStorageMode, KvStore, PagedSeq, PrefixTag,
 };
 use pquant::serve::{
     Engine, EngineOptions, Event, FinishReason, GenRequest, ModelRegistry, SamplingParams,
@@ -85,7 +85,7 @@ fn prop_paged_block_attention_bit_identical_to_contiguous() {
             rope.ensure(d / heads / 2, seq_len);
             let mut cache = KvCache::new(seq_len, d);
             let pool = Arc::new(BlockPool::new(
-                KvPoolOptions { n_blocks: 64, block_size },
+                KvPoolOptions { n_blocks: 64, block_size, ..Default::default() },
                 1,
                 d,
             ));
@@ -127,7 +127,7 @@ fn prop_shared_prefix_and_cow_are_bit_exact() {
             let mut model_ref = PackedModel::random(&cfg, 77);
             let mut model_paged = model_ref.clone();
             let pool = Arc::new(BlockPool::new(
-                KvPoolOptions { n_blocks: 512, block_size },
+                KvPoolOptions { n_blocks: 512, block_size, ..Default::default() },
                 cfg.n_layers,
                 cfg.d_model,
             ));
@@ -195,7 +195,7 @@ fn prop_shared_prefix_and_cow_are_bit_exact() {
 
 #[test]
 fn admit_fails_recoverably_when_pool_too_small() {
-    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 3, block_size: 4 }, 2, 8));
+    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 3, block_size: 4, ..Default::default() }, 2, 8));
     // 8 tokens -> 2 logical blocks x 2 layers = 4 > 3.
     match pool.admit(&[1, 2], 8, PrefixTag::default()) {
         Err(KvError::OutOfBlocks { needed: 4, available: 3 }) => {}
@@ -207,7 +207,7 @@ fn admit_fails_recoverably_when_pool_too_small() {
 
 #[test]
 fn eviction_reclaims_unused_shared_prefixes_under_pressure() {
-    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 8, block_size: 4 }, 1, 4));
+    let pool = Arc::new(BlockPool::new(KvPoolOptions { n_blocks: 8, block_size: 4, ..Default::default() }, 1, 4));
     let prompt: Vec<u32> = (0..8).collect();
     let adm = pool.admit(&prompt, 8, PrefixTag(1, 1)).unwrap();
     let mut seq = PagedSeq::new(&pool, adm);
@@ -241,7 +241,7 @@ fn kv_exhausted_blocks_admission_then_drains_as_blocks_free() {
         EngineOptions {
             model: "m".into(),
             max_batch: 4,
-            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8 }),
+            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8, ..Default::default() }),
             ..EngineOptions::default()
         },
     )
@@ -274,7 +274,7 @@ fn oversized_request_fails_fast_instead_of_retrying_forever() {
         &registry,
         EngineOptions {
             model: "m".into(),
-            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8 }),
+            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8, ..Default::default() }),
             ..EngineOptions::default()
         },
     )
@@ -309,7 +309,7 @@ fn preemption_frees_blocks_and_recompute_is_deterministic() {
         EngineOptions {
             model: "m".into(),
             max_batch: 4,
-            kv: Some(KvPoolOptions { n_blocks: 102, block_size: 8 }),
+            kv: Some(KvPoolOptions { n_blocks: 102, block_size: 8, ..Default::default() }),
             ..EngineOptions::default()
         },
     )
@@ -414,6 +414,268 @@ fn stop_token_finish_returns_unused_tail_blocks() {
         "only the registered prompt snapshot may stay resident, saw {}",
         kv.in_use
     );
+}
+
+// ------------------------------------------------ storage modes: int8 tier
+
+fn argmax_ix(v: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut best = f32::NEG_INFINITY;
+    for (i, &x) in v.iter().enumerate() {
+        if x > best {
+            best = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// Top-1 index and its margin over the runner-up.
+fn top2_margin(v: &[f32]) -> (usize, f32) {
+    let mut bi = 0;
+    let mut best = f32::NEG_INFINITY;
+    let mut second = f32::NEG_INFINITY;
+    for (i, &x) in v.iter().enumerate() {
+        if x > best {
+            second = best;
+            best = x;
+            bi = i;
+        } else if x > second {
+            second = x;
+        }
+    }
+    (bi, best - second)
+}
+
+/// Quantized-vs-f32 greedy decode divergence is bounded: teacher-force the
+/// f32 greedy stream through both storage modes and require (a) the logit
+/// error stays a small fraction of the logit scale, and (b) wherever the
+/// f32 argmax margin exceeds twice the observed sup-norm error — the exact
+/// condition under which quantization could never flip an argmax — both
+/// modes pick the same token.
+#[test]
+fn prop_int8_kv_greedy_decode_divergence_is_bounded() {
+    let cfg = nano_cfg("int8-div");
+    check(
+        0x18b,
+        8,
+        |r| (2 + r.below(8), r.next_u64()),
+        |&(prompt_len, seed)| {
+            let mut model_f = PackedModel::random(&cfg, 31);
+            let mut model_q = model_f.clone();
+            let n_new = 12;
+            let total = prompt_len + n_new;
+            let mk_pool = |mode| {
+                Arc::new(BlockPool::new(
+                    KvPoolOptions { n_blocks: 64, block_size: 4, mode },
+                    cfg.n_layers,
+                    cfg.d_model,
+                ))
+            };
+            let pool_f = mk_pool(KvStorageMode::F32);
+            let pool_q = mk_pool(KvStorageMode::Int8);
+            let adm = pool_f.admit(&[], total, PrefixTag::default()).map_err(|e| format!("{e}"))?;
+            let mut seq_f = PagedSeq::new(&pool_f, adm);
+            let adm = pool_q.admit(&[], total, PrefixTag::default()).map_err(|e| format!("{e}"))?;
+            let mut seq_q = PagedSeq::new(&pool_q, adm);
+            let mut rng = Rng::new(seed);
+            let mut fed: Vec<u32> = (0..prompt_len).map(|_| rng.below(64) as u32).collect();
+            for pos in 0..total - 1 {
+                let lf = model_f
+                    .decode_step_paged(fed[pos], pos, &mut seq_f)
+                    .map_err(|e| format!("f32: {e}"))?;
+                let lq = model_q
+                    .decode_step_paged(fed[pos], pos, &mut seq_q)
+                    .map_err(|e| format!("int8: {e}"))?;
+                if pos + 1 >= prompt_len {
+                    let max_err =
+                        lf.iter().zip(&lq).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+                    let scale = lf.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let tol = 0.15 * scale + 0.02;
+                    if max_err > tol {
+                        return Err(format!(
+                            "pos {pos}: logit error {max_err} exceeds tolerance {tol} \
+                             (15% of scale {scale} + cushion)"
+                        ));
+                    }
+                    let (top, margin) = top2_margin(&lf);
+                    if margin > 2.0 * max_err && argmax_ix(&lq) != top {
+                        return Err(format!(
+                            "pos {pos}: argmax flipped despite margin {margin} > 2x error {max_err}"
+                        ));
+                    }
+                    if fed.len() < total {
+                        fed.push(top as u32);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engine_serves_to_completion_on_an_int8_pool() {
+    let model = PackedModel::random(&nano_cfg("int8-serve"), 17);
+    let registry = registry_with("m", model);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            kv: Some(KvPoolOptions { n_blocks: 64, block_size: 4, mode: KvStorageMode::Int8 }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let prompt: Vec<u32> = (0..10).map(|i| (i * 3 + 2) % 64).collect();
+    // Same prompt twice: the second run exercises prefix attach + CoW on
+    // quantized blocks.
+    let a = engine.submit(GenRequest::greedy(prompt.clone(), 8)).unwrap().wait();
+    let b = engine.submit(GenRequest::greedy(prompt.clone(), 8)).unwrap().wait();
+    assert_eq!(a.finish, FinishReason::Length);
+    assert_eq!(a.tokens.len(), 8);
+    assert_eq!(a.tokens, b.tokens, "same prompt, same pool: identical greedy stream");
+    let metrics = engine.shutdown();
+    let kv = metrics.kv().unwrap();
+    assert_eq!(kv.mode, KvStorageMode::Int8);
+    assert!(kv.shared_attached > 0, "second request must attach the quantized prefix");
+}
+
+// --------------------------------------------- eviction order + spill tier
+
+/// One seeded admission/registration trace against a tight pool, with a
+/// per-step counter snapshot and a final residency probe.
+fn lru_trace(seed: u64) -> (Vec<(usize, usize, usize)>, Vec<bool>) {
+    let pool = Arc::new(BlockPool::new(
+        KvPoolOptions { n_blocks: 8, block_size: 4, ..Default::default() },
+        1,
+        4,
+    ));
+    let tag = PrefixTag(1, 1);
+    let prompts: Vec<Vec<u32>> =
+        (0..6).map(|i| (0..8).map(|t| (i * 16 + t) as u32).collect()).collect();
+    let mut rng = Rng::new(seed);
+    let mut log = Vec::new();
+    for _ in 0..40 {
+        let i = rng.below(prompts.len());
+        if let Ok(adm) = pool.admit(&prompts[i], 9, tag) {
+            let mut seq = PagedSeq::new(&pool, adm);
+            let row = [i as f32 * 0.1 + 0.5; 4];
+            for _ in seq.len()..8 {
+                seq.layer(0).push(&row, &row).unwrap();
+            }
+            pool.register_prefix(&prompts[i], &mut seq);
+        }
+        let s = pool.stats();
+        log.push((s.evicted_blocks, s.registered_prefixes, pool.available()));
+    }
+    let resident = prompts
+        .iter()
+        .map(|p| match pool.admit(p, 9, tag) {
+            Ok(adm) => adm.shared_len() > 0,
+            Err(_) => false,
+        })
+        .collect();
+    (log, resident)
+}
+
+#[test]
+fn lru_eviction_is_deterministic_for_identical_traces() {
+    // The shed order uses a logical clock, not wall time: replaying the
+    // same admission trace must evict the same blocks at the same steps
+    // and leave the same prefixes resident.
+    let a = lru_trace(0xC0FFEE);
+    let b = lru_trace(0xC0FFEE);
+    assert_eq!(a.0, b.0, "per-step eviction counters must match");
+    assert_eq!(a.1, b.1, "final residency must match");
+    assert!(
+        a.0.last().unwrap().0 > 0,
+        "trace must actually evict under pressure for the test to mean anything"
+    );
+    // A different seed produces a different trace (sanity: the probe is
+    // not vacuously constant).
+    let c = lru_trace(0xBEEF);
+    assert!(a.0 != c.0 || a.1 != c.1, "distinct traces should diverge");
+}
+
+/// Collect the raw stored bits of one layer's resident rows, whatever the
+/// storage mode.
+fn resident_bits(seq: &mut PagedSeq, layer: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    seq.layer(layer).for_each_seg(&mut |seg| match seg {
+        KvSegment::F32 { k, v } => {
+            for &x in k.iter().chain(v.iter()) {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        KvSegment::Int8 { k, v, k_scale, v_scale } => {
+            for &c in k.iter().chain(v.iter()) {
+                out.push(c as u8);
+            }
+            for &g in k_scale.iter().chain(v_scale.iter()) {
+                out.extend_from_slice(&g.to_le_bytes());
+            }
+        }
+    });
+    out
+}
+
+#[test]
+fn spilled_prefix_faults_back_bit_identical_in_both_modes() {
+    for mode in [KvStorageMode::F32, KvStorageMode::Int8] {
+        let dir = std::env::temp_dir()
+            .join(format!("pquant-spill-it-{}-{mode}", std::process::id()));
+        let pool = Arc::new(BlockPool::new(
+            KvPoolOptions { n_blocks: 8, block_size: 4, mode },
+            1,
+            4,
+        ));
+        pool.enable_spill(&dir).unwrap();
+        let tag = PrefixTag(3, 3);
+        let prompt: Vec<u32> = (0..8).collect();
+        {
+            let adm = pool.admit(&prompt, 8, tag).unwrap();
+            let mut seq = PagedSeq::new(&pool, adm);
+            for pos in 0..8 {
+                let k: Vec<f32> = (0..4).map(|j| (pos * 7 + j) as f32 * 0.13 - 1.0).collect();
+                let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+                seq.layer(0).push(&k, &v).unwrap();
+            }
+            pool.register_prefix(&prompt, &mut seq);
+        }
+        // Probe the resident entry's bits before spilling.
+        let before = {
+            let adm = pool.admit(&prompt, 9, tag).unwrap();
+            assert!(adm.shared_len() > 0, "{mode}: prefix must be resident");
+            let mut seq = PagedSeq::new(&pool, adm);
+            resident_bits(&mut seq, 0)
+        };
+        assert!(!before.is_empty());
+        pool.spill_unused();
+        let spilled = pool.stats();
+        assert!(spilled.spilled_entries > 0, "{mode}: entry must move to the cold tier");
+        assert!(spilled.spill_writes > 0);
+        // Re-admission faults it back from disk...
+        let after = {
+            let adm = pool.admit(&prompt, 9, tag).unwrap();
+            assert!(adm.shared_len() > 0, "{mode}: fault-back must restore the prefix");
+            let mut seq = PagedSeq::new(&pool, adm);
+            resident_bits(&mut seq, 0)
+        };
+        // ...bit-identical to what was spilled.
+        assert_eq!(before, after, "{mode}: fault-back must be bit-identical");
+        let s = pool.stats();
+        assert!(s.spill_faults >= 1, "{mode}: fault counter must record the restore");
+        // F32 registers two boundary entries (lens 4 and 8) and only the
+        // probed one faults back; the count must strictly decrease.
+        assert!(
+            s.spilled_entries < spilled.spilled_entries,
+            "{mode}: faulted entry must leave the cold tier"
+        );
+        assert_eq!(s.spill_fault_fails, 0, "{mode}: no fault failures expected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 // ------------------------------------------- engine: legacy contiguous mode

@@ -312,7 +312,7 @@ fn draft_kv_exhaustion_degrades_to_plain_and_stays_bit_exact() {
         EngineOptions {
             model: "m".into(),
             max_batch: 2,
-            draft_kv: Some(KvPoolOptions { n_blocks: 1, block_size: 4 }),
+            draft_kv: Some(KvPoolOptions { n_blocks: 1, block_size: 4, ..Default::default() }),
             ..EngineOptions::default()
         },
     )
@@ -348,7 +348,7 @@ fn draft_pool_contention_degrades_the_loser_only() {
         EngineOptions {
             model: "m".into(),
             max_batch: 2,
-            draft_kv: Some(KvPoolOptions { n_blocks: 2, block_size: 16 }),
+            draft_kv: Some(KvPoolOptions { n_blocks: 2, block_size: 16, ..Default::default() }),
             ..EngineOptions::default()
         },
     )
@@ -377,7 +377,7 @@ fn preempted_speculative_request_resumes_and_finishes_bit_exact() {
         EngineOptions {
             model: "m".into(),
             max_batch: 4,
-            kv: Some(KvPoolOptions { n_blocks: 52, block_size: 8 }),
+            kv: Some(KvPoolOptions { n_blocks: 52, block_size: 8, ..Default::default() }),
             ..EngineOptions::default()
         },
     )

@@ -38,6 +38,9 @@ fi
 echo "==> bench lane: seeded loadgen trace → results/bench/loadgen.json"
 cargo bench --bench loadgen
 
+echo "==> bench lane: KV capacity f32 vs int8 → results/bench/kvcache.json"
+cargo bench --bench kvcache
+
 echo "==> style: cargo fmt --check"
 cargo fmt --check
 
