@@ -1,0 +1,101 @@
+//! Observability overhead bench (ISSUE 8): hot-path costs of the metric
+//! primitives (histogram record, counter add, span recording, quantile
+//! scrape) and the end-to-end engine cost of tracing enabled vs disabled
+//! on identical request bursts. The traced/untraced median ratio lands in
+//! `results/bench/obs.json` as `trace_overhead_ratio` — the acceptance
+//! target is < 5% overhead; the assert here is looser (25%) so a noisy
+//! CI machine doesn't flake the lane.
+
+use std::sync::Arc;
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::obs::{Histogram, Registry, SpanKind, TraceShared};
+use pquant::serve::{Engine, EngineOptions, GenRequest, ModelRegistry, Ticket};
+use pquant::util::bench::Bencher;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "bench-obs".into(),
+        variant: Variant::PQuant,
+        vocab: 512,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 704,
+        r: 32,
+        n_experts: 1,
+        seq_len: 64,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+/// One unit of engine work: an 8-request burst of 8 greedy tokens each.
+fn burst(engine: &Engine) -> usize {
+    let tickets: Vec<Ticket> = (0..8u32)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..4).map(|i| (id + i) % 512).collect();
+            engine.submit(GenRequest::greedy(prompt, 8)).expect("queue fits burst")
+        })
+        .collect();
+    tickets.into_iter().map(|t| t.wait().tokens.len()).sum()
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+
+    // --- primitives (the per-step engine hot path) ---
+    let hist = Histogram::new();
+    let mut x = 0.1f64;
+    b.bench("histogram record", || {
+        x = (x * 1.37 + 0.11) % 5000.0;
+        hist.record(x);
+    });
+    let reg = Registry::new();
+    let ctr = reg.counter_with("bench_steps_total", &[("phase", "bench")], "bench counter");
+    b.bench("counter add (labeled handle)", || ctr.add(1));
+    b.bench("histogram p99 scrape", || hist.quantile(99));
+
+    let tr = TraceShared::new();
+    let mut id = 0u64;
+    b.bench("trace begin + 10 spans + finish", || {
+        id += 1;
+        let mut tb = tr.begin(id);
+        let t0 = tb.now_us();
+        for i in 0..10u64 {
+            tb.span_since(SpanKind::BatchStep, t0, i, 1);
+        }
+        tb.finish(1, 10);
+    });
+
+    // --- engine bursts, tracing off vs on, same weights and geometry ---
+    let model = PackedModel::random(&cfg(), 3);
+    let mut medians = [0.0f64; 2];
+    for (slot, (label, trace)) in
+        [("untraced", false), ("traced", true)].into_iter().enumerate()
+    {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register(label, model.clone(), None);
+        let engine = Engine::start(
+            &registry,
+            EngineOptions {
+                model: label.into(),
+                max_batch: 4,
+                workers: 1,
+                queue_depth: 16,
+                prefill_chunk: 16,
+                trace,
+                ..EngineOptions::default()
+            },
+        )
+        .expect("model registered above");
+        medians[slot] =
+            b.bench(&format!("serve 8req x 8tok {label}"), || burst(&engine)).median();
+        engine.shutdown();
+    }
+    let ratio = medians[1] / medians[0].max(1e-12);
+    b.metric("trace_overhead_ratio", ratio);
+    assert!(ratio < 1.25, "tracing overhead ratio {ratio:.3} out of bounds");
+    b.write_json("obs");
+}

@@ -184,6 +184,27 @@ pub fn paper_configs() -> Vec<ModelConfig> {
     ]
 }
 
+/// Tiny CPU-friendly config for CI smoke runs: big enough to exercise
+/// every serving path (paged KV, prefill chunks, fused batching), small
+/// enough that `repro export smoke --random` + a short loadtest finish in
+/// seconds on one core.
+pub fn smoke_config() -> ModelConfig {
+    ModelConfig {
+        name: "smoke".to_string(),
+        variant: Variant::PQuant,
+        vocab: 512,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 176,
+        r: 16,
+        n_experts: 1,
+        seq_len: 256,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
 /// Paper-scale pQuant config with N experts (for Table 6 / Fig 6 sweeps).
 pub fn paper_pquant_n(base: &ModelConfig, n_experts: usize) -> ModelConfig {
     let mut c = base.clone();

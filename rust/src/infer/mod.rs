@@ -17,7 +17,7 @@ pub mod block;
 pub mod model;
 
 pub use batch::{BatchKv, QuantActsBatch, Scratch, SeqStep};
-pub use block::{KvCache, PackedBlock, RopeTable, TimingMode};
+pub use block::{BlockTiming, KvCache, PackedBlock, RopeTable, TimingMode};
 pub use model::PackedModel;
 
 use crate::gemm::{self, lut::Luts, TernaryLuts};

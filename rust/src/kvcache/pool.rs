@@ -21,12 +21,13 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use super::seq::PagedSeq;
 use super::spill::SpillTier;
 use super::{KvError, KvPoolOptions, KvSegment, KvStorageMode};
+use crate::obs::trace::{KvEventKind, TraceShared};
 use crate::quant::quantize_i8_row_into;
 
 /// Identity of the model weights a shared prefix was computed under:
@@ -390,6 +391,10 @@ pub struct BlockPool {
     spill_writes: AtomicUsize,
     spill_faults: AtomicUsize,
     spill_fault_fails: AtomicUsize,
+    /// Trace recorder for pool-level KV events (CoW, spill, eviction).
+    /// Attached once by the engine when tracing is enabled; every hook
+    /// below is a skipped `if let` otherwise.
+    obs: OnceLock<Arc<TraceShared>>,
 }
 
 impl std::fmt::Debug for BlockPool {
@@ -435,6 +440,21 @@ impl BlockPool {
             spill_writes: AtomicUsize::new(0),
             spill_faults: AtomicUsize::new(0),
             spill_fault_fails: AtomicUsize::new(0),
+            obs: OnceLock::new(),
+        }
+    }
+
+    /// Attach a trace recorder: CoW copies, spill writes/faults, and
+    /// evictions land on the recorder's pool-level KV track. First call
+    /// wins; later calls are ignored.
+    pub fn set_obs(&self, tr: Arc<TraceShared>) {
+        let _ = self.obs.set(tr);
+    }
+
+    #[inline]
+    fn kv_event(&self, kind: KvEventKind, n: u64) {
+        if let Some(tr) = self.obs.get() {
+            tr.kv_event(kind, n);
         }
     }
 
@@ -829,6 +849,9 @@ impl BlockPool {
                 }
             }
         }
+        if freed > 0 {
+            self.kv_event(KvEventKind::Evict, freed as u64);
+        }
         freed
     }
 
@@ -917,6 +940,7 @@ impl BlockPool {
                     uses: entry.uses,
                 };
                 self.spill_writes.fetch_add(1, Ordering::Relaxed);
+                self.kv_event(KvEventKind::SpillWrite, blocks as u64);
                 self.insert_spill_stub_locked(st, key.clone(), stub);
                 return self.remove_entry_locked(st, key);
             }
@@ -987,6 +1011,7 @@ impl BlockPool {
             // Leave it on disk for a calmer moment.
             st.spilled.insert(key.to_vec(), stub);
             self.spill_fault_fails.fetch_add(1, Ordering::Relaxed);
+            self.kv_event(KvEventKind::SpillFaultFail, 1);
             return;
         }
         let read = {
@@ -999,6 +1024,7 @@ impl BlockPool {
                 debug_assert_eq!(restored, stub.blocks, "stub block count out of sync");
                 std::fs::remove_file(&stub.path).ok();
                 self.spill_faults.fetch_add(1, Ordering::Relaxed);
+                self.kv_event(KvEventKind::SpillFault, restored as u64);
                 let uses = stub.uses;
                 self.insert_entry_locked(st, key.to_vec(), tag, stub.len, layers, None, None);
                 if let Some(e) = st.share.get_mut(key) {
@@ -1011,6 +1037,7 @@ impl BlockPool {
                 st.available += stub.blocks;
                 std::fs::remove_file(&stub.path).ok();
                 self.spill_fault_fails.fetch_add(1, Ordering::Relaxed);
+                self.kv_event(KvEventKind::SpillFaultFail, 1);
             }
         }
     }
@@ -1078,6 +1105,7 @@ impl BlockPool {
 
     pub(crate) fn note_cow(&self) {
         self.cow_copies.fetch_add(1, Ordering::Relaxed);
+        self.kv_event(KvEventKind::CowCopy, 1);
     }
 
     pub(crate) fn note_unused_tail(&self, blocks: usize) {

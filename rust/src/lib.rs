@@ -49,6 +49,12 @@
 //!   backpressure maps to 429/503 with typed retry hints) — and
 //!   [`serve::loadgen`] replays seeded bursty traces against it (or the
 //!   in-process engine) and reports per-tier SLO attainment
+//! * [`obs`] — zero-dependency observability core: lock-free log-bucketed
+//!   histograms + a counter/gauge [`obs::Registry`] (no locks on the
+//!   record path), opt-in per-request [`obs::trace`] span recording
+//!   exported as Chrome trace-event JSON (Perfetto-loadable), and
+//!   Prometheus text exposition ([`obs::prom`]) behind `GET /v1/metrics`
+//!   content negotiation
 //! * [`tokenizer`] — byte-level BPE
 //! * [`data`] — synthetic grammar corpus + batch iterator
 //! * [`sensitivity`] — OBS/SPQR sensitivity maps, democratization metrics
@@ -69,6 +75,7 @@ pub mod gemm;
 pub mod infer;
 pub mod kvcache;
 pub mod memory;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

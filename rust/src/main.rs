@@ -8,6 +8,7 @@
 //!   export <config> <out.pqm>         checkpoint → packed `.pqm` artifact
 //!   inspect <path.pqm>                header + section table of an artifact
 //!   serve --config C | --model P.pqm  continuous-batching load test
+//!   obs-check --http ADDR | --trace P  observability self-check
 //!   sensitivity --config C [--checkpoint P]
 //!   list-configs                       artifacts found on disk
 //!
@@ -90,6 +91,7 @@ USAGE:
   repro eval --model P.pqm [--tokens N]
               [--draft-model D.pqm] [--spec-k K]    speculative agreement + acceptance report
   repro export <config> <out.pqm> [--checkpoint P] [--tokenizer] [--random SEED]
+              (--random also accepts the built-in \"smoke\" CI config)
   repro inspect <path.pqm>
   repro serve (--config C [--checkpoint P] | --model P.pqm) [--requests N] [--new-tokens N]
               [--batch N] [--workers N] [--queue N] [--prefill-chunk N]
@@ -105,14 +107,27 @@ USAGE:
                                                     batch step — greedy output is unchanged
               [--http ADDR [--duration SECS]]       HTTP/SSE front end instead of the batch
                                                     load test: POST /v1/generate (SSE stream),
-                                                    GET /v1/metrics, GET /v1/models
+                                                    GET /v1/metrics (JSON, or Prometheus text
+                                                    via Accept/?format=prometheus),
+                                                    GET /v1/trace/<id|latest|all>,
+                                                    GET /v1/models
                                                     (0 duration: serve until killed)
+              [--trace] [--trace-out P.json]        per-request span tracing (Chrome
+                                                    trace-event JSON; --trace-out writes the
+                                                    ring when the run ends and implies --trace)
+              [--timing]                            fold per-component decode phase timers
+                                                    into the metrics registry
   repro loadtest (--config C | --model P.pqm | --http ADDR) [--seed N] [--requests N]
               [--rate R] [--burst-factor F] [--burst-on S] [--burst-off S]
               [--prompt-lens L:W,..] [--output-lens L:W,..]
               [--shared-frac F] [--shared-prefix N] [--draft-frac F] [--spec-k K]
               [--max-retries N] [--out P.json]      trace-driven SLO report
+              [--out-jsonl P.jsonl]                 per-request records, one JSON per line
               (engine flags as for serve; --http drives a live endpoint instead)
+  repro obs-check [--http ADDR] [--trace P.json]    observability self-check: scrape
+                                                    /v1/metrics in JSON + Prometheus text and
+                                                    cross-check them, validate /v1/trace/latest
+                                                    and/or a trace file as Chrome trace JSON
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
 ";
@@ -132,6 +147,7 @@ fn main() -> Result<()> {
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
+        "obs-check" => cmd_obs_check(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "list-configs" => cmd_list(),
         "help" | "--help" | "-h" => {
@@ -313,6 +329,12 @@ fn build_serve_stack(args: &Args) -> Result<ServeStack> {
         kv,
         draft_kv: None, // draft pools mirror the target pool geometry
         kv_spill_dir: args.flags.get("kv-spill-dir").map(std::path::PathBuf::from),
+        trace: args.flags.contains_key("trace") || args.flags.contains_key("trace-out"),
+        timing: if args.flags.contains_key("timing") {
+            pquant::infer::TimingMode::Accumulate
+        } else {
+            pquant::infer::TimingMode::Off
+        },
     };
     // All serving flows through the registry: load (from .pqm or a live
     // TrainState), register under a name, start the engine against it.
@@ -365,7 +387,8 @@ fn serve_http(args: &Args, stack: ServeStack, addr: &str) -> Result<()> {
     let local = server.local_addr();
     println!("listening on http://{local}");
     println!("  POST /v1/generate   (SSE stream; body: {{\"prompt\": [..], \"n_new\": N, ...}})");
-    println!("  GET  /v1/metrics    GET  /v1/models");
+    println!("  GET  /v1/metrics    (JSON; Prometheus text via ?format=prometheus)");
+    println!("  GET  /v1/models     GET  /v1/trace/<id|latest|all>");
     let duration = args.flag("duration", 0u64)?;
     if duration > 0 {
         std::thread::sleep(std::time::Duration::from_secs(duration));
@@ -387,7 +410,33 @@ fn serve_http(args: &Args, stack: ServeStack, addr: &str) -> Result<()> {
         tp.p95,
         tp.p99
     );
+    if let Some(path) = args.flags.get("trace-out") {
+        write_trace_out(&metrics, path)?;
+    }
     drop(engine); // Engine::drop joins the workers
+    Ok(())
+}
+
+/// Dump the engine's completed-trace ring (plus the KV event track) as a
+/// Chrome trace-event JSON file, Perfetto/`chrome://tracing`-loadable.
+fn write_trace_out(metrics: &pquant::serve::ServeMetrics, path: &str) -> Result<()> {
+    let tr = metrics
+        .trace()
+        .ok_or_else(|| anyhow!("--trace-out needs tracing enabled (it implies --trace)"))?;
+    let path = std::path::Path::new(path);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, tr.to_chrome_json().to_string() + "\n")
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!(
+        "wrote trace {} ({} completed requests, {} evicted from the ring)",
+        path.display(),
+        tr.completed_count(),
+        tr.dropped_traces()
+    );
     Ok(())
 }
 
@@ -526,6 +575,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(path) = args.flags.get("trace-out") {
+        write_trace_out(&metrics, path)?;
+    }
     Ok(())
 }
 
@@ -559,19 +611,19 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
 
     // Target: a live HTTP endpoint, or an in-process engine stack built
     // with the same flags as `serve`.
-    let report = if let Some(addr) = args.flags.get("http") {
+    let (report, records) = if let Some(addr) = args.flags.get("http") {
         cfg.vocab = args.flag("vocab", cfg.vocab)?;
         if cfg.draft_frac > 0.0 {
             cfg.draft_model = Some(args.flag("draft-name", "draft".to_string())?);
         }
-        loadgen::run(Target::Http(addr.clone()), &cfg)?
+        loadgen::run_recorded(Target::Http(addr.clone()), &cfg)?
     } else {
         let stack = build_serve_stack(args)?;
         cfg.vocab = stack.vocab;
         if stack.speculative && cfg.draft_frac > 0.0 {
             cfg.draft_model = Some("draft".into());
         }
-        let report = loadgen::run(Target::Engine(&stack.engine), &cfg)?;
+        let (report, records) = loadgen::run_recorded(Target::Engine(&stack.engine), &cfg)?;
         let metrics = stack.engine.shutdown();
         println!(
             "engine: {} completed, {} preempted | server-side tpot ms p50 {:.1} p95 {:.1}",
@@ -605,7 +657,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 );
             }
         }
-        report
+        (report, records)
     };
 
     println!(
@@ -658,7 +710,119 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     }
     report.write(&out_path)?;
     println!("wrote {}", out_path.display());
+    if let Some(p) = args.flags.get("out-jsonl") {
+        let p = std::path::PathBuf::from(p);
+        loadgen::write_jsonl(&records, &p)?;
+        println!("wrote {} per-request records to {}", records.len(), p.display());
+    }
     Ok(())
+}
+
+/// `repro obs-check` — prove the observability surfaces are well-formed:
+/// the Prometheus exposition parses and agrees with the JSON snapshot,
+/// and trace documents (live `/v1/trace/latest` or a `--trace-out` file)
+/// validate as Chrome trace-event JSON. Used by the CI smoke lane.
+fn cmd_obs_check(args: &Args) -> Result<()> {
+    use pquant::obs::trace::validate_chrome_json;
+    use pquant::util::json::Json;
+    let mut did_anything = false;
+    if let Some(path) = args.flags.get("trace") {
+        did_anything = true;
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(text.trim()).with_context(|| format!("{path}: invalid JSON"))?;
+        let sm = validate_chrome_json(&j).map_err(|e| anyhow!("{path}: {e}"))?;
+        if sm.terminals == 0 {
+            bail!("{path}: valid chrome trace but no terminal events (no request completed?)");
+        }
+        println!("{path}: valid chrome trace ({} events, {} terminals)", sm.events, sm.terminals);
+    }
+    if let Some(addr) = args.flags.get("http") {
+        did_anything = true;
+        // JSON snapshot first, Prometheus second: counters only grow, so
+        // every cross-checked Prometheus value must be >= its JSON twin.
+        let (code, body) = http_get(addr, "/v1/metrics", None)?;
+        if code != 200 {
+            bail!("GET /v1/metrics returned {code}");
+        }
+        let j = Json::parse(body.trim()).context("JSON metrics response")?;
+        let (code, text) = http_get(addr, "/v1/metrics?format=prometheus", Some("text/plain"))?;
+        if code != 200 {
+            bail!("GET /v1/metrics?format=prometheus returned {code}");
+        }
+        let samples =
+            pquant::obs::prom::parse_text(&text).map_err(|e| anyhow!("prometheus parse: {e}"))?;
+        let mut checked = 0usize;
+        if let Json::Obj(per_model) = &j {
+            for (name, m) in per_model.iter() {
+                if name == "http" {
+                    continue;
+                }
+                let Some(jv) = m.opt("completed").and_then(|v| v.as_f64().ok()) else { continue };
+                let pv = samples
+                    .iter()
+                    .find(|smp| {
+                        smp.name == "pquant_requests_completed_total"
+                            && smp.label("model") == Some(name.as_str())
+                    })
+                    .map(|smp| smp.value)
+                    .ok_or_else(|| {
+                        anyhow!("prometheus exposition missing requests_completed_total for {name}")
+                    })?;
+                if pv < jv {
+                    bail!("completed count for {name} went backwards: json {jv}, prometheus {pv}");
+                }
+                checked += 1;
+            }
+        }
+        if checked == 0 {
+            bail!("no engines found to cross-check in the /v1/metrics response");
+        }
+        println!(
+            "{addr}: metrics round-trip ok ({} prometheus samples, {checked} engines cross-checked)",
+            samples.len()
+        );
+        let (code, body) = http_get(addr, "/v1/trace/latest", None)?;
+        if code == 200 {
+            let j = Json::parse(body.trim()).context("trace/latest response")?;
+            let sm = validate_chrome_json(&j).map_err(|e| anyhow!("trace/latest: {e}"))?;
+            println!("{addr}: trace/latest valid ({} events, {} terminals)", sm.events, sm.terminals);
+        } else {
+            println!("{addr}: trace/latest -> {code} (tracing disabled or nothing completed yet)");
+        }
+    }
+    if !did_anything {
+        bail!("obs-check needs --http ADDR and/or --trace PATH\n{USAGE}");
+    }
+    Ok(())
+}
+
+/// Minimal blocking GET returning (status, body). Headers are discarded.
+fn http_get(addr: &str, path: &str, accept: Option<&str>) -> Result<(u16, String)> {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let accept_hdr = accept.map(|a| format!("Accept: {a}\r\n")).unwrap_or_default();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\n{accept_hdr}Connection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body)?;
+    Ok((status, body))
 }
 
 fn cmd_export(args: &Args) -> Result<()> {
@@ -671,12 +835,14 @@ fn cmd_export(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!("usage: repro export <config> <out.pqm>"))?;
     let (model, bpe) = if let Some(seed) = args.opt_flag::<u64>("random")? {
-        // Toolchain-free path: pack a random model of a paper-scale config
-        // (bench/demo workloads where no trained checkpoint exists).
-        let cfg = pquant::config::paper_configs()
-            .into_iter()
+        // Toolchain-free path: pack a random model of a known config
+        // (bench/demo/CI workloads where no trained checkpoint exists).
+        let cfg = std::iter::once(pquant::config::smoke_config())
+            .chain(pquant::config::paper_configs())
             .find(|c| &c.name == config)
-            .ok_or_else(|| anyhow!("--random needs a paper config name (e.g. paper-300M-pquant)"))?;
+            .ok_or_else(|| {
+                anyhow!("--random needs a known config name (\"smoke\" or e.g. paper-300M-pquant)")
+            })?;
         (pquant::infer::PackedModel::random(&cfg, seed), None)
     } else {
         let art = pquant::runtime::load_artifact(config)

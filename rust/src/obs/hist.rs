@@ -1,0 +1,220 @@
+//! Lock-free log-linear histograms for hot-path latency recording.
+//!
+//! An HdrHistogram-style layout: values are scaled to fixed-point units
+//! (1/1024 of the caller's unit, so sub-millisecond latencies keep
+//! precision), bucketed linearly below `SUB` units and log-linearly above
+//! — `SUB` sub-buckets per power-of-two octave. Recording is three relaxed
+//! atomic adds (bucket, count, sum): no lock, no allocation, mergeable
+//! across histograms with identical (compile-time) geometry.
+//!
+//! Quantiles are nearest-rank over the bucket counts, reported as the
+//! bucket midpoint; the relative error is bounded by the bucket width,
+//! `1/SUB` of the value (see `REL_ERROR`), versus an exact sort of the
+//! same samples. Memory is a fixed `N_BUCKETS * 8` bytes (~15 KiB) per
+//! histogram regardless of sample count — unlike the mutexed 4096-sample
+//! rings this replaces, nothing is resampled away and no scrape sorts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-bucket count per octave.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave; also the linear-region width in units.
+const SUB: usize = 1 << SUB_BITS;
+/// Linear region + one octave of `SUB` buckets per remaining exponent.
+const N_BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+/// Fixed-point scale: recorded values are quantized to 1/SCALE units.
+const SCALE: f64 = 1024.0;
+
+/// Worst-case relative quantile error versus an exact nearest-rank sort:
+/// a sample lies anywhere in its bucket, the midpoint is reported, and
+/// buckets are at most `value/SUB` wide. (Values under `SUB/SCALE` units
+/// add an absolute quantization error of at most `1.5/SCALE`.)
+pub const REL_ERROR: f64 = 1.0 / SUB as f64;
+
+/// Lock-free log-bucketed histogram. All methods take `&self`; recording
+/// is wait-free and allocation-free.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Sum of recorded values in fixed-point units (1/SCALE).
+    sum_units: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_units: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a fixed-point value. Total order: linear below
+    /// `SUB`, then `SUB` equal sub-buckets per power-of-two octave.
+    fn index(u: u64) -> usize {
+        if u < SUB as u64 {
+            u as usize
+        } else {
+            let e = 63 - u.leading_zeros(); // u in [2^e, 2^{e+1}), e >= SUB_BITS
+            let sub = ((u >> (e - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+            (e - SUB_BITS + 1) as usize * SUB + sub
+        }
+    }
+
+    /// Midpoint of bucket `idx`, back in caller units.
+    fn value_of(idx: usize) -> f64 {
+        let mid = if idx < SUB {
+            idx as f64 + 0.5
+        } else {
+            let shift = (idx / SUB - 1) as u32;
+            let lo = (SUB as u64 + (idx % SUB) as u64) << shift;
+            lo as f64 + (1u64 << shift) as f64 / 2.0
+        };
+        mid / SCALE
+    }
+
+    /// Record one value (negative / non-finite values clamp to zero).
+    /// Three relaxed atomic adds: safe from any thread, never allocates.
+    pub fn record(&self, v: f64) {
+        let u = if v.is_finite() { (v * SCALE).round().max(0.0) as u64 } else { 0 };
+        self.buckets[Self::index(u)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_units.fetch_add(u, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_units.load(Ordering::Relaxed) as f64 / SCALE
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Nearest-rank quantile (`q` in percent, e.g. 50/95/99): the midpoint
+    /// of the bucket holding the `ceil(q*n/100)`-th smallest sample. Walks
+    /// at most `N_BUCKETS` counters; nothing is sorted. Empty => 0.
+    pub fn quantile(&self, q: usize) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((n as u128 * q as u128 + 99) / 100).max(1) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum = cum.saturating_add(b.load(Ordering::Relaxed));
+            if cum >= rank {
+                return Self::value_of(i);
+            }
+        }
+        Self::value_of(N_BUCKETS - 1)
+    }
+
+    /// Add every bucket of `other` into `self` (same compile-time
+    /// geometry, so the merge is exact: bucket-wise counter adds).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = b.load(Ordering::Relaxed);
+            if v > 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_units.fetch_add(other.sum_units.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Reset all counters to zero (scrape-and-reset style consumers).
+    pub fn clear(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_units.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_value_invert_within_bucket_width() {
+        // Every power-of-two boundary and neighbors must map to a bucket
+        // whose midpoint is within one bucket width of the raw value.
+        for e in 0..63u32 {
+            for delta in [0i64, 1, -1, 7] {
+                let u = (1i64.checked_shl(e).unwrap_or(i64::MAX) + delta).max(0) as u64;
+                let idx = Histogram::index(u);
+                assert!(idx < N_BUCKETS, "u={u} idx={idx}");
+                let mid = Histogram::value_of(idx) * SCALE;
+                let width = if u < SUB as u64 {
+                    1.0
+                } else {
+                    (u as f64 / SUB as f64).max(1.0)
+                };
+                assert!(
+                    (mid - u as f64).abs() <= width,
+                    "u={u} idx={idx} mid={mid} width={width}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_indices_are_monotone() {
+        let mut last = 0usize;
+        let mut u = 0u64;
+        while u < 1 << 40 {
+            let idx = Histogram::index(u);
+            assert!(idx >= last, "index must not decrease: u={u}");
+            last = idx;
+            u = u * 2 + 1;
+        }
+    }
+
+    #[test]
+    fn quantiles_of_small_exact_sets() {
+        let h = Histogram::new();
+        for v in 1..=10 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.count(), 10);
+        // Nearest-rank: p50 of 1..=10 is the 5th sample, p95/p99 the 10th;
+        // the estimate is the bucket midpoint, within REL_ERROR relative.
+        assert!((h.quantile(50) - 5.0).abs() <= 5.0 * REL_ERROR, "p50={}", h.quantile(50));
+        assert!((h.quantile(95) - 10.0).abs() <= 10.0 * REL_ERROR);
+        assert!((h.quantile(99) - 10.0).abs() <= 10.0 * REL_ERROR);
+        assert!((h.mean() - 5.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn merge_is_bucket_exact() {
+        let (a, b, both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        let mut x = 0.37f64;
+        for i in 0..500 {
+            x = (x * 1103.515245 + 1.2345) % 997.0;
+            if i % 2 == 0 { &a } else { &b }.record(x);
+            both.record(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum_units.load(Ordering::Relaxed), both.sum_units.load(Ordering::Relaxed));
+        for q in [1, 10, 50, 90, 95, 99, 100] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Zero-dependency observability core: lock-free histograms, a named
+//! counter/gauge registry, per-request structured traces, and Prometheus
+//! text exposition.
+//!
+//! Three pillars, threaded through the serving stack:
+//!
+//! - [`hist::Histogram`] — log-bucketed, atomic, mergeable latency
+//!   histograms. These replace the mutexed sample rings `ServeMetrics`
+//!   used to keep: hot-path recording is three relaxed atomic adds and
+//!   scrapes walk bucket counters instead of sorting 4096 samples.
+//! - [`trace`] — opt-in per-request span recording (submit → queue →
+//!   admission/KV → prefill chunks → fused batch steps → spec rounds →
+//!   terminal) plus a pool-level KV event track, exportable as Chrome
+//!   trace-event JSON (Perfetto-loadable) via `repro serve --trace-out`
+//!   or `GET /v1/trace/<id>`. Disabled tracing is a skipped `if let`:
+//!   the steady-state decode loop stays allocation-free.
+//! - [`prom`] — Prometheus text exposition with family grouping, served
+//!   by `GET /v1/metrics` under content negotiation (JSON stays the
+//!   default), plus the minimal parser `repro obs-check` and the tests
+//!   use to prove the exposition round-trips.
+//!
+//! The [`Registry`] ties named counters/gauges from anywhere in the
+//! stack (e.g. the `infer::TimingMode` per-phase decode timers) into the
+//! same exposition. Handles are `Arc`s resolved once at setup;
+//! recording through a handle never takes the registry lock.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use trace::{KvEventKind, RequestTrace, Span, SpanKind, TraceBuilder, TraceShared};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing counter. Recording is a relaxed atomic add.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as bits).
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0.0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    metric: Metric,
+}
+
+/// Named metric registry. Registration (get-or-create by name + label
+/// set) takes a short lock and may allocate; the returned `Arc` handles
+/// are lock-free to record through — resolve them once at setup, not on
+/// the hot path. Scrapes iterate the entries under the same lock.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, &[], help)
+    }
+
+    pub fn counter_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+    ) -> Arc<Counter> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = find(&entries, name, labels) {
+            if let Metric::Counter(c) = &e.metric {
+                return Arc::clone(c);
+            }
+            debug_assert!(false, "metric {name} re-registered with a different type");
+        }
+        let c = Arc::new(Counter::default());
+        entries.push(entry(name, labels, help, Metric::Counter(Arc::clone(&c))));
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, &[], help)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Gauge> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = find(&entries, name, labels) {
+            if let Metric::Gauge(g) = &e.metric {
+                return Arc::clone(g);
+            }
+            debug_assert!(false, "metric {name} re-registered with a different type");
+        }
+        let g = Arc::new(Gauge::default());
+        entries.push(entry(name, labels, help, Metric::Gauge(Arc::clone(&g))));
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_with(name, &[], help)
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+    ) -> Arc<Histogram> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = find(&entries, name, labels) {
+            if let Metric::Histogram(h) = &e.metric {
+                return Arc::clone(h);
+            }
+            debug_assert!(false, "metric {name} re-registered with a different type");
+        }
+        let h = Arc::new(Histogram::new());
+        entries.push(entry(name, labels, help, Metric::Histogram(Arc::clone(&h))));
+        h
+    }
+
+    /// Counters and gauges as (display name, value) pairs for the JSON
+    /// endpoint; labelled entries render as `name{k="v",..}`.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .iter()
+            .filter_map(|e| {
+                let v = match &e.metric {
+                    Metric::Counter(c) => c.get() as f64,
+                    Metric::Gauge(g) => g.get(),
+                    Metric::Histogram(_) => return None,
+                };
+                Some((display_name(e), v))
+            })
+            .collect()
+    }
+
+    /// Add every entry to a Prometheus exposition, with `extra` labels
+    /// (e.g. the owning engine's `model`) merged onto each sample.
+    pub fn render_into(&self, ex: &mut prom::Exposition, extra: &[(&str, &str)]) {
+        let entries = self.entries.lock().unwrap();
+        for e in entries.iter() {
+            let mut labels: Vec<(&str, &str)> = extra.to_vec();
+            for (k, v) in &e.labels {
+                labels.push((k.as_str(), v.as_str()));
+            }
+            match &e.metric {
+                Metric::Counter(c) => ex.counter(&e.name, &e.help, &labels, c.get() as f64),
+                Metric::Gauge(g) => ex.gauge(&e.name, &e.help, &labels, g.get()),
+                Metric::Histogram(h) => ex.summary(
+                    &e.name,
+                    &e.help,
+                    &labels,
+                    &[
+                        ("0.5", h.quantile(50)),
+                        ("0.95", h.quantile(95)),
+                        ("0.99", h.quantile(99)),
+                    ],
+                    h.sum(),
+                    h.count() as f64,
+                ),
+            }
+        }
+    }
+}
+
+fn find<'a>(entries: &'a [Entry], name: &str, labels: &[(&str, &str)]) -> Option<&'a Entry> {
+    entries.iter().find(|e| {
+        e.name == name
+            && e.labels.len() == labels.len()
+            && e.labels.iter().zip(labels).all(|((k, v), (lk, lv))| k == lk && v == lv)
+    })
+}
+
+fn entry(name: &str, labels: &[(&str, &str)], help: &str, metric: Metric) -> Entry {
+    Entry {
+        name: name.to_string(),
+        labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        help: help.to_string(),
+        metric,
+    }
+}
+
+fn display_name(e: &Entry) -> String {
+    if e.labels.is_empty() {
+        return e.name.clone();
+    }
+    let inner: Vec<String> =
+        e.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{}{{{}}}", e.name, inner.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_idempotent_and_snapshots() {
+        let reg = Registry::new();
+        let a = reg.counter("reqs_total", "requests");
+        let b = reg.counter("reqs_total", "requests");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.add(3);
+        b.inc();
+        let g = reg.gauge("depth", "queue depth");
+        g.set(2.5);
+        let labelled =
+            reg.counter_with("phase_us_total", &[("phase", "attn_core")], "per-phase time");
+        labelled.add(11);
+        let snap = reg.snapshot();
+        assert!(snap.contains(&("reqs_total".to_string(), 4.0)));
+        assert!(snap.contains(&("depth".to_string(), 2.5)));
+        assert!(snap.contains(&("phase_us_total{phase=\"attn_core\"}".to_string(), 11.0)));
+        // Same name, different labels: a distinct counter.
+        let other =
+            reg.counter_with("phase_us_total", &[("phase", "router")], "per-phase time");
+        assert!(!Arc::ptr_eq(&labelled, &other));
+    }
+
+    #[test]
+    fn registry_renders_prometheus() {
+        let reg = Registry::new();
+        reg.counter("steps_total", "steps").add(9);
+        reg.histogram("lat_ms", "latency").record(4.0);
+        let mut ex = prom::Exposition::new("pquant_");
+        reg.render_into(&mut ex, &[("model", "serve")]);
+        let text = ex.render();
+        assert!(text.contains("pquant_steps_total{model=\"serve\"} 9"));
+        assert!(text.contains("# TYPE pquant_lat_ms summary"));
+        assert!(text.contains("pquant_lat_ms_count{model=\"serve\"} 1"));
+        assert!(prom::parse_text(&text).is_ok());
+    }
+}

@@ -1,0 +1,350 @@
+//! Prometheus text exposition (version 0.0.4) — renderer and a minimal
+//! parser.
+//!
+//! The renderer groups samples into metric families so `# HELP` / `# TYPE`
+//! headers appear exactly once per family even when several engines
+//! contribute samples (distinguished by a `model` label). Histograms are
+//! exposed as `summary` families: pre-computed `quantile`-labelled values
+//! plus `_sum` / `_count`, matching how the engine already reports
+//! p50/p95/p99.
+//!
+//! The parser is deliberately small — names, label sets, values — just
+//! enough for `repro obs-check` and the tests to prove the exposition
+//! round-trips: scrape → parse → the same counters the JSON endpoint
+//! reports.
+
+use std::fmt::Write as _;
+
+/// Prometheus metric family types this exposition emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl MetricKind {
+    fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Summary => "summary",
+        }
+    }
+}
+
+/// One line-to-be: an optional family suffix (`_sum`, `_count`),
+/// pre-rendered label block, and the value.
+struct SampleLine {
+    suffix: &'static str,
+    labels: String,
+    value: f64,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    lines: Vec<SampleLine>,
+}
+
+/// Accumulates samples across sources, then renders one valid exposition.
+pub struct Exposition {
+    prefix: String,
+    families: Vec<Family>,
+}
+
+impl Exposition {
+    /// `prefix` is prepended to every family name (e.g. `"pquant_"`).
+    pub fn new(prefix: &str) -> Exposition {
+        Exposition { prefix: prefix.to_string(), families: Vec::new() }
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: MetricKind) -> &mut Family {
+        let full = format!("{}{}", self.prefix, sanitize_name(name));
+        if let Some(i) = self.families.iter().position(|f| f.name == full) {
+            debug_assert_eq!(self.families[i].kind, kind, "family {full} re-added as {kind:?}");
+            return &mut self.families[i];
+        }
+        self.families.push(Family { name: full, help: help.to_string(), kind, lines: Vec::new() });
+        self.families.last_mut().unwrap()
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let labels = fmt_labels(labels);
+        self.family(name, help, MetricKind::Counter).lines.push(SampleLine {
+            suffix: "",
+            labels,
+            value,
+        });
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let labels = fmt_labels(labels);
+        self.family(name, help, MetricKind::Gauge).lines.push(SampleLine {
+            suffix: "",
+            labels,
+            value,
+        });
+    }
+
+    /// A summary family: `quantiles` are (`quantile` label value, value)
+    /// pairs, plus the `_sum` / `_count` series.
+    pub fn summary(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        quantiles: &[(&str, f64)],
+        sum: f64,
+        count: f64,
+    ) {
+        let base = fmt_labels(labels);
+        let fam = self.family(name, help, MetricKind::Summary);
+        for &(q, v) in quantiles {
+            let mut ql: Vec<(&str, &str)> = labels.to_vec();
+            ql.push(("quantile", q));
+            fam.lines.push(SampleLine { suffix: "", labels: fmt_labels(&ql), value: v });
+        }
+        fam.lines.push(SampleLine { suffix: "_sum", labels: base.clone(), value: sum });
+        fam.lines.push(SampleLine { suffix: "_count", labels: base, value: count });
+    }
+
+    /// Render the full exposition: one HELP/TYPE header per family, then
+    /// its samples. Ends with a trailing newline as the format requires.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            let _ = writeln!(out, "# HELP {} {}", f.name, escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind.name());
+            for l in &f.lines {
+                let _ = writeln!(out, "{}{}{} {}", f.name, l.suffix, l.labels, fmt_value(l.value));
+            }
+        }
+        out
+    }
+}
+
+/// Replace characters outside `[a-zA-Z0-9_:]` and guard a leading digit.
+pub fn sanitize_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{}=\"{}\"", sanitize_name(k), escape_label(v));
+    }
+    out.push('}');
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Minimal Prometheus text-format parser: returns every sample line,
+/// skipping comments and blanks, erroring on anything structurally
+/// malformed. Enough to prove the exposition round-trips.
+pub fn parse_text(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP/TYPE headers and plain comments
+        }
+        let (name, rest) = match line.find('{') {
+            Some(brace) => {
+                let name = line[..brace].trim();
+                let close = line[brace..]
+                    .find('}')
+                    .map(|i| brace + i)
+                    .ok_or_else(|| format!("line {}: unterminated label block", ln + 1))?;
+                let labels = parse_labels(&line[brace + 1..close])
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                let value_part = line[close + 1..].trim();
+                (name, Some((labels, value_part)))
+            }
+            None => (line, None),
+        };
+        let (labels, value_str) = match rest {
+            Some((labels, v)) => (labels, v.to_string()),
+            None => {
+                let mut it = name.split_whitespace();
+                let n = it.next().ok_or_else(|| format!("line {}: empty sample", ln + 1))?;
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("line {}: sample without value", ln + 1))?;
+                if !n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':') {
+                    return Err(format!("line {}: bad metric name {n:?}", ln + 1));
+                }
+                out.push(Sample {
+                    name: n.to_string(),
+                    labels: Vec::new(),
+                    value: v
+                        .parse::<f64>()
+                        .map_err(|e| format!("line {}: bad value {v:?}: {e}", ln + 1))?,
+                });
+                continue;
+            }
+        };
+        // Labelled form: `name` is clean, value may carry a timestamp we
+        // ignore (first whitespace-separated token is the value).
+        let v = value_str
+            .split_whitespace()
+            .next()
+            .ok_or_else(|| format!("line {}: sample without value", ln + 1))?;
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {}: bad metric name {name:?}", ln + 1));
+        }
+        out.push(Sample {
+            name: name.to_string(),
+            labels,
+            value: v
+                .parse::<f64>()
+                .map_err(|e| format!("line {}: bad value {v:?}: {e}", ln + 1))?,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut chars = body.chars().peekable();
+    loop {
+        while matches!(chars.peek(), Some(c) if c.is_whitespace() || *c == ',') {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            return Ok(labels);
+        }
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label {key:?}: expected opening quote"));
+        }
+        let mut val = String::new();
+        loop {
+            match chars.next() {
+                Some('\\') => match chars.next() {
+                    Some('n') => val.push('\n'),
+                    Some(c) => val.push(c),
+                    None => return Err("dangling escape in label value".into()),
+                },
+                Some('"') => break,
+                Some(c) => val.push(c),
+                None => return Err(format!("label {key:?}: unterminated value")),
+            }
+        }
+        labels.push((key.trim().to_string(), val));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_groups_families_and_parses_back() {
+        let mut ex = Exposition::new("pquant_");
+        ex.counter("requests_completed_total", "done", &[("model", "a")], 3.0);
+        ex.counter("requests_completed_total", "done", &[("model", "b")], 5.0);
+        ex.gauge("kv_in_use_blocks", "blocks", &[("model", "a")], 7.0);
+        ex.summary(
+            "ttft_ms",
+            "time to first token",
+            &[("model", "a")],
+            &[("0.5", 1.25), ("0.95", 4.0), ("0.99", 9.5)],
+            100.5,
+            42.0,
+        );
+        let text = ex.render();
+        // Exactly one TYPE header per family, even with two models.
+        assert_eq!(text.matches("# TYPE pquant_requests_completed_total counter").count(), 1);
+        assert!(text.contains("pquant_ttft_ms{model=\"a\",quantile=\"0.95\"} 4"));
+        assert!(text.contains("pquant_ttft_ms_count{model=\"a\"} 42"));
+        let samples = parse_text(&text).unwrap();
+        let get = |name: &str, model: &str| {
+            samples
+                .iter()
+                .find(|smp| smp.name == name && smp.label("model") == Some(model))
+                .map(|smp| smp.value)
+        };
+        assert_eq!(get("pquant_requests_completed_total", "a"), Some(3.0));
+        assert_eq!(get("pquant_requests_completed_total", "b"), Some(5.0));
+        assert_eq!(get("pquant_kv_in_use_blocks", "a"), Some(7.0));
+        assert_eq!(get("pquant_ttft_ms_sum", "a"), Some(100.5));
+        let q99 = samples
+            .iter()
+            .find(|smp| smp.name == "pquant_ttft_ms" && smp.label("quantile") == Some("0.99"))
+            .unwrap();
+        assert_eq!(q99.value, 9.5);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_text("no_value_here").is_err());
+        assert!(parse_text("bad{unterminated=\"x} 1").is_err());
+        assert!(parse_text("ok 1\nbad-name 2").is_err());
+        assert!(parse_text("x{a=\"1\"} notanumber").is_err());
+    }
+
+    #[test]
+    fn sanitize_names_and_labels() {
+        assert_eq!(sanitize_name("a.b-c"), "a_b_c");
+        assert_eq!(sanitize_name("7up"), "_7up");
+        let mut ex = Exposition::new("");
+        ex.counter("n", "h", &[("k", "quote\"back\\slash\nnl")], 1.0);
+        let text = ex.render();
+        let parsed = parse_text(&text).unwrap();
+        assert_eq!(parsed[0].label("k"), Some("quote\"back\\slash\nnl"));
+    }
+}

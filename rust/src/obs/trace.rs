@@ -1,0 +1,495 @@
+//! Per-request structured traces and Chrome trace-event export.
+//!
+//! When tracing is enabled (`EngineOptions::trace` / `repro serve
+//! --trace[-out]`), every submitted request carries a `TraceBuilder`
+//! through the engine: submit, queue wait, KV reservation, each prefill
+//! chunk, each fused batch step it rode (with rows/occupancy), spec
+//! verify rounds (proposed/accepted), preempt/resume, and exactly one
+//! terminal event. Completed traces land in a fixed-size ring on
+//! `TraceShared`; pool-level KV events (copy-on-write, spill write,
+//! fault-back, eviction) that have no single owning request are recorded
+//! on a separate bounded ring and rendered as their own track.
+//!
+//! Everything exports as Chrome trace-event JSON (the object form:
+//! `{"traceEvents": [...]}`), loadable in Perfetto / `chrome://tracing`:
+//! one `tid` per request plus `tid` 0 for the KV pool track. Timestamps
+//! are microseconds relative to the engine-start epoch (the absolute
+//! epoch is carried in the `epochUnixUs` top-level key).
+//!
+//! With tracing disabled nothing here is ever constructed: the engine's
+//! per-request trace handle is `None` and every hook is a skipped
+//! `if let` — the steady-state decode loop stays allocation-free
+//! (asserted by `tests/alloc_free.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Per-request span cap: beyond this, spans are counted in
+/// `RequestTrace::dropped` instead of stored (terminal events always fit).
+pub const MAX_SPANS: usize = 512;
+/// Completed traces kept (FIFO eviction; evictions counted).
+pub const TRACE_RING: usize = 256;
+/// Pool-level KV events kept (FIFO eviction).
+pub const KV_EVENT_RING: usize = 4096;
+
+/// What a span marks. Durationful spans (`Queue`, `PrefillChunk`,
+/// `BatchStep`, `SpecVerify`) carry t0 < t1; the rest are instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request entered `Engine::submit`. a = prompt len, b = n_new.
+    Submit,
+    /// Submit to worker admission. a = b = 0.
+    Queue,
+    /// KV reservation attached at admission. a = worst-case positions
+    /// reserved, b = positions covered by a shared prefix (skipped).
+    KvReserve,
+    /// One prefill chunk fed in a fused step. a = start, b = end.
+    PrefillChunk,
+    /// One fused batch step the request rode. a = rows, b = sequences.
+    BatchStep,
+    /// One speculative verify round. a = proposed, b = accepted.
+    SpecVerify,
+    /// Preempted: KV freed, parked for deterministic recompute.
+    Preempt,
+    /// Re-admitted after preemption.
+    Resume,
+    /// Exactly one per trace. a = finish-reason code
+    /// (0 stop, 1 length, 2 cancelled, 3 failed), b = tokens emitted.
+    Terminal,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Queue => "queue",
+            SpanKind::KvReserve => "kv_reserve",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::BatchStep => "batch_step",
+            SpanKind::SpecVerify => "spec_verify",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Resume => "resume",
+            SpanKind::Terminal => "terminal",
+        }
+    }
+
+    /// Names for the two payload args in the Chrome export.
+    fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            SpanKind::Submit => ("prompt_len", "n_new"),
+            SpanKind::Queue => ("a", "b"),
+            SpanKind::KvReserve => ("reserved_positions", "cached_positions"),
+            SpanKind::PrefillChunk => ("start", "end"),
+            SpanKind::BatchStep => ("rows", "seqs"),
+            SpanKind::SpecVerify => ("proposed", "accepted"),
+            SpanKind::Preempt | SpanKind::Resume => ("a", "b"),
+            SpanKind::Terminal => ("reason_code", "tokens"),
+        }
+    }
+}
+
+/// Pool-level KV events with no single owning request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvEventKind {
+    /// Copy-on-write divergence from a shared page.
+    CowCopy,
+    /// Shared-prefix entry shed to the disk spill tier.
+    SpillWrite,
+    /// Spilled entry faulted back on prompt recurrence.
+    SpillFault,
+    /// Fault-back failed (degrades to a recompute miss).
+    SpillFaultFail,
+    /// Blocks evicted from the prefix-share map.
+    Evict,
+}
+
+impl KvEventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvEventKind::CowCopy => "kv_cow_copy",
+            KvEventKind::SpillWrite => "kv_spill_write",
+            KvEventKind::SpillFault => "kv_spill_fault",
+            KvEventKind::SpillFaultFail => "kv_spill_fault_fail",
+            KvEventKind::Evict => "kv_evict",
+        }
+    }
+}
+
+/// One recorded span. Times are µs since the `TraceShared` epoch;
+/// instants have `t0_us == t1_us`.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// A completed request's spans, in recording order.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub spans: Vec<Span>,
+    /// Spans discarded past `MAX_SPANS` (the terminal is never dropped).
+    pub dropped: usize,
+}
+
+impl RequestTrace {
+    pub fn terminal(&self) -> Option<&Span> {
+        self.spans.iter().find(|sp| sp.kind == SpanKind::Terminal)
+    }
+
+    /// This request alone as a Chrome trace-event JSON document.
+    pub fn to_chrome_json(&self, epoch_unix_us: u64) -> Json {
+        chrome_trace_json(std::slice::from_ref(self), &[], epoch_unix_us)
+    }
+}
+
+/// One pool-level event on the KV track.
+#[derive(Clone, Copy, Debug)]
+pub struct KvEvent {
+    pub t_us: u64,
+    pub kind: KvEventKind,
+    /// Blocks involved (copies made, blocks spilled/faulted/evicted).
+    pub n: u64,
+}
+
+/// Shared trace state: the epoch clock, the completed-trace ring, and the
+/// KV event ring. One per engine; cloned `Arc`s go to workers, the HTTP
+/// front end, and (for KV events) the block pools.
+pub struct TraceShared {
+    epoch: Instant,
+    epoch_unix_us: u64,
+    ring: Mutex<VecDeque<RequestTrace>>,
+    kv_events: Mutex<VecDeque<KvEvent>>,
+    dropped_traces: AtomicU64,
+}
+
+impl TraceShared {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<TraceShared> {
+        Arc::new(TraceShared {
+            epoch: Instant::now(),
+            epoch_unix_us: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0),
+            ring: Mutex::new(VecDeque::with_capacity(TRACE_RING)),
+            kv_events: Mutex::new(VecDeque::with_capacity(256)),
+            dropped_traces: AtomicU64::new(0),
+        })
+    }
+
+    /// Microseconds since the engine-start epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn epoch_unix_us(&self) -> u64 {
+        self.epoch_unix_us
+    }
+
+    /// Start recording a request. The builder travels with the request
+    /// through admission, decode, and preemption; `TraceBuilder::finish`
+    /// lands it back in the ring here.
+    pub fn begin(self: &Arc<Self>, id: u64) -> Box<TraceBuilder> {
+        Box::new(TraceBuilder {
+            id,
+            t_begin_us: self.now_us(),
+            spans: Vec::with_capacity(32),
+            dropped: 0,
+            shared: Arc::clone(self),
+        })
+    }
+
+    /// Record a pool-level KV event (no-op cost is borne by the caller's
+    /// `if let Some(..)` — pools without an attached recorder never call).
+    pub fn kv_event(&self, kind: KvEventKind, n: u64) {
+        let ev = KvEvent { t_us: self.now_us(), kind, n };
+        let mut ring = self.kv_events.lock().unwrap();
+        if ring.len() >= KV_EVENT_RING {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    fn complete(&self, trace: RequestTrace) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= TRACE_RING {
+            ring.pop_front();
+            self.dropped_traces.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(trace);
+    }
+
+    /// Completed traces evicted from the ring so far.
+    pub fn dropped_traces(&self) -> u64 {
+        self.dropped_traces.load(Ordering::Relaxed)
+    }
+
+    /// Completed traces currently held in the ring.
+    pub fn completed_count(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Snapshot of all completed traces, oldest first.
+    pub fn completed(&self) -> Vec<RequestTrace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Snapshot of the KV event ring, oldest first.
+    pub fn kv_events(&self) -> Vec<KvEvent> {
+        self.kv_events.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// A completed request's trace by id.
+    pub fn find(&self, id: u64) -> Option<RequestTrace> {
+        self.ring.lock().unwrap().iter().find(|t| t.id == id).cloned()
+    }
+
+    /// The most recently completed trace.
+    pub fn latest(&self) -> Option<RequestTrace> {
+        self.ring.lock().unwrap().back().cloned()
+    }
+
+    /// Everything (all completed traces + the KV track) as one Chrome
+    /// trace-event JSON document.
+    pub fn to_chrome_json(&self) -> Json {
+        let traces = self.completed();
+        let kv = self.kv_events();
+        chrome_trace_json(&traces, &kv, self.epoch_unix_us)
+    }
+}
+
+/// Per-request span recorder. Boxed so moving it with the request through
+/// channels stays cheap; methods never lock `TraceShared`.
+pub struct TraceBuilder {
+    id: u64,
+    t_begin_us: u64,
+    spans: Vec<Span>,
+    dropped: usize,
+    shared: Arc<TraceShared>,
+}
+
+impl TraceBuilder {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// µs since the engine epoch (for `span_since` starts).
+    pub fn now_us(&self) -> u64 {
+        self.shared.now_us()
+    }
+
+    /// When this builder was created (the submit timestamp).
+    pub fn begin_us(&self) -> u64 {
+        self.t_begin_us
+    }
+
+    fn push(&mut self, sp: Span) {
+        if self.spans.len() >= MAX_SPANS && sp.kind != SpanKind::Terminal {
+            self.dropped += 1;
+            return;
+        }
+        self.spans.push(sp);
+    }
+
+    /// Record an instant (t0 == t1 == now).
+    pub fn instant(&mut self, kind: SpanKind, a: u64, b: u64) {
+        let t = self.shared.now_us();
+        self.push(Span { kind, t0_us: t, t1_us: t, a, b });
+    }
+
+    /// Record a span that started at `t0_us` and ends now. Clamped so
+    /// timestamps stay monotone even across clock-read races.
+    pub fn span_since(&mut self, kind: SpanKind, t0_us: u64, a: u64, b: u64) {
+        let t1 = self.shared.now_us().max(t0_us);
+        self.push(Span { kind, t0_us, t1_us: t1, a, b });
+    }
+
+    /// Record the terminal event and land the trace in the shared ring.
+    /// Consumes the builder: a request gets exactly one terminal.
+    pub fn finish(mut self: Box<Self>, reason_code: u64, tokens: u64) {
+        self.instant(SpanKind::Terminal, reason_code, tokens);
+        let shared = Arc::clone(&self.shared);
+        shared.complete(RequestTrace { id: self.id, spans: self.spans, dropped: self.dropped });
+    }
+}
+
+/// Render traces + KV events as a Chrome trace-event JSON document
+/// (object form). `ts`/`dur` are µs; request spans ride `tid` = request
+/// id, pool-level KV events ride `tid` 0 ("kv-pool").
+pub fn chrome_trace_json(traces: &[RequestTrace], kv: &[KvEvent], epoch_unix_us: u64) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    events.push(obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(1.0)),
+        ("tid", num(0.0)),
+        ("args", obj(vec![("name", s("pquant-serve"))])),
+    ]));
+    events.push(obj(vec![
+        ("name", s("thread_name")),
+        ("ph", s("M")),
+        ("pid", num(1.0)),
+        ("tid", num(0.0)),
+        ("args", obj(vec![("name", s("kv-pool"))])),
+    ]));
+    for t in traces {
+        for sp in &t.spans {
+            let (an, bn) = sp.kind.arg_names();
+            let args = obj(vec![(an, num(sp.a as f64)), (bn, num(sp.b as f64))]);
+            let mut fields = vec![
+                ("name", s(sp.kind.name())),
+                ("pid", num(1.0)),
+                ("tid", num(t.id as f64)),
+                ("ts", num(sp.t0_us as f64)),
+                ("args", args),
+            ];
+            if sp.t1_us > sp.t0_us {
+                fields.push(("ph", s("X")));
+                fields.push(("dur", num((sp.t1_us - sp.t0_us) as f64)));
+            } else {
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t")));
+            }
+            events.push(obj(fields));
+        }
+    }
+    for ev in kv {
+        events.push(obj(vec![
+            ("name", s(ev.kind.name())),
+            ("ph", s("i")),
+            ("s", s("t")),
+            ("pid", num(1.0)),
+            ("tid", num(0.0)),
+            ("ts", num(ev.t_us as f64)),
+            ("args", obj(vec![("blocks", num(ev.n as f64))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("epochUnixUs", num(epoch_unix_us as f64)),
+    ])
+}
+
+/// What `validate_chrome_json` measured about a trace document.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ChromeSummary {
+    pub events: usize,
+    pub terminals: usize,
+}
+
+/// Structural validation of a Chrome trace-event JSON document: the
+/// object form with a `traceEvents` array, every event carrying
+/// name/ph/pid/tid (+ ts and, for "X", dur), and per-tid timestamps
+/// monotone non-decreasing. Shared by `repro obs-check` and the tests.
+pub fn validate_chrome_json(j: &Json) -> Result<ChromeSummary, String> {
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map_err(|_| "missing traceEvents array".to_string())?;
+    let mut last_ts: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
+    let mut summary = ChromeSummary::default();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(|n| n.as_str())
+            .map_err(|_| format!("event {i}: missing name"))?;
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .map_err(|_| format!("event {i} ({name}): missing ph"))?;
+        let tid = ev
+            .get("tid")
+            .and_then(|t| t.as_f64())
+            .map_err(|_| format!("event {i} ({name}): missing tid"))?;
+        if ph == "M" {
+            continue; // metadata events carry no timestamp
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .map_err(|_| format!("event {i} ({name}): missing ts"))?;
+        if ph == "X" {
+            ev.get("dur")
+                .and_then(|d| d.as_f64())
+                .map_err(|_| format!("event {i} ({name}): X without dur"))?;
+        }
+        let key = tid as u64;
+        if let Some(&prev) = last_ts.get(&key) {
+            if ts < prev {
+                return Err(format!(
+                    "event {i} ({name}): ts {ts} precedes {prev} on tid {key}"
+                ));
+            }
+        }
+        last_ts.insert(key, ts);
+        summary.events += 1;
+        if name == "terminal" {
+            summary.terminals += 1;
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_records_and_completes_into_ring() {
+        let shared = TraceShared::new();
+        let mut b = shared.begin(7);
+        b.instant(SpanKind::Submit, 3, 8);
+        let t0 = b.now_us();
+        b.span_since(SpanKind::Queue, t0, 0, 0);
+        b.finish(1, 8);
+        let tr = shared.find(7).expect("completed trace");
+        assert_eq!(tr.spans.len(), 3);
+        assert_eq!(tr.terminal().unwrap().a, 1);
+        assert!(shared.find(8).is_none());
+        assert_eq!(shared.latest().unwrap().id, 7);
+    }
+
+    #[test]
+    fn span_cap_drops_but_keeps_terminal() {
+        let shared = TraceShared::new();
+        let mut b = shared.begin(1);
+        for _ in 0..(MAX_SPANS + 10) {
+            b.instant(SpanKind::BatchStep, 1, 1);
+        }
+        b.finish(0, 0);
+        let tr = shared.latest().unwrap();
+        assert_eq!(tr.spans.len(), MAX_SPANS + 1);
+        assert_eq!(tr.dropped, 10);
+        assert_eq!(tr.spans.last().unwrap().kind, SpanKind::Terminal);
+    }
+
+    #[test]
+    fn chrome_export_validates() {
+        let shared = TraceShared::new();
+        for id in 1..=3u64 {
+            let mut b = shared.begin(id);
+            b.instant(SpanKind::Submit, 4, 4);
+            let t0 = b.now_us();
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            b.span_since(SpanKind::BatchStep, t0, 2, 2);
+            b.finish(0, 4);
+        }
+        shared.kv_event(KvEventKind::CowCopy, 2);
+        let j = shared.to_chrome_json();
+        let summary = validate_chrome_json(&j).expect("valid chrome trace");
+        assert_eq!(summary.terminals, 3);
+        assert!(summary.events >= 9);
+        // Round-trips through the hand-rolled JSON printer/parser.
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(validate_chrome_json(&reparsed).unwrap().terminals, 3);
+    }
+}

@@ -53,8 +53,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
+use crate::infer::{BatchKv, BlockTiming, KvCache, PackedModel, Scratch, SeqStep, TimingMode};
 use crate::kvcache::{Admitted, BlockPool, KvError, KvPoolOptions, KvPoolStats, PagedSeq, PrefixTag};
+use crate::obs::trace::{SpanKind, TraceBuilder, TraceShared};
+use crate::obs::{self, Histogram};
 use crate::util::rng::Rng;
 
 use super::spec::{self, SpecParams};
@@ -385,42 +387,35 @@ impl Percentiles {
     }
 
     /// Compute from a raw sample set (also used by the load generator's
-    /// client-side latency series).
+    /// client-side latency series). Nearest-rank: the q-th percentile is
+    /// the smallest sample with at least q% of the set at or below it,
+    /// i.e. sorted index `ceil(q·n/100) − 1`.
     pub fn of(samples: &[f64]) -> Percentiles {
         if samples.is_empty() {
             return Percentiles::default();
         }
         let mut s = samples.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let at = |q: usize| s[(s.len() * q / 100).min(s.len() - 1)];
+        let at = |q: usize| {
+            let rank = (q * s.len()).div_ceil(100);
+            s[rank.max(1) - 1]
+        };
         Percentiles { n: s.len(), p50: at(50), p95: at(95), p99: at(99) }
     }
-}
 
-/// Latency samples kept per series: a persistent engine must not grow
-/// metric storage without bound, so the ring holds the most recent window
-/// and percentile queries sort at most this many samples.
-const LATENCY_SAMPLES: usize = 4096;
-
-#[derive(Debug, Default)]
-struct SampleRing {
-    samples: Vec<f64>,
-    next: usize,
-}
-
-impl SampleRing {
-    fn push(&mut self, v: f64) {
-        if self.samples.len() < LATENCY_SAMPLES {
-            self.samples.push(v);
-        } else {
-            self.samples[self.next] = v;
+    /// The same three percentiles read from a lock-free histogram
+    /// (within [`obs::hist::REL_ERROR`] of the exact nearest-rank value).
+    pub fn of_histogram(h: &Histogram) -> Percentiles {
+        Percentiles {
+            n: h.count() as usize,
+            p50: h.quantile(50),
+            p95: h.quantile(95),
+            p99: h.quantile(99),
         }
-        self.next = (self.next + 1) % LATENCY_SAMPLES;
     }
 }
 
 /// Aggregate serving metrics, shared by all workers of one engine.
-#[derive(Debug, Default)]
 pub struct ServeMetrics {
     pub completed: AtomicUsize,
     pub cancelled: AtomicUsize,
@@ -457,12 +452,23 @@ pub struct ServeMetrics {
     /// a running mean (µs sum + count) for retry-after derivation.
     service_us: AtomicU64,
     service_n: AtomicUsize,
-    queue_wait_ms: Mutex<SampleRing>,
-    ttft_ms: Mutex<SampleRing>,
+    /// Submission → admission latency, in ms.
+    queue_wait_ms: Histogram,
+    /// Submission → first token, in ms.
+    ttft_ms: Histogram,
     /// Per-request mean inter-token latency (time from first to last
     /// token over tokens−1), recorded for requests that emitted ≥ 2.
-    tpot_ms: Mutex<SampleRing>,
-    batch_occ: Mutex<SampleRing>,
+    tpot_ms: Histogram,
+    /// Rows per fused batch step.
+    batch_occ: Histogram,
+    /// Engine start — the `uptime_ms` anchor.
+    started: Instant,
+    started_unix_ms: u64,
+    /// Named counters/gauges registered by the rest of the stack (e.g.
+    /// per-phase decode timers); exported by both metrics endpoints.
+    obs: obs::Registry,
+    /// Per-request span recording, when `EngineOptions::trace` is set.
+    trace: Option<Arc<TraceShared>>,
     /// The workers' KV pool (None on the legacy contiguous path).
     pool: Option<Arc<BlockPool>>,
     /// Draft-model KV pools, created lazily per draft geometry
@@ -470,14 +476,52 @@ pub struct ServeMetrics {
     draft_pools: Mutex<HashMap<(usize, usize), Arc<BlockPool>>>,
 }
 
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics {
+            completed: AtomicUsize::new(0),
+            cancelled: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            preempted: AtomicUsize::new(0),
+            tokens_out: AtomicUsize::new(0),
+            peak_active: AtomicUsize::new(0),
+            batch_steps: AtomicUsize::new(0),
+            batch_rows: AtomicUsize::new(0),
+            batch_seqs: AtomicUsize::new(0),
+            spec_requests: AtomicUsize::new(0),
+            draft_steps: AtomicUsize::new(0),
+            verify_steps: AtomicUsize::new(0),
+            draft_tokens: AtomicUsize::new(0),
+            accepted_tokens: AtomicUsize::new(0),
+            spec_tokens: AtomicUsize::new(0),
+            spec_degraded: AtomicUsize::new(0),
+            service_us: AtomicU64::new(0),
+            service_n: AtomicUsize::new(0),
+            queue_wait_ms: Histogram::new(),
+            ttft_ms: Histogram::new(),
+            tpot_ms: Histogram::new(),
+            batch_occ: Histogram::new(),
+            started: Instant::now(),
+            started_unix_ms: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
+            obs: obs::Registry::new(),
+            trace: None,
+            pool: None,
+            draft_pools: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
 impl ServeMetrics {
     fn record_latency(&self, queue_wait: Duration, ttft: Option<Duration>, tpot: Option<f64>) {
-        self.queue_wait_ms.lock().unwrap().push(queue_wait.as_secs_f64() * 1e3);
+        self.queue_wait_ms.record(queue_wait.as_secs_f64() * 1e3);
         if let Some(t) = ttft {
-            self.ttft_ms.lock().unwrap().push(t.as_secs_f64() * 1e3);
+            self.ttft_ms.record(t.as_secs_f64() * 1e3);
         }
         if let Some(t) = tpot {
-            self.tpot_ms.lock().unwrap().push(t);
+            self.tpot_ms.record(t);
         }
     }
 
@@ -501,13 +545,13 @@ impl ServeMetrics {
         self.batch_steps.fetch_add(1, Ordering::Relaxed);
         self.batch_rows.fetch_add(rows, Ordering::Relaxed);
         self.batch_seqs.fetch_add(seqs, Ordering::Relaxed);
-        self.batch_occ.lock().unwrap().push(rows as f64);
+        self.batch_occ.record(rows as f64);
     }
 
     /// p50/p95/p99 of rows per fused batch step (decode batch occupancy —
     /// how much weight-read amortization the scheduler is achieving).
     pub fn batch_occupancy_percentiles(&self) -> Percentiles {
-        Percentiles::of(&self.batch_occ.lock().unwrap().samples)
+        Percentiles::of_histogram(&self.batch_occ)
     }
 
     /// Mean rows per fused batch step over the engine's lifetime.
@@ -529,21 +573,42 @@ impl ServeMetrics {
         self.batch_seqs.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
-    /// p50/p95/p99 of submission → admission, in ms (most recent window).
+    /// p50/p95/p99 of submission → admission, in ms.
     pub fn queue_wait_percentiles(&self) -> Percentiles {
-        Percentiles::of(&self.queue_wait_ms.lock().unwrap().samples)
+        Percentiles::of_histogram(&self.queue_wait_ms)
     }
 
-    /// p50/p95/p99 of submission → first token, in ms (most recent window).
+    /// p50/p95/p99 of submission → first token, in ms.
     pub fn ttft_percentiles(&self) -> Percentiles {
-        Percentiles::of(&self.ttft_ms.lock().unwrap().samples)
+        Percentiles::of_histogram(&self.ttft_ms)
     }
 
     /// p50/p95/p99 of per-request mean inter-token latency (TPOT), in ms
-    /// (most recent window; requests that emitted ≥ 2 tokens). With TTFT
-    /// this is the SLO pair the load generator scores against.
+    /// (requests that emitted ≥ 2 tokens). With TTFT this is the SLO pair
+    /// the load generator scores against.
     pub fn tpot_percentiles(&self) -> Percentiles {
-        Percentiles::of(&self.tpot_ms.lock().unwrap().samples)
+        Percentiles::of_histogram(&self.tpot_ms)
+    }
+
+    /// Time since the engine's metrics were created (engine start).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Engine start as Unix milliseconds.
+    pub fn started_unix_ms(&self) -> u64 {
+        self.started_unix_ms
+    }
+
+    /// The engine's named-metric registry. Resolve counter/gauge handles
+    /// once at setup; recording through them is lock-free.
+    pub fn obs(&self) -> &obs::Registry {
+        &self.obs
+    }
+
+    /// The trace recorder, when tracing is enabled.
+    pub fn trace(&self) -> Option<&Arc<TraceShared>> {
+        self.trace.as_ref()
     }
 
     /// KV pool utilization, shared-block hit rate, CoW/eviction counters —
@@ -569,7 +634,13 @@ impl ServeMetrics {
             .lock()
             .unwrap()
             .entry((n_layers, d))
-            .or_insert_with(|| Arc::new(BlockPool::new(opts, n_layers, d)))
+            .or_insert_with(|| {
+                let p = Arc::new(BlockPool::new(opts, n_layers, d));
+                if let Some(tr) = &self.trace {
+                    p.set_obs(tr.clone());
+                }
+                p
+            })
             .clone()
     }
 
@@ -607,6 +678,8 @@ impl ServeMetrics {
         use crate::util::json::{num, obj, Json};
         let c = |a: &AtomicUsize| num(a.load(Ordering::Relaxed) as f64);
         let mut pairs = vec![
+            ("uptime_ms", num(self.uptime().as_secs_f64() * 1e3)),
+            ("started_unix_ms", num(self.started_unix_ms as f64)),
             ("completed", c(&self.completed)),
             ("cancelled", c(&self.cancelled)),
             ("failed", c(&self.failed)),
@@ -641,8 +714,120 @@ impl ServeMetrics {
         if let Some(kv) = self.kv() {
             pairs.push(("kv", kv_stats_json(&kv)));
         }
+        let snap = self.obs.snapshot();
+        if !snap.is_empty() {
+            let entries: Vec<(String, Json)> =
+                snap.into_iter().map(|(k, v)| (k, num(v))).collect();
+            pairs.push((
+                "obs",
+                Json::Obj(entries.into_iter().collect()),
+            ));
+        }
+        if let Some(tr) = &self.trace {
+            pairs.push((
+                "trace",
+                obj(vec![
+                    ("completed", num(tr.completed_count() as f64)),
+                    ("dropped", num(tr.dropped_traces() as f64)),
+                ]),
+            ));
+        }
         obj(pairs)
     }
+
+    /// Add every serving metric to a Prometheus exposition under the
+    /// given `model` label — counters, gauges, latency summaries, KV pool
+    /// stats (target and draft pools distinguished by a `pool` label),
+    /// and everything registered on [`ServeMetrics::obs`].
+    pub fn render_prometheus(&self, ex: &mut obs::prom::Exposition, model: &str) {
+        let l: &[(&str, &str)] = &[("model", model)];
+        let c = |a: &AtomicUsize| a.load(Ordering::Relaxed) as f64;
+        ex.counter("requests_completed_total", "requests finished normally", l, c(&self.completed));
+        ex.counter("requests_cancelled_total", "requests cancelled", l, c(&self.cancelled));
+        ex.counter("requests_failed_total", "requests ended by a KV error", l, c(&self.failed));
+        ex.counter("requests_preempted_total", "priority preemptions", l, c(&self.preempted));
+        ex.counter("tokens_out_total", "tokens emitted", l, c(&self.tokens_out));
+        ex.gauge("peak_active_requests", "peak concurrent active requests", l, c(&self.peak_active));
+        ex.counter("batch_steps_total", "fused batch steps", l, c(&self.batch_steps));
+        ex.counter("batch_rows_total", "rows over fused batch steps", l, c(&self.batch_rows));
+        ex.counter("batch_seqs_total", "sequences over fused batch steps", l, c(&self.batch_seqs));
+        ex.counter("spec_requests_total", "requests that ran a spec round", l, c(&self.spec_requests));
+        ex.counter("spec_draft_steps_total", "draft fused decode steps", l, c(&self.draft_steps));
+        ex.counter("spec_verify_steps_total", "speculative verify runs", l, c(&self.verify_steps));
+        ex.counter("spec_draft_tokens_total", "draft tokens proposed", l, c(&self.draft_tokens));
+        ex.counter(
+            "spec_accepted_tokens_total",
+            "draft tokens accepted by the target",
+            l,
+            c(&self.accepted_tokens),
+        );
+        ex.counter("spec_degraded_total", "spec requests degraded to plain decode", l, c(&self.spec_degraded));
+        ex.gauge("spec_acceptance_rate", "draft-token acceptance rate", l, self.acceptance_rate());
+        ex.gauge("uptime_seconds", "engine uptime", l, self.uptime().as_secs_f64());
+        if let Some(d) = self.mean_service() {
+            ex.gauge("mean_service_ms", "mean admission-to-completion time", l, d.as_secs_f64() * 1e3);
+        }
+        summary_of(ex, "queue_wait_ms", "submission to admission latency", l, &self.queue_wait_ms);
+        summary_of(ex, "ttft_ms", "submission to first token", l, &self.ttft_ms);
+        summary_of(ex, "tpot_ms", "per-request mean inter-token latency", l, &self.tpot_ms);
+        summary_of(ex, "batch_occupancy_rows", "rows per fused batch step", l, &self.batch_occ);
+        if let Some(kv) = self.kv() {
+            kv_stats_prometheus(ex, &kv, &[("model", model), ("pool", "target")]);
+        }
+        for kv in self.draft_kv() {
+            kv_stats_prometheus(ex, &kv, &[("model", model), ("pool", "draft")]);
+        }
+        if let Some(tr) = &self.trace {
+            ex.gauge("trace_completed", "completed traces held in the ring", l, tr.completed_count() as f64);
+            ex.counter("trace_dropped_total", "completed traces evicted from the ring", l, tr.dropped_traces() as f64);
+        }
+        self.obs.render_into(ex, l);
+    }
+}
+
+/// A histogram as a Prometheus summary (p50/p95/p99 + `_sum`/`_count`).
+fn summary_of(
+    ex: &mut obs::prom::Exposition,
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    h: &Histogram,
+) {
+    ex.summary(
+        name,
+        help,
+        labels,
+        &[("0.5", h.quantile(50)), ("0.95", h.quantile(95)), ("0.99", h.quantile(99))],
+        h.sum(),
+        h.count() as f64,
+    );
+}
+
+/// [`KvPoolStats`] into a Prometheus exposition (every counter the JSON
+/// endpoint reports, as proper counter/gauge families).
+fn kv_stats_prometheus(
+    ex: &mut obs::prom::Exposition,
+    kv: &KvPoolStats,
+    l: &[(&str, &str)],
+) {
+    ex.gauge("kv_blocks", "pool block budget", l, kv.n_blocks as f64);
+    ex.gauge("kv_in_use_blocks", "blocks currently held", l, kv.in_use as f64);
+    ex.gauge("kv_utilization", "in-use fraction of the block budget", l, kv.utilization);
+    ex.gauge("kv_peak_in_use_blocks", "peak blocks held", l, kv.peak_in_use as f64);
+    ex.gauge("kv_capacity_bytes", "pool capacity", l, kv.capacity_bytes as f64);
+    ex.gauge("kv_resident_bytes", "resident KV bytes", l, kv.resident_bytes as f64);
+    ex.gauge("kv_shared_attached_blocks", "blocks attached from shared prefixes", l, kv.shared_attached as f64);
+    ex.gauge("kv_shared_hit_rate", "prompt blocks served from shared prefixes", l, kv.shared_hit_rate);
+    ex.gauge("kv_registered_prefixes", "prefixes in the share map", l, kv.registered_prefixes as f64);
+    ex.gauge("kv_spilled_entries", "prefix entries in the spill tier", l, kv.spilled_entries as f64);
+    ex.gauge("kv_spilled_blocks", "blocks in the spill tier", l, kv.spilled_blocks as f64);
+    ex.gauge("kv_spilled_bytes", "bytes in the spill tier", l, kv.spilled_bytes as f64);
+    ex.counter("kv_cow_copies_total", "copy-on-write block copies", l, kv.cow_copies as f64);
+    ex.counter("kv_evicted_blocks_total", "blocks evicted from the share map", l, kv.evicted_blocks as f64);
+    ex.counter("kv_unused_tail_returned_total", "over-reserved tail blocks returned", l, kv.unused_tail_returned as f64);
+    ex.counter("kv_spill_writes_total", "prefix entries written to the spill tier", l, kv.spill_writes as f64);
+    ex.counter("kv_spill_faults_total", "spilled entries faulted back", l, kv.spill_faults as f64);
+    ex.counter("kv_spill_fault_fails_total", "failed fault-backs", l, kv.spill_fault_fails as f64);
 }
 
 /// [`KvPoolStats`] as JSON (shared by `/v1/metrics` and the SLO report).
@@ -706,6 +891,15 @@ pub struct EngineOptions {
     /// written there as CRC-checked `.pqm` files and faulted back when
     /// the prompt recurs. `None` (the default) sheds by dropping.
     pub kv_spill_dir: Option<std::path::PathBuf>,
+    /// Record per-request span traces (submit → queue → KV → prefill →
+    /// batch steps → terminal) plus pool-level KV events, exportable as
+    /// Chrome trace-event JSON. Off (the default) costs nothing: the
+    /// per-request handle is `None` and every hook is a skipped `if let`.
+    pub trace: bool,
+    /// Per-component decode phase timing on the workers' replicas;
+    /// accumulated deltas fold into [`ServeMetrics::obs`] as
+    /// `decode_phase_us_total{phase=..}` counters after every fused step.
+    pub timing: TimingMode,
 }
 
 impl Default for EngineOptions {
@@ -719,6 +913,8 @@ impl Default for EngineOptions {
             kv: Some(KvPoolOptions::default()),
             draft_kv: None,
             kv_spill_dir: None,
+            trace: false,
+            timing: TimingMode::Off,
         }
     }
 }
@@ -731,6 +927,8 @@ struct Admission {
     cancelled: Arc<AtomicBool>,
     /// KV reservation + shared prefix granted at submit time (pool mode).
     admitted: Option<Admitted>,
+    /// Span recorder (tracing enabled only); carries the submit span.
+    trace: Option<Box<TraceBuilder>>,
 }
 
 /// Entry in the engine-wide in-flight index, used by `submit` to pick a
@@ -774,6 +972,8 @@ struct Preempted {
     first_token: Option<Duration>,
     events: Sender<Event>,
     cancelled: Arc<AtomicBool>,
+    /// Span recorder, parked with the request (tracing enabled only).
+    trace: Option<Box<TraceBuilder>>,
 }
 
 /// State shared between `submit` and the workers (beyond the queue).
@@ -828,7 +1028,12 @@ impl Engine {
         }
         let (tx, rx) = sync_channel(opts.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(ServeMetrics { pool: pool.clone(), ..Default::default() });
+        let trace = opts.trace.then(TraceShared::new);
+        if let (Some(p), Some(tr)) = (pool.as_ref(), trace.as_ref()) {
+            p.set_obs(tr.clone());
+        }
+        let metrics =
+            Arc::new(ServeMetrics { pool: pool.clone(), trace, ..Default::default() });
         let shared = Arc::new(EngineShared::default());
         let handles = (0..opts.workers.max(1))
             .map(|_| {
@@ -906,8 +1111,19 @@ impl Engine {
         let (etx, erx) = channel();
         let cancelled = Arc::new(AtomicBool::new(false));
         let ticket = Ticket { id, events: erx, cancelled: cancelled.clone() };
+        let mut trace = self.metrics.trace().map(|tr| {
+            let mut b = tr.begin(id);
+            // Anchored at begin_us so the later Queue span (which starts
+            // there too) keeps per-request timestamps monotone.
+            let t0 = b.begin_us();
+            b.span_since(SpanKind::Submit, t0, req.prompt.len() as u64, req.n_new as u64);
+            b
+        });
         if req.n_new == 0 {
             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(tr) = trace.take() {
+                tr.finish(reason_code(FinishReason::Length), 0);
+            }
             let _ = etx.send(Event::Done(GenStats {
                 id,
                 tokens: Vec::new(),
@@ -941,8 +1157,15 @@ impl Engine {
                 }
             }
         };
-        let adm =
-            Admission { id, req, enqueued: Instant::now(), events: etx, cancelled, admitted };
+        let adm = Admission {
+            id,
+            req,
+            enqueued: Instant::now(),
+            events: etx,
+            cancelled,
+            admitted,
+            trace,
+        };
         match tx.try_send(adm) {
             // A dropped rejection releases its KV reservation on the way out.
             Ok(()) => Ok(ticket),
@@ -1069,6 +1292,9 @@ struct ReplicaSlot {
     lease: Lease,
     model: PackedModel,
     inflight: usize,
+    /// Cumulative per-phase timing already folded into the registry
+    /// counters (the model's summary minus this is the next delta).
+    folded: BlockTiming,
 }
 
 impl ReplicaSlot {
@@ -1087,6 +1313,8 @@ struct ReplicaPool {
     name: String,
     slots: Vec<Option<ReplicaSlot>>,
     newest: Option<usize>,
+    /// Applied to every replica this pool clones.
+    timing: TimingMode,
 }
 
 impl ReplicaPool {
@@ -1106,8 +1334,12 @@ impl ReplicaPool {
                         }
                     }
                 }
-                let model = lease.replica();
-                let slot = ReplicaSlot { lease, model, inflight: 0 };
+                let mut model = lease.replica();
+                if self.timing != TimingMode::Off {
+                    model.set_timing(self.timing);
+                }
+                let slot =
+                    ReplicaSlot { lease, model, inflight: 0, folded: BlockTiming::default() };
                 let idx = match self.slots.iter().position(|s| s.is_none()) {
                     Some(i) => {
                         self.slots[i] = Some(slot);
@@ -1314,9 +1546,22 @@ struct ActiveRequest {
     first_token: Option<Duration>,
     events: Sender<Event>,
     cancelled: Arc<AtomicBool>,
+    /// Span recorder (tracing enabled only).
+    trace: Option<Box<TraceBuilder>>,
 }
 
-fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
+/// Terminal-span reason code for a finish reason (`SpanKind::Terminal`'s
+/// `a` payload).
+fn reason_code(reason: FinishReason) -> u64 {
+    match reason {
+        FinishReason::Stop => 0,
+        FinishReason::Length => 1,
+        FinishReason::Cancelled => 2,
+        FinishReason::Failed => 3,
+    }
+}
+
+fn finish(mut a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     let queue_wait = a.started - a.enqueued;
     let service = a.started.elapsed();
     match reason {
@@ -1336,6 +1581,9 @@ fn finish(a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     };
     metrics.record_latency(queue_wait, a.first_token, tpot);
     metrics.record_service(service);
+    if let Some(tr) = a.trace.take() {
+        tr.finish(reason_code(reason), a.tokens.len() as u64);
+    }
     let _ = a.events.send(Event::Done(GenStats {
         id: a.id,
         tokens: a.tokens,
@@ -1356,12 +1604,16 @@ fn reject_parts_as(
     enqueued: Instant,
     events: &Sender<Event>,
     metrics: &ServeMetrics,
+    trace: Option<Box<TraceBuilder>>,
     finish: FinishReason,
 ) {
     match finish {
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
         _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
     };
+    if let Some(tr) = trace {
+        tr.finish(reason_code(finish), 0);
+    }
     let _ = events.send(Event::Done(GenStats {
         id,
         tokens: Vec::new(),
@@ -1373,17 +1625,29 @@ fn reject_parts_as(
     }));
 }
 
-fn reject_parts(id: u64, enqueued: Instant, events: &Sender<Event>, metrics: &ServeMetrics) {
-    reject_parts_as(id, enqueued, events, metrics, FinishReason::Cancelled);
+fn reject_parts(
+    id: u64,
+    enqueued: Instant,
+    events: &Sender<Event>,
+    metrics: &ServeMetrics,
+    trace: Option<Box<TraceBuilder>>,
+) {
+    reject_parts_as(id, enqueued, events, metrics, trace, FinishReason::Cancelled);
 }
 
-fn fail_parts(id: u64, enqueued: Instant, events: &Sender<Event>, metrics: &ServeMetrics) {
-    reject_parts_as(id, enqueued, events, metrics, FinishReason::Failed);
+fn fail_parts(
+    id: u64,
+    enqueued: Instant,
+    events: &Sender<Event>,
+    metrics: &ServeMetrics,
+    trace: Option<Box<TraceBuilder>>,
+) {
+    reject_parts_as(id, enqueued, events, metrics, trace, FinishReason::Failed);
 }
 
 /// Finish a preempted request that cannot resume (cancelled while parked,
 /// or the serving model changed out from under it).
-fn finish_preempted(p: Preempted, reason: FinishReason, metrics: &ServeMetrics) {
+fn finish_preempted(mut p: Preempted, reason: FinishReason, metrics: &ServeMetrics) {
     match reason {
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
         _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
@@ -1391,6 +1655,9 @@ fn finish_preempted(p: Preempted, reason: FinishReason, metrics: &ServeMetrics) 
     let queue_wait = p.started - p.enqueued;
     // No TPOT sample: the parked interval would inflate the gap.
     metrics.record_latency(queue_wait, p.first_token, None);
+    if let Some(tr) = p.trace.take() {
+        tr.finish(reason_code(reason), p.emitted.len() as u64);
+    }
     let _ = p.events.send(Event::Done(GenStats {
         id: p.id,
         tokens: p.emitted,
@@ -1400,6 +1667,53 @@ fn finish_preempted(p: Preempted, reason: FinishReason, metrics: &ServeMetrics) 
         ttft: p.first_token,
         service_time: p.started.elapsed(),
     }));
+}
+
+/// Registry handles for the six per-component decode-phase counters
+/// (`decode_phase_us_total{phase=..}`), resolved once per worker when
+/// [`EngineOptions::timing`] is on.
+struct PhaseCounters {
+    attn_proj: Arc<obs::Counter>,
+    attn_core: Arc<obs::Counter>,
+    ffn_1bit: Arc<obs::Counter>,
+    ffn_8bit: Arc<obs::Counter>,
+    router: Arc<obs::Counter>,
+    norm_quant: Arc<obs::Counter>,
+}
+
+impl PhaseCounters {
+    fn new(reg: &obs::Registry) -> PhaseCounters {
+        let c = |phase: &str| {
+            reg.counter_with(
+                "decode_phase_us_total",
+                &[("phase", phase)],
+                "per-component decode wall time",
+            )
+        };
+        PhaseCounters {
+            attn_proj: c("attn_proj"),
+            attn_core: c("attn_core"),
+            ffn_1bit: c("ffn_1bit"),
+            ffn_8bit: c("ffn_8bit"),
+            router: c("router"),
+            norm_quant: c("norm_quant"),
+        }
+    }
+
+    /// Fold the delta between the model's cumulative summary `now` and
+    /// the already-folded baseline `last` into the counters.
+    fn fold(&self, last: &mut BlockTiming, now: BlockTiming) {
+        // Delta of the cumulative-µs readings (telescopes exactly: the
+        // counter total always equals the model summary in µs).
+        let us = |a: Duration, b: Duration| (a.as_micros() as u64).saturating_sub(b.as_micros() as u64);
+        self.attn_proj.add(us(now.attn_proj, last.attn_proj));
+        self.attn_core.add(us(now.attn_core, last.attn_core));
+        self.ffn_1bit.add(us(now.ffn_1bit, last.ffn_1bit));
+        self.ffn_8bit.add(us(now.ffn_8bit, last.ffn_8bit));
+        self.router.add(us(now.router, last.router));
+        self.norm_quant.add(us(now.norm_quant, last.norm_quant));
+        *last = now;
+    }
 }
 
 /// Is resume of a request at `priority` held open for a pending
@@ -1434,7 +1748,12 @@ fn worker_loop(
         name: opts.model.clone(),
         slots: Vec::new(),
         newest: None,
+        timing: opts.timing,
     };
+    // Per-phase decode-time counters, resolved once (recording through
+    // them is lock-free); `None` when timing is off.
+    let phase_counters =
+        (opts.timing != TimingMode::Off).then(|| PhaseCounters::new(metrics.obs()));
     // Per draft-model name, a worker-local replica pool — speculative
     // requests pin the draft slot they initialized on, so a draft
     // hot-swap is picked up by *new* speculation while in-flight streams
@@ -1516,6 +1835,11 @@ fn worker_loop(
                 .lock()
                 .unwrap()
                 .insert(p.id, ActiveInfo { priority: p.priority, preempt: preempt.clone() });
+            let mut trace = p.trace.take();
+            if let Some(tr) = trace.as_mut() {
+                tr.instant(SpanKind::Resume, 0, 0);
+                tr.instant(SpanKind::KvReserve, total as u64, prefill_pos as u64);
+            }
             active.push(ActiveRequest {
                 id: p.id,
                 prompt_len: p.prompt.len(),
@@ -1542,6 +1866,7 @@ fn worker_loop(
                 first_token: p.first_token,
                 events: p.events,
                 cancelled: p.cancelled,
+                trace,
             });
             metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
         }
@@ -1562,13 +1887,13 @@ fn worker_loop(
                 }
             };
             let Some(adm) = polled else { break };
-            let Admission { id, req, enqueued, events, cancelled, admitted } = adm;
+            let Admission { id, req, enqueued, events, cancelled, admitted, mut trace } = adm;
             if cancelled.load(Ordering::Relaxed) {
-                reject_parts(id, enqueued, &events, &metrics);
+                reject_parts(id, enqueued, &events, &metrics, trace);
                 continue; // `admitted` drops here, releasing the reservation
             }
             let Some(slot) = pool.current_slot() else {
-                reject_parts(id, enqueued, &events, &metrics); // model gone
+                reject_parts(id, enqueued, &events, &metrics, trace); // model gone
                 continue;
             };
             let started = Instant::now();
@@ -1585,7 +1910,7 @@ fn worker_loop(
                 // from under the pool: fail the request, don't panic the
                 // worker indexing a mis-sized page table.
                 pool.release(slot);
-                fail_parts(id, enqueued, &events, &metrics);
+                fail_parts(id, enqueued, &events, &metrics, trace);
                 continue;
             }
             let kv = match (kv_pool.as_ref(), admitted) {
@@ -1596,7 +1921,7 @@ fn worker_loop(
                         // weights.
                         if a.discard_sharing().is_err() {
                             pool.release(slot);
-                            fail_parts(id, enqueued, &events, &metrics);
+                            fail_parts(id, enqueued, &events, &metrics, trace);
                             continue;
                         }
                         a.retag(slot_tag);
@@ -1607,7 +1932,7 @@ fn worker_loop(
                 // an un-admitted request must not decode unmetered.
                 (Some(_), None) => {
                     pool.release(slot);
-                    fail_parts(id, enqueued, &events, &metrics);
+                    fail_parts(id, enqueued, &events, &metrics, trace);
                     continue;
                 }
                 (None, _) => {
@@ -1619,6 +1944,12 @@ fn worker_loop(
                 RequestKv::Paged(seq) => seq.len(), // shared prefix already cached
                 RequestKv::Contig(_) => 0,
             };
+            if let Some(tr) = trace.as_mut() {
+                let t0 = tr.begin_us();
+                tr.span_since(SpanKind::Queue, t0, 0, 0);
+                let total = kv_worst_case(req.prompt.len(), req.n_new);
+                tr.instant(SpanKind::KvReserve, total as u64, prefill_pos as u64);
+            }
             let mut prefilled_sent = false;
             if req.prompt.is_empty() {
                 let _ = events.send(Event::Prefilled { prompt_len: 0 });
@@ -1656,6 +1987,7 @@ fn worker_loop(
                 n_new: req.n_new,
                 priority: req.priority,
                 sampling: req.sampling,
+                trace,
             });
             metrics.peak_active.fetch_max(active.len(), Ordering::Relaxed);
         }
@@ -1694,11 +2026,14 @@ fn worker_loop(
             if active[i].preempt.load(Ordering::Relaxed)
                 && matches!(active[i].kv, RequestKv::Paged(_))
             {
-                let a = active.swap_remove(i);
+                let mut a = active.swap_remove(i);
                 pool.release(a.slot);
                 release_spec(&mut draft_pools, &a.spec);
                 shared.active.lock().unwrap().remove(&a.id);
                 metrics.preempted.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = a.trace.as_mut() {
+                    tr.instant(SpanKind::Preempt, 0, 0);
+                }
                 let tag = match &a.kv {
                     RequestKv::Paged(seq) => seq.tag(),
                     RequestKv::Contig(_) => PrefixTag::default(),
@@ -1722,6 +2057,7 @@ fn worker_loop(
                     first_token: a.first_token,
                     events: a.events,
                     cancelled: a.cancelled,
+                    trace: a.trace,
                 });
                 continue; // a.kv (and any draft KV) drops here — its
                           // blocks return to the pools
@@ -1783,6 +2119,9 @@ fn worker_loop(
                         name: sp.params.draft.clone(),
                         slots: Vec::new(),
                         newest: None,
+                        // Drafts stay untimed: the Fig 8 phase breakdown
+                        // tracks the target model.
+                        timing: TimingMode::Off,
                     });
                 match dpool.current_slot() {
                     Some(slot) => {
@@ -1981,9 +2320,17 @@ fn worker_loop(
                 continue;
             }
             let rows: usize = steps.iter().map(|s| s.tokens.len()).sum();
+            let n_seqs = steps.len();
+            // One clock read per fused step when tracing: every row's span
+            // shares the step's start time.
+            let step_t0 = metrics.trace().map(|tr| tr.now_us());
             let model = &mut pool.slots[slot_id].as_mut().unwrap().model;
             model.decode_step_batch(&mut steps, &mut scratch);
-            metrics.record_batch(steps.len(), rows);
+            metrics.record_batch(n_seqs, rows);
+            if let Some(pc) = phase_counters.as_ref() {
+                let s = pool.slots[slot_id].as_mut().unwrap();
+                pc.fold(&mut s.folded, s.model.timing_summary());
+            }
             errs.clear();
             errs.extend(steps.iter().map(|s| s.err.clone()));
             drop(steps);
@@ -2000,7 +2347,11 @@ fn worker_loop(
                 match plan {
                     RowPlan::Prefill { end, completes } => {
                         let a = &mut active[ai];
+                        let start = a.prefill_pos;
                         a.prefill_pos = end;
+                        if let (Some(tr), Some(t0)) = (a.trace.as_mut(), step_t0) {
+                            tr.span_since(SpanKind::PrefillChunk, t0, start as u64, end as u64);
+                        }
                         if completes {
                             // This chunk completed the prompt.
                             a.pos = end;
@@ -2030,6 +2381,9 @@ fn worker_loop(
                         a.last_logits.copy_from_slice(scratch.logits_row(k));
                         a.pos += 1;
                         a.pending = false;
+                        if let (Some(tr), Some(t0)) = (a.trace.as_mut(), step_t0) {
+                            tr.span_since(SpanKind::BatchStep, t0, rows as u64, n_seqs as u64);
+                        }
                     }
                     RowPlan::Spec => {
                         // Acceptance scan over the run's per-row logits:
@@ -2050,6 +2404,7 @@ fn worker_loop(
                             kv,
                             pending,
                             last_logits,
+                            trace,
                             ..
                         } = &mut active[ai];
                         let vocab = last_logits.len();
@@ -2101,6 +2456,9 @@ fn worker_loop(
                         metrics.verify_steps.fetch_add(1, Ordering::Relaxed);
                         metrics.draft_tokens.fetch_add(m, Ordering::Relaxed);
                         metrics.accepted_tokens.fetch_add(accepted, Ordering::Relaxed);
+                        if let (Some(tr), Some(t0)) = (trace.as_mut(), step_t0) {
+                            tr.span_since(SpanKind::SpecVerify, t0, m as u64, accepted as u64);
+                        }
                         match finished {
                             Some(reason) => done.push((ai, reason)),
                             None => {
@@ -2172,10 +2530,18 @@ mod tests {
     fn percentiles_of_known_samples() {
         let p = Percentiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
         assert_eq!(p.n, 10);
-        assert_eq!(p.p50, 6.0);
+        // Nearest rank: ceil(50·10/100) = 5th smallest, not the 6th.
+        assert_eq!(p.p50, 5.0);
         assert_eq!(p.p95, 10.0);
         assert_eq!(p.p99, 10.0);
         assert_eq!(Percentiles::of(&[]).n, 0);
+        // A single sample is every percentile.
+        let one = Percentiles::of(&[7.0]);
+        assert_eq!((one.p50, one.p95, one.p99), (7.0, 7.0, 7.0));
+        // p100-adjacent ranks stay in bounds for n = 100.
+        let big: Vec<f64> = (1..=100).map(f64::from).collect();
+        let pb = Percentiles::of(&big);
+        assert_eq!((pb.p50, pb.p95, pb.p99), (50.0, 95.0, 99.0));
     }
 
     #[test]

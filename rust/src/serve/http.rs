@@ -14,7 +14,15 @@
 //!     [`RetryAfter`] guidance; `KvTooLarge` → 413, draft rejections and
 //!     malformed bodies → 400.
 //!   * `GET /v1/metrics` — [`ServeMetrics::to_json`] snapshot per routed
-//!     engine.
+//!     engine, plus this front end's own per-route request/error counters
+//!     under `"http"`. Content negotiation: `Accept: text/plain` (or
+//!     `application/openmetrics-text`), or `?format=prometheus`, switches
+//!     the response to the Prometheus text exposition rendered via
+//!     [`crate::obs::prom::Exposition`]; JSON stays the default.
+//!   * `GET /v1/trace/<id|latest|all>` — a completed request's spans (or
+//!     the engine's whole completed-trace ring plus the KV event track)
+//!     as Chrome trace-event JSON, when the routed engine runs with
+//!     tracing enabled; `?model=NAME` picks a non-default engine.
 //!   * `GET /v1/models` — the [`ModelRegistry`] listing.
 //!
 //! Requests route to an engine by the optional `"model"` body key (the
@@ -28,13 +36,14 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::prom::Exposition;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::{
@@ -87,6 +96,87 @@ impl Router {
 struct ServerState {
     router: Router,
     stopping: AtomicBool,
+    stats: HttpStats,
+}
+
+/// One route's request/error tally.
+struct RouteStats {
+    name: &'static str,
+    requests: AtomicUsize,
+    errors: AtomicUsize,
+}
+
+impl RouteStats {
+    fn new(name: &'static str) -> RouteStats {
+        RouteStats { name, requests: AtomicUsize::new(0), errors: AtomicUsize::new(0) }
+    }
+
+    fn note_err(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The front end's own per-route counters, reported under the `"http"`
+/// key of the JSON metrics snapshot and as `http_requests_total` /
+/// `http_errors_total{route=..}` in the Prometheus exposition.
+struct HttpStats {
+    routes: [RouteStats; 5],
+}
+
+impl HttpStats {
+    fn new() -> HttpStats {
+        HttpStats {
+            routes: [
+                RouteStats::new("generate"),
+                RouteStats::new("metrics"),
+                RouteStats::new("models"),
+                RouteStats::new("trace"),
+                RouteStats::new("other"),
+            ],
+        }
+    }
+
+    fn route(&self, name: &str) -> &RouteStats {
+        self.routes
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| self.routes.last().unwrap())
+    }
+
+    fn to_json(&self) -> Json {
+        let pairs: Vec<(&str, Json)> = self
+            .routes
+            .iter()
+            .map(|r| {
+                (
+                    r.name,
+                    obj(vec![
+                        ("requests", num(r.requests.load(Ordering::Relaxed) as f64)),
+                        ("errors", num(r.errors.load(Ordering::Relaxed) as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(pairs)
+    }
+
+    fn render_prometheus(&self, ex: &mut Exposition) {
+        for r in &self.routes {
+            let labels = [("route", r.name)];
+            ex.counter(
+                "http_requests_total",
+                "front-end requests by route",
+                &labels,
+                r.requests.load(Ordering::Relaxed) as f64,
+            );
+            ex.counter(
+                "http_errors_total",
+                "front-end error responses by route",
+                &labels,
+                r.errors.load(Ordering::Relaxed) as f64,
+            );
+        }
+    }
 }
 
 /// The serving front end: accept loop + per-connection handler threads.
@@ -108,7 +198,11 @@ impl HttpServer {
         }
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let state = Arc::new(ServerState { router, stopping: AtomicBool::new(false) });
+        let state = Arc::new(ServerState {
+            router,
+            stopping: AtomicBool::new(false),
+            stats: HttpStats::new(),
+        });
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
             let state = state.clone();
@@ -254,6 +348,18 @@ fn respond_json(stream: &mut TcpStream, code: u16, extra: &[(&str, String)], bod
     let _ = stream.flush();
 }
 
+/// One-shot plain-text response (the Prometheus exposition).
+fn respond_text(stream: &mut TcpStream, code: u16, content_type: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(code),
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
 fn respond_error(stream: &mut TcpStream, code: u16, msg: &str) {
     respond_json(stream, code, &[], &obj(vec![("error", s(msg))]));
 }
@@ -276,17 +382,45 @@ fn respond_backpressure(stream: &mut TcpStream, code: u16, msg: &str, retry_afte
 
 // ------------------------------------------------------------------ routes
 
+/// Which counter bucket a request lands in.
+fn route_name(method: &str, path: &str) -> &'static str {
+    match (method, path) {
+        ("POST", "/v1/generate") | ("GET", "/v1/generate") => "generate",
+        ("GET", "/v1/metrics") => "metrics",
+        ("GET", "/v1/models") => "models",
+        ("GET", p) if p.starts_with("/v1/trace/") => "trace",
+        _ => "other",
+    }
+}
+
+/// Look up `key` in a raw query string (`a=1&b=2`).
+fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+        (k == key).then_some(v)
+    })
+}
+
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     let _ = stream.set_nodelay(true);
     let req = match read_request(&mut stream) {
         Ok(r) => r,
         Err(_) => {
+            let row = state.stats.route("other");
+            row.requests.fetch_add(1, Ordering::Relaxed);
+            row.note_err();
             respond_error(&mut stream, 400, "malformed HTTP request");
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/generate") => handle_generate(stream, state, &req),
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    let row = state.stats.route(route_name(&req.method, path));
+    row.requests.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), path) {
+        ("POST", "/v1/generate") => handle_generate(stream, state, &req, row),
         ("GET", "/v1/models") => {
             let models: Vec<Json> = state
                 .router
@@ -310,17 +444,95 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
                 .collect();
             respond_json(&mut stream, 200, &[], &obj(vec![("models", arr(models))]));
         }
-        ("GET", "/v1/metrics") => {
-            let per_engine: Vec<(&str, Json)> = state
-                .router
-                .routes
-                .iter()
-                .map(|(name, engine)| (name.as_str(), engine.metrics().to_json()))
-                .collect();
-            respond_json(&mut stream, 200, &[], &obj(per_engine));
+        ("GET", "/v1/metrics") => handle_metrics(stream, state, &req, query),
+        ("GET", p) if p.starts_with("/v1/trace/") => handle_trace(stream, state, p, query, row),
+        ("GET", "/v1/generate") => {
+            row.note_err();
+            respond_error(&mut stream, 405, "use POST /v1/generate");
         }
-        ("GET", "/v1/generate") => respond_error(&mut stream, 405, "use POST /v1/generate"),
-        _ => respond_error(&mut stream, 404, "unknown route"),
+        _ => {
+            row.note_err();
+            respond_error(&mut stream, 404, "unknown route");
+        }
+    }
+}
+
+/// Does this metrics request want the Prometheus text exposition instead
+/// of JSON? Either an explicit `?format=prometheus` or an `Accept` header
+/// preferring a text format.
+fn wants_prometheus(req: &Request, query: Option<&str>) -> bool {
+    if let Some(fmt) = query_param(query, "format") {
+        return fmt.eq_ignore_ascii_case("prometheus") || fmt.eq_ignore_ascii_case("text");
+    }
+    req.headers
+        .get("accept")
+        .is_some_and(|a| a.contains("text/plain") || a.contains("openmetrics"))
+}
+
+fn handle_metrics(mut stream: TcpStream, state: &ServerState, req: &Request, query: Option<&str>) {
+    if wants_prometheus(req, query) {
+        let mut ex = Exposition::new("pquant_");
+        for (name, engine) in &state.router.routes {
+            engine.metrics().render_prometheus(&mut ex, name);
+        }
+        state.stats.render_prometheus(&mut ex);
+        respond_text(
+            &mut stream,
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            &ex.render(),
+        );
+        return;
+    }
+    let mut per_engine: Vec<(&str, Json)> = state
+        .router
+        .routes
+        .iter()
+        .map(|(name, engine)| (name.as_str(), engine.metrics().to_json()))
+        .collect();
+    per_engine.push(("http", state.stats.to_json()));
+    respond_json(&mut stream, 200, &[], &obj(per_engine));
+}
+
+/// `GET /v1/trace/<id|latest|all>` — Chrome trace-event JSON for one
+/// completed request (or the engine's whole ring, `all`). 404s when the
+/// routed engine runs without tracing or the id has left the ring.
+fn handle_trace(
+    mut stream: TcpStream,
+    state: &ServerState,
+    path: &str,
+    query: Option<&str>,
+    stats: &RouteStats,
+) {
+    let selector = &path["/v1/trace/".len()..];
+    let Some(engine) = state.router.engine(query_param(query, "model")) else {
+        stats.note_err();
+        respond_error(&mut stream, 404, "no engine routed for that model");
+        return;
+    };
+    let Some(tr) = engine.metrics().trace() else {
+        stats.note_err();
+        respond_error(&mut stream, 404, "tracing is disabled on this engine (serve --trace)");
+        return;
+    };
+    let doc = match selector {
+        "all" => Some(tr.to_chrome_json()),
+        "latest" => tr.latest().map(|t| t.to_chrome_json(tr.epoch_unix_us())),
+        id => match id.parse::<u64>() {
+            Ok(id) => tr.find(id).map(|t| t.to_chrome_json(tr.epoch_unix_us())),
+            Err(_) => {
+                stats.note_err();
+                respond_error(&mut stream, 400, "trace id must be an integer, \"latest\", or \"all\"");
+                return;
+            }
+        },
+    };
+    match doc {
+        Some(j) => respond_json(&mut stream, 200, &[], &j),
+        None => {
+            stats.note_err();
+            respond_error(&mut stream, 404, "no completed trace under that id");
+        }
     }
 }
 
@@ -406,8 +618,9 @@ fn parse_generate(state: &ServerState, body: &[u8]) -> std::result::Result<Gener
     Ok(GenerateBody { model, req })
 }
 
-fn handle_generate(mut stream: TcpStream, state: &ServerState, req: &Request) {
+fn handle_generate(mut stream: TcpStream, state: &ServerState, req: &Request, stats: &RouteStats) {
     if state.stopping.load(Ordering::Acquire) {
+        stats.note_err();
         respond_error(&mut stream, 503, "server shutting down");
         return;
     }
@@ -416,17 +629,20 @@ fn handle_generate(mut stream: TcpStream, state: &ServerState, req: &Request) {
         .get("content-type")
         .map_or(true, |t| t.starts_with("application/json"))
     {
+        stats.note_err();
         respond_error(&mut stream, 400, "Content-Type must be application/json");
         return;
     }
     let parsed = match parse_generate(state, &req.body) {
         Ok(p) => p,
         Err(msg) => {
+            stats.note_err();
             respond_error(&mut stream, 400, &msg);
             return;
         }
     };
     let Some(engine) = state.router.engine(parsed.model.as_deref()) else {
+        stats.note_err();
         respond_error(
             &mut stream,
             404,
@@ -438,23 +654,28 @@ fn handle_generate(mut stream: TcpStream, state: &ServerState, req: &Request) {
         Ok(t) => t,
         Err(e @ SubmitError::QueueFull(..)) => {
             let ra = e.retry_after().unwrap_or(Duration::from_millis(25));
+            stats.note_err();
             respond_backpressure(&mut stream, 429, &e.to_string(), ra);
             return;
         }
         Err(e @ SubmitError::KvExhausted(..)) => {
             let ra = e.retry_after().unwrap_or(Duration::from_millis(25));
+            stats.note_err();
             respond_backpressure(&mut stream, 503, &e.to_string(), ra);
             return;
         }
         Err(e @ SubmitError::KvTooLarge(_)) => {
+            stats.note_err();
             respond_error(&mut stream, 413, &e.to_string());
             return;
         }
         Err(e @ SubmitError::DraftRejected(..)) => {
+            stats.note_err();
             respond_error(&mut stream, 400, &e.to_string());
             return;
         }
         Err(e @ SubmitError::ShuttingDown(_)) => {
+            stats.note_err();
             respond_error(&mut stream, 503, &e.to_string());
             return;
         }

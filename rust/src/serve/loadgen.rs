@@ -21,7 +21,10 @@
 //! targets, **goodput** (fraction of a tier's requests that completed
 //! within SLO), and overall 429/503 retry/reject rates — serialized to
 //! `results/bench/loadgen.json` by the `repro loadtest` subcommand and
-//! `benches/loadgen.rs`.
+//! `benches/loadgen.rs`. [`run_recorded`] additionally returns every
+//! request's [`RequestRecord`] (arrival, queue wait, TTFT, TPOT, tokens,
+//! tier, finish reason, retries), which `repro loadtest --out-jsonl PATH`
+//! writes one-JSON-object-per-line via [`write_jsonl`].
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -192,17 +195,90 @@ pub enum Target<'a> {
     Http(String),
 }
 
-/// Client-observed outcome of one request (after retries).
+/// Client-observed outcome of one request (after retries) — one line of
+/// the `--out-jsonl` per-request log.
 #[derive(Debug, Clone)]
-struct Outcome {
-    tier: usize,
-    completed: bool,
-    ttft_ms: Option<f64>,
-    tpot_ms: Option<f64>,
-    tokens: usize,
-    retries_429: usize,
-    retries_503: usize,
-    rejected: bool,
+pub struct RequestRecord {
+    /// Index in the generated trace (stable across runs of one seed).
+    pub index: usize,
+    /// Tier index into [`TraceConfig::tiers`].
+    pub tier: usize,
+    pub tier_name: String,
+    /// Scheduled arrival offset on the trace clock.
+    pub arrival_ms: f64,
+    /// Opened with the shared system prompt.
+    pub shared: bool,
+    /// Requested speculative decoding.
+    pub draft: bool,
+    pub completed: bool,
+    /// Terminal state: `length`/`stop`/`cancelled`/`failed`, `rejected`
+    /// when the retry budget ran out, `incomplete` when the stream closed
+    /// without a done frame.
+    pub finish: String,
+    /// Server-reported submit→admission wait (from the done frame).
+    pub queue_wait_ms: Option<f64>,
+    pub ttft_ms: Option<f64>,
+    pub tpot_ms: Option<f64>,
+    pub tokens: usize,
+    pub retries_429: usize,
+    pub retries_503: usize,
+    pub rejected: bool,
+}
+
+impl RequestRecord {
+    fn new(index: usize, ev: &TraceEvent, cfg: &TraceConfig) -> RequestRecord {
+        RequestRecord {
+            index,
+            tier: ev.tier,
+            tier_name: cfg.tiers[ev.tier].name.clone(),
+            arrival_ms: ev.at.as_secs_f64() * 1e3,
+            shared: ev.shared,
+            draft: ev.draft,
+            completed: false,
+            finish: String::new(),
+            queue_wait_ms: None,
+            ttft_ms: None,
+            tpot_ms: None,
+            tokens: 0,
+            retries_429: 0,
+            retries_503: 0,
+            rejected: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("index", num(self.index as f64)),
+            ("tier", s(&self.tier_name)),
+            ("arrival_ms", num(self.arrival_ms)),
+            ("shared", Json::Bool(self.shared)),
+            ("draft", Json::Bool(self.draft)),
+            ("completed", Json::Bool(self.completed)),
+            ("finish", s(&self.finish)),
+            ("queue_wait_ms", opt(self.queue_wait_ms)),
+            ("ttft_ms", opt(self.ttft_ms)),
+            ("tpot_ms", opt(self.tpot_ms)),
+            ("tokens", num(self.tokens as f64)),
+            ("retries_429", num(self.retries_429 as f64)),
+            ("retries_503", num(self.retries_503 as f64)),
+            ("rejected", Json::Bool(self.rejected)),
+        ])
+    }
+}
+
+/// Write per-request records as JSON Lines (one object per line),
+/// creating parent directories.
+pub fn write_jsonl(records: &[RequestRecord], path: &std::path::Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::with_capacity(records.len() * 160);
+    for r in records {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
 }
 
 /// Per-tier slice of the SLO report.
@@ -375,11 +451,19 @@ impl LoadReport {
 /// on its own thread (retry loop + stream consumption), mirroring
 /// independent clients.
 pub fn run(target: Target<'_>, cfg: &TraceConfig) -> Result<LoadReport> {
+    Ok(run_recorded(target, cfg)?.0)
+}
+
+/// [`run`], plus every request's [`RequestRecord`] in trace order.
+pub fn run_recorded(
+    target: Target<'_>,
+    cfg: &TraceConfig,
+) -> Result<(LoadReport, Vec<RequestRecord>)> {
     let trace = build_trace(cfg);
-    let outcomes: Mutex<Vec<Outcome>> = Mutex::new(Vec::with_capacity(trace.len()));
+    let outcomes: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(trace.len()));
     let t0 = Instant::now();
     std::thread::scope(|scope| {
-        for ev in &trace {
+        for (i, ev) in trace.iter().enumerate() {
             let wait = (t0 + ev.at).saturating_duration_since(Instant::now());
             if !wait.is_zero() {
                 std::thread::sleep(wait);
@@ -387,24 +471,29 @@ pub fn run(target: Target<'_>, cfg: &TraceConfig) -> Result<LoadReport> {
             let target = &target;
             let outcomes = &outcomes;
             scope.spawn(move || {
-                let outcome = match target {
-                    Target::Engine(engine) => run_one_engine(engine, ev, cfg),
-                    Target::Http(addr) => run_one_http(addr, ev, cfg),
+                let mut outcome = match target {
+                    Target::Engine(engine) => run_one_engine(engine, i, ev, cfg),
+                    Target::Http(addr) => run_one_http(addr, i, ev, cfg),
                 };
+                if outcome.finish.is_empty() {
+                    outcome.finish =
+                        if outcome.rejected { "rejected" } else { "incomplete" }.to_string();
+                }
                 outcomes.lock().unwrap().push(outcome);
             });
         }
     });
     let wall = t0.elapsed();
-    let outcomes = outcomes.into_inner().unwrap();
-    let mut report = summarize(cfg, &outcomes, wall);
+    let mut records = outcomes.into_inner().unwrap();
+    records.sort_by_key(|r| r.index);
+    let mut report = summarize(cfg, &records, wall);
     // Snapshot server-side KV pressure after the last request drains, so
     // peaks cover the whole replay.
     report.kv = match &target {
         Target::Engine(engine) => engine.kv_pool().map(|p| KvReport::from_stats(&p.stats())),
         Target::Http(addr) => fetch_http_kv(addr),
     };
-    Ok(report)
+    Ok((report, records))
 }
 
 /// GET /v1/metrics from the serving endpoint and lift out the `kv`
@@ -440,10 +529,10 @@ fn fetch_http_kv(addr: &str) -> Option<KvReport> {
     }
 }
 
-fn summarize(cfg: &TraceConfig, outcomes: &[Outcome], wall: Duration) -> LoadReport {
+fn summarize(cfg: &TraceConfig, outcomes: &[RequestRecord], wall: Duration) -> LoadReport {
     let mut tiers = Vec::with_capacity(cfg.tiers.len());
     for (i, tier) in cfg.tiers.iter().enumerate() {
-        let of_tier: Vec<&Outcome> = outcomes.iter().filter(|o| o.tier == i).collect();
+        let of_tier: Vec<&RequestRecord> = outcomes.iter().filter(|o| o.tier == i).collect();
         let ttft: Vec<f64> = of_tier.iter().filter_map(|o| o.ttft_ms).collect();
         let tpot: Vec<f64> = of_tier.iter().filter_map(|o| o.tpot_ms).collect();
         let slo_met = of_tier
@@ -497,17 +586,8 @@ fn request_for(ev: &TraceEvent, cfg: &TraceConfig) -> GenRequest {
 /// promptly even when the engine suggests a long back-off.
 const RETRY_SLEEP_CAP: Duration = Duration::from_millis(100);
 
-fn run_one_engine(engine: &Engine, ev: &TraceEvent, cfg: &TraceConfig) -> Outcome {
-    let mut out = Outcome {
-        tier: ev.tier,
-        completed: false,
-        ttft_ms: None,
-        tpot_ms: None,
-        tokens: 0,
-        retries_429: 0,
-        retries_503: 0,
-        rejected: false,
-    };
+fn run_one_engine(engine: &Engine, index: usize, ev: &TraceEvent, cfg: &TraceConfig) -> RequestRecord {
+    let mut out = RequestRecord::new(index, ev, cfg);
     let submit_t0 = Instant::now();
     let mut req = request_for(ev, cfg);
     let ticket = loop {
@@ -548,6 +628,14 @@ fn run_one_engine(engine: &Engine, ev: &TraceEvent, cfg: &TraceConfig) -> Outcom
             }
             Some(Event::Done(stats)) => {
                 out.completed = matches!(stats.finish, FinishReason::Length | FinishReason::Stop);
+                out.finish = match stats.finish {
+                    FinishReason::Length => "length",
+                    FinishReason::Stop => "stop",
+                    FinishReason::Cancelled => "cancelled",
+                    FinishReason::Failed => "failed",
+                }
+                .to_string();
+                out.queue_wait_ms = Some(stats.queue_wait.as_secs_f64() * 1e3);
                 break;
             }
             None => break,
@@ -558,7 +646,7 @@ fn run_one_engine(engine: &Engine, ev: &TraceEvent, cfg: &TraceConfig) -> Outcom
 }
 
 fn finish_timing(
-    out: &mut Outcome,
+    out: &mut RequestRecord,
     submit_t0: Instant,
     first_tok: Option<Instant>,
     last_tok: Option<Instant>,
@@ -595,7 +683,7 @@ fn http_attempt(
     addr: &str,
     body: &str,
     submit_t0: Instant,
-    out: &mut Outcome,
+    out: &mut RequestRecord,
 ) -> Result<(u16, Option<Duration>)> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
@@ -665,6 +753,8 @@ fn http_attempt(
                     let j = Json::parse(data)?;
                     let finish = j.get("finish")?.as_str()?.to_string();
                     out.completed = finish == "length" || finish == "stop";
+                    out.queue_wait_ms = j.opt("queue_wait_ms").and_then(|v| v.as_f64().ok());
+                    out.finish = finish;
                 }
                 _ => {}
             }
@@ -674,17 +764,8 @@ fn http_attempt(
     Ok((200, None))
 }
 
-fn run_one_http(addr: &str, ev: &TraceEvent, cfg: &TraceConfig) -> Outcome {
-    let mut out = Outcome {
-        tier: ev.tier,
-        completed: false,
-        ttft_ms: None,
-        tpot_ms: None,
-        tokens: 0,
-        retries_429: 0,
-        retries_503: 0,
-        rejected: false,
-    };
+fn run_one_http(addr: &str, index: usize, ev: &TraceEvent, cfg: &TraceConfig) -> RequestRecord {
+    let mut out = RequestRecord::new(index, ev, cfg);
     let body = body_for(ev, cfg);
     let submit_t0 = Instant::now();
     loop {

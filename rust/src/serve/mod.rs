@@ -37,7 +37,14 @@
 //!     system prompts, priority tiers, a draft-enabled fraction — against
 //!     the in-process engine or the HTTP endpoint and reports SLO
 //!     attainment (TTFT/TPOT percentiles vs. per-tier targets, goodput,
-//!     429/503 rates)
+//!     429/503 rates), with optional per-request JSONL records
+//!     ([`loadgen::run_recorded`])
+//!
+//! Observability ([`crate::obs`]) threads through all of it: engine
+//! latency/occupancy metrics land in lock-free histograms and the
+//! [`crate::obs::Registry`], `GET /v1/metrics` content-negotiates JSON vs
+//! Prometheus text, and [`EngineOptions::trace`] turns on per-request span
+//! recording served as Chrome trace-event JSON under `GET /v1/trace/<id>`.
 //!
 //! [`load_test`] survives as a thin convenience shim over an ephemeral
 //! `Engine` for the throughput experiments.
@@ -54,8 +61,8 @@ pub use engine::{
 };
 pub use http::{HttpServer, Router};
 pub use loadgen::{
-    build_trace, KvReport, LoadReport, SloTargets, Target, Tier, TierReport, TraceConfig,
-    TraceEvent,
+    build_trace, KvReport, LoadReport, RequestRecord, SloTargets, Target, Tier, TierReport,
+    TraceConfig, TraceEvent,
 };
 pub use registry::{Lease, ModelEntry, ModelInfo, ModelRegistry, SwapReport};
 pub use spec::{SpecDecoder, SpecParams, SpecStats};

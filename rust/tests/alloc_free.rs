@@ -4,6 +4,9 @@
 //! speculative draft → verify → rollback round must stay allocation-free
 //! too (ISSUE 5): proposals reuse the run/catch-up buffers, and rollback
 //! recycles truncated KV blocks through the pool instead of freeing them.
+//! The observability record path rides the same window (ISSUE 8): with
+//! tracing disabled the engine's per-step metric writes are histogram
+//! records and counter adds, and both must be lock- and allocation-free.
 //! Verified with a counting global allocator; the kernel thread pool is
 //! capped at one thread so scoped-thread spawning (a property of the
 //! threading substrate, not of the decode path) doesn't obscure the
@@ -19,6 +22,7 @@ use std::sync::Arc;
 use pquant::config::{ModelConfig, Variant};
 use pquant::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
 use pquant::kvcache::{BlockPool, KvPoolOptions};
+use pquant::obs::{Histogram, Registry};
 use pquant::serve::SpecDecoder;
 
 struct Counting;
@@ -106,18 +110,29 @@ fn steady_state_batched_decode_is_allocation_free() {
     }
     let _ = scratch.take_grew(); // drain the warmup growth flag
 
+    // The engine's per-step metric writes with tracing disabled: histogram
+    // records + counter adds. Construction allocates (bucket array, name
+    // interning), so both live outside the measured window.
+    let hist = Histogram::new();
+    let reg = Registry::new();
+    let ctr = reg.counter_with("alloc_free_steps_total", &[("phase", "window")], "test counter");
+
     let before = ALLOCS.load(Ordering::SeqCst);
     for pos in 48..56 {
         step_once(&mut model, &mut caches, &mut scratch, pos);
+        hist.record(pos as f64 * 0.37);
+        ctr.add(1);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "steady-state fused decode allocated {} times in 8 steps",
+        "steady-state fused decode (+ metric writes) allocated {} times in 8 steps",
         after - before
     );
     assert!(!scratch.take_grew(), "scratch must not have grown in the window");
+    assert_eq!(hist.count(), 8);
+    assert_eq!(ctr.get(), 8);
 
     // ---- speculative draft → verify → rollback loop (ISSUE 5) ----
     // A mismatched draft makes rejection (and therefore KV rollback) the

@@ -1,0 +1,400 @@
+//! Integration tests for the observability core (ISSUE 8): histogram
+//! quantiles property-tested against the exact nearest-rank sort, the
+//! trace completeness invariant (every ticketed request lands exactly one
+//! terminal span, with correct reason codes, across normal / zero-budget /
+//! cancelled / preempted paths), and the HTTP surface — `/v1/metrics`
+//! content negotiation (JSON vs Prometheus text) and the `/v1/trace/<id>`
+//! Chrome trace-event round-trip.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::kvcache::KvPoolOptions;
+use pquant::obs::hist::REL_ERROR;
+use pquant::obs::prom::parse_text;
+use pquant::obs::trace::validate_chrome_json;
+use pquant::obs::{Histogram, SpanKind};
+use pquant::serve::{
+    Engine, EngineOptions, Event, FinishReason, GenRequest, HttpServer, ModelRegistry,
+    Percentiles, Router, SubmitError, Ticket,
+};
+use pquant::util::json::Json;
+use pquant::util::prop::check;
+use pquant::util::rng::Rng;
+
+fn nano_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: 16,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+fn registry_with(name: &str, model: PackedModel) -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register(name, model, None);
+    registry
+}
+
+/// Submit, absorbing KvExhausted/QueueFull backpressure (bounded by a
+/// timeout so a bug fails the test instead of hanging it).
+fn submit_blocking(engine: &Engine, mut req: GenRequest) -> Ticket {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match engine.submit(req) {
+            Ok(t) => return t,
+            Err(SubmitError::KvExhausted(r, _)) | Err(SubmitError::QueueFull(r, _)) => {
+                assert!(Instant::now() < deadline, "admission never drained");
+                req = r;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+}
+
+// ----------------------------------------------- histogram vs exact sort
+
+#[test]
+fn prop_histogram_quantiles_match_exact_percentiles() {
+    // Across sample counts, scales, and distribution shapes (uniform,
+    // low-skewed, heavy-tailed), the log-bucketed histogram's nearest-rank
+    // quantile must sit within the documented bucket-width bound of the
+    // exact sorted nearest-rank value computed from the same samples.
+    check(
+        0x0B5,
+        40,
+        |r| {
+            let shape = r.below(3);
+            let scale = [0.25f64, 3.0, 250.0, 12_000.0][r.below(4)];
+            let n = 50 + r.below(1500);
+            (shape, scale, n, r.next_u64())
+        },
+        |&(shape, scale, n, seed)| {
+            let mut rng = Rng::new(seed);
+            let h = Histogram::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                let x = rng.f64();
+                let v = match shape {
+                    0 => x * scale,
+                    1 => x * x * scale, // skewed toward zero
+                    _ => scale / (1.0 - x).max(1e-4), // heavy tail
+                };
+                h.record(v);
+                samples.push(v);
+            }
+            if h.count() != n as u64 {
+                return Err(format!("count {} != {n}", h.count()));
+            }
+            let exact = Percentiles::of(&samples);
+            let est = Percentiles::of_histogram(&h);
+            for (q, e, v) in [
+                (50, exact.p50, est.p50),
+                (95, exact.p95, est.p95),
+                (99, exact.p99, est.p99),
+            ] {
+                // Bucket midpoint is within half a bucket width (REL_ERROR
+                // relative) of the rank sample, plus fixed-point rounding.
+                let tol = e * 2.0 * REL_ERROR + 4.0 / 1024.0;
+                if (v - e).abs() > tol {
+                    return Err(format!("p{q}: histogram {v} vs exact {e} (tol {tol})"));
+                }
+            }
+            let mean = samples.iter().sum::<f64>() / n as f64;
+            let mean_tol = 0.001 + mean.abs() * 1e-9;
+            if (h.mean() - mean).abs() > mean_tol {
+                return Err(format!("mean {} vs exact {mean}", h.mean()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------- trace completeness invariant
+
+#[test]
+fn every_ticketed_request_lands_exactly_one_terminal_span() {
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("obs-trace"), 11));
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            trace: true,
+            kv: Some(KvPoolOptions { n_blocks: 256, block_size: 16, ..Default::default() }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+
+    // (id, terminal reason code, token count) per ticketed request.
+    let mut expected: Vec<(u64, u64, u64)> = Vec::new();
+    // Three plain completions (reason 1 = length).
+    for i in 0..3u32 {
+        let t = engine.submit(GenRequest::greedy(vec![1 + i, 2, 3], 5)).unwrap();
+        let id = t.id;
+        let stats = t.wait();
+        assert_eq!(stats.finish, FinishReason::Length);
+        expected.push((id, 1, stats.tokens.len() as u64));
+    }
+    // Zero-budget completes at admission and must still trace.
+    let t = engine.submit(GenRequest::greedy(vec![4, 5], 0)).unwrap();
+    let id = t.id;
+    assert_eq!(t.wait().finish, FinishReason::Length);
+    expected.push((id, 1, 0));
+    // Cancelled mid-decode (reason 2).
+    let t = engine.submit(GenRequest::greedy(vec![6, 7, 8, 9], 600)).unwrap();
+    let id = t.id;
+    loop {
+        match t.recv().expect("stream open") {
+            Event::Token(_) => break,
+            _ => {}
+        }
+    }
+    t.cancel();
+    let stats = t.wait();
+    assert_eq!(stats.finish, FinishReason::Cancelled);
+    expected.push((id, 2, stats.tokens.len() as u64));
+
+    let metrics = engine.shutdown();
+    let tr = metrics.trace().expect("engine started with trace: true");
+    assert_eq!(tr.completed_count(), expected.len());
+    assert_eq!(tr.dropped_traces(), 0);
+    for (id, reason, tokens) in &expected {
+        let trace = tr.find(*id).unwrap_or_else(|| panic!("no trace for request {id}"));
+        let terminals =
+            trace.spans.iter().filter(|sp| sp.kind == SpanKind::Terminal).count();
+        assert_eq!(terminals, 1, "request {id} must land exactly one terminal span");
+        let term = trace.terminal().unwrap();
+        assert_eq!(term.a, *reason, "request {id} terminal reason code");
+        assert_eq!(term.b, *tokens, "request {id} terminal token count");
+        assert_eq!(trace.spans.first().unwrap().kind, SpanKind::Submit);
+        assert_eq!(trace.spans.last().unwrap().kind, SpanKind::Terminal);
+        assert!(trace.spans.iter().all(|sp| sp.t1_us >= sp.t0_us));
+    }
+    // The whole ring exports as structurally valid Chrome trace JSON with
+    // per-tid monotone timestamps and one terminal per request.
+    let summary = validate_chrome_json(&tr.to_chrome_json())
+        .expect("trace ring must export valid Chrome trace-event JSON");
+    assert_eq!(summary.terminals, expected.len());
+    assert!(summary.events > expected.len());
+}
+
+#[test]
+fn rejected_submissions_leave_no_trace_behind() {
+    // A request the pool can never fit fails at submit with KvTooLarge —
+    // no ticket, so the completeness invariant demands no trace either.
+    let registry = registry_with("m", PackedModel::random(&nano_cfg("obs-reject"), 13));
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            trace: true,
+            kv: Some(KvPoolOptions { n_blocks: 4, block_size: 8, ..Default::default() }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    match engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 1000)) {
+        Err(SubmitError::KvTooLarge(_)) => {}
+        other => {
+            panic!("expected KvTooLarge, got {:?}", other.map(|_| ()).map_err(|e| e.to_string()))
+        }
+    }
+    let stats = engine.submit(GenRequest::greedy(vec![1, 2], 4)).unwrap().wait();
+    assert_eq!(stats.tokens.len(), 4);
+    let metrics = engine.shutdown();
+    let tr = metrics.trace().unwrap();
+    assert_eq!(tr.completed_count(), 1, "only the admitted request traces");
+}
+
+#[test]
+fn preempted_request_traces_preempt_resume_and_one_terminal() {
+    // Mirror of the kvcache preemption test, with tracing on: the pool
+    // fits exactly one long request (4 + 400 tokens over 8-token blocks
+    // -> 51 logical x 2 layers = 102 blocks), so the high-priority
+    // submission must preempt the low one.
+    let model = PackedModel::random(&nano_cfg("obs-preempt"), 9);
+    let registry = registry_with("m", model);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            trace: true,
+            kv: Some(KvPoolOptions { n_blocks: 102, block_size: 8, ..Default::default() }),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    let low = engine.submit(GenRequest::greedy(vec![1, 2, 3, 4], 400)).unwrap();
+    let low_id = low.id;
+    loop {
+        match low.recv().expect("stream open") {
+            Event::Token(_) => break,
+            _ => {}
+        }
+    }
+    let high_req = GenRequest::greedy(vec![9, 8, 7, 6], 400).with_priority(5);
+    let high = match engine.submit(high_req) {
+        Err(SubmitError::KvExhausted(req, _)) => submit_blocking(&engine, req),
+        Ok(t) => t,
+        Err(e) => panic!("unexpected submit error: {e}"),
+    };
+    let high_id = high.id;
+    assert_eq!(high.wait().finish, FinishReason::Length);
+    assert_eq!(low.wait().finish, FinishReason::Length);
+
+    let metrics = engine.shutdown();
+    let tr = metrics.trace().unwrap();
+    assert_eq!(tr.completed_count(), 2);
+    for id in [low_id, high_id] {
+        let trace = tr.find(id).unwrap_or_else(|| panic!("no trace for request {id}"));
+        let terminals =
+            trace.spans.iter().filter(|sp| sp.kind == SpanKind::Terminal).count();
+        assert_eq!(terminals, 1, "request {id} must land exactly one terminal span");
+        assert_eq!(trace.terminal().unwrap().a, 1, "both finish by length");
+    }
+    // The preempted request's trace records the preempt and the resume.
+    let low_trace = tr.find(low_id).unwrap();
+    let kinds: Vec<SpanKind> = low_trace.spans.iter().map(|sp| sp.kind).collect();
+    assert!(kinds.contains(&SpanKind::Preempt), "low request must trace a Preempt: {kinds:?}");
+    assert!(kinds.contains(&SpanKind::Resume), "low request must trace a Resume: {kinds:?}");
+    let summary = validate_chrome_json(&tr.to_chrome_json()).expect("valid Chrome JSON");
+    assert_eq!(summary.terminals, 2);
+}
+
+// ---------------------------------------------------------- HTTP surface
+
+/// One-shot GET: (status, content-type, body-to-EOF).
+fn get(addr: SocketAddr, path: &str, accept: Option<&str>) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let accept_line = accept.map(|a| format!("Accept: {a}\r\n")).unwrap_or_default();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n{accept_line}Connection: close\r\n\r\n")
+        .unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("response has a header block");
+    let mut lines = head.lines();
+    let status: u16 = lines.next().unwrap().split_whitespace().nth(1).unwrap().parse().unwrap();
+    let content_type = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-type"))
+        .map(|(_, v)| v.trim().to_string())
+        .unwrap_or_default();
+    (status, content_type, body.to_string())
+}
+
+fn post_generate(addr: SocketAddr, body: &str) -> u16 {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST /v1/generate HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    raw.split_whitespace().nth(1).unwrap().parse().unwrap()
+}
+
+#[test]
+fn metrics_negotiation_and_trace_route_round_trip() {
+    // Two engines behind one router: "m" traced, "plain" not — the trace
+    // route must serve the former and 404 the latter.
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", PackedModel::random(&nano_cfg("obs-http"), 17), None);
+    registry.register("plain", PackedModel::random(&nano_cfg("obs-plain"), 19), None);
+    let traced = Arc::new(
+        Engine::start(
+            &registry,
+            EngineOptions { model: "m".into(), trace: true, ..EngineOptions::default() },
+        )
+        .unwrap(),
+    );
+    let plain = Arc::new(
+        Engine::start(
+            &registry,
+            EngineOptions { model: "plain".into(), ..EngineOptions::default() },
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        Router::new(registry).route("m", traced.clone()).route("plain", plain),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // One completed request on the traced engine gives the scrape and the
+    // trace ring something to report.
+    assert_eq!(post_generate(addr, r#"{"prompt": [5, 9, 2], "n_new": 8, "model": "m"}"#), 200);
+
+    // Default (no Accept header) stays JSON, keyed per routed engine plus
+    // the front end's own "http" block.
+    let (status, ctype, body) = get(addr, "/v1/metrics", None);
+    assert_eq!(status, 200);
+    assert!(ctype.starts_with("application/json"), "got {ctype}");
+    let j = Json::parse(&body).unwrap();
+    let m = j.get("m").unwrap();
+    assert_eq!(m.get("completed").unwrap().as_usize().unwrap(), 1);
+    assert!(m.get("uptime_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(m.get("started_unix_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("plain").is_ok());
+    let gen_row = j.get("http").unwrap().get("generate").unwrap();
+    assert!(gen_row.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+
+    // ?format=prometheus switches to the text exposition; so does an
+    // Accept header asking for text/plain.
+    let (status, ctype, text) = get(addr, "/v1/metrics?format=prometheus", None);
+    assert_eq!(status, 200);
+    assert!(ctype.starts_with("text/plain"), "got {ctype}");
+    let samples = parse_text(&text).expect("exposition must parse");
+    let completed = samples
+        .iter()
+        .find(|s| s.name == "pquant_requests_completed_total" && s.label("model") == Some("m"))
+        .expect("per-model completed counter present");
+    assert!(completed.value >= 1.0);
+    assert!(samples
+        .iter()
+        .any(|s| s.name == "pquant_http_requests_total"
+            && s.label("route") == Some("generate")
+            && s.value >= 1.0));
+    let (status, ctype, via_accept) = get(addr, "/v1/metrics", Some("text/plain"));
+    assert_eq!(status, 200);
+    assert!(ctype.starts_with("text/plain"), "got {ctype}");
+    assert!(parse_text(&via_accept).is_ok());
+
+    // Trace round-trip: latest / all are Perfetto-loadable Chrome JSON
+    // with exactly the one completed terminal.
+    for path in ["/v1/trace/latest", "/v1/trace/all"] {
+        let (status, ctype, body) = get(addr, path, None);
+        assert_eq!(status, 200, "{path}");
+        assert!(ctype.starts_with("application/json"));
+        let summary = validate_chrome_json(&Json::parse(&body).unwrap())
+            .unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(summary.terminals, 1, "{path}");
+    }
+    // Unknown id -> 404, garbage selector -> 400, untraced engine -> 404.
+    assert_eq!(get(addr, "/v1/trace/999999999", None).0, 404);
+    assert_eq!(get(addr, "/v1/trace/bogus", None).0, 400);
+    assert_eq!(get(addr, "/v1/trace/latest?model=plain", None).0, 404);
+
+    server.shutdown();
+}

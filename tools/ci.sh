@@ -41,6 +41,27 @@ cargo bench --bench loadgen
 echo "==> bench lane: KV capacity f32 vs int8 → results/bench/kvcache.json"
 cargo bench --bench kvcache
 
+echo "==> bench lane: tracing overhead ratio → results/bench/obs.json"
+cargo bench --bench obs
+
+echo "==> obs lane: serve --trace-out + loadtest --out-jsonl + obs-check round-trip"
+OBS_DIR="$(mktemp -d)"
+trap 'rm -rf "$OBS_DIR"' EXIT
+OBS_ADDR=127.0.0.1:8737
+./target/release/repro export smoke "$OBS_DIR/smoke.pqm" --random 1
+./target/release/repro serve --model "$OBS_DIR/smoke.pqm" --http "$OBS_ADDR" \
+    --duration 12 --trace-out "$OBS_DIR/trace.json" &
+OBS_SERVE_PID=$!
+sleep 1
+./target/release/repro loadtest --http "$OBS_ADDR" --requests 32 --rate 100 --seed 7 \
+    --out "$OBS_DIR/load.json" --out-jsonl "$OBS_DIR/load.jsonl"
+test -s "$OBS_DIR/load.jsonl"
+# Live round-trip: JSON vs Prometheus metrics cross-check + /v1/trace/latest.
+./target/release/repro obs-check --http "$OBS_ADDR"
+wait "$OBS_SERVE_PID"
+# Post-run: the --trace-out ring must be valid Chrome trace JSON with terminals.
+./target/release/repro obs-check --trace "$OBS_DIR/trace.json"
+
 echo "==> style: cargo fmt --check"
 cargo fmt --check
 
