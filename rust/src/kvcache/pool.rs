@@ -1043,6 +1043,12 @@ impl BlockPool {
     }
 
     fn reserve_locked(&self, st: &mut PoolState, need: usize) -> Result<(), KvError> {
+        // Chaos hook: a simulated allocation failure takes the same typed
+        // OutOfBlocks exit real exhaustion does (no charge was made yet).
+        // Guarded on `need > 0` so zero-cost reservations stay infallible.
+        if need > 0 && crate::failpoint!("kv.reserve") {
+            return Err(KvError::OutOfBlocks { needed: need, available: st.available });
+        }
         if st.available < need {
             self.shed_entries_locked(st, need, None);
         }

@@ -43,6 +43,17 @@ pub(crate) struct SpillTier {
 impl SpillTier {
     pub(crate) fn new(dir: &Path) -> std::io::Result<SpillTier> {
         std::fs::create_dir_all(dir)?;
+        // Crash recovery: a `.tmp` is a write that never reached its
+        // rename (see `write_entry`), so no pool bookkeeping references
+        // it — sweep the orphans rather than let them accumulate.
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.extension().is_some_and(|x| x == "tmp") {
+                    std::fs::remove_file(&p).ok();
+                }
+            }
+        }
         Ok(SpillTier { dir: dir.to_path_buf(), counter: AtomicU64::new(0) })
     }
 
@@ -87,9 +98,18 @@ impl SpillTier {
             }
         }
         let bytes = save_container(&payloads);
+        if crate::failpoint!("spill.write") {
+            bail!("failpoint spill.write: injected spill I/O error");
+        }
         let n = self.counter.fetch_add(1, Ordering::Relaxed);
         let path = self.dir.join(format!("kv-{:x}-{:x}-{n}.pqm", tag.0, tag.1));
-        std::fs::write(&path, &bytes).with_context(|| format!("writing spill file {path:?}"))?;
+        // Write-then-rename so a crash mid-write never leaves a torn
+        // `.pqm` behind: the file is visible under its final name only
+        // once complete. Orphaned `.tmp`s are swept at the next startup.
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing spill file {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming spill file {tmp:?} into place"))?;
         Ok((path, bytes.len() as u64))
     }
 
@@ -103,6 +123,9 @@ impl SpillTier {
         block_size: usize,
         d: usize,
     ) -> Result<Vec<Vec<Arc<SharedBlock>>>> {
+        if crate::failpoint!("spill.read") {
+            bail!("failpoint spill.read: injected spill I/O error");
+        }
         let bytes = std::fs::read(path).with_context(|| format!("reading spill file {path:?}"))?;
         let sections = read_container(&bytes)?;
         let meta_sec = sections
@@ -256,6 +279,14 @@ fn decode_block(
 mod tests {
     use super::*;
 
+    /// The failpoint registry is process-global, so the test that arms
+    /// `spill.*` must not overlap the tests doing real writes/reads.
+    static SPILL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn spill_lock() -> std::sync::MutexGuard<'static, ()> {
+        SPILL_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     fn block(mode: KvStorageMode, bs: usize, d: usize, filled: usize, seed: f32) -> SharedBlock {
         let mut data = KvData::alloc(mode, bs, d);
         for r in 0..filled {
@@ -285,6 +316,7 @@ mod tests {
 
     #[test]
     fn spill_round_trip_is_bit_identical_per_mode() {
+        let _g = spill_lock();
         let dir = std::env::temp_dir().join(format!("pquant-spill-test-{}", std::process::id()));
         for mode in [KvStorageMode::F32, KvStorageMode::Int8] {
             let tier = SpillTier::new(&dir).unwrap();
@@ -327,6 +359,74 @@ mod tests {
             assert!(tier.read_entry(&path, tag, mode, bs, d).is_err());
             std::fs::remove_file(&path).ok();
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn successful_writes_leave_no_tmp_behind() {
+        let _g = spill_lock();
+        let dir = std::env::temp_dir()
+            .join(format!("pquant-spill-tmp-clean-{}", std::process::id()));
+        let tier = SpillTier::new(&dir).unwrap();
+        let (bs, d) = (8, 4);
+        let layers: Vec<Vec<Arc<SharedBlock>>> =
+            vec![vec![Arc::new(block(KvStorageMode::F32, bs, d, bs, 1.0))]];
+        let (path, _) = tier
+            .write_entry(&[1, 2], PrefixTag(1, 2), bs, KvStorageMode::F32, bs, d, &layers)
+            .unwrap();
+        assert!(path.exists());
+        let tmps: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(tmps.is_empty(), "rename must consume the staging file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn startup_sweeps_orphaned_tmp_files_only() {
+        let dir = std::env::temp_dir()
+            .join(format!("pquant-spill-tmp-sweep-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // A crash mid-write leaves a staging file; a completed entry does
+        // not. Only the former may be swept.
+        let orphan = dir.join("kv-3-7-0.tmp");
+        let entry = dir.join("kv-3-7-1.pqm");
+        std::fs::write(&orphan, b"torn half-entry").unwrap();
+        std::fs::write(&entry, b"complete entry").unwrap();
+        let _tier = SpillTier::new(&dir).unwrap();
+        assert!(!orphan.exists(), "orphaned .tmp swept at startup");
+        assert!(entry.exists(), "completed entries are untouched");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn armed_spill_failpoints_inject_io_errors() {
+        let _g = spill_lock();
+        let dir = std::env::temp_dir()
+            .join(format!("pquant-spill-failpoint-{}", std::process::id()));
+        let tier = SpillTier::new(&dir).unwrap();
+        let (bs, d) = (8, 4);
+        let layers: Vec<Vec<Arc<SharedBlock>>> =
+            vec![vec![Arc::new(block(KvStorageMode::F32, bs, d, bs, 2.0))]];
+        crate::util::failpoint::arm("spill.write", 1.0, 9);
+        let failed = tier
+            .write_entry(&[5, 6], PrefixTag(5, 6), bs, KvStorageMode::F32, bs, d, &layers)
+            .is_err();
+        crate::util::failpoint::disarm("spill.write");
+        assert!(failed, "armed spill.write fails the write");
+        let (path, _) = tier
+            .write_entry(&[5, 6], PrefixTag(5, 6), bs, KvStorageMode::F32, bs, d, &layers)
+            .unwrap();
+        crate::util::failpoint::arm("spill.read", 1.0, 9);
+        let read_failed = tier.read_entry(&path, PrefixTag(5, 6), KvStorageMode::F32, bs, d);
+        crate::util::failpoint::disarm("spill.read");
+        assert!(read_failed.is_err(), "armed spill.read fails the fault-back");
+        assert!(
+            tier.read_entry(&path, PrefixTag(5, 6), KvStorageMode::F32, bs, d).is_ok(),
+            "disarmed read recovers"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -110,8 +110,12 @@ USAGE:
                                                     GET /v1/metrics (JSON, or Prometheus text
                                                     via Accept/?format=prometheus),
                                                     GET /v1/trace/<id|latest|all>,
-                                                    GET /v1/models
+                                                    GET /v1/models,
+                                                    GET /v1/health (200 ready / 503 not)
                                                     (0 duration: serve until killed)
+              [--stall-budget-ms N]                 fused rounds longer than this mark the
+                                                    engine degraded in /v1/health (default
+                                                    5000)
               [--trace] [--trace-out P.json]        per-request span tracing (Chrome
                                                     trace-event JSON; --trace-out writes the
                                                     ring when the run ends and implies --trace)
@@ -126,7 +130,8 @@ USAGE:
               (engine flags as for serve; --http drives a live endpoint instead)
   repro obs-check [--http ADDR] [--trace P.json]    observability self-check: scrape
                                                     /v1/metrics in JSON + Prometheus text and
-                                                    cross-check them, validate /v1/trace/latest
+                                                    cross-check them, require /v1/health to
+                                                    report ready, validate /v1/trace/latest
                                                     and/or a trace file as Chrome trace JSON
   repro sensitivity --config C [--checkpoint P]
   repro list-configs
@@ -335,6 +340,8 @@ fn build_serve_stack(args: &Args) -> Result<ServeStack> {
         } else {
             pquant::infer::TimingMode::Off
         },
+        stall_budget: std::time::Duration::from_millis(args.flag("stall-budget-ms", 5000u64)?),
+        ..EngineOptions::default()
     };
     // All serving flows through the registry: load (from .pqm or a live
     // TrainState), register under a name, start the engine against it.
@@ -389,6 +396,7 @@ fn serve_http(args: &Args, stack: ServeStack, addr: &str) -> Result<()> {
     println!("  POST /v1/generate   (SSE stream; body: {{\"prompt\": [..], \"n_new\": N, ...}})");
     println!("  GET  /v1/metrics    (JSON; Prometheus text via ?format=prometheus)");
     println!("  GET  /v1/models     GET  /v1/trace/<id|latest|all>");
+    println!("  GET  /v1/health     (200 while ready; 503 degraded/draining, with reason)");
     let duration = args.flag("duration", 0u64)?;
     if duration > 0 {
         std::thread::sleep(std::time::Duration::from_secs(duration));
@@ -399,13 +407,17 @@ fn serve_http(args: &Args, stack: ServeStack, addr: &str) -> Result<()> {
         }
     }
     server.shutdown();
+    let health = engine.health();
     let metrics = engine.metrics().clone();
     let tp = metrics.tpot_percentiles();
     println!(
-        "served: {} completed, {} cancelled, {} tokens out | tpot ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+        "served: {} completed, {} cancelled, {} tokens out, {} worker faults | health {} | \
+         tpot ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
         metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
         metrics.cancelled.load(std::sync::atomic::Ordering::Relaxed),
         metrics.tokens_out.load(std::sync::atomic::Ordering::Relaxed),
+        metrics.worker_faults.load(std::sync::atomic::Ordering::Relaxed),
+        health.name(),
         tp.p50,
         tp.p95,
         tp.p99
@@ -781,6 +793,18 @@ fn cmd_obs_check(args: &Args) -> Result<()> {
             "{addr}: metrics round-trip ok ({} prometheus samples, {checked} engines cross-checked)",
             samples.len()
         );
+        // Health: an idle endpoint under obs-check must report ready with
+        // a 200 — anything else means a worker died or pressure never
+        // cleared, which the smoke lane should fail loudly on.
+        let (code, body) = http_get(addr, "/v1/health", None)?;
+        if code != 200 {
+            bail!("GET /v1/health returned {code} (body: {})", body.trim());
+        }
+        let h = Json::parse(body.trim()).context("health response")?;
+        match h.opt("status").and_then(|v| v.as_str().ok()) {
+            Some(s) if s == "ready" => println!("{addr}: health ready"),
+            other => bail!("GET /v1/health status {:?}, expected \"ready\"", other),
+        }
         let (code, body) = http_get(addr, "/v1/trace/latest", None)?;
         if code == 200 {
             let j = Json::parse(body.trim()).context("trace/latest response")?;

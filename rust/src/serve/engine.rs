@@ -47,7 +47,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -115,6 +115,12 @@ pub struct GenRequest {
     /// share map on recency alone. `None` (the default) sheds purely by
     /// usage-weighted LRU.
     pub kv_deadline: Option<Duration>,
+    /// End-to-end deadline, measured from submission. An expired request
+    /// is shed from the admission queue before it ever decodes, and an
+    /// in-flight one finishes with [`FinishReason::DeadlineExceeded`] at
+    /// the next scheduling slice — slots and KV blocks free either way.
+    /// `None` (the default) never expires.
+    pub deadline: Option<Duration>,
 }
 
 impl GenRequest {
@@ -127,11 +133,20 @@ impl GenRequest {
             priority: 0,
             spec: None,
             kv_deadline: None,
+            deadline: None,
         }
     }
 
     pub fn sampled(prompt: Vec<u32>, n_new: usize, sampling: SamplingParams) -> GenRequest {
-        GenRequest { prompt, n_new, sampling, priority: 0, spec: None, kv_deadline: None }
+        GenRequest {
+            prompt,
+            n_new,
+            sampling,
+            priority: 0,
+            spec: None,
+            kv_deadline: None,
+            deadline: None,
+        }
     }
 
     pub fn with_priority(mut self, priority: i32) -> GenRequest {
@@ -152,6 +167,13 @@ impl GenRequest {
         self.kv_deadline = Some(ttl);
         self
     }
+
+    /// Give the request an end-to-end deadline measured from submission
+    /// (see [`GenRequest::deadline`]).
+    pub fn with_deadline(mut self, deadline: Duration) -> GenRequest {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// Why a generation ended.
@@ -165,6 +187,14 @@ pub enum FinishReason {
     Cancelled,
     /// A KV-cache error ended it (the request fails, the worker survives).
     Failed,
+    /// The decode worker serving it panicked; the supervisor drained its
+    /// KV back to the pool and respawned the worker on a fresh lease.
+    /// Partial tokens may have streamed — resubmitting is safe.
+    WorkerFault,
+    /// Its end-to-end deadline ([`GenRequest::with_deadline`]) expired —
+    /// shed from the queue before decoding, or stopped at a scheduling
+    /// slice in flight (partial tokens may have streamed).
+    DeadlineExceeded,
 }
 
 /// Final accounting for one request, delivered in [`Event::Done`].
@@ -423,6 +453,12 @@ pub struct ServeMetrics {
     pub failed: AtomicUsize,
     /// Requests preempted: KV blocks freed, re-queued for recompute.
     pub preempted: AtomicUsize,
+    /// Requests ended by a decode-worker panic (supervisor drained them).
+    pub worker_faults: AtomicUsize,
+    /// Requests shed or stopped because their end-to-end deadline passed.
+    pub deadline_exceeded: AtomicUsize,
+    /// Decode workers respawned after a caught panic.
+    pub worker_respawns: AtomicUsize,
     pub tokens_out: AtomicUsize,
     /// Peak concurrent active requests observed (batcher invariant probe).
     pub peak_active: AtomicUsize,
@@ -483,6 +519,9 @@ impl Default for ServeMetrics {
             cancelled: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             preempted: AtomicUsize::new(0),
+            worker_faults: AtomicUsize::new(0),
+            deadline_exceeded: AtomicUsize::new(0),
+            worker_respawns: AtomicUsize::new(0),
             tokens_out: AtomicUsize::new(0),
             peak_active: AtomicUsize::new(0),
             batch_steps: AtomicUsize::new(0),
@@ -620,7 +659,7 @@ impl ServeMetrics {
     /// Stats of every draft-model KV pool (one per draft geometry that
     /// has served a speculative request).
     pub fn draft_kv(&self) -> Vec<KvPoolStats> {
-        self.draft_pools.lock().unwrap().values().map(|p| p.stats()).collect()
+        lock_recover(&self.draft_pools).values().map(|p| p.stats()).collect()
     }
 
     /// The per-geometry draft pool, created on first use.
@@ -630,9 +669,7 @@ impl ServeMetrics {
         d: usize,
         opts: KvPoolOptions,
     ) -> Arc<BlockPool> {
-        self.draft_pools
-            .lock()
-            .unwrap()
+        lock_recover(&self.draft_pools)
             .entry((n_layers, d))
             .or_insert_with(|| {
                 let p = Arc::new(BlockPool::new(opts, n_layers, d));
@@ -684,6 +721,9 @@ impl ServeMetrics {
             ("cancelled", c(&self.cancelled)),
             ("failed", c(&self.failed)),
             ("preempted", c(&self.preempted)),
+            ("worker_faults", c(&self.worker_faults)),
+            ("deadline_exceeded", c(&self.deadline_exceeded)),
+            ("worker_respawns", c(&self.worker_respawns)),
             ("tokens_out", c(&self.tokens_out)),
             ("peak_active", c(&self.peak_active)),
             ("batch_steps", c(&self.batch_steps)),
@@ -746,6 +786,24 @@ impl ServeMetrics {
         ex.counter("requests_cancelled_total", "requests cancelled", l, c(&self.cancelled));
         ex.counter("requests_failed_total", "requests ended by a KV error", l, c(&self.failed));
         ex.counter("requests_preempted_total", "priority preemptions", l, c(&self.preempted));
+        ex.counter(
+            "requests_worker_fault_total",
+            "requests ended by a decode-worker panic",
+            l,
+            c(&self.worker_faults),
+        );
+        ex.counter(
+            "requests_deadline_exceeded_total",
+            "requests shed or stopped past their end-to-end deadline",
+            l,
+            c(&self.deadline_exceeded),
+        );
+        ex.counter(
+            "worker_respawns_total",
+            "decode workers respawned after a caught panic",
+            l,
+            c(&self.worker_respawns),
+        );
         ex.counter("tokens_out_total", "tokens emitted", l, c(&self.tokens_out));
         ex.gauge("peak_active_requests", "peak concurrent active requests", l, c(&self.peak_active));
         ex.counter("batch_steps_total", "fused batch steps", l, c(&self.batch_steps));
@@ -900,6 +958,15 @@ pub struct EngineOptions {
     /// accumulated deltas fold into [`ServeMetrics::obs`] as
     /// `decode_phase_us_total{phase=..}` counters after every fused step.
     pub timing: TimingMode,
+    /// Watchdog budget for one fused round: a worker stuck inside a
+    /// single round longer than this reports as stalled and the engine
+    /// turns [`HealthState::Degraded`] (detection only — the stuck thread
+    /// is not killed, but health-checking callers stop routing to it).
+    pub stall_budget: Duration,
+    /// How long after a caught worker panic [`Engine::health`] keeps
+    /// reporting [`HealthState::Degraded`], so health probes polling at
+    /// human cadence still observe the fault before Ready returns.
+    pub fault_cooldown: Duration,
 }
 
 impl Default for EngineOptions {
@@ -915,6 +982,8 @@ impl Default for EngineOptions {
             kv_spill_dir: None,
             trace: false,
             timing: TimingMode::Off,
+            stall_budget: Duration::from_secs(5),
+            fault_cooldown: Duration::from_millis(300),
         }
     }
 }
@@ -923,6 +992,8 @@ struct Admission {
     id: u64,
     req: GenRequest,
     enqueued: Instant,
+    /// Absolute end-to-end deadline (submit time + requested budget).
+    deadline: Option<Instant>,
     events: Sender<Event>,
     cancelled: Arc<AtomicBool>,
     /// KV reservation + shared prefix granted at submit time (pool mode).
@@ -968,6 +1039,8 @@ struct Preempted {
     tag: PrefixTag,
     prefilled_sent: bool,
     enqueued: Instant,
+    /// Absolute end-to-end deadline — parking does not pause the clock.
+    deadline: Option<Instant>,
     started: Instant,
     first_token: Option<Duration>,
     events: Sender<Event>,
@@ -982,6 +1055,127 @@ struct EngineShared {
     requeue: Mutex<VecDeque<Preempted>>,
     active: Mutex<HashMap<u64, ActiveInfo>>,
     demand: Mutex<Option<Demand>>,
+    /// Admissions sitting in the bounded queue (incremented on a
+    /// successful `try_send`, decremented at worker poll) — the queue
+    /// depth signal [`Engine::health`] compares against capacity.
+    queued: AtomicUsize,
+}
+
+/// Lock a shared-state mutex, recovering the data from a poisoned guard.
+/// Every mutex routed through here protects a plain map/queue/option
+/// whose invariants hold between operations, so state left by a panicking
+/// holder is still structurally valid — recover-and-continue keeps the
+/// engine serving where propagating the poison would cascade one worker's
+/// panic into every sibling thread and `submit` caller (ISSUE 9).
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Coarse serving condition, derived from worker liveness, admission
+/// queue depth, and KV pressure — served at `GET /v1/health` (ISSUE 9).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HealthState {
+    /// Accepting work; no fault indicator raised.
+    Ready,
+    /// Still serving, but impaired: a worker recently panicked or is
+    /// stuck in a fused round, the admission queue is saturated, or the
+    /// KV pool is fully charged. Load balancers should prefer other
+    /// replicas; clients should expect backpressure.
+    Degraded { reason: String },
+    /// Shutting down: in-flight requests drain, new submissions bounce.
+    Draining,
+}
+
+impl HealthState {
+    /// Stable wire name: `ready` / `degraded` / `draining`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Ready => "ready",
+            HealthState::Degraded { .. } => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+
+    /// Should a health endpoint answer 200 for this state?
+    pub fn is_ready(&self) -> bool {
+        matches!(self, HealthState::Ready)
+    }
+
+    /// The degradation reason, when degraded.
+    pub fn reason(&self) -> Option<&str> {
+        match self {
+            HealthState::Degraded { reason } => Some(reason),
+            _ => None,
+        }
+    }
+
+    /// `{status, reason?}` — the `GET /v1/health` wire form.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, s};
+        let mut pairs = vec![("status", s(self.name()))];
+        if let Some(r) = self.reason() {
+            pairs.push(("reason", s(r)));
+        }
+        obj(pairs)
+    }
+}
+
+/// Per-worker liveness shared between the supervisors and
+/// [`Engine::health`]. Heartbeats are µs offsets from `epoch`, one atomic
+/// per worker (0 = parked between rounds), so the decode hot path pays
+/// two relaxed stores per fused round and never a lock.
+struct WorkerHealth {
+    epoch: Instant,
+    /// Per worker: when its current fused round began (µs from `epoch`,
+    /// clamped to ≥ 1); 0 while idle between rounds.
+    step_started: Vec<AtomicU64>,
+    /// Panics caught by the supervisors over the engine's lifetime.
+    panics: AtomicUsize,
+    /// When the most recent panic was caught — drives the degraded
+    /// cool-down window ([`EngineOptions::fault_cooldown`]).
+    last_fault: Mutex<Option<Instant>>,
+}
+
+impl WorkerHealth {
+    fn new(workers: usize) -> WorkerHealth {
+        WorkerHealth {
+            epoch: Instant::now(),
+            step_started: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            panics: AtomicUsize::new(0),
+            last_fault: Mutex::new(None),
+        }
+    }
+
+    fn round_begin(&self, widx: usize) {
+        let us = self.epoch.elapsed().as_micros() as u64;
+        self.step_started[widx].store(us.max(1), Ordering::Relaxed);
+    }
+
+    fn round_end(&self, widx: usize) {
+        self.step_started[widx].store(0, Ordering::Relaxed);
+    }
+
+    /// A panic unwound mid-round: clear the heartbeat (the round is over,
+    /// however badly) and open the fault cool-down window.
+    fn note_panic(&self, widx: usize) {
+        self.step_started[widx].store(0, Ordering::Relaxed);
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        *lock_recover(&self.last_fault) = Some(Instant::now());
+    }
+
+    /// Index of a worker stuck inside one fused round past `budget`.
+    fn stalled_worker(&self, budget: Duration) -> Option<usize> {
+        let now = self.epoch.elapsed().as_micros() as u64;
+        self.step_started.iter().position(|s| {
+            let t0 = s.load(Ordering::Relaxed);
+            t0 != 0 && now.saturating_sub(t0) > budget.as_micros() as u64
+        })
+    }
+
+    /// Was a panic caught within the last `cooldown`?
+    fn fault_within(&self, cooldown: Duration) -> bool {
+        lock_recover(&self.last_fault).is_some_and(|t| t.elapsed() < cooldown)
+    }
 }
 
 /// How long a flagged preemption holds resume of lower-priority requests
@@ -1003,6 +1197,10 @@ pub struct Engine {
     /// kept for retry-after derivation.
     queue_depth: usize,
     slots: usize,
+    /// Worker liveness (heartbeats, caught panics) for [`Engine::health`].
+    health: Arc<WorkerHealth>,
+    stall_budget: Duration,
+    fault_cooldown: Duration,
 }
 
 /// Retry-after clamp bounds and the cold-start fallback (no completed
@@ -1035,15 +1233,23 @@ impl Engine {
         let metrics =
             Arc::new(ServeMetrics { pool: pool.clone(), trace, ..Default::default() });
         let shared = Arc::new(EngineShared::default());
+        let health = Arc::new(WorkerHealth::new(opts.workers.max(1)));
+        // Chaos schedules set out-of-process (`PQUANT_FAILPOINTS`) arm
+        // once, before any worker can evaluate a site.
+        crate::util::failpoint::arm_from_env();
         let handles = (0..opts.workers.max(1))
-            .map(|_| {
-                let registry = registry.clone();
-                let rx = rx.clone();
-                let metrics = metrics.clone();
-                let opts = opts.clone();
-                let pool = pool.clone();
-                let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(registry, rx, opts, metrics, pool, shared))
+            .map(|widx| {
+                let ctx = WorkerCtx {
+                    widx,
+                    registry: registry.clone(),
+                    rx: rx.clone(),
+                    opts: opts.clone(),
+                    metrics: metrics.clone(),
+                    kv_pool: pool.clone(),
+                    shared: shared.clone(),
+                    health: health.clone(),
+                };
+                std::thread::spawn(move || supervise_worker(ctx))
             })
             .collect();
         Ok(Engine {
@@ -1057,6 +1263,9 @@ impl Engine {
             shared,
             queue_depth: opts.queue_depth.max(1),
             slots: opts.workers.max(1) * opts.max_batch.max(1),
+            health,
+            stall_budget: opts.stall_budget,
+            fault_cooldown: opts.fault_cooldown,
         })
     }
 
@@ -1157,10 +1366,12 @@ impl Engine {
                 }
             }
         };
+        let enqueued = Instant::now();
         let adm = Admission {
             id,
+            deadline: req.deadline.map(|d| enqueued + d),
             req,
-            enqueued: Instant::now(),
+            enqueued,
             events: etx,
             cancelled,
             admitted,
@@ -1168,7 +1379,10 @@ impl Engine {
         };
         match tx.try_send(adm) {
             // A dropped rejection releases its KV reservation on the way out.
-            Ok(()) => Ok(ticket),
+            Ok(()) => {
+                self.shared.queued.fetch_add(1, Ordering::Relaxed);
+                Ok(ticket)
+            }
             Err(TrySendError::Full(adm)) => {
                 Err(SubmitError::QueueFull(adm.req, self.queue_retry_after()))
             }
@@ -1213,7 +1427,7 @@ impl Engine {
     /// resume until the retrying submitter claims the freed blocks.
     fn flag_preemption(&self, priority: i32) {
         let flagged = {
-            let act = self.shared.active.lock().unwrap();
+            let act = lock_recover(&self.shared.active);
             // One victim at a time: while a flagged preemption is still in
             // flight (its blocks not yet freed), a 1ms-retry loop must not
             // cascade through the whole active set flagging more.
@@ -1234,7 +1448,7 @@ impl Engine {
             }
         };
         if flagged {
-            let mut d = self.shared.demand.lock().unwrap();
+            let mut d = lock_recover(&self.shared.demand);
             // Never downgrade a live demand: a lower-priority waiter must
             // not open the resume gate a higher-priority one closed.
             let floor = d
@@ -1249,7 +1463,7 @@ impl Engine {
     }
 
     fn clear_demand_if_covered(&self, priority: i32) {
-        let mut d = self.shared.demand.lock().unwrap();
+        let mut d = lock_recover(&self.shared.demand);
         if d.as_ref().is_some_and(|dd| priority >= dd.priority) {
             *d = None;
         }
@@ -1262,6 +1476,40 @@ impl Engine {
     /// The engine's KV pool, when admission is block-budgeted.
     pub fn kv_pool(&self) -> Option<&Arc<BlockPool>> {
         self.pool.as_ref()
+    }
+
+    /// Coarse serving condition, recomputed per call from live signals
+    /// (ISSUE 9). Checks run in severity order — draining trumps
+    /// everything, then worker faults, then saturation — and the first
+    /// raised indicator names the state. `Degraded` still serves; only
+    /// [`HealthState::Ready`] maps to HTTP 200 at `GET /v1/health`.
+    pub fn health(&self) -> HealthState {
+        if self.tx.is_none() {
+            return HealthState::Draining;
+        }
+        if self.health.fault_within(self.fault_cooldown) {
+            let n = self.health.panics.load(Ordering::Relaxed);
+            return HealthState::Degraded {
+                reason: format!("worker panic caught (lifetime total {n}); respawn warming up"),
+            };
+        }
+        if let Some(w) = self.health.stalled_worker(self.stall_budget) {
+            return HealthState::Degraded {
+                reason: format!(
+                    "worker {w} stuck in one fused round past the {:?} stall budget",
+                    self.stall_budget
+                ),
+            };
+        }
+        if self.shared.queued.load(Ordering::Relaxed) >= self.queue_depth {
+            return HealthState::Degraded { reason: "admission queue saturated".to_string() };
+        }
+        if let Some(st) = self.pool.as_ref().map(|p| p.stats()) {
+            if st.in_use >= st.n_blocks {
+                return HealthState::Degraded { reason: "kv pool fully charged".to_string() };
+            }
+        }
+        HealthState::Ready
     }
 
     /// Stop accepting work, drain in-flight requests, join the workers.
@@ -1542,6 +1790,8 @@ struct ActiveRequest {
     slot: usize,
     generation: u64,
     enqueued: Instant,
+    /// Absolute end-to-end deadline, checked once per fused round.
+    deadline: Option<Instant>,
     started: Instant,
     first_token: Option<Duration>,
     events: Sender<Event>,
@@ -1558,6 +1808,8 @@ fn reason_code(reason: FinishReason) -> u64 {
         FinishReason::Length => 1,
         FinishReason::Cancelled => 2,
         FinishReason::Failed => 3,
+        FinishReason::WorkerFault => 4,
+        FinishReason::DeadlineExceeded => 5,
     }
 }
 
@@ -1567,6 +1819,10 @@ fn finish(mut a: ActiveRequest, reason: FinishReason, metrics: &ServeMetrics) {
     match reason {
         FinishReason::Cancelled => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        FinishReason::WorkerFault => metrics.worker_faults.fetch_add(1, Ordering::Relaxed),
+        FinishReason::DeadlineExceeded => {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed)
+        }
         _ => metrics.completed.fetch_add(1, Ordering::Relaxed),
     };
     // TPOT: mean inter-token gap from the first to the last emitted token
@@ -1609,6 +1865,9 @@ fn reject_parts_as(
 ) {
     match finish {
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        FinishReason::DeadlineExceeded => {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed)
+        }
         _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
     };
     if let Some(tr) = trace {
@@ -1650,6 +1909,9 @@ fn fail_parts(
 fn finish_preempted(mut p: Preempted, reason: FinishReason, metrics: &ServeMetrics) {
     match reason {
         FinishReason::Failed => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        FinishReason::DeadlineExceeded => {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed)
+        }
         _ => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
     };
     let queue_wait = p.started - p.enqueued;
@@ -1719,7 +1981,7 @@ impl PhaseCounters {
 /// Is resume of a request at `priority` held open for a pending
 /// higher-priority demand?
 fn demand_blocks(shared: &EngineShared, priority: i32) -> bool {
-    let mut d = shared.demand.lock().unwrap();
+    let mut d = lock_recover(&shared.demand);
     match d.as_ref() {
         Some(dd) if Instant::now() >= dd.expires => {
             *d = None;
@@ -1730,14 +1992,61 @@ fn demand_blocks(shared: &EngineShared, priority: i32) -> bool {
     }
 }
 
-fn worker_loop(
+/// Everything one decode worker needs, bundled so the supervisor can
+/// restart [`worker_loop`] against the same channels after a panic.
+struct WorkerCtx {
+    widx: usize,
     registry: Arc<ModelRegistry>,
     rx: Arc<Mutex<Receiver<Admission>>>,
     opts: EngineOptions,
     metrics: Arc<ServeMetrics>,
     kv_pool: Option<Arc<BlockPool>>,
     shared: Arc<EngineShared>,
-) {
+    health: Arc<WorkerHealth>,
+}
+
+/// Supervision shell around [`worker_loop`]: one decode worker is one
+/// fault domain. A panic anywhere in the fused round unwinds to here; the
+/// supervisor fails the stranded in-flight rows with a terminal
+/// [`FinishReason::WorkerFault`] event, records the fault (obs counter,
+/// trace terminal span, health cool-down), and restarts the loop. The
+/// replica pools and scratch live *inside* the unwind boundary, so the
+/// respawned loop re-acquires fresh leases from the registry — a panic
+/// never strands a hot-swap drain barrier.
+fn supervise_worker(ctx: WorkerCtx) {
+    let panics = ctx
+        .metrics
+        .obs()
+        .counter("worker_panics_total", "decode worker panics caught by the supervisor");
+    // In-flight requests live *outside* the unwind boundary so a panic
+    // mid-round leaves them reachable for draining: dropping each one
+    // returns its KV blocks (target and draft) to the pools.
+    let mut active: Vec<ActiveRequest> = Vec::new();
+    loop {
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            worker_loop(&ctx, &mut active);
+        }));
+        match run {
+            // Channel closed and requeue drained: clean exit.
+            Ok(()) => return,
+            Err(_) => {
+                panics.inc();
+                ctx.health.note_panic(ctx.widx);
+                for a in active.drain(..) {
+                    lock_recover(&ctx.shared.active).remove(&a.id);
+                    finish(a, FinishReason::WorkerFault, &ctx.metrics);
+                }
+                ctx.metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                // Brief pause before the respawn: a deterministic crash
+                // (or a fully-armed failpoint) must not hot-spin the CPU.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx, active: &mut Vec<ActiveRequest>) {
+    let WorkerCtx { widx, registry, rx, opts, metrics, kv_pool, shared, health } = ctx;
     let max_batch = opts.max_batch.max(1);
     let prefill_chunk = opts.prefill_chunk.max(1);
     // Draft pools page KV with their own geometry; default to the target
@@ -1759,7 +2068,6 @@ fn worker_loop(
     // hot-swap is picked up by *new* speculation while in-flight streams
     // drain losslessly on the old lease.
     let mut draft_pools: HashMap<String, ReplicaPool> = HashMap::new();
-    let mut active: Vec<ActiveRequest> = Vec::new();
     // Per-worker scratch arena: every batch step's intermediates live
     // here, so the steady-state decode loop allocates nothing per token.
     let mut scratch = Scratch::new();
@@ -1778,13 +2086,19 @@ fn worker_loop(
         // ---- resume preempted requests into free batch slots ----
         while active.len() < max_batch {
             let Some(kvp) = kv_pool.as_ref() else { break };
-            let Some(mut p) = shared.requeue.lock().unwrap().pop_front() else { break };
+            let Some(mut p) = lock_recover(&shared.requeue).pop_front() else { break };
             if p.cancelled.load(Ordering::Relaxed) {
                 finish_preempted(p, FinishReason::Cancelled, &metrics);
                 continue;
             }
-            if demand_blocks(&shared, p.priority) {
-                shared.requeue.lock().unwrap().push_front(p);
+            if p.deadline.is_some_and(|d| Instant::now() >= d) {
+                // Parked past its end-to-end budget: the recompute would
+                // only produce tokens the client already walked away from.
+                finish_preempted(p, FinishReason::DeadlineExceeded, &metrics);
+                continue;
+            }
+            if demand_blocks(shared, p.priority) {
+                lock_recover(&shared.requeue).push_front(p);
                 break;
             }
             let Some(slot) = pool.current_slot() else {
@@ -1811,7 +2125,7 @@ fn worker_loop(
                 Ok(a) => a,
                 Err(_) => {
                     // Blocks not free yet; park it and move on.
-                    shared.requeue.lock().unwrap().push_front(p);
+                    lock_recover(&shared.requeue).push_front(p);
                     break;
                 }
             };
@@ -1830,10 +2144,7 @@ fn worker_loop(
                 s
             });
             let preempt = Arc::new(AtomicBool::new(false));
-            shared
-                .active
-                .lock()
-                .unwrap()
+            lock_recover(&shared.active)
                 .insert(p.id, ActiveInfo { priority: p.priority, preempt: preempt.clone() });
             let mut trace = p.trace.take();
             if let Some(tr) = trace.as_mut() {
@@ -1862,6 +2173,7 @@ fn worker_loop(
                 slot,
                 generation,
                 enqueued: p.enqueued,
+                deadline: p.deadline,
                 started: p.started,
                 first_token: p.first_token,
                 events: p.events,
@@ -1876,9 +2188,12 @@ fn worker_loop(
             // worker parked inside the Mutex would stall every sibling's
             // admission check (which runs once per decode slice).
             let polled = {
-                let rx = rx.lock().unwrap();
+                let rx = lock_recover(rx);
                 match rx.try_recv() {
-                    Ok(adm) => Some(adm),
+                    Ok(adm) => {
+                        shared.queued.fetch_sub(1, Ordering::Relaxed);
+                        Some(adm)
+                    }
                     Err(TryRecvError::Empty) => None,
                     Err(TryRecvError::Disconnected) => {
                         closed = true;
@@ -1887,10 +2202,19 @@ fn worker_loop(
                 }
             };
             let Some(adm) = polled else { break };
-            let Admission { id, req, enqueued, events, cancelled, admitted, mut trace } = adm;
+            let Admission { id, req, enqueued, deadline, events, cancelled, admitted, mut trace } =
+                adm;
             if cancelled.load(Ordering::Relaxed) {
                 reject_parts(id, enqueued, &events, &metrics, trace);
                 continue; // `admitted` drops here, releasing the reservation
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                // Expired in the queue: shed before it costs a prefill —
+                // the ticket still gets exactly one terminal event, and
+                // the dropped reservation frees its blocks on the way out.
+                let dl = FinishReason::DeadlineExceeded;
+                reject_parts_as(id, enqueued, &events, &metrics, trace, dl);
+                continue;
             }
             let Some(slot) = pool.current_slot() else {
                 reject_parts(id, enqueued, &events, &metrics, trace); // model gone
@@ -1956,10 +2280,7 @@ fn worker_loop(
                 prefilled_sent = true;
             }
             let preempt = Arc::new(AtomicBool::new(false));
-            shared
-                .active
-                .lock()
-                .unwrap()
+            lock_recover(&shared.active)
                 .insert(id, ActiveInfo { priority: req.priority, preempt: preempt.clone() });
             active.push(ActiveRequest {
                 id,
@@ -1979,6 +2300,7 @@ fn worker_loop(
                 slot,
                 generation,
                 enqueued,
+                deadline,
                 started,
                 first_token: None,
                 events,
@@ -1996,12 +2318,19 @@ fn worker_loop(
             for dp in draft_pools.values_mut() {
                 dp.drop_idle_stale();
             }
-            if closed && shared.requeue.lock().unwrap().is_empty() {
+            if closed && lock_recover(&shared.requeue).is_empty() {
                 return;
             }
             // Idle backoff outside the queue lock (see admission above).
             std::thread::sleep(Duration::from_millis(2));
             continue;
+        }
+        // Heartbeat for the stall watchdog: the round is "in flight" from
+        // here until the fan-out below completes. Idle parking (above)
+        // never looks stuck.
+        health.round_begin(*widx);
+        if crate::failpoint!("worker.step") {
+            panic!("failpoint worker.step: injected decode-worker panic");
         }
         // ---- fused batch round: sweep + sample, then one batched forward
         //      per replica slot, then fan results back out to tickets ----
@@ -2010,17 +2339,28 @@ fn worker_loop(
         // decode-ready request samples its next token from `last_logits`
         // (finishing here if the budget or a stop token says so);
         // survivors contribute one decode row to this round's batch.
+        let now = Instant::now();
         let mut i = 0;
         while i < active.len() {
             if active[i].cancelled.load(Ordering::Relaxed) {
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
                 release_spec(&mut draft_pools, &a.spec);
-                shared.active.lock().unwrap().remove(&a.id);
+                lock_recover(&shared.active).remove(&a.id);
                 // Dropping `a` frees its target KV *and* any draft KV the
                 // speculative state held — a cancel mid-verify leaks
                 // nothing.
                 finish(a, FinishReason::Cancelled, &metrics);
+                continue;
+            }
+            if active[i].deadline.is_some_and(|d| now >= d) {
+                let a = active.swap_remove(i);
+                pool.release(a.slot);
+                release_spec(&mut draft_pools, &a.spec);
+                lock_recover(&shared.active).remove(&a.id);
+                // Past its end-to-end budget mid-flight: terminal event
+                // now, and dropping `a` frees every slot and block it held.
+                finish(a, FinishReason::DeadlineExceeded, &metrics);
                 continue;
             }
             if active[i].preempt.load(Ordering::Relaxed)
@@ -2029,7 +2369,7 @@ fn worker_loop(
                 let mut a = active.swap_remove(i);
                 pool.release(a.slot);
                 release_spec(&mut draft_pools, &a.spec);
-                shared.active.lock().unwrap().remove(&a.id);
+                lock_recover(&shared.active).remove(&a.id);
                 metrics.preempted.fetch_add(1, Ordering::Relaxed);
                 if let Some(tr) = a.trace.as_mut() {
                     tr.instant(SpanKind::Preempt, 0, 0);
@@ -2040,7 +2380,7 @@ fn worker_loop(
                 };
                 let spec_params = a.spec.as_ref().map(|s| s.params.clone());
                 let spec_counted = a.spec.as_ref().is_some_and(|s| s.counted);
-                shared.requeue.lock().unwrap().push_back(Preempted {
+                lock_recover(&shared.requeue).push_back(Preempted {
                     id: a.id,
                     prompt: a.fed[..a.prompt_len].to_vec(),
                     emitted: a.tokens,
@@ -2053,6 +2393,7 @@ fn worker_loop(
                     tag,
                     prefilled_sent: a.prefilled_sent,
                     enqueued: a.enqueued,
+                    deadline: a.deadline,
                     started: a.started,
                     first_token: a.first_token,
                     events: a.events,
@@ -2086,7 +2427,7 @@ fn worker_loop(
                 let a = active.swap_remove(i);
                 pool.release(a.slot);
                 release_spec(&mut draft_pools, &a.spec);
-                shared.active.lock().unwrap().remove(&a.id);
+                lock_recover(&shared.active).remove(&a.id);
                 // Dropping the request's PagedSeq returns every block it
                 // held — including the reserved-but-unused tail a stop
                 // token left behind — to the pool.
@@ -2111,7 +2452,10 @@ fn worker_loop(
             let vocab = a.last_logits.len();
             let ActiveRequest { spec, fed, tokens, pos, n_new, prompt_len, sampling, .. } = a;
             let sp = spec.as_mut().unwrap();
-            let mut degrade = false;
+            // The spec.propose failpoint models a draft that dies between
+            // rounds: the request degrades to plain decode, like any real
+            // draft-side failure.
+            let mut degrade = crate::failpoint!("spec.propose");
             if sp.slot.is_none() {
                 let dpool =
                     draft_pools.entry(sp.params.draft.clone()).or_insert_with(|| ReplicaPool {
@@ -2484,10 +2828,11 @@ fn worker_loop(
                 let a = active.swap_remove(ai);
                 pool.release(a.slot);
                 release_spec(&mut draft_pools, &a.spec);
-                shared.active.lock().unwrap().remove(&a.id);
+                lock_recover(&shared.active).remove(&a.id);
                 finish(a, reason, &metrics);
             }
         }
+        health.round_end(*widx);
     }
 }
 
@@ -2575,5 +2920,69 @@ mod tests {
         let r = GenRequest::greedy(vec![1], 4).with_priority(7);
         assert_eq!(r.priority, 7);
         assert_eq!(GenRequest::greedy(vec![1], 4).priority, 0);
+    }
+
+    #[test]
+    fn deadline_builder_sets_deadline() {
+        let r = GenRequest::greedy(vec![1], 4).with_deadline(Duration::from_millis(50));
+        assert_eq!(r.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(GenRequest::greedy(vec![1], 4).deadline, None);
+    }
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(vec![1u32, 2]));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the guard");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the panicking holder must have poisoned the lock");
+        let mut g = lock_recover(&m);
+        g.push(3);
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn worker_health_detects_stalls_and_recovers() {
+        let h = WorkerHealth::new(2);
+        let budget = Duration::from_millis(20);
+        assert_eq!(h.stalled_worker(budget), None);
+        h.round_begin(1);
+        assert_eq!(h.stalled_worker(budget), None, "a fresh round is not a stall");
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(h.stalled_worker(budget), Some(1));
+        h.round_end(1);
+        assert_eq!(h.stalled_worker(budget), None, "round_end clears the heartbeat");
+    }
+
+    #[test]
+    fn worker_health_fault_cooldown_window() {
+        let h = WorkerHealth::new(1);
+        assert!(!h.fault_within(Duration::from_secs(60)));
+        h.round_begin(0);
+        h.note_panic(0);
+        assert!(h.fault_within(Duration::from_secs(60)));
+        assert!(!h.fault_within(Duration::ZERO));
+        assert_eq!(h.panics.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stalled_worker(Duration::ZERO), None, "note_panic clears the heartbeat");
+    }
+
+    #[test]
+    fn health_state_wire_form() {
+        assert_eq!(HealthState::Ready.name(), "ready");
+        assert!(HealthState::Ready.is_ready());
+        assert_eq!(HealthState::Ready.to_json().to_string(), "{\"status\":\"ready\"}");
+        let d = HealthState::Degraded { reason: "kv pool fully charged".to_string() };
+        assert!(!d.is_ready());
+        assert_eq!(d.reason(), Some("kv pool fully charged"));
+        // Keys render in BTreeMap order.
+        assert_eq!(
+            d.to_json().to_string(),
+            "{\"reason\":\"kv pool fully charged\",\"status\":\"degraded\"}"
+        );
+        assert!(!HealthState::Draining.is_ready());
+        assert_eq!(HealthState::Draining.name(), "draining");
     }
 }

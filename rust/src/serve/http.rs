@@ -24,12 +24,18 @@
 //!     as Chrome trace-event JSON, when the routed engine runs with
 //!     tracing enabled; `?model=NAME` picks a non-default engine.
 //!   * `GET /v1/models` — the [`ModelRegistry`] listing.
+//!   * `GET /v1/health` — the worst [`HealthState`] across routed engines
+//!     (`ready` / `degraded` / `draining`): 200 only when every engine is
+//!     Ready, 503 otherwise, with per-engine detail in the body. Wired
+//!     for load-balancer probes; see `docs/robustness.md`.
 //!
 //! Requests route to an engine by the optional `"model"` body key (the
 //! [`Router`] maps model names to engines; the first added is the
-//! default), and may request speculative decoding with
-//! `"draft_model"`/`"spec_k"`, resolved against the registry at submit
-//! time. [`HttpServer::shutdown`] stops accepting, 503s new generate
+//! default), may request speculative decoding with
+//! `"draft_model"`/`"spec_k"` (resolved against the registry at submit
+//! time), and may set an end-to-end deadline with `"deadline_ms"`
+//! ([`GenRequest::with_deadline`]; past it the request finishes with a
+//! `"deadline"` done frame). [`HttpServer::shutdown`] stops accepting, 503s new generate
 //! requests, and joins every in-flight handler — live streams drain to
 //! their `done` frame. See `docs/serving.md` for the wire format.
 
@@ -46,8 +52,10 @@ use anyhow::{anyhow, Result};
 use crate::obs::prom::Exposition;
 use crate::util::json::{arr, num, obj, s, Json};
 
+use super::engine::lock_recover;
 use super::{
-    Engine, Event, FinishReason, GenRequest, ModelRegistry, SamplingParams, SubmitError, Ticket,
+    Engine, Event, FinishReason, GenRequest, HealthState, ModelRegistry, SamplingParams,
+    SubmitError, Ticket,
 };
 
 /// How long the SSE loop waits for the next engine event before probing
@@ -59,6 +67,14 @@ const HEADER_TIMEOUT: Duration = Duration::from_secs(5);
 /// Caps on untrusted input.
 const MAX_HEADER_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+/// Ceiling on live handler threads: above it new connections bounce with
+/// 503 + `Retry-After` instead of spawning without bound.
+const MAX_CONNS: usize = 256;
+/// SSE write budget: a client that stops reading long enough for the
+/// socket buffer to fill *and* this timeout to pass is treated exactly
+/// like a disconnect (cancel + drain), so one stalled reader can never
+/// pin a handler thread and its KV blocks indefinitely.
+const SSE_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Maps request `"model"` keys to engines. One engine serves one registry
 /// name, so a multi-model server runs one engine per served name; the
@@ -120,7 +136,7 @@ impl RouteStats {
 /// key of the JSON metrics snapshot and as `http_requests_total` /
 /// `http_errors_total{route=..}` in the Prometheus exposition.
 struct HttpStats {
-    routes: [RouteStats; 5],
+    routes: [RouteStats; 6],
 }
 
 impl HttpStats {
@@ -131,6 +147,7 @@ impl HttpStats {
                 RouteStats::new("metrics"),
                 RouteStats::new("models"),
                 RouteStats::new("trace"),
+                RouteStats::new("health"),
                 RouteStats::new("other"),
             ],
         }
@@ -212,14 +229,28 @@ impl HttpServer {
                     if state.stopping.load(Ordering::Acquire) {
                         break; // the shutdown self-connect lands here too
                     }
-                    let Ok(stream) = stream else { continue };
-                    let state = state.clone();
-                    let handle = std::thread::spawn(move || handle_connection(stream, &state));
-                    let mut conns = conns.lock().unwrap();
+                    let Ok(mut stream) = stream else { continue };
+                    let mut conns = lock_recover(&conns);
                     // Reap finished handlers so a long-lived server does
                     // not accumulate one JoinHandle per past request.
                     conns.retain(|h| !h.is_finished());
-                    conns.push(handle);
+                    if conns.len() >= MAX_CONNS {
+                        // Handler threads are the resource being guarded:
+                        // shed the connection here, before spawning one.
+                        drop(conns);
+                        let row = state.stats.route("other");
+                        row.requests.fetch_add(1, Ordering::Relaxed);
+                        row.note_err();
+                        respond_backpressure(
+                            &mut stream,
+                            503,
+                            "connection limit reached",
+                            Duration::from_millis(50),
+                        );
+                        continue;
+                    }
+                    let state = state.clone();
+                    conns.push(std::thread::spawn(move || handle_connection(stream, &state)));
                 }
             })
         };
@@ -250,7 +281,7 @@ impl HttpServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_recover(&self.conns));
         for h in handles {
             let _ = h.join();
         }
@@ -388,6 +419,7 @@ fn route_name(method: &str, path: &str) -> &'static str {
         ("POST", "/v1/generate") | ("GET", "/v1/generate") => "generate",
         ("GET", "/v1/metrics") => "metrics",
         ("GET", "/v1/models") => "models",
+        ("GET", "/v1/health") => "health",
         ("GET", p) if p.starts_with("/v1/trace/") => "trace",
         _ => "other",
     }
@@ -445,6 +477,7 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
             respond_json(&mut stream, 200, &[], &obj(vec![("models", arr(models))]));
         }
         ("GET", "/v1/metrics") => handle_metrics(stream, state, &req, query),
+        ("GET", "/v1/health") => handle_health(stream, state, row),
         ("GET", p) if p.starts_with("/v1/trace/") => handle_trace(stream, state, p, query, row),
         ("GET", "/v1/generate") => {
             row.note_err();
@@ -492,6 +525,49 @@ fn handle_metrics(mut stream: TcpStream, state: &ServerState, req: &Request, que
         .collect();
     per_engine.push(("http", state.stats.to_json()));
     respond_json(&mut stream, 200, &[], &obj(per_engine));
+}
+
+/// Rank for worst-of aggregation: draining > degraded > ready.
+fn health_severity(h: &HealthState) -> u8 {
+    match h {
+        HealthState::Ready => 0,
+        HealthState::Degraded { .. } => 1,
+        HealthState::Draining => 2,
+    }
+}
+
+/// `GET /v1/health` — 200 only when every routed engine is Ready; 503
+/// for degraded (still serving — prefer another replica) and draining.
+/// Body: the overall state plus a per-engine breakdown.
+fn handle_health(mut stream: TcpStream, state: &ServerState, stats: &RouteStats) {
+    let per_engine: Vec<(&str, HealthState)> = state
+        .router
+        .routes
+        .iter()
+        .map(|(name, e)| (name.as_str(), e.health()))
+        .collect();
+    // A stopping front end is draining regardless of engine state (its
+    // engines only learn on their own shutdown); otherwise the server is
+    // as healthy as its sickest engine.
+    let overall = if state.stopping.load(Ordering::Acquire) {
+        HealthState::Draining
+    } else {
+        per_engine
+            .iter()
+            .map(|(_, h)| h.clone())
+            .max_by_key(health_severity)
+            .unwrap_or(HealthState::Ready)
+    };
+    let code = if overall.is_ready() { 200 } else { 503 };
+    if code != 200 {
+        stats.note_err();
+    }
+    let mut pairs = vec![("status", s(overall.name()))];
+    if let Some(r) = overall.reason() {
+        pairs.push(("reason", s(r)));
+    }
+    pairs.push(("engines", obj(per_engine.iter().map(|(n, h)| (*n, h.to_json())).collect())));
+    respond_json(&mut stream, code, &[], &obj(pairs));
 }
 
 /// `GET /v1/trace/<id|latest|all>` — Chrome trace-event JSON for one
@@ -611,6 +687,13 @@ fn parse_generate(state: &ServerState, body: &[u8]) -> std::result::Result<Gener
         None => 0,
     };
     let mut req = GenRequest::sampled(prompt, n_new, sampling).with_priority(priority);
+    if let Some(v) = j.opt("deadline_ms") {
+        let ms = v.as_f64().map_err(|_| "\"deadline_ms\" must be a number".to_string())?;
+        if ms.is_nan() || ms < 0.0 {
+            return Err("\"deadline_ms\" must be non-negative".to_string());
+        }
+        req = req.with_deadline(Duration::from_secs_f64(ms / 1e3));
+    }
     if let Some(d) = j.opt("draft_model") {
         let draft = d.as_str().map_err(|_| "\"draft_model\" must be a string".to_string())?;
         req = req.with_spec(draft, usize_key("spec_k", 4)?);
@@ -695,6 +778,8 @@ fn finish_name(f: FinishReason) -> &'static str {
         FinishReason::Stop => "stop",
         FinishReason::Cancelled => "cancelled",
         FinishReason::Failed => "failed",
+        FinishReason::WorkerFault => "worker_fault",
+        FinishReason::DeadlineExceeded => "deadline",
     }
 }
 
@@ -719,6 +804,9 @@ fn client_gone(stream: &mut TcpStream) -> bool {
 /// engine has already released its worker slot and KV blocks by the time
 /// this handler returns.
 fn stream_sse(mut stream: TcpStream, ticket: Ticket) {
+    // A full socket buffer must not block this thread forever: past the
+    // write budget the client counts as gone (see `SSE_WRITE_TIMEOUT`).
+    let _ = stream.set_write_timeout(Some(SSE_WRITE_TIMEOUT));
     let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n";
     if stream.write_all(header.as_bytes()).is_err() {
         cancel_and_drain(&ticket);
@@ -770,7 +858,13 @@ fn stream_sse(mut stream: TcpStream, ticket: Ticket) {
                 ]),
             ),
         };
-        if stream.write_all(frame.as_bytes()).is_err() || stream.flush().is_err() {
+        // The sse.write failpoint models a mid-stream socket death (or a
+        // reader stalled past the write budget) without needing a real
+        // misbehaving peer.
+        let failed = crate::failpoint!("sse.write")
+            || stream.write_all(frame.as_bytes()).is_err()
+            || stream.flush().is_err();
+        if failed {
             cancel_and_drain(&ticket);
             return;
         }

@@ -211,9 +211,9 @@ pub struct RequestRecord {
     /// Requested speculative decoding.
     pub draft: bool,
     pub completed: bool,
-    /// Terminal state: `length`/`stop`/`cancelled`/`failed`, `rejected`
-    /// when the retry budget ran out, `incomplete` when the stream closed
-    /// without a done frame.
+    /// Terminal state: `length`/`stop`/`cancelled`/`failed`/
+    /// `worker_fault`/`deadline`, `rejected` when the retry budget ran
+    /// out, `incomplete` when the stream closed without a done frame.
     pub finish: String,
     /// Server-reported submit→admission wait (from the done frame).
     pub queue_wait_ms: Option<f64>,
@@ -633,6 +633,8 @@ fn run_one_engine(engine: &Engine, index: usize, ev: &TraceEvent, cfg: &TraceCon
                     FinishReason::Stop => "stop",
                     FinishReason::Cancelled => "cancelled",
                     FinishReason::Failed => "failed",
+                    FinishReason::WorkerFault => "worker_fault",
+                    FinishReason::DeadlineExceeded => "deadline",
                 }
                 .to_string();
                 out.queue_wait_ms = Some(stats.queue_wait.as_secs_f64() * 1e3);

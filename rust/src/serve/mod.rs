@@ -56,8 +56,8 @@ pub mod registry;
 pub mod spec;
 
 pub use engine::{
-    DraftError, Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, Percentiles,
-    RetryAfter, SamplingParams, ServeMetrics, SubmitError, Ticket,
+    DraftError, Engine, EngineOptions, Event, FinishReason, GenRequest, GenStats, HealthState,
+    Percentiles, RetryAfter, SamplingParams, ServeMetrics, SubmitError, Ticket,
 };
 pub use http::{HttpServer, Router};
 pub use loadgen::{

@@ -1,0 +1,219 @@
+//! Seeded fault injection for the chaos harness (ISSUE 9).
+//!
+//! A *failpoint* is a named site in production code that can be armed to
+//! fail on purpose: `crate::failpoint!("kv.reserve")` evaluates to `true`
+//! when the site is armed and its seeded draw fires, and the caller turns
+//! that into the same error (or panic) a real fault would produce. The
+//! design constraints, in order:
+//!
+//!   * **Zero cost when off.** Production never arms anything, so the
+//!     disarmed path must stay off the profile *and* off the allocator —
+//!     `tests/alloc_free.rs` runs with failpoints compiled in. Disarmed,
+//!     [`should_fail`] is one relaxed atomic load and an immediate return;
+//!     the registry lock is only ever touched while at least one site is
+//!     armed.
+//!   * **Deterministic.** Every site draws from its own xorshift stream
+//!     seeded by (schedule seed ⊕ site-name hash), so a chaos schedule is
+//!     a pure function of its seed — CI replays the same faults every run,
+//!     and two sites armed with one seed stay uncorrelated.
+//!   * **Scoped.** Tests arm by name ([`arm`] / [`arm_limited`]) and tear
+//!     down with [`disarm_all`]; operators reproduce a schedule out of
+//!     process via `PQUANT_FAILPOINTS=name=prob[:seed],…`
+//!     ([`arm_from_env`], consulted once at the first engine start).
+//!
+//! The site catalog lives in `docs/robustness.md`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::rng::Rng;
+
+/// One armed site. Sites are registered by [`arm`] and looked up by name;
+/// the handful of armed sites in any schedule makes a Vec scan cheaper
+/// than a map.
+struct Site {
+    name: String,
+    /// Fire probability per evaluation; `>= 1.0` always fires.
+    prob: f64,
+    rng: Rng,
+    fires: usize,
+    /// Stop firing (stay armed, draw nothing) after this many fires.
+    max_fires: Option<usize>,
+}
+
+/// Fast-path gate: false whenever no site is armed, so production code
+/// pays one relaxed load per failpoint evaluation and nothing else.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn sites() -> MutexGuard<'static, Vec<Site>> {
+    static SITES: OnceLock<Mutex<Vec<Site>>> = OnceLock::new();
+    // A panic injected *through* a failpoint can poison this lock from
+    // the panicking thread; the registry stays valid (arming is atomic
+    // per call), so recover rather than cascade.
+    SITES.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Mix the site name into the schedule seed (FNV-1a) so sites armed with
+/// the same seed draw distinct streams; force nonzero for the xorshift.
+fn site_seed(name: &str, seed: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h ^ seed) | 1
+}
+
+fn arm_impl(name: &str, prob: f64, seed: u64, max_fires: Option<usize>) {
+    let mut sites = sites();
+    sites.retain(|s| s.name != name);
+    sites.push(Site {
+        name: name.to_string(),
+        prob,
+        rng: Rng::new(site_seed(name, seed)),
+        fires: 0,
+        max_fires,
+    });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Arm `name` to fire with probability `prob` per evaluation, drawing
+/// from a stream derived from `seed`. Re-arming replaces the site.
+pub fn arm(name: &str, prob: f64, seed: u64) {
+    arm_impl(name, prob, seed, None);
+}
+
+/// [`arm`], but the site goes quiet after `max_fires` fires — e.g. inject
+/// exactly one worker panic, then let the respawned worker run clean.
+pub fn arm_limited(name: &str, prob: f64, seed: u64, max_fires: usize) {
+    arm_impl(name, prob, seed, Some(max_fires));
+}
+
+/// Disarm one site (a no-op if it was never armed).
+pub fn disarm(name: &str) {
+    let mut sites = sites();
+    sites.retain(|s| s.name != name);
+    if sites.is_empty() {
+        ARMED.store(false, Ordering::Release);
+    }
+}
+
+/// Disarm every site — the test-teardown guarantee that no schedule
+/// leaks into the next test.
+pub fn disarm_all() {
+    let mut sites = sites();
+    sites.clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// How many times `name` has fired since it was (re-)armed.
+pub fn fire_count(name: &str) -> usize {
+    sites().iter().find(|s| s.name == name).map_or(0, |s| s.fires)
+}
+
+/// Evaluate a site: `true` iff it is armed, under its fire budget, and
+/// this draw fires. Prefer the [`crate::failpoint!`] macro at call sites.
+pub fn should_fail(name: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let mut sites = sites();
+    let Some(site) = sites.iter_mut().find(|s| s.name == name) else {
+        return false;
+    };
+    if site.max_fires.is_some_and(|m| site.fires >= m) {
+        return false;
+    }
+    let fire = site.prob >= 1.0 || site.rng.f64() < site.prob;
+    if fire {
+        site.fires += 1;
+    }
+    fire
+}
+
+/// Arm sites from `PQUANT_FAILPOINTS=name=prob[:seed],…` exactly once
+/// per process (subsequent calls are no-ops, so every engine start may
+/// call it). Malformed entries are skipped — an operator typo must not
+/// take down the server it was meant to probe.
+pub fn arm_from_env() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let Ok(spec) = std::env::var("PQUANT_FAILPOINTS") else { return };
+        for part in spec.split(',') {
+            let part = part.trim();
+            let Some((name, rest)) = part.split_once('=') else { continue };
+            let (prob_s, seed_s) = match rest.split_once(':') {
+                Some((p, s)) => (p, Some(s)),
+                None => (rest, None),
+            };
+            let Ok(prob) = prob_s.trim().parse::<f64>() else { continue };
+            let seed = seed_s.and_then(|s| s.trim().parse::<u64>().ok()).unwrap_or(0);
+            arm(name.trim(), prob, seed);
+        }
+    });
+}
+
+/// `crate::failpoint!("site.name")` → `bool`: does the named fault fire
+/// here, now? Expands to one function call whose disarmed fast path is a
+/// single relaxed atomic load (no lock, no allocation).
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {
+        $crate::util::failpoint::should_fail($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One registry per process: every test arms under its own site names
+    // and disarms them, so parallel test threads don't observe each other.
+
+    #[test]
+    fn disarmed_site_never_fires() {
+        assert!(!should_fail("t.never-armed"));
+        assert_eq!(fire_count("t.never-armed"), 0);
+    }
+
+    #[test]
+    fn certain_site_fires_every_time_until_disarmed() {
+        arm("t.always", 1.0, 7);
+        assert!((0..10).all(|_| should_fail("t.always")));
+        assert_eq!(fire_count("t.always"), 10);
+        disarm("t.always");
+        assert!(!should_fail("t.always"));
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let draw = |seed: u64| {
+            arm("t.seeded", 0.5, seed);
+            let fires: Vec<bool> = (0..64).map(|_| should_fail("t.seeded")).collect();
+            disarm("t.seeded");
+            fires
+        };
+        assert_eq!(draw(3), draw(3));
+        assert_ne!(draw(3), draw(4), "distinct seeds should give distinct schedules");
+    }
+
+    #[test]
+    fn fire_budget_caps_a_limited_site() {
+        arm_limited("t.limited", 1.0, 1, 2);
+        let fired: usize = (0..8).filter(|_| should_fail("t.limited")).count();
+        assert_eq!(fired, 2);
+        assert_eq!(fire_count("t.limited"), 2);
+        disarm("t.limited");
+    }
+
+    #[test]
+    fn same_seed_distinct_sites_draw_distinct_streams() {
+        arm("t.stream-a", 0.5, 11);
+        arm("t.stream-b", 0.5, 11);
+        let a: Vec<bool> = (0..64).map(|_| should_fail("t.stream-a")).collect();
+        let b: Vec<bool> = (0..64).map(|_| should_fail("t.stream-b")).collect();
+        disarm("t.stream-a");
+        disarm("t.stream-b");
+        assert_ne!(a, b, "site-name mixing should decorrelate streams");
+    }
+}

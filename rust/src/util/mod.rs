@@ -3,6 +3,7 @@
 //! pull in are implemented here (DESIGN.md §Substitutions).
 
 pub mod bench;
+pub mod failpoint;
 pub mod json;
 pub mod prop;
 pub mod rng;

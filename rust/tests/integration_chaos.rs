@@ -1,0 +1,301 @@
+//! Chaos harness: seeded fault injection against the full serving stack.
+//!
+//! Each test arms `pquant::util::failpoint` sites (worker panics, KV
+//! reservation failures, spill I/O errors, degraded draft proposals) and
+//! asserts the fault-domain invariants the engine promises:
+//!
+//!   * every submitted ticket reaches exactly one terminal event — faults
+//!     fail requests, they never hang them;
+//!   * the KV pool drains back to `in_use == 0` after the run, so no
+//!     fault path leaks blocks;
+//!   * server-side counters reconcile with the client-side tally;
+//!   * a worker panic degrades `Engine::health` and then recovers.
+//!
+//! The failpoint registry is process-global, so the tests serialize on
+//! `CHAOS_LOCK` and disarm everything on entry and exit (a panicking
+//! test must not leave faults armed for its neighbors). The CI chaos
+//! lane reruns this binary across several `PQUANT_CHAOS_SEED` values.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use pquant::config::{ModelConfig, Variant};
+use pquant::infer::PackedModel;
+use pquant::kvcache::KvPoolOptions;
+use pquant::serve::loadgen::{self, Target, TraceConfig};
+use pquant::serve::{
+    Engine, EngineOptions, FinishReason, GenRequest, HealthState, ModelRegistry,
+};
+use pquant::util::failpoint;
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the global chaos lock for one test and guarantees a clean
+/// failpoint registry on both entry and exit (even when the test body
+/// panics, Drop still disarms before the lock is released).
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        failpoint::disarm_all();
+    }
+}
+
+fn chaos_guard() -> ChaosGuard {
+    // A panicking chaos test poisons the lock by design; the registry is
+    // re-zeroed below, so the poison carries no state worth refusing.
+    let g = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::disarm_all();
+    ChaosGuard(g)
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("PQUANT_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(11)
+}
+
+fn nano_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        variant: Variant::PQuant,
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        r: 16,
+        n_experts: 2,
+        seq_len: 32,
+        alpha_init: 2.0,
+        beta_init: 0.2,
+    }
+}
+
+// ------------------------------------------------------ worker supervision
+
+#[test]
+fn worker_panic_is_survivable_and_health_recovers() {
+    let _g = chaos_guard();
+    let model = PackedModel::random(&nano_cfg("chaos-panic"), 11);
+    let mut reference = model.clone();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", model, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            // Long cooldown so the degraded window is observable without
+            // racing the wall clock; recovery is polled below.
+            fault_cooldown: Duration::from_secs(2),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+    assert!(engine.health().is_ready(), "a fresh engine starts ready");
+
+    // Exactly one injected panic. The failpoint sits after the idle
+    // check, so idle spinning cannot consume the single fire: the first
+    // round that actually carries the submitted request dies.
+    failpoint::arm_limited("worker.step", 1.0, 0xC0FFEE, 1);
+    let stats = engine.submit(GenRequest::greedy(vec![1, 2, 3], 8)).unwrap().wait();
+    assert_eq!(
+        stats.finish,
+        FinishReason::WorkerFault,
+        "the in-flight row fails with a terminal event instead of hanging"
+    );
+    assert_eq!(engine.metrics().worker_faults.load(Ordering::Relaxed), 1);
+    assert_eq!(engine.metrics().worker_respawns.load(Ordering::Relaxed), 1);
+    assert!(
+        matches!(engine.health(), HealthState::Degraded { .. }),
+        "a fresh worker fault reports degraded during the cooldown"
+    );
+
+    // The respawned worker must serve bit-identical greedy output while
+    // the health cooldown is still running — degraded still serves.
+    let out = engine.submit(GenRequest::greedy(vec![4, 5], 6)).unwrap().wait();
+    assert_eq!(out.finish, FinishReason::Length);
+    assert_eq!(out.tokens, reference.generate(&[4, 5], 6));
+
+    let t0 = Instant::now();
+    while !engine.health().is_ready() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "health must return to ready");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let metrics = engine.shutdown();
+    let kv = metrics.kv().expect("paged engine reports pool stats");
+    assert_eq!(kv.in_use, 0, "the faulted row's blocks drained back to the pool");
+}
+
+// -------------------------------------------------------- chaos invariants
+
+#[test]
+fn chaos_invariants_under_seeded_faults() {
+    let _g = chaos_guard();
+    let seed = chaos_seed();
+    let spill_dir = std::env::temp_dir()
+        .join(format!("pquant-chaos-{}-{seed}", std::process::id()));
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", PackedModel::random(&nano_cfg("chaos-target"), 21), None);
+    registry.register("draft", PackedModel::random(&nano_cfg("chaos-draft"), 22), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            queue_depth: 256,
+            // Small pool + spill tier so the KV failpoints actually sit
+            // on hot paths (reservation pressure, shed-to-disk writes).
+            kv: Some(KvPoolOptions { n_blocks: 64, block_size: 8, ..Default::default() }),
+            kv_spill_dir: Some(spill_dir.clone()),
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+
+    failpoint::arm("kv.reserve", 0.05, seed);
+    failpoint::arm("spill.write", 0.5, seed ^ 0xA5);
+    failpoint::arm("spec.propose", 0.25, seed ^ 0x5A);
+    // Worker panics are bounded so a run cannot spend all its wall clock
+    // respawning; two mid-traffic crashes is plenty of coverage.
+    failpoint::arm_limited("worker.step", 0.02, seed ^ 0xF0, 2);
+
+    let cfg = TraceConfig {
+        seed,
+        n_requests: 48,
+        rate: 400.0,
+        prompt_lens: vec![(4, 0.6), (8, 0.4)],
+        output_lens: vec![(4, 0.5), (8, 0.5)],
+        shared_prefix_len: 8,
+        draft_frac: 0.25,
+        draft_model: Some("draft".into()),
+        spec_k: 2,
+        ..TraceConfig::default()
+    };
+    let (report, records) = loadgen::run_recorded(Target::Engine(&engine), &cfg).unwrap();
+    failpoint::disarm_all();
+
+    // Invariant 1: exactly one terminal outcome per submitted request.
+    assert_eq!(report.submitted, cfg.n_requests);
+    assert_eq!(records.len(), cfg.n_requests);
+    let known =
+        ["length", "stop", "cancelled", "failed", "worker_fault", "deadline", "rejected"];
+    for r in &records {
+        assert!(
+            known.contains(&r.finish.as_str()),
+            "request {} ended {:?} — streams must terminate, not trail off",
+            r.index,
+            r.finish
+        );
+    }
+
+    // Invariant 2: server-side counters reconcile with the client tally.
+    // `rejected` never got past submit, so it has no server-side twin;
+    // everything admitted must land in exactly one terminal counter.
+    let count = |name: &str| records.iter().filter(|r| r.finish == name).count();
+    let pool = engine.kv_pool().cloned();
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), count("length") + count("stop"));
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed), count("cancelled"));
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), count("failed"));
+    assert_eq!(metrics.worker_faults.load(Ordering::Relaxed), count("worker_fault"));
+    assert_eq!(metrics.deadline_exceeded.load(Ordering::Relaxed), count("deadline"));
+    assert!(
+        metrics.worker_respawns.load(Ordering::Relaxed)
+            >= failpoint::fire_count("worker.step"),
+        "every injected worker panic produced a respawn"
+    );
+
+    // Invariant 3: after the drain plus explicit eviction of the shared
+    // prefix cache, every block is back in the pool — no fault path
+    // (panic drain, deadline cut, failed spill, rejected reservation)
+    // may leak KV.
+    let pool = pool.expect("engine was started with a paged pool");
+    pool.evict_unused();
+    assert_eq!(pool.stats().in_use, 0, "chaos run leaked KV blocks");
+    std::fs::remove_dir_all(&spill_dir).ok();
+}
+
+// ------------------------------------------------------------- deadlines
+
+#[test]
+fn expired_deadlines_shed_in_queue_and_cut_in_flight() {
+    let _g = chaos_guard();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", PackedModel::random(&nano_cfg("chaos-deadline"), 31), None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions {
+            model: "m".into(),
+            max_batch: 4,
+            // One prompt token per scheduling slice stretches prefill
+            // across many fused rounds, giving the in-flight deadline
+            // sweep a realistic window to fire in.
+            prefill_chunk: 1,
+            ..EngineOptions::default()
+        },
+    )
+    .unwrap();
+
+    // (a) Already expired at admission: shed from the queue before any
+    // prefill work, deterministically.
+    let req = GenRequest::greedy(vec![1, 2, 3, 4], 8).with_deadline(Duration::ZERO);
+    let stats = engine.submit(req).unwrap().wait();
+    assert_eq!(stats.finish, FinishReason::DeadlineExceeded);
+    assert!(stats.tokens.is_empty(), "queue-shed requests never produce tokens");
+
+    // (b) Tight-but-plausible deadlines under concurrent load: every
+    // ticket still reaches a terminal state. A deadline cut must be
+    // partial output; anything that beat the clock must be complete.
+    let tickets: Vec<_> = (0u32..4)
+        .map(|i| {
+            let prompt: Vec<u32> = (0u32..24).map(|j| (i + j) % 64).collect();
+            let req = GenRequest::greedy(prompt, 8).with_deadline(Duration::from_millis(3));
+            engine.submit(req).unwrap()
+        })
+        .collect();
+    let mut cut = 0usize;
+    for t in tickets {
+        let s = t.wait();
+        match s.finish {
+            FinishReason::DeadlineExceeded => {
+                cut += 1;
+                assert!(s.tokens.len() < 8, "a deadline cut cannot be a full budget");
+            }
+            FinishReason::Length => assert_eq!(s.tokens.len(), 8),
+            other => panic!("unexpected finish {other:?}"),
+        }
+    }
+    assert!(engine.health().is_ready(), "deadline shedding is not a fault");
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.deadline_exceeded.load(Ordering::Relaxed), 1 + cut);
+    let kv = metrics.kv().expect("paged engine reports pool stats");
+    assert_eq!(kv.in_use, 0, "deadline cuts drained their blocks");
+}
+
+// ----------------------------------------------- failpoints compiled out
+
+#[test]
+fn disarmed_failpoints_never_fire() {
+    let _g = chaos_guard();
+    // The serving stack is compiled with failpoints in place; with the
+    // registry empty they must be inert, i.e. a plain run is untouched.
+    let model = PackedModel::random(&nano_cfg("chaos-off"), 41);
+    let mut reference = model.clone();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("m", model, None);
+    let engine = Engine::start(
+        &registry,
+        EngineOptions { model: "m".into(), ..EngineOptions::default() },
+    )
+    .unwrap();
+    let stats = engine.submit(GenRequest::greedy(vec![7, 9], 5)).unwrap().wait();
+    assert_eq!(stats.finish, FinishReason::Length);
+    assert_eq!(stats.tokens, reference.generate(&[7, 9], 5));
+    assert_eq!(engine.metrics().worker_faults.load(Ordering::Relaxed), 0);
+    assert_eq!(failpoint::fire_count("worker.step"), 0);
+    assert!(engine.health().is_ready());
+    engine.shutdown();
+}

@@ -62,6 +62,15 @@ wait "$OBS_SERVE_PID"
 # Post-run: the --trace-out ring must be valid Chrome trace JSON with terminals.
 ./target/release/repro obs-check --trace "$OBS_DIR/trace.json"
 
+echo "==> chaos lane: seeded fault injection (tests/integration_chaos.rs)"
+# Each seed drives a different deterministic fault schedule through the
+# failpoint registry; the invariants (one terminal event per ticket, KV
+# pool drains to zero, client/server counters reconcile) must hold on all.
+for seed in 11 29 47; do
+    echo "  -> PQUANT_CHAOS_SEED=$seed"
+    PQUANT_CHAOS_SEED=$seed cargo test -q --test integration_chaos
+done
+
 echo "==> style: cargo fmt --check"
 cargo fmt --check
 
