@@ -8,6 +8,7 @@
 //! ratio.
 
 use pquant::config::{ModelConfig, Variant};
+use pquant::gemm::{set_simd_mode, SimdMode};
 use pquant::infer::{BatchKv, KvCache, PackedModel, Scratch, SeqStep};
 use pquant::util::bench::Bencher;
 use pquant::util::json::{arr, num, obj};
@@ -65,11 +66,47 @@ fn main() {
         tps.push((bs, bs as f64 / stats.median()));
     }
 
+    // Batch-16 again with the kernels forced to the scalar oracle: the
+    // end-to-end decode-step speedup attributable to gemm::simd dispatch.
+    set_simd_mode(SimdMode::Scalar);
+    let bs = 16usize;
+    let scalar_tps = {
+        let mut caches: Vec<Vec<KvCache>> = (0..bs).map(|_| model.new_caches(cap)).collect();
+        let mut scratch = Scratch::new();
+        let mut pos = 0usize;
+        let vocab = cfg.vocab;
+        let stats = b.bench("decode_step_batch b=16 (forced scalar)", || {
+            if pos >= cap {
+                for c in caches.iter_mut() {
+                    for l in c.iter_mut() {
+                        l.reset();
+                    }
+                }
+                pos = 0;
+            }
+            let toks: Vec<u32> = (0..bs).map(|si| ((pos * 7 + si) % vocab) as u32).collect();
+            let mut steps: Vec<SeqStep> = caches
+                .iter_mut()
+                .zip(&toks)
+                .map(|(c, t)| {
+                    SeqStep::new(std::slice::from_ref(t), pos, BatchKv::Contig(&mut c[..]), true)
+                })
+                .collect();
+            model.decode_step_batch(&mut steps, &mut scratch);
+            pos += 1;
+            scratch.logits_row(0)[0]
+        });
+        bs as f64 / stats.median()
+    };
+    set_simd_mode(SimdMode::Auto);
+
     for &(bs, t) in &tps {
         println!("batch {bs:>2}: {t:.0} tokens/s aggregate");
     }
     let ratio = tps.last().unwrap().1 / tps[0].1;
     println!("batch-16 vs batch-1 aggregate throughput: {ratio:.2}x");
+    let simd_ratio = tps.last().unwrap().1 / scalar_tps;
+    println!("batch-16 simd vs forced-scalar throughput: {simd_ratio:.2}x");
 
     let entries: Vec<_> = tps
         .iter()
@@ -78,6 +115,8 @@ fn main() {
     let payload = obj(vec![
         ("batches", arr(entries)),
         ("batch16_vs_batch1_ratio", num(ratio)),
+        ("batch16_scalar_tokens_per_sec", num(scalar_tps)),
+        ("scalar_vs_simd_ratio", num(simd_ratio)),
     ]);
     std::fs::create_dir_all("results/bench").ok();
     std::fs::write("results/bench/decode_batch.json", payload.to_string_pretty()).ok();

@@ -1,11 +1,27 @@
 //! Figure 8 kernel benches: the four matmul engines at the paper's 7B
 //! linear-layer shapes (d=4096 GEMV, the edge decode regime) and at the
-//! testbed's micro shapes.  Run with `cargo bench --bench gemm_kernels`.
+//! testbed's micro shapes, plus a scalar-vs-SIMD A/B of the batched
+//! engines (recorded as `scalar_vs_simd_ratio/...` metrics — see
+//! `docs/performance.md`).  Run with `cargo bench --bench gemm_kernels`;
+//! writes `results/bench/gemm_kernels.json`.
 
-use pquant::gemm::{build_luts, f32_gemv, i8_gemv, lut_gemv, ternary_gemv};
+use pquant::gemm::{
+    build_luts, build_ternary_luts, f32_gemm_batch_into, f32_gemv, i8_gemm_batch_into, i8_gemv,
+    lut_gemm_into, lut_gemv, lut_gemv_into, set_simd_mode, simd, ternary_gemm_into, ternary_gemv,
+    SimdMode,
+};
 use pquant::quant::{pack_signs, pack_ternary};
 use pquant::util::bench::Bencher;
 use pquant::util::rng::Rng;
+
+/// Time `f` under forced-scalar then auto dispatch and record the ratio.
+fn ab<T, F: FnMut() -> T>(b: &mut Bencher, name: &str, mut f: F) {
+    set_simd_mode(SimdMode::Scalar);
+    let t_scalar = b.bench(&format!("{name} [scalar]"), &mut f).median();
+    set_simd_mode(SimdMode::Auto);
+    let t_auto = b.bench(&format!("{name} [auto]"), &mut f).median();
+    b.metric(&format!("scalar_vs_simd_ratio/{name}"), t_scalar / t_auto);
+}
 
 fn main() {
     let mut b = Bencher::default();
@@ -36,5 +52,53 @@ fn main() {
             lut_gemv(&l, &w_packed)
         });
     }
+
+    // Scalar-vs-SIMD A/B on the batched engines and the GEMV LUT walk.
+    // Auto resolves through gemm::simd (AVX2/NEON when the CPU has it);
+    // outputs are bit-identical in both lanes, so the ratio is a pure
+    // kernel speedup.
+    println!("auto dispatch resolves to: {:?}", simd::active_backend());
+    for &(k, n, bs, label) in
+        &[(1024usize, 2816usize, 16usize, "mid"), (256, 704, 16, "micro")]
+    {
+        let w_f: Vec<f32> = rng.normal_vec(k * n);
+        let signs: Vec<bool> = w_f.iter().map(|&v| v >= 0.0).collect();
+        let w_packed = pack_signs(&signs, k, n);
+        let tern: Vec<i8> = w_f.iter().map(|&v| (v * 1.2).round().clamp(-1.0, 1.0) as i8).collect();
+        let w_tern = pack_ternary(&tern, k, n);
+        let w_i8: Vec<i8> = w_f.iter().map(|&v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+        let x_f: Vec<f32> = rng.normal_vec(bs * k);
+        let x_q: Vec<i8> =
+            x_f.iter().map(|v| (v * 40.0).clamp(-127.0, 127.0) as i8).collect();
+        let luts: Vec<_> = (0..bs).map(|r| build_luts(&x_q[r * k..(r + 1) * k], k)).collect();
+        let tluts: Vec<_> =
+            (0..bs).map(|r| build_ternary_luts(&x_q[r * k..(r + 1) * k], k)).collect();
+
+        let mut yi = vec![0i32; n * bs];
+        let mut yf = vec![0f32; n * bs];
+        let mut y1 = vec![0i32; n];
+
+        ab(&mut b, &format!("lut_gemm {label} {k}x{n} b={bs}"), || {
+            lut_gemm_into(&luts, &w_packed, &mut yi);
+            yi[0]
+        });
+        ab(&mut b, &format!("ternary_gemm {label} {k}x{n} b={bs}"), || {
+            ternary_gemm_into(&tluts, &w_tern, &mut yi);
+            yi[0]
+        });
+        ab(&mut b, &format!("i8_gemm_batch {label} {k}x{n} b={bs}"), || {
+            i8_gemm_batch_into(&x_q, &w_i8, bs, k, n, &mut yi);
+            yi[0]
+        });
+        ab(&mut b, &format!("f32_gemm_batch {label} {k}x{n} b={bs}"), || {
+            f32_gemm_batch_into(&x_f, &w_f, bs, k, n, &mut yf);
+            yf[0]
+        });
+        ab(&mut b, &format!("lut_gemv {label} {k}x{n}"), || {
+            lut_gemv_into(&luts[0], &w_packed, &mut y1);
+            y1[0]
+        });
+    }
+    set_simd_mode(SimdMode::Auto);
     b.write_json("gemm_kernels");
 }

@@ -15,17 +15,28 @@
 //! to row-major [b, n] during dequantization, which they must do anyway to
 //! apply per-row scales.
 //!
+//! Dispatch: each public kernel resolves a backend once per call via
+//! [`super::simd::active_backend`] (AVX2 / NEON / scalar; `PQUANT_SIMD`
+//! and [`super::simd::set_simd_mode`] override) and runs its per-chunk
+//! work through that backend. The `*_cols_scalar` functions below are the
+//! original scalar loops, kept verbatim as the always-on bit-exactness
+//! oracle — the SIMD paths must (and are property-tested to, in
+//! `tests/simd_parity.rs`) reproduce them bit-for-bit. See
+//! `docs/performance.md`.
+//!
 //! Bit-exactness: the integer kernels perform, per (row, column), exactly
-//! the adds of the corresponding GEMV in the same order, so results are
-//! bit-identical to the per-row path (property-tested below and in
+//! the adds of the corresponding GEMV (reassociated only across i32
+//! additions, which commute exactly), so results are bit-identical to the
+//! per-row path (property-tested below and in
 //! `tests/integration_batch.rs`). The f32 kernel preserves the GEMV's
-//! k-major accumulation order and its skip-zero behavior, so it too is
-//! bit-identical.
+//! k-major accumulation order, its skip-zero behavior, and one rounding
+//! per multiply/add (no FMA), so it too is bit-identical in every mode.
 
 use crate::quant::{PackedBits, PackedTernary};
 use crate::util::threads::{num_threads, par_chunks_mut_granular};
 
 use super::lut::Luts;
+use super::simd::{self, Backend};
 use super::TernaryLuts;
 
 /// Floor on accumulator elements per thread before another scoped thread
@@ -39,10 +50,37 @@ fn thread_count(total_elems: usize, cols: usize) -> usize {
         .min(total_elems / MIN_ELEMS_PER_THREAD + 1)
 }
 
+/// Scalar oracle for [`lut_gemm_into`]'s per-chunk work: columns
+/// `col0..col0 + chunk.len()/b` of the `[n, b]` accumulator, `b =
+/// luts.len()`. Kept verbatim from the original kernel; every SIMD
+/// backend must match it bit-for-bit.
+pub fn lut_cols_scalar(luts: &[Luts], w: &PackedBits, col0: usize, chunk: &mut [i32]) {
+    let b = luts.len();
+    for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
+        let j = col0 + cj;
+        let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+        accs.fill(0);
+        for (byte_idx, &byte) in col.iter().enumerate() {
+            let g = byte_idx * 2;
+            let lo = (byte & 0x0F) as usize;
+            let hi = (byte >> 4) as usize;
+            for (r, acc) in accs.iter_mut().enumerate() {
+                let t = &luts[r].tables;
+                *acc += unsafe {
+                    // In bounds: g+1 < n_groups (callers assert) and
+                    // lo/hi < 16 — same argument as lut_gemv_into.
+                    *t.get_unchecked(g * 16 + lo) as i32
+                        + *t.get_unchecked((g + 1) * 16 + hi) as i32
+                };
+            }
+        }
+    }
+}
+
 /// Batched LUT W1A8 GEMM: `yt[j*b + r] = Σ_groups luts[r][nibble(g, col j)]`
 /// for `b = luts.len()` rows. Each packed column is read once for the whole
 /// batch; with `b == 1` this degenerates to [`super::lut_gemv_into`] and is
-/// bit-identical to it for every `b`.
+/// bit-identical to it for every `b` and every dispatch backend.
 pub fn lut_gemm_into(luts: &[Luts], w: &PackedBits, yt: &mut [i32]) {
     let b = luts.len();
     assert!(b > 0, "empty batch");
@@ -53,28 +91,34 @@ pub fn lut_gemm_into(luts: &[Luts], w: &PackedBits, yt: &mut [i32]) {
         assert!(l.n_groups >= w.bytes_per_col * 2, "LUTs built for smaller k");
     }
     let threads = thread_count(yt.len(), w.n);
+    let be = simd::active_backend();
     par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
         let col0 = start / b;
-        for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
-            let j = col0 + cj;
-            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
-            accs.fill(0);
-            for (byte_idx, &byte) in col.iter().enumerate() {
-                let g = byte_idx * 2;
-                let lo = (byte & 0x0F) as usize;
-                let hi = (byte >> 4) as usize;
-                for (r, acc) in accs.iter_mut().enumerate() {
-                    let t = &luts[r].tables;
-                    *acc += unsafe {
-                        // In bounds: g+1 < n_groups (assert above) and
-                        // lo/hi < 16 — same argument as lut_gemv_into.
-                        *t.get_unchecked(g * 16 + lo) as i32
-                            + *t.get_unchecked((g + 1) * 16 + hi) as i32
-                    };
-                }
-            }
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { simd::x86::lut_cols(luts, w, col0, chunk) },
+            _ => lut_cols_scalar(luts, w, col0, chunk),
         }
     });
+}
+
+/// Scalar oracle for [`ternary_gemm_into`]'s per-chunk work (kept
+/// verbatim; see [`lut_cols_scalar`]).
+pub fn ternary_cols_scalar(luts: &[TernaryLuts], w: &PackedTernary, col0: usize, chunk: &mut [i32]) {
+    let b = luts.len();
+    for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
+        let j = col0 + cj;
+        let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+        accs.fill(0);
+        for (g, &byte) in col.iter().enumerate() {
+            for (r, acc) in accs.iter_mut().enumerate() {
+                *acc += unsafe {
+                    // in bounds: g < bytes_per_col <= n_groups, byte < 256
+                    *luts[r].tables.get_unchecked(g * 256 + byte as usize) as i32
+                };
+            }
+        }
+    }
 }
 
 /// Batched packed-ternary GEMM over per-row byte-indexed tables; the
@@ -87,22 +131,42 @@ pub fn ternary_gemm_into(luts: &[TernaryLuts], w: &PackedTernary, yt: &mut [i32]
         assert!(l.n_groups >= w.bytes_per_col, "LUTs built for smaller k");
     }
     let threads = thread_count(yt.len(), w.n);
+    let be = simd::active_backend();
     par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
         let col0 = start / b;
-        for (cj, accs) in chunk.chunks_exact_mut(b).enumerate() {
-            let j = col0 + cj;
-            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
-            accs.fill(0);
-            for (g, &byte) in col.iter().enumerate() {
-                for (r, acc) in accs.iter_mut().enumerate() {
-                    *acc += unsafe {
-                        // in bounds: g < bytes_per_col <= n_groups, byte < 256
-                        *luts[r].tables.get_unchecked(g * 256 + byte as usize) as i32
-                    };
-                }
-            }
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { simd::x86::ternary_cols(luts, w, col0, chunk) },
+            _ => ternary_cols_scalar(luts, w, col0, chunk),
         }
     });
+}
+
+/// Scalar oracle for [`i8_gemm_batch_into`]'s per-chunk work (kept
+/// verbatim; see [`lut_cols_scalar`]).
+pub fn i8_cols_scalar(
+    xs: &[i8],
+    w: &[i8],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [i32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0);
+    for kk in 0..k {
+        let wrow = &w[kk * n + col0..kk * n + col0 + cols];
+        for r in 0..b {
+            let xv = xs[r * k + kk] as i32;
+            if xv == 0 {
+                continue;
+            }
+            for (cj, &wv) in wrow.iter().enumerate() {
+                chunk[cj * b + r] += xv * wv as i32;
+            }
+        }
+    }
 }
 
 /// Batched INT8 GEMM with i32 accumulation: `xs` is [b, k] row-major
@@ -115,50 +179,67 @@ pub fn i8_gemm_batch_into(xs: &[i8], w: &[i8], b: usize, k: usize, n: usize, yt:
     assert_eq!(w.len(), k * n);
     assert_eq!(yt.len(), n * b);
     let threads = thread_count(yt.len(), n);
+    let be = simd::active_backend();
     par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
         let col0 = start / b;
-        let cols = chunk.len() / b;
-        chunk.fill(0);
-        for kk in 0..k {
-            let wrow = &w[kk * n + col0..kk * n + col0 + cols];
-            for r in 0..b {
-                let xv = xs[r * k + kk] as i32;
-                if xv == 0 {
-                    continue;
-                }
-                for (cj, &wv) in wrow.iter().enumerate() {
-                    chunk[cj * b + r] += xv * wv as i32;
-                }
-            }
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { simd::x86::i8_cols(xs, w, b, k, n, col0, chunk) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { simd::neon::i8_cols(xs, w, b, k, n, col0, chunk) },
+            _ => i8_cols_scalar(xs, w, b, k, n, col0, chunk),
         }
     });
+}
+
+/// Scalar oracle for [`f32_gemm_batch_into`]'s per-chunk work (kept
+/// verbatim; see [`lut_cols_scalar`]).
+pub fn f32_cols_scalar(
+    xs: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [f32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0.0);
+    for kk in 0..k {
+        let wrow = &w[kk * n + col0..kk * n + col0 + cols];
+        for r in 0..b {
+            let xv = xs[r * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            for (cj, &wv) in wrow.iter().enumerate() {
+                chunk[cj * b + r] += xv * wv;
+            }
+        }
+    }
 }
 
 /// Batched f32 GEMM into a [n, b] accumulator, preserving
 /// [`super::f32_gemv`]'s k-major accumulation order and skip-zero rows so
 /// every output row is bit-identical to the GEMV path (the serving
-/// lm_head and FP16-baseline batch engine).
+/// lm_head and FP16-baseline batch engine). The SIMD paths vectorize
+/// across output columns only — the per-element addition sequence is
+/// untouched, so bit-exactness holds in every mode.
 pub fn f32_gemm_batch_into(xs: &[f32], w: &[f32], b: usize, k: usize, n: usize, yt: &mut [f32]) {
     assert!(b > 0, "empty batch");
     assert_eq!(xs.len(), b * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(yt.len(), n * b);
     let threads = thread_count(yt.len(), n);
+    let be = simd::active_backend();
     par_chunks_mut_granular(yt, threads, b, |_, start, chunk| {
         let col0 = start / b;
-        let cols = chunk.len() / b;
-        chunk.fill(0.0);
-        for kk in 0..k {
-            let wrow = &w[kk * n + col0..kk * n + col0 + cols];
-            for r in 0..b {
-                let xv = xs[r * k + kk];
-                if xv == 0.0 {
-                    continue;
-                }
-                for (cj, &wv) in wrow.iter().enumerate() {
-                    chunk[cj * b + r] += xv * wv;
-                }
-            }
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { simd::x86::f32_cols(xs, w, b, k, n, col0, chunk) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { simd::neon::f32_cols(xs, w, b, k, n, col0, chunk) },
+            _ => f32_cols_scalar(xs, w, b, k, n, col0, chunk),
         }
     });
 }

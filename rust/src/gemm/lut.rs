@@ -75,7 +75,10 @@ pub fn lut_gemv(luts: &Luts, w: &PackedBits) -> Vec<i32> {
     y
 }
 
-/// Allocation-free variant for the serving hot loop.
+/// Allocation-free variant for the serving hot loop. Dispatches to the
+/// AVX2 gather-based table walk when available (the GEMV is the `b = 1`
+/// case of the batched kernel: its `[n, 1]` accumulator layout is exactly
+/// `y`); i32 adds commute, so every backend is bit-identical.
 pub fn lut_gemv_into(luts: &Luts, w: &PackedBits, y: &mut [i32]) {
     assert_eq!(y.len(), w.n);
     // The unsafe nibble walk reads groups 0..2*bytes_per_col, so that —
@@ -83,7 +86,16 @@ pub fn lut_gemv_into(luts: &Luts, w: &PackedBits, y: &mut [i32]) {
     // hand-built Luts.
     assert!(luts.n_groups >= w.bytes_per_col * 2, "LUTs built for smaller k");
     let threads = num_threads().min(w.n.max(1));
+    let be = super::simd::active_backend();
     par_chunks_mut(y, threads, |_, start, chunk| {
+        #[cfg(target_arch = "x86_64")]
+        if be == super::simd::Backend::Avx2 {
+            unsafe {
+                super::simd::x86::lut_cols(std::slice::from_ref(luts), w, start, chunk);
+            }
+            return;
+        }
+        let _ = be;
         for (jj, acc) in chunk.iter_mut().enumerate() {
             let j = start + jj;
             let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];

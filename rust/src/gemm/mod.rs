@@ -12,40 +12,58 @@
 //!   packed weight column is read **once** per batch step and accumulated
 //!   into B output rows (the multi-user decode path; integer accumulation
 //!   keeps every row bit-identical to the GEMV engines).
+//! * [`simd`] — runtime CPU-feature dispatch (AVX2 / NEON / scalar) for
+//!   the batched engines and the LUT-family GEMV walks. Scalar loops stay
+//!   as the bit-exactness oracle; `PQUANT_SIMD=off` or
+//!   [`set_simd_mode`] force it. Design + measured ratios:
+//!   `docs/performance.md`.
 
 pub mod batched;
 pub mod lut;
+pub mod simd;
 
 pub use batched::{f32_gemm_batch_into, i8_gemm_batch_into, lut_gemm_into, ternary_gemm_into};
 pub use lut::{build_luts, build_luts_into, lut_gemv, lut_gemv_into};
+pub use simd::{active_backend, available_modes, set_simd_mode, simd_mode, Backend, SimdMode};
 
 use crate::quant::PackedTernary;
-use crate::util::threads::par_chunks_mut;
+use crate::util::threads::{par_chunks_mut, par_chunks_mut_granular};
+
+/// Per-chunk row loop of [`f32_gemm`]: computes output rows starting at
+/// `row0` into a pre-zeroed `chunk` (whole rows, `chunk.len() % n == 0`).
+/// Factored out so the straddle regression test below can drive it under
+/// both the granular and the (buggy) non-granular splitter.
+fn f32_gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    for r in 0..rows {
+        let i = row0 + r;
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut chunk[r * n..(r + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
 
 /// Row-major f32 GEMM: c[m,n] = a[m,k] · b[k,n], blocked over k and
-/// threaded over rows of the output.
+/// threaded over rows of the output. Uses the granular splitter with
+/// `granule = n` so chunk boundaries always land on row boundaries —
+/// the plain splitter could hand a thread a chunk straddling two rows
+/// (whenever `num_threads() < m` doesn't divide m), which silently
+/// dropped and misattributed partial rows.
 pub fn f32_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * n];
     let threads = crate::util::threads::num_threads().min(m.max(1));
-    par_chunks_mut(&mut c, threads, |_, start, chunk| {
-        let row0 = start / n;
-        let rows = chunk.len() / n;
-        for r in 0..rows {
-            let i = row0 + r;
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut chunk[r * n..(r + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
+    par_chunks_mut_granular(&mut c, threads, n, |_, start, chunk| {
+        f32_gemm_rows(a, b, k, n, start / n, chunk);
     });
     c
 }
@@ -68,31 +86,36 @@ pub fn f32_gemv(x: &[f32], b: &[f32], k: usize, n: usize) -> Vec<f32> {
     y
 }
 
+/// Per-chunk row loop of [`i8_gemm`] (see [`f32_gemm_rows`]).
+fn i8_gemm_rows(a: &[i8], b: &[i8], k: usize, n: usize, row0: usize, chunk: &mut [i32]) {
+    let rows = chunk.len() / n;
+    for r in 0..rows {
+        let i = row0 + r;
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut chunk[r * n..(r + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
 /// INT8 GEMM with i32 accumulation: c[m,n] = a_q[m,k] · b_q[k,n].
 /// Exact integer arithmetic (|k|·127² < 2³¹ for every config here).
+/// Granular row splitting for the same reason as [`f32_gemm`].
 pub fn i8_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0i32; m * n];
     let threads = crate::util::threads::num_threads().min(m.max(1));
-    par_chunks_mut(&mut c, threads, |_, start, chunk| {
-        let row0 = start / n;
-        let rows = chunk.len() / n;
-        for r in 0..rows {
-            let i = row0 + r;
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut chunk[r * n..(r + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0 {
-                    continue;
-                }
-                let av = av as i32;
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv as i32;
-                }
-            }
-        }
+    par_chunks_mut_granular(&mut c, threads, n, |_, start, chunk| {
+        i8_gemm_rows(a, b, k, n, start / n, chunk);
     });
     c
 }
@@ -181,23 +204,35 @@ pub fn build_ternary_luts_into(x: &[i8], k: usize, out: &mut TernaryLuts) {
     }
 }
 
-/// Allocation-free ternary GEMV over prebuilt tables.
+/// Allocation-free ternary GEMV over prebuilt tables. Dispatches to the
+/// AVX2 table walk when available (a GEMV is the `b = 1` case of the
+/// batched kernel, whose `[n, 1]` accumulator layout *is* `y`); integer
+/// adds commute, so every backend is bit-identical to the scalar walk.
 pub fn ternary_gemv_into(luts: &TernaryLuts, w: &PackedTernary, y: &mut [i32]) {
     assert_eq!(y.len(), w.n);
     assert!(luts.n_groups >= w.bytes_per_col, "LUTs built for smaller k");
     let threads = crate::util::threads::num_threads().min(w.n.max(1));
+    let be = simd::active_backend();
     par_chunks_mut(y, threads, |_, start, chunk| {
-        for (jj, acc) in chunk.iter_mut().enumerate() {
-            let j = start + jj;
-            let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
-            let mut sum = 0i32;
-            for (g, &byte) in col.iter().enumerate() {
-                sum += unsafe {
-                    // in bounds: g < bytes_per_col <= n_groups, byte < 256
-                    *luts.tables.get_unchecked(g * 256 + byte as usize) as i32
-                };
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe {
+                simd::x86::ternary_cols(std::slice::from_ref(luts), w, start, chunk)
+            },
+            _ => {
+                for (jj, acc) in chunk.iter_mut().enumerate() {
+                    let j = start + jj;
+                    let col = &w.bytes[j * w.bytes_per_col..(j + 1) * w.bytes_per_col];
+                    let mut sum = 0i32;
+                    for (g, &byte) in col.iter().enumerate() {
+                        sum += unsafe {
+                            // in bounds: g < bytes_per_col <= n_groups, byte < 256
+                            *luts.tables.get_unchecked(g * 256 + byte as usize) as i32
+                        };
+                    }
+                    *acc = sum;
+                }
             }
-            *acc = sum;
         }
     });
 }
@@ -278,6 +313,66 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Regression for the row-straddling parallel split. The old
+    /// `f32_gemm`/`i8_gemm` used the plain splitter, whose chunk
+    /// boundaries only land on row boundaries when the chunk size happens
+    /// to be a multiple of `n`; with m=3, n=10 and 2 chunks, the 30-elem
+    /// output splits 15+15 — chunk 1 starts mid-row, `start / n`
+    /// misattributes the activation row, and `chunk.len() / n` drops the
+    /// trailing half-row entirely. Driven through the factored row loops
+    /// so the bad splitting is forced deterministically on any core count
+    /// (the thread-cap version lives in `tests/gemm_straddle.rs`).
+    #[test]
+    fn granular_split_fixes_row_straddling_chunks() {
+        let mut r = Rng::new(77);
+        let (m, k, n) = (3usize, 8usize, 10usize);
+        let a = r.normal_vec(m * k);
+        let b = r.normal_vec(k * n);
+        let want = naive_f32(&a, &b, m, k, n);
+
+        // Reproduce the old bug: a non-granular 2-way split straddles.
+        let mut c_old = vec![0.0f32; m * n];
+        crate::util::threads::par_chunks_mut(&mut c_old, 2, |_, start, chunk| {
+            f32_gemm_rows(&a, &b, k, n, start / n, chunk);
+        });
+        let old_matches = c_old.iter().zip(&want).all(|(g, w)| (g - w).abs() < 1e-3);
+        assert!(!old_matches, "straddling split should reproduce the old bug");
+
+        // The granular splitter is correct for every chunk count.
+        for chunks in 1..=6 {
+            let mut c = vec![0.0f32; m * n];
+            par_chunks_mut_granular(&mut c, chunks, n, |_, start, chunk| {
+                f32_gemm_rows(&a, &b, k, n, start / n, chunk);
+            });
+            for (g, w) in c.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "chunks={chunks}: {g} vs {w}");
+            }
+        }
+
+        // Same shape through the integer engine, exactly.
+        let ai: Vec<i8> = (0..m * k).map(|i| (i as i32 % 255 - 127) as i8).collect();
+        let bi: Vec<i8> = (0..k * n).map(|i| (i as i32 * 7 % 255 - 127) as i8).collect();
+        let mut want_i = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                want_i[i * n + j] =
+                    (0..k).map(|kk| ai[i * k + kk] as i32 * bi[kk * n + j] as i32).sum();
+            }
+        }
+        let mut ci_old = vec![0i32; m * n];
+        crate::util::threads::par_chunks_mut(&mut ci_old, 2, |_, start, chunk| {
+            i8_gemm_rows(&ai, &bi, k, n, start / n, chunk);
+        });
+        assert_ne!(ci_old, want_i, "straddling split should reproduce the old bug");
+        for chunks in 1..=6 {
+            let mut ci = vec![0i32; m * n];
+            par_chunks_mut_granular(&mut ci, chunks, n, |_, start, chunk| {
+                i8_gemm_rows(&ai, &bi, k, n, start / n, chunk);
+            });
+            assert_eq!(ci, want_i, "chunks={chunks}");
+        }
     }
 
     #[test]

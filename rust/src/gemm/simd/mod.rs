@@ -1,0 +1,248 @@
+//! Runtime CPU-feature dispatch for the GEMM inner loops.
+//!
+//! The batched engines in [`crate::gemm::batched`] and the GEMV LUT walks
+//! ship two implementations per kernel: the original scalar loop (kept
+//! verbatim as the always-on bit-exactness oracle) and an explicit-SIMD
+//! path — stable `std::arch` AVX2 on x86_64 ([`x86`]), NEON on aarch64
+//! ([`neon`]). Selection happens once per kernel call from three inputs,
+//! in priority order:
+//!
+//! 1. [`set_simd_mode`] — a process-global programmatic override for tests
+//!    and A/B benching.
+//! 2. The `PQUANT_SIMD` environment variable, read once on first use:
+//!    `off`/`0`/`scalar` force the oracle, `avx2`/`neon` force a backend
+//!    (falling back to scalar if the CPU lacks it), anything else (or
+//!    unset) means auto-detect.
+//! 3. Auto-detection: `is_x86_feature_detected!("avx2")` on x86_64 (NEON
+//!    is baseline on aarch64, no detection needed).
+//!
+//! Bit-exactness contract: the integer SIMD kernels perform exactly the
+//! adds of the scalar oracle, reassociated only across i32 additions —
+//! which commute exactly — so outputs are bit-identical in every mode
+//! (property-tested in `tests/simd_parity.rs`). The f32 kernel is
+//! vectorized across output *columns* with the reduction dimension kept
+//! k-major and scalar-broadcast, no FMA contraction and no reassociation,
+//! so it too is bit-identical to the oracle.
+//!
+//! See `docs/performance.md` for the tiling/prefetch design and measured
+//! scalar-vs-SIMD ratios.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+/// Requested dispatch policy (what [`set_simd_mode`] and `PQUANT_SIMD`
+/// express). `Auto` resolves against the running CPU; forcing a backend
+/// the CPU lacks degrades to `Scalar` rather than faulting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+/// Resolved per-call backend the kernels actually branch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_AUTO: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+const MODE_AVX2: u8 = 3;
+const MODE_NEON: u8 = 4;
+
+/// Process-global mode. `MODE_UNSET` means "consult `PQUANT_SIMD` on first
+/// use"; [`set_simd_mode`] writes a resolved value and wins thereafter.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+fn encode(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Auto => MODE_AUTO,
+        SimdMode::Scalar => MODE_SCALAR,
+        SimdMode::Avx2 => MODE_AVX2,
+        SimdMode::Neon => MODE_NEON,
+    }
+}
+
+/// Override the dispatch mode for this process (tests, benches, embedders).
+/// `SimdMode::Auto` restores hardware auto-detection; note it does *not*
+/// re-read `PQUANT_SIMD`.
+pub fn set_simd_mode(mode: SimdMode) {
+    MODE.store(encode(mode), Ordering::Relaxed);
+}
+
+fn mode_from_env() -> u8 {
+    match std::env::var("PQUANT_SIMD") {
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "off" | "0" | "scalar" => MODE_SCALAR,
+            "avx2" => MODE_AVX2,
+            "neon" => MODE_NEON,
+            _ => MODE_AUTO,
+        },
+        Err(_) => MODE_AUTO,
+    }
+}
+
+fn mode_bits() -> u8 {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_UNSET => {
+            let m = mode_from_env();
+            // First resolver wins; a concurrent set_simd_mode overrides
+            // whatever lands here on its next store anyway.
+            let _ = MODE.compare_exchange(MODE_UNSET, m, Ordering::Relaxed, Ordering::Relaxed);
+            MODE.load(Ordering::Relaxed)
+        }
+        m => m,
+    }
+}
+
+/// The currently requested mode, with the environment already applied.
+pub fn simd_mode() -> SimdMode {
+    match mode_bits() {
+        MODE_SCALAR => SimdMode::Scalar,
+        MODE_AVX2 => SimdMode::Avx2,
+        MODE_NEON => SimdMode::Neon,
+        _ => SimdMode::Auto,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Backend {
+    if is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Backend {
+    Backend::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Backend {
+    Backend::Scalar
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Resolve the backend the kernels should branch on for this call. Cheap:
+/// one relaxed atomic load after first use.
+pub fn active_backend() -> Backend {
+    match mode_bits() {
+        MODE_SCALAR => Backend::Scalar,
+        MODE_AVX2 => {
+            if avx2_available() {
+                Backend::Avx2
+            } else {
+                Backend::Scalar
+            }
+        }
+        MODE_NEON => {
+            if cfg!(target_arch = "aarch64") {
+                Backend::Neon
+            } else {
+                Backend::Scalar
+            }
+        }
+        _ => detect(),
+    }
+}
+
+/// Every mode this CPU can actually honor (always includes `Scalar`);
+/// the dispatch parity test iterates this.
+pub fn available_modes() -> Vec<SimdMode> {
+    let mut v = vec![SimdMode::Scalar];
+    if avx2_available() {
+        v.push(SimdMode::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(SimdMode::Neon);
+    v
+}
+
+/// Column-byte block length for the LUT-family kernels: sized so the table
+/// slab one block touches (`per_byte_bytes` across all batch rows) stays
+/// within half a typical 512 KiB L2 while the block's weight bytes stream
+/// through — the cache-blocked tiling of the packed weight planes.
+#[allow(dead_code)] // referenced only by the arch-gated SIMD backends
+pub(crate) fn byte_block(bytes_per_col: usize, per_byte_bytes: usize) -> usize {
+    const L2_BUDGET: usize = 256 * 1024;
+    (L2_BUDGET / per_byte_bytes.max(1)).clamp(64, bytes_per_col.max(64))
+}
+
+/// Column tile width for the dense i8/f32 batched kernels: the tile's
+/// weight slab (`k` rows × tile columns × `elem_bytes`) should stay
+/// L2-resident because each of the `b` batch rows re-sweeps it. Rounded
+/// down to a multiple of 16 (the register micro-tile width), floor 16.
+#[allow(dead_code)] // referenced only by the arch-gated SIMD backends
+pub(crate) fn col_tile(k: usize, elem_bytes: usize) -> usize {
+    const L2_BUDGET: usize = 192 * 1024;
+    let t = L2_BUDGET / (k.max(1) * elem_bytes);
+    (t & !15).max(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test owns every mode write in this binary (two tests writing
+    /// the process-global mode concurrently would race each other's
+    /// asserts; sibling tests merely *reading* dispatch are safe because
+    /// all backends are bit-identical).
+    #[test]
+    fn mode_forcing_resolves_and_degrades_correctly() {
+        set_simd_mode(SimdMode::Scalar);
+        assert_eq!(active_backend(), Backend::Scalar);
+        assert_eq!(simd_mode(), SimdMode::Scalar);
+
+        // Forcing a backend this machine lacks must degrade to scalar
+        // (at most one of AVX2/NEON exists on any one machine).
+        if !avx2_available() {
+            set_simd_mode(SimdMode::Avx2);
+            assert_eq!(active_backend(), Backend::Scalar);
+        }
+        if !cfg!(target_arch = "aarch64") {
+            set_simd_mode(SimdMode::Neon);
+            assert_eq!(active_backend(), Backend::Scalar);
+        }
+
+        set_simd_mode(SimdMode::Auto);
+        let auto = active_backend();
+        assert!(available_modes().contains(&SimdMode::Scalar));
+        // Auto must resolve to something this CPU can honor.
+        let ok = match auto {
+            Backend::Scalar => true,
+            Backend::Avx2 => avx2_available(),
+            Backend::Neon => cfg!(target_arch = "aarch64"),
+        };
+        assert!(ok, "auto-detected backend must be available: {auto:?}");
+    }
+
+    #[test]
+    fn blocking_helpers_stay_in_sane_ranges() {
+        assert!(byte_block(4096, 64) >= 64);
+        assert!(byte_block(4096, 64 * 1024 * 1024) == 64, "huge rows clamp to the floor");
+        assert_eq!(byte_block(8, 64) % 8, 0 % 8); // tiny columns: one block
+        assert!(byte_block(8, 64) >= 8, "block covers the whole column");
+        assert_eq!(col_tile(4096, 1) % 16, 0);
+        assert!(col_tile(1 << 30, 4) == 16, "floor is one micro-tile");
+    }
+}

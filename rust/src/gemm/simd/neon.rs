@@ -1,0 +1,162 @@
+//! NEON inner loops for the dense batched GEMM engines (aarch64).
+//!
+//! Mirrors the AVX2 register-blocking design at 128-bit width: per batch
+//! row, an 8-column accumulator micro-tile lives in two q registers
+//! across the whole k sweep, weight rows stream 8 columns at a time, and
+//! column tiles are sized to keep a tile's weight slab L2-resident across
+//! the `b` row sweeps. Integer accumulation uses `vmlaq_s32` (exact); the
+//! f32 kernel uses separate `vmulq`/`vaddq` — never `vfmaq`, whose fused
+//! rounding would break bit-exactness with the scalar oracle — with the
+//! oracle's ascending-k order and skip-zero predicate intact.
+//!
+//! The LUT/ternary table walks stay on the scalar oracle on aarch64: a
+//! `vqtbl`-based 16-lane walk needs a column-interleaved byte layout to
+//! beat scalar and is tracked as a follow-on in `docs/performance.md`.
+//! NEON is baseline on aarch64, so no runtime detection is needed and
+//! these are plain `unsafe fn`s (the dispatcher still honors
+//! `PQUANT_SIMD=off`).
+
+use core::arch::aarch64::*;
+
+use super::col_tile;
+
+/// NEON path for [`crate::gemm::batched::i8_gemm_batch_into`]'s per-chunk
+/// work.
+///
+/// # Safety
+///
+/// Caller must guarantee `xs.len() >= b*k`, `w.len() == k*n`,
+/// `chunk.len()` a multiple of `b`, and the chunk's column range
+/// `col0..col0 + chunk.len()/b` within `n`.
+pub unsafe fn i8_cols(
+    xs: &[i8],
+    w: &[i8],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [i32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0);
+    let cols8 = cols & !7;
+    let tile = (col_tile(k, 1) / 2).max(8) & !7;
+    let mut j0 = 0usize;
+    while j0 < cols8 {
+        let j1 = (j0 + tile).min(cols8);
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut jm = j0;
+            while jm < j1 {
+                let mut acc0 = vdupq_n_s32(0);
+                let mut acc1 = vdupq_n_s32(0);
+                for kk in 0..k {
+                    let xv = *xrow.add(kk);
+                    if xv == 0 {
+                        // Exact for integers; matches the oracle's
+                        // skip-zero predicate.
+                        continue;
+                    }
+                    let wp = w.as_ptr().add(kk * n + col0 + jm);
+                    let xb = vdupq_n_s32(xv as i32);
+                    let w16 = vmovl_s8(vld1_s8(wp));
+                    acc0 = vmlaq_s32(acc0, xb, vmovl_s16(vget_low_s16(w16)));
+                    acc1 = vmlaq_s32(acc1, xb, vmovl_s16(vget_high_s16(w16)));
+                }
+                let mut buf = [0i32; 8];
+                vst1q_s32(buf.as_mut_ptr(), acc0);
+                vst1q_s32(buf.as_mut_ptr().add(4), acc1);
+                for (l, &v) in buf.iter().enumerate() {
+                    *chunk.get_unchecked_mut((jm + l) * b + r) = v;
+                }
+                jm += 8;
+            }
+        }
+        j0 = j1;
+    }
+    // Remainder columns (< 8): scalar, same ascending-k order.
+    for cj in cols8..cols {
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut sum = 0i32;
+            for kk in 0..k {
+                let xv = *xrow.add(kk);
+                if xv == 0 {
+                    continue;
+                }
+                sum += xv as i32 * *w.get_unchecked(kk * n + col0 + cj) as i32;
+            }
+            *chunk.get_unchecked_mut(cj * b + r) = sum;
+        }
+    }
+}
+
+/// NEON path for [`crate::gemm::batched::f32_gemm_batch_into`]'s
+/// per-chunk work; bit-identical to the scalar oracle (see module docs).
+///
+/// # Safety
+///
+/// Caller must guarantee `xs.len() >= b*k`, `w.len() == k*n`,
+/// `chunk.len()` a multiple of `b`, and the chunk's column range within
+/// `n`.
+pub unsafe fn f32_cols(
+    xs: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [f32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0.0);
+    let cols8 = cols & !7;
+    let tile = (col_tile(k, 4) / 2).max(8) & !7;
+    let mut j0 = 0usize;
+    while j0 < cols8 {
+        let j1 = (j0 + tile).min(cols8);
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut jm = j0;
+            while jm < j1 {
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                for kk in 0..k {
+                    let xv = *xrow.add(kk);
+                    if xv == 0.0 {
+                        // The oracle's exact predicate (also skips -0.0).
+                        continue;
+                    }
+                    let wp = w.as_ptr().add(kk * n + col0 + jm);
+                    let xb = vdupq_n_f32(xv);
+                    // mul then add, never vfmaq: one rounding per op,
+                    // exactly like the scalar `*cv += av * bv`.
+                    acc0 = vaddq_f32(acc0, vmulq_f32(xb, vld1q_f32(wp)));
+                    acc1 = vaddq_f32(acc1, vmulq_f32(xb, vld1q_f32(wp.add(4))));
+                }
+                let mut buf = [0f32; 8];
+                vst1q_f32(buf.as_mut_ptr(), acc0);
+                vst1q_f32(buf.as_mut_ptr().add(4), acc1);
+                for (l, &v) in buf.iter().enumerate() {
+                    *chunk.get_unchecked_mut((jm + l) * b + r) = v;
+                }
+                jm += 8;
+            }
+        }
+        j0 = j1;
+    }
+    for cj in cols8..cols {
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut sum = 0f32;
+            for kk in 0..k {
+                let xv = *xrow.add(kk);
+                if xv == 0.0 {
+                    continue;
+                }
+                sum += xv * *w.get_unchecked(kk * n + col0 + cj);
+            }
+            *chunk.get_unchecked_mut(cj * b + r) = sum;
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! AVX2 inner loops for the batched GEMM engines and the GEMV LUT walks.
+//!
+//! Design notes (see `docs/performance.md` for the full story):
+//!
+//! * **LUT/ternary** — the per-column table walk is turned into 8-wide
+//!   `vpgatherdd` lookups: 8 packed weight bytes are widened to lanes, the
+//!   per-lane table indices are computed arithmetically (each byte owns a
+//!   statically known group), and the i16 entries are gathered at scale 2
+//!   then sign-extended in-register. Accumulation is i32, which commutes
+//!   exactly, so the lane-wise reassociation is bit-identical to the
+//!   scalar oracle. Columns are processed in byte *blocks* sized so the
+//!   table slab a block touches (across all batch rows) stays L2-resident
+//!   while the packed weight bytes stream through once.
+//! * **i8/f32** — classic register blocking: for each batch row, a
+//!   16-column micro-tile of accumulators lives in two ymm registers
+//!   across the whole k sweep; weight rows are streamed 16 columns at a
+//!   time. Column tiles are sized so a tile's weight slab stays in L2
+//!   across the `b` row sweeps. Per output element the additions happen
+//!   in ascending-k order with the oracle's exact skip-zero predicate, so
+//!   the f32 kernel (no FMA, no reassociation) is bit-identical too.
+//! * **Prefetch** — the weight-stationary stream is explicitly prefetched
+//!   one step ahead (`prefetcht0`); addresses are formed with
+//!   `wrapping_add` so the one-past-the-end hints stay defined behavior.
+//!
+//! Every function here requires AVX2; the dispatcher
+//! ([`super::active_backend`]) only routes here after
+//! `is_x86_feature_detected!("avx2")`.
+
+use core::arch::x86_64::*;
+
+use crate::gemm::lut::Luts;
+use crate::gemm::TernaryLuts;
+use crate::quant::{PackedBits, PackedTernary};
+
+use super::{byte_block, col_tile};
+
+/// Horizontal sum of 8 i32 lanes (exact: i32 addition commutes).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0100_1110>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b1011_0001>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// AVX2 path for [`crate::gemm::batched::lut_gemm_into`]'s per-chunk work
+/// (`b == luts.len()` rows; `chunk` is the `[cols, b]` accumulator slab
+/// for columns `col0..col0 + chunk.len()/b`).
+///
+/// # Safety
+///
+/// Requires AVX2. Caller must guarantee `chunk.len()` is a multiple of
+/// `luts.len()`, the column range lies within `w`, and every
+/// `luts[r].n_groups >= w.bytes_per_col * 2` (the same bound the scalar
+/// oracle asserts) so all gathered indices land inside `tables`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn lut_cols(luts: &[Luts], w: &PackedBits, col0: usize, chunk: &mut [i32]) {
+    let b = luts.len();
+    let cols = chunk.len() / b;
+    let bpc = w.bytes_per_col;
+    chunk.fill(0);
+    if bpc == 0 {
+        return;
+    }
+    // Two 16-entry i16 tables per column byte per row.
+    let block = byte_block(bpc, 64 * b);
+    let lane = _mm256_setr_epi32(0, 32, 64, 96, 128, 160, 192, 224);
+    let nib = _mm256_set1_epi32(0xF);
+    let mut b0 = 0usize;
+    while b0 < bpc {
+        let b1 = (b0 + block).min(bpc);
+        // The final column byte always goes through the scalar tail: its
+        // hi-nibble gather would otherwise read 2 bytes past `tables`.
+        let vec_end = b1.min(bpc - 1);
+        for cj in 0..cols {
+            let j = col0 + cj;
+            let colp = w.bytes.as_ptr().add(j * bpc);
+            if cj + 1 < cols {
+                let nxt = w.bytes.as_ptr().wrapping_add((j + 1) * bpc + b0);
+                _mm_prefetch::<_MM_HINT_T0>(nxt as *const i8);
+                _mm_prefetch::<_MM_HINT_T0>(nxt.wrapping_add(64) as *const i8);
+            }
+            for (r, lut) in luts.iter().enumerate() {
+                let tab = lut.tables.as_ptr();
+                let mut acc = _mm256_setzero_si256();
+                let mut sum = 0i32;
+                let mut bi = b0;
+                while bi + 8 <= vec_end {
+                    let bytes =
+                        _mm256_cvtepu8_epi32(_mm_loadl_epi64(colp.add(bi) as *const __m128i));
+                    let lo = _mm256_and_si256(bytes, nib);
+                    let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(bytes), nib);
+                    // Byte bi+l covers groups 2(bi+l) and 2(bi+l)+1, so the
+                    // table element indices are 32(bi+l)+lo and 32(bi+l)+16+hi.
+                    let base = _mm256_add_epi32(_mm256_set1_epi32((bi * 32) as i32), lane);
+                    let ilo = _mm256_add_epi32(base, lo);
+                    let ihi = _mm256_add_epi32(_mm256_add_epi32(base, _mm256_set1_epi32(16)), hi);
+                    // Scale 2: indices are i16 element offsets into `tables`.
+                    let glo = _mm256_i32gather_epi32::<2>(tab as *const i32, ilo);
+                    let ghi = _mm256_i32gather_epi32::<2>(tab as *const i32, ihi);
+                    let vlo = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(glo));
+                    let vhi = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(ghi));
+                    acc = _mm256_add_epi32(acc, _mm256_add_epi32(vlo, vhi));
+                    bi += 8;
+                }
+                while bi < b1 {
+                    let byte = *colp.add(bi) as usize;
+                    let g = bi * 2;
+                    sum += *tab.add(g * 16 + (byte & 0xF)) as i32
+                        + *tab.add((g + 1) * 16 + (byte >> 4)) as i32;
+                    bi += 1;
+                }
+                *chunk.get_unchecked_mut(cj * b + r) += hsum_epi32(acc) + sum;
+            }
+        }
+        b0 = b1;
+    }
+}
+
+/// AVX2 path for [`crate::gemm::batched::ternary_gemm_into`]'s per-chunk
+/// work: 8-wide gathers into the 256-entry byte-indexed tables.
+///
+/// # Safety
+///
+/// Requires AVX2. Caller must guarantee `chunk.len()` is a multiple of
+/// `luts.len()`, the column range lies within `w`, and every
+/// `luts[r].n_groups >= w.bytes_per_col` so gathered indices stay inside
+/// `tables`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn ternary_cols(luts: &[TernaryLuts], w: &PackedTernary, col0: usize, chunk: &mut [i32]) {
+    let b = luts.len();
+    let cols = chunk.len() / b;
+    let bpc = w.bytes_per_col;
+    chunk.fill(0);
+    if bpc == 0 {
+        return;
+    }
+    // One 256-entry i16 table per column byte per row.
+    let block = byte_block(bpc, 512 * b);
+    let lane = _mm256_setr_epi32(0, 256, 512, 768, 1024, 1280, 1536, 1792);
+    let mut b0 = 0usize;
+    while b0 < bpc {
+        let b1 = (b0 + block).min(bpc);
+        // Final byte scalar: a byte of 0xFF there would gather 2 bytes
+        // past the end of `tables`.
+        let vec_end = b1.min(bpc - 1);
+        for cj in 0..cols {
+            let j = col0 + cj;
+            let colp = w.bytes.as_ptr().add(j * bpc);
+            if cj + 1 < cols {
+                let nxt = w.bytes.as_ptr().wrapping_add((j + 1) * bpc + b0);
+                _mm_prefetch::<_MM_HINT_T0>(nxt as *const i8);
+                _mm_prefetch::<_MM_HINT_T0>(nxt.wrapping_add(64) as *const i8);
+            }
+            for (r, lut) in luts.iter().enumerate() {
+                let tab = lut.tables.as_ptr();
+                let mut acc = _mm256_setzero_si256();
+                let mut sum = 0i32;
+                let mut bi = b0;
+                while bi + 8 <= vec_end {
+                    let bytes =
+                        _mm256_cvtepu8_epi32(_mm_loadl_epi64(colp.add(bi) as *const __m128i));
+                    let base = _mm256_add_epi32(_mm256_set1_epi32((bi * 256) as i32), lane);
+                    let idx = _mm256_add_epi32(base, bytes);
+                    let g = _mm256_i32gather_epi32::<2>(tab as *const i32, idx);
+                    let v = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(g));
+                    acc = _mm256_add_epi32(acc, v);
+                    bi += 8;
+                }
+                while bi < b1 {
+                    let byte = *colp.add(bi) as usize;
+                    sum += *tab.add(bi * 256 + byte) as i32;
+                    bi += 1;
+                }
+                *chunk.get_unchecked_mut(cj * b + r) += hsum_epi32(acc) + sum;
+            }
+        }
+        b0 = b1;
+    }
+}
+
+/// AVX2 path for [`crate::gemm::batched::i8_gemm_batch_into`]'s per-chunk
+/// work: per batch row, a 16-column accumulator micro-tile lives in two
+/// ymm registers across the whole k sweep.
+///
+/// # Safety
+///
+/// Requires AVX2. Caller must guarantee `xs.len() >= b*k`,
+/// `w.len() == k*n`, `chunk.len()` a multiple of `b`, and the chunk's
+/// column range `col0..col0 + chunk.len()/b` within `n`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn i8_cols(
+    xs: &[i8],
+    w: &[i8],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [i32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0);
+    let cols16 = cols & !15;
+    let tile = col_tile(k, 1);
+    let mut j0 = 0usize;
+    while j0 < cols16 {
+        let j1 = (j0 + tile).min(cols16);
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut jm = j0;
+            while jm < j1 {
+                let mut acc0 = _mm256_setzero_si256();
+                let mut acc1 = _mm256_setzero_si256();
+                for kk in 0..k {
+                    let xv = *xrow.add(kk);
+                    if xv == 0 {
+                        // Exact for integers (+0 is the identity); matches
+                        // the oracle's skip-zero predicate.
+                        continue;
+                    }
+                    let wp = w.as_ptr().add(kk * n + col0 + jm);
+                    _mm_prefetch::<_MM_HINT_T0>(wp.wrapping_add(n) as *const i8);
+                    let xb = _mm256_set1_epi32(xv as i32);
+                    let w0 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(wp as *const __m128i));
+                    let w1 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(wp.add(8) as *const __m128i));
+                    acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(xb, w0));
+                    acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(xb, w1));
+                }
+                let mut buf = [0i32; 16];
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+                _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+                for (l, &v) in buf.iter().enumerate() {
+                    *chunk.get_unchecked_mut((jm + l) * b + r) = v;
+                }
+                jm += 16;
+            }
+        }
+        j0 = j1;
+    }
+    // Remainder columns (< 16): scalar, same ascending-k order.
+    for cj in cols16..cols {
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut sum = 0i32;
+            for kk in 0..k {
+                let xv = *xrow.add(kk);
+                if xv == 0 {
+                    continue;
+                }
+                sum += xv as i32 * *w.get_unchecked(kk * n + col0 + cj) as i32;
+            }
+            *chunk.get_unchecked_mut(cj * b + r) = sum;
+        }
+    }
+}
+
+/// AVX2 path for [`crate::gemm::batched::f32_gemm_batch_into`]'s per-chunk
+/// work. Bit-identical to the scalar oracle: the reduction stays k-major
+/// with the scalar-broadcast activation and the oracle's skip-zero
+/// predicate; lanes are output columns, so no reassociation and no FMA
+/// contraction touches any output element's addition sequence.
+///
+/// # Safety
+///
+/// Requires AVX2. Caller must guarantee `xs.len() >= b*k`,
+/// `w.len() == k*n`, `chunk.len()` a multiple of `b`, and the chunk's
+/// column range within `n`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn f32_cols(
+    xs: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    col0: usize,
+    chunk: &mut [f32],
+) {
+    let cols = chunk.len() / b;
+    chunk.fill(0.0);
+    let cols16 = cols & !15;
+    let tile = col_tile(k, 4);
+    let mut j0 = 0usize;
+    while j0 < cols16 {
+        let j1 = (j0 + tile).min(cols16);
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut jm = j0;
+            while jm < j1 {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let xv = *xrow.add(kk);
+                    if xv == 0.0 {
+                        // The oracle's exact predicate (also skips -0.0).
+                        continue;
+                    }
+                    let wp = w.as_ptr().add(kk * n + col0 + jm);
+                    _mm_prefetch::<_MM_HINT_T0>(wp.wrapping_add(n) as *const i8);
+                    let xb = _mm256_set1_ps(xv);
+                    // mul then add, never FMA: one rounding per op exactly
+                    // like the scalar `*cv += av * bv`.
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xb, _mm256_loadu_ps(wp)));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xb, _mm256_loadu_ps(wp.add(8))));
+                }
+                let mut buf = [0f32; 16];
+                _mm256_storeu_ps(buf.as_mut_ptr(), acc0);
+                _mm256_storeu_ps(buf.as_mut_ptr().add(8), acc1);
+                for (l, &v) in buf.iter().enumerate() {
+                    *chunk.get_unchecked_mut((jm + l) * b + r) = v;
+                }
+                jm += 16;
+            }
+        }
+        j0 = j1;
+    }
+    for cj in cols16..cols {
+        for r in 0..b {
+            let xrow = xs.as_ptr().add(r * k);
+            let mut sum = 0f32;
+            for kk in 0..k {
+                let xv = *xrow.add(kk);
+                if xv == 0.0 {
+                    continue;
+                }
+                sum += xv * *w.get_unchecked(kk * n + col0 + cj);
+            }
+            *chunk.get_unchecked_mut(cj * b + r) = sum;
+        }
+    }
+}

@@ -21,6 +21,7 @@ use crate::config::ModelConfig;
 use crate::gemm::{self, lut::Luts, TernaryLuts};
 use crate::kvcache::{KvError, KvStore, PagedLayer, PagedSeq};
 use crate::quant;
+use crate::util::align::AlignedVec;
 
 use super::block::KvCache;
 
@@ -155,23 +156,26 @@ impl QuantActsBatch {
 }
 
 /// Integer/float accumulator scratch for the batched kernels' [n, b]
-/// outputs, reused across every linear of a batch step.
+/// outputs, reused across every linear of a batch step. Backed by
+/// [`AlignedVec`] so the planes start on a 32-byte vector boundary for
+/// the SIMD kernels (layout only — the kernels use unaligned loads and
+/// are bit-identical either way).
 #[derive(Default)]
 pub struct AccScratch {
-    yi: Vec<i32>,
-    yf: Vec<f32>,
+    yi: AlignedVec<i32>,
+    yf: AlignedVec<f32>,
     grew: bool,
 }
 
 impl AccScratch {
     pub fn i32_acc(&mut self, len: usize) -> &mut [i32] {
-        grow(&mut self.yi, len, &mut self.grew);
-        &mut self.yi[..len]
+        self.grew |= self.yi.grow(len);
+        self.yi.slice_mut(len)
     }
 
     pub fn f32_acc(&mut self, len: usize) -> &mut [f32] {
-        grow(&mut self.yf, len, &mut self.grew);
-        &mut self.yf[..len]
+        self.grew |= self.yf.grow(len);
+        self.yf.slice_mut(len)
     }
 }
 

@@ -16,7 +16,10 @@
 //! * [`gemm`] — the Figure-8 engines: f32 GEMM, INT8 GEMM, T-MAC-style LUT
 //!   W1A8 GEMV, packed ternary GEMV, plus their weight-stationary batched
 //!   twins ([`gemm::batched`]: each packed weight column read once per
-//!   batch step, bit-identical to the GEMV paths)
+//!   batch step, bit-identical to the GEMV paths); inner loops run behind
+//!   runtime CPU-feature dispatch ([`gemm::simd`]: AVX2/NEON with the
+//!   scalar loops as the always-on bit-exactness oracle, `PQUANT_SIMD`
+//!   override — see `docs/performance.md`)
 //! * [`infer`] — pure-rust packed-weight transformer inference engine:
 //!   single-token decode, and the fused batched path
 //!   ([`infer::PackedModel::decode_step_batch`] over [`infer::SeqStep`]s

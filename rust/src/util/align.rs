@@ -1,0 +1,112 @@
+//! 32-byte-aligned growable buffers for the GEMM accumulator planes.
+//!
+//! The batched kernels stream their `[n, b]` accumulators with 256-bit
+//! vector moves (see [`crate::gemm::simd`]). `Vec<i32>`/`Vec<f32>` only
+//! guarantee 4-byte alignment, so element 0 of a plane can sit anywhere in
+//! a cache line and every vector access risks a line-split penalty.
+//! [`AlignedVec`] backs the same grow-only slices with 32-byte-aligned
+//! storage so the plane starts on a vector boundary. Semantics are
+//! unchanged — the kernels still use unaligned loads, which are free on
+//! aligned data — this is purely a layout guarantee.
+
+use std::marker::PhantomData;
+
+/// One vector register's worth of backing storage; the `align(32)` is the
+/// whole point of the type.
+#[repr(C, align(32))]
+#[derive(Clone, Copy)]
+struct Chunk32([u8; 32]);
+
+const ZERO_CHUNK: Chunk32 = Chunk32([0; 32]);
+
+/// Element types the aligned buffer may be viewed as. Safety contract:
+/// any 32-byte-aligned, zero-initialized allocation is a valid `[T]`.
+pub unsafe trait Pod: Copy + Default {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for f32 {}
+
+/// Grow-only, zero-filled, 32-byte-aligned buffer viewed as `&mut [T]`.
+pub struct AlignedVec<T: Pod> {
+    buf: Vec<Chunk32>,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> Default for AlignedVec<T> {
+    fn default() -> Self {
+        AlignedVec { buf: Vec::new(), len: 0, _elem: PhantomData }
+    }
+}
+
+impl<T: Pod> AlignedVec<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Elements currently materialized (always zero-initialized on growth).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow to hold at least `len` elements; returns `true` iff the
+    /// backing allocation moved (the alloc-free steady-state probe).
+    pub fn grow(&mut self, len: usize) -> bool {
+        let chunks = (len * std::mem::size_of::<T>()).div_ceil(32);
+        let grew = chunks > self.buf.capacity();
+        if self.buf.len() < chunks {
+            self.buf.resize(chunks, ZERO_CHUNK);
+        }
+        self.len = self.len.max(len);
+        grew
+    }
+
+    /// View the first `len` elements mutably. `len` must have been covered
+    /// by a prior [`grow`](Self::grow).
+    pub fn slice_mut(&mut self, len: usize) -> &mut [T] {
+        assert!(len <= self.len, "slice past grown length");
+        // Safety: the allocation holds ≥ len * size_of::<T>() bytes
+        // (guaranteed by grow), is 32-byte aligned (Chunk32), and every
+        // byte is initialized (resize with ZERO_CHUNK); Pod permits any
+        // bit pattern reinterpretation.
+        unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut T, len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_zeroed_and_aligned() {
+        let mut v: AlignedVec<i32> = AlignedVec::new();
+        assert!(v.grow(5), "first grow must allocate");
+        let s = v.slice_mut(5);
+        assert_eq!(s, &[0; 5]);
+        assert_eq!(s.as_ptr() as usize % 32, 0, "element 0 must be 32B-aligned");
+        s[3] = 42;
+        assert!(!v.grow(4), "shrinking request must not reallocate");
+        assert_eq!(v.slice_mut(5)[3], 42, "contents survive non-growing calls");
+    }
+
+    #[test]
+    fn growth_reports_only_reallocations() {
+        let mut v: AlignedVec<f32> = AlignedVec::new();
+        v.grow(64);
+        let p = v.slice_mut(1).as_ptr();
+        assert!(!v.grow(64), "same size is steady-state");
+        assert_eq!(v.slice_mut(1).as_ptr(), p);
+        assert_eq!(v.len(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "slice past grown length")]
+    fn slice_past_growth_panics() {
+        let mut v: AlignedVec<i32> = AlignedVec::new();
+        v.grow(3);
+        let _ = v.slice_mut(4);
+    }
+}

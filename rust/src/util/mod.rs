@@ -2,6 +2,7 @@
 //! `xla` closure, so the small libraries a project like this would normally
 //! pull in are implemented here (DESIGN.md §Substitutions).
 
+pub mod align;
 pub mod bench;
 pub mod failpoint;
 pub mod json;

@@ -70,7 +70,10 @@ where
         return;
     }
     let granule = granule.max(1);
-    debug_assert_eq!(n % granule, 0, "length must be a granule multiple");
+    // Release-mode assert, not debug_assert: a non-multiple length would
+    // split silently wrong (chunks straddling a granule, callers computing
+    // `start / granule` off by one) instead of panicking where the bug is.
+    assert_eq!(n % granule, 0, "length must be a granule multiple");
     let units = n / granule;
     let n_chunks = n_chunks.clamp(1, units);
     if n_chunks == 1 {
@@ -141,6 +144,15 @@ mod tests {
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "granule multiple")]
+    fn granular_rejects_non_multiple_length_in_release_too() {
+        // 10 is not a multiple of 4: must panic (plain assert!, not
+        // debug_assert!) rather than split into straddling chunks.
+        let mut v = vec![0u8; 10];
+        par_chunks_mut_granular(&mut v, 2, 4, |_, _, _| {});
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! Regression for the row-straddling parallel GEMM split, driven through
+//! the public entry points with a real thread cap.
+//!
+//! The old `f32_gemm`/`i8_gemm` split their output with the plain
+//! (non-granular) splitter and derived each chunk's first row as
+//! `start / n` — only correct when chunk boundaries happen to land on row
+//! boundaries. With 2 threads and m=3, n=10 the 30-element output split
+//! 15+15: the second chunk started mid-row, computed with the wrong
+//! activation row, and dropped the trailing half-row. This binary owns
+//! the process-global thread cap (`set_thread_cap`), so it lives alone —
+//! sibling tests inside it must tolerate the cap while it's held.
+
+use pquant::gemm::{f32_gemm, i8_gemm};
+use pquant::util::rng::Rng;
+use pquant::util::threads::set_thread_cap;
+
+fn naive_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+        }
+    }
+    c
+}
+
+fn naive_i8(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = (0..k).map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32).sum();
+        }
+    }
+    c
+}
+
+#[test]
+fn capped_threads_never_straddle_rows() {
+    let mut r = Rng::new(55);
+    // Shapes where chunk size is not a multiple of n under small caps —
+    // exactly the geometries the old splitter got wrong. (3, _, 10) with
+    // cap 2 is the minimal reproducer: 30 elems → 15+15.
+    let shapes = [(3usize, 8usize, 10usize), (5, 16, 6), (7, 4, 9), (2, 3, 3), (4, 10, 25)];
+    for cap in [2usize, 3] {
+        set_thread_cap(cap);
+        for &(m, k, n) in &shapes {
+            let a = r.normal_vec(m * k);
+            let b = r.normal_vec(k * n);
+            let got = f32_gemm(&a, &b, m, k, n);
+            let want = naive_f32(&a, &b, m, k, n);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                    "cap={cap} m={m} k={k} n={n} elem {i}: {g} vs {w}"
+                );
+            }
+
+            let ai: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            let bi: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+            assert_eq!(
+                i8_gemm(&ai, &bi, m, k, n),
+                naive_i8(&ai, &bi, m, k, n),
+                "cap={cap} m={m} k={k} n={n}"
+            );
+        }
+    }
+    set_thread_cap(0);
+}

@@ -1,0 +1,311 @@
+//! SIMD == scalar bit-exactness property tests for the dispatch layer
+//! (`gemm::simd`).
+//!
+//! Two layers of coverage:
+//!
+//! 1. **Backend parity** — the AVX2 kernels are called directly (when the
+//!    CPU has AVX2) against the `*_cols_scalar` oracles, bit-for-bit, on
+//!    shapes chosen to hit every remainder path: k and n that are not
+//!    vector-width multiples, b from 1 up, chunks starting at a nonzero
+//!    `col0`, and k large enough to cross the cache-block / column-tile
+//!    boundaries. This does not touch the process-global mode, so it runs
+//!    concurrently with everything else.
+//! 2. **Dispatch parity** — one test (the only mode writer in this
+//!    binary) forces every mode `available_modes()` reports through
+//!    `set_simd_mode` and checks the four public batched kernels and both
+//!    LUT-family GEMVs give bit-identical outputs in each. Concurrent
+//!    kernel calls from test (1) are safe under the flipping mode
+//!    precisely because every backend is bit-identical — which is what
+//!    these tests establish.
+
+use pquant::gemm::batched::{
+    f32_cols_scalar, f32_gemm_batch_into, i8_cols_scalar, i8_gemm_batch_into, lut_cols_scalar,
+    lut_gemm_into, ternary_cols_scalar, ternary_gemm_into,
+};
+use pquant::gemm::{
+    build_luts, build_ternary_luts, lut_gemv_into, simd, ternary_gemv_into, SimdMode,
+};
+use pquant::quant::{pack_signs, pack_ternary};
+use pquant::util::prop;
+use pquant::util::rng::Rng;
+
+/// Fixed shapes hitting the structural edges: single element, sub-vector
+/// k and n, exact vector widths, remainder lanes, a max-ish batch, and
+/// (last two) k big enough that the LUT byte-blocking and the dense
+/// column tiling actually split (byte_block < bytes_per_col,
+/// col_tile < n).
+const EDGE_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (7, 3, 2),
+    (8, 16, 1),
+    (9, 17, 16),
+    (33, 40, 3),
+    (130, 23, 5),
+    (64, 64, 8),
+    (2304, 5, 16),
+    (8192, 35, 2),
+];
+
+fn rand_i8(r: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (r.below(255) as i32 - 127) as i8).collect()
+}
+
+fn avx2() -> bool {
+    simd::available_modes().contains(&SimdMode::Avx2)
+}
+
+fn check_lut_shape(r: &mut Rng, k: usize, n: usize, b: usize) {
+    let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+    let xs = rand_i8(r, b * k);
+    let w = pack_signs(&signs, k, n);
+    let luts: Vec<_> = (0..b).map(|row| build_luts(&xs[row * k..(row + 1) * k], k)).collect();
+
+    let mut want = vec![0i32; n * b];
+    lut_cols_scalar(&luts, &w, 0, &mut want);
+
+    let mut got = vec![0i32; n * b];
+    lut_gemm_into(&luts, &w, &mut got);
+    assert_eq!(got, want, "dispatch vs oracle, k={k} n={n} b={b}");
+
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        let mut ys = vec![0i32; n * b];
+        unsafe { simd::x86::lut_cols(&luts, &w, 0, &mut ys) };
+        assert_eq!(ys, want, "avx2 full, k={k} n={n} b={b}");
+        // Nonzero col0: split the accumulator at a column boundary.
+        if n > 1 {
+            let c = 1 + (k + n) % (n - 1); // deterministic split in 1..n
+            let mut ys2 = vec![0i32; n * b];
+            let (head, tail) = ys2.split_at_mut(c * b);
+            unsafe {
+                simd::x86::lut_cols(&luts, &w, 0, head);
+                simd::x86::lut_cols(&luts, &w, c, tail);
+            }
+            assert_eq!(ys2, want, "avx2 split at {c}, k={k} n={n} b={b}");
+        }
+    }
+}
+
+fn check_ternary_shape(r: &mut Rng, k: usize, n: usize, b: usize) {
+    let vals: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+    let xs = rand_i8(r, b * k);
+    let w = pack_ternary(&vals, k, n);
+    let luts: Vec<_> =
+        (0..b).map(|row| build_ternary_luts(&xs[row * k..(row + 1) * k], k)).collect();
+
+    let mut want = vec![0i32; n * b];
+    ternary_cols_scalar(&luts, &w, 0, &mut want);
+
+    let mut got = vec![0i32; n * b];
+    ternary_gemm_into(&luts, &w, &mut got);
+    assert_eq!(got, want, "dispatch vs oracle, k={k} n={n} b={b}");
+
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        let mut ys = vec![0i32; n * b];
+        unsafe { simd::x86::ternary_cols(&luts, &w, 0, &mut ys) };
+        assert_eq!(ys, want, "avx2 full, k={k} n={n} b={b}");
+        if n > 1 {
+            let c = 1 + (k + n) % (n - 1);
+            let mut ys2 = vec![0i32; n * b];
+            let (head, tail) = ys2.split_at_mut(c * b);
+            unsafe {
+                simd::x86::ternary_cols(&luts, &w, 0, head);
+                simd::x86::ternary_cols(&luts, &w, c, tail);
+            }
+            assert_eq!(ys2, want, "avx2 split at {c}, k={k} n={n} b={b}");
+        }
+    }
+}
+
+fn check_i8_shape(r: &mut Rng, k: usize, n: usize, b: usize) {
+    let w = rand_i8(r, k * n);
+    let mut xs = rand_i8(r, b * k);
+    for i in (0..xs.len()).step_by(5) {
+        xs[i] = 0; // exercise the skip-zero predicate
+    }
+
+    let mut want = vec![0i32; n * b];
+    i8_cols_scalar(&xs, &w, b, k, n, 0, &mut want);
+
+    let mut got = vec![0i32; n * b];
+    i8_gemm_batch_into(&xs, &w, b, k, n, &mut got);
+    assert_eq!(got, want, "dispatch vs oracle, k={k} n={n} b={b}");
+
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        let mut ys = vec![0i32; n * b];
+        unsafe { simd::x86::i8_cols(&xs, &w, b, k, n, 0, &mut ys) };
+        assert_eq!(ys, want, "avx2 full, k={k} n={n} b={b}");
+        if n > 1 {
+            let c = 1 + (k + n) % (n - 1);
+            let mut ys2 = vec![0i32; n * b];
+            let (head, tail) = ys2.split_at_mut(c * b);
+            unsafe {
+                simd::x86::i8_cols(&xs, &w, b, k, n, 0, head);
+                simd::x86::i8_cols(&xs, &w, b, k, n, c, tail);
+            }
+            assert_eq!(ys2, want, "avx2 split at {c}, k={k} n={n} b={b}");
+        }
+    }
+}
+
+fn check_f32_shape(r: &mut Rng, k: usize, n: usize, b: usize) {
+    let mut w = r.normal_vec(k * n);
+    let mut xs = r.normal_vec(b * k);
+    for i in (0..w.len()).step_by(7) {
+        w[i] = 0.0;
+    }
+    for i in (0..xs.len()).step_by(5) {
+        xs[i] = 0.0;
+    }
+
+    let mut want = vec![0f32; n * b];
+    f32_cols_scalar(&xs, &w, b, k, n, 0, &mut want);
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+    let mut got = vec![0f32; n * b];
+    f32_gemm_batch_into(&xs, &w, b, k, n, &mut got);
+    assert_eq!(bits(&got), bits(&want), "dispatch vs oracle, k={k} n={n} b={b}");
+
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        let mut ys = vec![0f32; n * b];
+        unsafe { simd::x86::f32_cols(&xs, &w, b, k, n, 0, &mut ys) };
+        assert_eq!(bits(&ys), bits(&want), "avx2 full, k={k} n={n} b={b}");
+        if n > 1 {
+            let c = 1 + (k + n) % (n - 1);
+            let mut ys2 = vec![0f32; n * b];
+            let (head, tail) = ys2.split_at_mut(c * b);
+            unsafe {
+                simd::x86::f32_cols(&xs, &w, b, k, n, 0, head);
+                simd::x86::f32_cols(&xs, &w, b, k, n, c, tail);
+            }
+            assert_eq!(bits(&ys2), bits(&want), "avx2 split at {c}, k={k} n={n} b={b}");
+        }
+    }
+}
+
+fn rand_shape(r: &mut Rng) -> (usize, usize, usize) {
+    (1 + r.below(180), 1 + r.below(40), 1 + r.below(16))
+}
+
+#[test]
+fn lut_gemm_simd_bitexact_vs_scalar() {
+    let mut r = Rng::new(81);
+    for &(k, n, b) in EDGE_SHAPES {
+        check_lut_shape(&mut r, k, n, b);
+    }
+    prop::check(82, 30, rand_shape, |&(k, n, b)| {
+        check_lut_shape(&mut Rng::new((k * 1009 + n * 31 + b) as u64), k, n, b);
+        Ok(())
+    });
+}
+
+#[test]
+fn ternary_gemm_simd_bitexact_vs_scalar() {
+    let mut r = Rng::new(83);
+    for &(k, n, b) in EDGE_SHAPES {
+        check_ternary_shape(&mut r, k, n, b);
+    }
+    prop::check(84, 30, rand_shape, |&(k, n, b)| {
+        check_ternary_shape(&mut Rng::new((k * 1013 + n * 37 + b) as u64), k, n, b);
+        Ok(())
+    });
+}
+
+#[test]
+fn i8_gemm_batch_simd_bitexact_vs_scalar() {
+    let mut r = Rng::new(85);
+    for &(k, n, b) in EDGE_SHAPES {
+        check_i8_shape(&mut r, k, n, b);
+    }
+    prop::check(86, 30, rand_shape, |&(k, n, b)| {
+        check_i8_shape(&mut Rng::new((k * 1019 + n * 41 + b) as u64), k, n, b);
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_gemm_batch_simd_bitexact_vs_scalar() {
+    let mut r = Rng::new(87);
+    for &(k, n, b) in EDGE_SHAPES {
+        check_f32_shape(&mut r, k, n, b);
+    }
+    prop::check(88, 30, rand_shape, |&(k, n, b)| {
+        check_f32_shape(&mut Rng::new((k * 1021 + n * 43 + b) as u64), k, n, b);
+        Ok(())
+    });
+}
+
+/// The GEMV walks dispatch through the same backends as the batched
+/// kernels (b = 1); check them against the b = 1 oracles.
+#[test]
+fn gemv_walks_bitexact_vs_scalar() {
+    let mut r = Rng::new(89);
+    for &(k, n, _) in EDGE_SHAPES {
+        let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+        let x = rand_i8(&mut r, k);
+        let w = pack_signs(&signs, k, n);
+        let luts = build_luts(&x, k);
+        let mut want = vec![0i32; n];
+        lut_cols_scalar(std::slice::from_ref(&luts), &w, 0, &mut want);
+        let mut got = vec![0i32; n];
+        lut_gemv_into(&luts, &w, &mut got);
+        assert_eq!(got, want, "lut gemv, k={k} n={n}");
+
+        let vals: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+        let wt = pack_ternary(&vals, k, n);
+        let tluts = build_ternary_luts(&x, k);
+        let mut wantt = vec![0i32; n];
+        ternary_cols_scalar(std::slice::from_ref(&tluts), &wt, 0, &mut wantt);
+        let mut gott = vec![0i32; n];
+        ternary_gemv_into(&tluts, &wt, &mut gott);
+        assert_eq!(gott, wantt, "ternary gemv, k={k} n={n}");
+    }
+}
+
+/// Force every mode the CPU can honor and require bit-identical outputs
+/// from the public entry points. Sole writer of the process-global mode
+/// in this binary; concurrent kernel calls elsewhere are unaffected
+/// because all backends are bit-identical (the invariant under test).
+#[test]
+fn every_available_mode_is_bit_identical() {
+    let mut r = Rng::new(90);
+    let (k, n, b) = (130, 23, 5);
+    let signs: Vec<bool> = (0..k * n).map(|_| r.below(2) == 1).collect();
+    let tern: Vec<i8> = (0..k * n).map(|_| r.below(3) as i8 - 1).collect();
+    let wi = rand_i8(&mut r, k * n);
+    let wf = r.normal_vec(k * n);
+    let xs = rand_i8(&mut r, b * k);
+    let xf = r.normal_vec(b * k);
+
+    let wp = pack_signs(&signs, k, n);
+    let wt = pack_ternary(&tern, k, n);
+    let luts: Vec<_> = (0..b).map(|row| build_luts(&xs[row * k..(row + 1) * k], k)).collect();
+    let tluts: Vec<_> =
+        (0..b).map(|row| build_ternary_luts(&xs[row * k..(row + 1) * k], k)).collect();
+
+    let modes = simd::available_modes();
+    assert!(modes.contains(&SimdMode::Scalar));
+    let mut outs: Vec<(Vec<i32>, Vec<i32>, Vec<i32>, Vec<u32>, Vec<i32>)> = Vec::new();
+    for &m in &modes {
+        simd::set_simd_mode(m);
+        let mut y1 = vec![0i32; n * b];
+        lut_gemm_into(&luts, &wp, &mut y1);
+        let mut y2 = vec![0i32; n * b];
+        ternary_gemm_into(&tluts, &wt, &mut y2);
+        let mut y3 = vec![0i32; n * b];
+        i8_gemm_batch_into(&xs, &wi, b, k, n, &mut y3);
+        let mut y4 = vec![0f32; n * b];
+        f32_gemm_batch_into(&xf, &wf, b, k, n, &mut y4);
+        let mut y5 = vec![0i32; n];
+        lut_gemv_into(&luts[0], &wp, &mut y5);
+        outs.push((y1, y2, y3, y4.iter().map(|v| v.to_bits()).collect(), y5));
+    }
+    simd::set_simd_mode(SimdMode::Auto);
+    for (i, o) in outs.iter().enumerate().skip(1) {
+        assert_eq!(o, &outs[0], "mode {:?} differs from {:?}", modes[i], modes[0]);
+    }
+}

@@ -27,6 +27,9 @@ cargo build --release
 echo "==> tier-1: cargo test -q   (includes tests/integration_spec.rs + integration_http.rs + integration_loadgen.rs)"
 cargo test -q
 
+echo "==> tier-1: PQUANT_SIMD=off cargo test -q   (scalar-oracle lane: full suite with SIMD dispatch disabled)"
+PQUANT_SIMD=off cargo test -q
+
 echo "==> tier-1: cargo bench --no-run (benches must keep compiling, incl. benches/spec_decode.rs + loadgen.rs)"
 cargo bench --no-run
 
@@ -34,6 +37,9 @@ if [[ "${1:-}" == "--tier1" ]]; then
     echo "ci.sh: tier-1 gate passed"
     exit 0
 fi
+
+echo "==> bench lane: kernel scalar-vs-SIMD ratios → results/bench/gemm_kernels.json"
+cargo bench --bench gemm_kernels
 
 echo "==> bench lane: seeded loadgen trace → results/bench/loadgen.json"
 cargo bench --bench loadgen
